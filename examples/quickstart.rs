@@ -1,0 +1,85 @@
+//! Quickstart: load the AOT artifacts, serve a handful of requests through
+//! the full Echo stack on the real EchoLM model, print latencies.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use echo::config::SystemConfig;
+use echo::core::{PromptSpec, Request, TaskClass};
+use echo::engine::{pjrt::PjrtBackend, Engine};
+use echo::runtime::ModelRuntime;
+use echo::utils::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load artifacts (HLO text + weights) and compile on the PJRT CPU
+    //    client. Python is not involved from here on.
+    let rt = ModelRuntime::load("artifacts")?;
+    println!(
+        "EchoLM loaded: {} layers, vocab {}, {} slots x {} positions, buckets {:?}",
+        rt.manifest.n_layers,
+        rt.manifest.vocab,
+        rt.manifest.max_batch,
+        rt.manifest.max_seq,
+        rt.buckets()
+    );
+    let vocab = rt.manifest.vocab as u32;
+
+    // 2. Build the engine: scheduler + KV cache manager + estimator around
+    //    the real backend.
+    let mut cfg = SystemConfig::cpu_echolm();
+    cfg.scheduler.max_batch = rt.manifest.max_batch;
+    cfg.cache.capacity_tokens = rt.manifest.max_batch * rt.manifest.max_seq;
+    let mut engine = Engine::new(cfg, PjrtBackend::new(rt));
+
+    // 3. Submit two online requests and three offline ones sharing a prefix.
+    let mut rng = Rng::new(7);
+    let mut prompt = |n: usize| -> Vec<u32> {
+        (0..n).map(|_| rng.range_u64(1, (vocab - 1) as u64) as u32).collect()
+    };
+    let shared = prompt(32);
+    let mut online = Vec::new();
+    for i in 0..2 {
+        let id = engine.store.fresh_id();
+        online.push(id);
+        engine.submit_online(Request::new(
+            id,
+            TaskClass::Online,
+            0.02 * i as f64,
+            PromptSpec::real(prompt(48)),
+            12,
+        ));
+    }
+    for _ in 0..3 {
+        let id = engine.store.fresh_id();
+        let mut tokens = shared.clone();
+        tokens.extend(prompt(16));
+        engine.submit_offline(Request::new(
+            id,
+            TaskClass::Offline,
+            0.0,
+            PromptSpec::real(tokens),
+            8,
+        ));
+    }
+
+    // 4. Run to completion and report.
+    engine.run()?;
+    for id in online {
+        let r = engine.store.get(id);
+        println!(
+            "online {id}: {:?}...  ttft={:.1} ms  tpot={:.1} ms",
+            &r.out_tokens[..4.min(r.out_tokens.len())],
+            r.ttft().unwrap_or(0.0) * 1e3,
+            r.mean_tpot().unwrap_or(0.0) * 1e3
+        );
+    }
+    println!(
+        "completed: {} online / {} offline;  {} engine iterations, \
+         offline throughput {:.1} tok/s",
+        engine.metrics.online_completed,
+        engine.metrics.offline_completed,
+        engine.metrics.iterations,
+        engine.metrics.offline_throughput()
+    );
+    engine.kv.check_invariants().expect("KV invariants");
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! End-to-end driver (the repo's headline example): serve a bursty online
+//! trace *plus* a shared-prefix offline backlog on the REAL EchoLM model
+//! through the threaded server, and report latency + throughput, comparing
+//! the BS+E baseline against full Echo.
+//!
+//!     make artifacts && cargo run --release --example serve_trace
+//!
+//! The workload is scaled to the CPU testbed (tiny model, 8 slots); the
+//! run is recorded in EXPERIMENTS.md §End-to-end.
+
+use echo::config::{SchedulerKind, SystemConfig};
+use echo::core::PromptSpec;
+use echo::engine::{pjrt::PjrtBackend, Engine};
+use echo::runtime::ModelRuntime;
+use echo::server;
+use echo::trace::{Trace, TraceConfig};
+use echo::utils::rng::Rng;
+use echo::utils::stats::Summary;
+
+struct RunReport {
+    online_ttft: Summary,
+    online_tpot: Summary,
+    offline_done: usize,
+    offline_tok_s: f64,
+    hit_ratio: f64,
+    wall: f64,
+}
+
+fn run(kind: SchedulerKind, horizon_s: f64, seed: u64) -> anyhow::Result<RunReport> {
+    let rt = ModelRuntime::load("artifacts")?;
+    let vocab = rt.manifest.vocab as u32;
+    let mut cfg = SystemConfig::cpu_echolm();
+    cfg.scheduler.kind = kind;
+    cfg.scheduler.max_batch = rt.manifest.max_batch;
+    cfg.cache.capacity_tokens = rt.manifest.max_batch * rt.manifest.max_seq;
+    let engine = Engine::new(cfg, PjrtBackend::new(rt));
+    let handle = server::spawn(engine);
+
+    let mut rng = Rng::new(seed);
+    let mut prompt = |n: usize| -> Vec<u32> {
+        (0..n).map(|_| rng.range_u64(1, (vocab - 1) as u64) as u32).collect()
+    };
+
+    // Offline backlog: 4 prefix groups x 6 questions, submitted upfront.
+    let mut offline_total = 0usize;
+    for _ in 0..4 {
+        let shared = prompt(48);
+        for _ in 0..6 {
+            let mut t = shared.clone();
+            t.extend(prompt(12));
+            handle.submit_offline(PromptSpec::real(t), 6);
+            offline_total += 1;
+        }
+    }
+
+    // Online load: compressed paper-shaped trace replayed in real time.
+    let trace = Trace::generate(&TraceConfig::compressed(horizon_s, 1.5, seed));
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for &at in &trace.arrivals {
+        let wait = at - t0.elapsed().as_secs_f64();
+        if wait > 0.0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+        }
+        rxs.push(handle.submit_online(PromptSpec::real(prompt(24 + (rxs.len() % 3) * 8)), 6));
+    }
+    let mut ttfts = Vec::new();
+    let mut tpots = Vec::new();
+    for rx in rxs {
+        let c = rx.recv_timeout(std::time::Duration::from_secs(300))?;
+        if let Some(t) = c.ttft {
+            ttfts.push(t);
+        }
+        if let Some(t) = c.mean_tpot {
+            tpots.push(t);
+        }
+    }
+    let engine = handle.shutdown();
+    let wall = t0.elapsed().as_secs_f64();
+    assert_eq!(engine.metrics.offline_completed, offline_total);
+    Ok(RunReport {
+        online_ttft: Summary::of(&ttfts),
+        online_tpot: Summary::of(&tpots),
+        offline_done: engine.metrics.offline_completed,
+        offline_tok_s: engine.metrics.offline_tokens_out as f64 / wall,
+        hit_ratio: engine.kv.stats.hit_ratio(),
+        wall,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let horizon = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(20.0);
+    println!("serving a {horizon:.0}s bursty online trace + offline backlog on real EchoLM…\n");
+    for kind in [SchedulerKind::BsE, SchedulerKind::Echo] {
+        let r = run(kind, horizon, 42)?;
+        println!("strategy {:>6}:", kind.name());
+        println!(
+            "  online  TTFT p50/p90/p99 = {:.0}/{:.0}/{:.0} ms   TPOT p50 = {:.0} ms  (n={})",
+            r.online_ttft.p50 * 1e3,
+            r.online_ttft.p90 * 1e3,
+            r.online_ttft.p99 * 1e3,
+            r.online_tpot.p50 * 1e3,
+            r.online_ttft.count,
+        );
+        println!(
+            "  offline {} requests, {:.1} generated tok/s, prefix hit ratio {:.1}%  (wall {:.1}s)\n",
+            r.offline_done,
+            r.offline_tok_s,
+            r.hit_ratio * 100.0,
+            r.wall
+        );
+    }
+    println!("all layers composed: rust scheduler/KV-manager -> PJRT -> XLA -> Pallas-lowered HLO");
+    Ok(())
+}

@@ -1,0 +1,192 @@
+"""AOT lowering: EchoLM step buckets -> artifacts/ for the rust runtime.
+
+Emits, per (max_batch, chunk) bucket, HLO **text** (NOT a serialized
+HloModuleProto: jax >= 0.5 emits 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md), plus:
+
+  artifacts/weights.bin    f32 little-endian params, manifest order
+  artifacts/manifest.json  model config, param table, bucket -> hlo map,
+                           argument order contract for the rust runtime
+
+Run via `make artifacts`; it is a no-op if outputs are newer than inputs.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.attention import vmem_report
+from .model import EchoLMConfig, arg_specs, init_params, make_step_fn
+
+CHUNK_BUCKETS = (1, 16, 64)
+SEED = 20260710
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(cfg: EchoLMConfig, chunk: int) -> str:
+    fn = make_step_fn(cfg, chunk)
+    lowered = jax.jit(fn).lower(*arg_specs(cfg, chunk))
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, cfg: EchoLMConfig, report: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    params = init_params(cfg, seed=SEED)
+
+    # weights.bin: params concatenated f32-LE in param_specs order.
+    param_table = []
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for (name, shape), value in zip(cfg.param_specs(), params):
+            data = np.asarray(value, dtype="<f4").tobytes()
+            f.write(data)
+            param_table.append(
+                {
+                    "name": name,
+                    "shape": list(shape),
+                    "dtype": "f32",
+                    "byte_offset": offset,
+                    "byte_len": len(data),
+                }
+            )
+            offset += len(data)
+
+    buckets = []
+    for chunk in CHUNK_BUCKETS:
+        hlo = lower_bucket(cfg, chunk)
+        fname = f"step_c{chunk}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(hlo)
+        buckets.append(
+            {
+                "chunk": chunk,
+                "hlo": fname,
+                "sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+            }
+        )
+        print(f"aot: lowered chunk={chunk:3d} -> {fname} ({len(hlo)} chars)")
+
+    golden = make_golden(cfg, params)
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f, indent=2)
+    print(f"aot: wrote golden ({len(golden['generated'])} greedy tokens)")
+
+    manifest = {
+        "model": "EchoLM",
+        "seed": SEED,
+        "config": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "n_layers": cfg.n_layers,
+            "ffn": cfg.ffn,
+            "max_seq": cfg.max_seq,
+            "max_batch": cfg.max_batch,
+            "kv_tile": cfg.kv_tile,
+        },
+        "kv_shape": list(cfg.kv_shape),
+        # Positional argument contract for every bucket executable:
+        #   params (in param_table order), kv, tokens[B, chunk],
+        #   cache_lens[B], q_lens[B].
+        # Output: 3-tuple (next_tokens[B] i32, logits[B, V] f32, kv_out).
+        "arg_order": [p["name"] for p in param_table]
+        + ["kv", "tokens", "cache_lens", "q_lens"],
+        "outputs": ["next_tokens", "logits", "kv"],
+        "params": param_table,
+        "weights_bytes": offset,
+        "buckets": buckets,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"aot: wrote manifest ({len(param_table)} params, {offset} weight bytes)")
+
+    if report:
+        rep = vmem_report(
+            cfg.max_batch,
+            cfg.n_heads,
+            max(CHUNK_BUCKETS),
+            cfg.head_dim,
+            cfg.max_seq,
+            cfg.kv_tile,
+        )
+        print("L1 kernel structural report (per grid step):")
+        for k, v in rep.items():
+            print(f"  {k}: {v}")
+    return manifest
+
+
+def make_golden(cfg: EchoLMConfig, params, prompt_len: int = 24, n_decode: int = 8) -> dict:
+    """Run a fixed prompt through the *same jitted functions the buckets are
+    lowered from* and record the greedy continuation. The rust runtime's
+    integration test (rust/tests/runtime_roundtrip.rs) replays this via the
+    HLO artifacts and must reproduce it token for token."""
+    import numpy as _np
+
+    rng = _np.random.default_rng(SEED)
+    prompt = rng.integers(1, cfg.vocab, size=prompt_len).astype(_np.int32)
+
+    B = cfg.max_batch
+    chunk_p = max(c for c in CHUNK_BUCKETS if c <= max(CHUNK_BUCKETS))
+    # choose the largest bucket >= prompt_len if available, else chunked
+    buckets = sorted(CHUNK_BUCKETS)
+    kv = jnp.zeros(cfg.kv_shape, jnp.float32)
+    jitted = {c: jax.jit(make_step_fn(cfg, c)) for c in buckets}
+
+    pos = 0
+    logits = None
+    # chunked prefill using the widest bucket
+    wide = buckets[-1]
+    while pos < prompt_len:
+        width = min(wide, prompt_len - pos)
+        toks = _np.zeros((B, wide), _np.int32)
+        toks[0, :width] = prompt[pos : pos + width]
+        cache = _np.zeros((B,), _np.int32)
+        cache[0] = pos
+        q = _np.zeros((B,), _np.int32)
+        q[0] = width
+        nxt, logits, kv = jitted[wide](*params, kv, toks, cache, q)
+        pos += width
+    generated = [int(nxt[0])]
+    # greedy decode through the c1 bucket
+    for i in range(n_decode - 1):
+        toks = _np.zeros((B, 1), _np.int32)
+        toks[0, 0] = generated[-1]
+        cache = _np.zeros((B,), _np.int32)
+        cache[0] = prompt_len + i
+        q = _np.zeros((B,), _np.int32)
+        q[0] = 1
+        nxt, logits, kv = jitted[1](*params, kv, toks, cache, q)
+        generated.append(int(nxt[0]))
+    del chunk_p, logits
+    return {
+        "prompt": [int(t) for t in prompt],
+        "generated": generated,
+        "prefill_bucket": wide,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--report", action="store_true", help="print L1 VMEM/FLOP report")
+    args = ap.parse_args()
+    build(args.out, EchoLMConfig(), report=args.report)
+
+
+if __name__ == "__main__":
+    main()

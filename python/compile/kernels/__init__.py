@@ -1,0 +1,4 @@
+"""L1 — Pallas kernels for the serving hot-spot + pure-jnp oracles."""
+
+from .attention import chunk_attention, vmem_report  # noqa: F401
+from .ref import chunk_attention_ref  # noqa: F401

@@ -1,0 +1,170 @@
+"""L1 — Pallas chunk-attention kernel: the serving hot-spot.
+
+One kernel serves both phases of LLM inference, because Echo's scheduler
+emits *mixed* batches (chunked prefill + decode) and the engine runs them as
+a single step:
+
+  * decode        -> chunk width C = 1
+  * chunked prefill -> chunk width C in {16, 64}
+
+For every batch slot ``b`` the C query tokens sit at absolute positions
+``cache_len[b] .. cache_len[b]+C-1`` of a per-slot KV slab of ``seq_len``
+token positions (the new K/V have already been written into the slab by the
+caller, see ``model.py``).  The kernel computes flash-style masked attention
+of the chunk against the slab.
+
+Hardware adaptation (paper targets A100/CUDA; see DESIGN.md):
+
+  * vLLM's threadblock-per-(seq, head) becomes a ``(slot, head)`` Pallas
+    grid; KV is consumed in ``kv_tile``-token tiles via ``pl.load`` — on a
+    real TPU these are the HBM->VMEM DMAs of the double-buffered schedule.
+  * the shared-memory softmax reduction becomes the online-softmax
+    (m, l, acc) recurrence carried across KV tiles in registers/VMEM.
+  * tile sizes: ``kv_tile x head_dim`` K/V tiles and ``C x kv_tile`` score
+    tiles keep the two matmuls MXU-shaped.
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute.  Numerics are checked
+against the pure-jnp oracle in ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Large-negative mask value. -inf breaks the online-softmax recurrence when a
+# whole tile is masked (exp(-inf - -inf) = nan); a finite sentinel
+# self-corrects: the bogus accumulator rows are wiped by the
+# exp(m_old - m_new) factor as soon as a real tile arrives.
+NEG_MASK = -1e30
+
+
+def _chunk_attention_kernel(
+    lens_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    *,
+    kv_tile: int,
+    seq_len: int,
+    scale: float,
+):
+    """Grid point = one (slot, head). Refs: q (1,1,C,Dh); k/v (1,1,S,Dh)."""
+    q = q_ref[0, 0] * scale  # [C, Dh]
+    chunk = q.shape[0]
+    head_dim = q.shape[1]
+    cache_len = lens_ref[0]
+
+    # Absolute position of query row i is cache_len + i; key column j is
+    # valid iff j <= cache_len + i (causal + length bound in one predicate:
+    # slab entries past cache_len + C - 1 are stale and always masked).
+    row_limit = cache_len + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+
+    num_tiles = seq_len // kv_tile
+
+    def body(t, carry):
+        acc, m, l = carry
+        start = t * kv_tile
+        # On TPU this is the HBM->VMEM tile load of the flash schedule.
+        k = k_ref[0, 0, pl.dslice(start, kv_tile), :]
+        v = v_ref[0, 0, pl.dslice(start, kv_tile), :]
+        s = jax.lax.dot_general(
+            q,
+            k,
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [C, kv_tile]
+        col = start + jax.lax.broadcasted_iota(jnp.int32, (1, kv_tile), 1)
+        s = jnp.where(col <= row_limit, s, NEG_MASK)
+
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((chunk, head_dim), jnp.float32)
+    m0 = jnp.full((chunk,), NEG_MASK, jnp.float32)
+    l0 = jnp.zeros((chunk,), jnp.float32)
+    acc, _, l = jax.lax.fori_loop(0, num_tiles, body, (acc0, m0, l0))
+    # Key j=0 is always unmasked (row_limit >= 0), so l > 0 for every row.
+    o_ref[0, 0] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def chunk_attention(
+    q: jax.Array,
+    k_slab: jax.Array,
+    v_slab: jax.Array,
+    cache_lens: jax.Array,
+    *,
+    kv_tile: int = 128,
+) -> jax.Array:
+    """Masked flash attention of a token chunk against per-slot KV slabs.
+
+    Args:
+      q:          [B, H, C, Dh] query chunk (RoPE already applied).
+      k_slab:     [B, H, S, Dh] per-slot key slab (chunk keys written in).
+      v_slab:     [B, H, S, Dh] per-slot value slab.
+      cache_lens: [B] int32, tokens already cached per slot (chunk excluded).
+      kv_tile:    KV tile width of the flash schedule; must divide S.
+
+    Returns:
+      [B, H, C, Dh] attention output.
+    """
+    batch, heads, chunk, head_dim = q.shape
+    seq_len = k_slab.shape[2]
+    if seq_len % kv_tile != 0:
+        raise ValueError(f"kv_tile {kv_tile} must divide seq_len {seq_len}")
+    scale = 1.0 / (head_dim**0.5)
+
+    kernel = functools.partial(
+        _chunk_attention_kernel,
+        kv_tile=kv_tile,
+        seq_len=seq_len,
+        scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(batch, heads),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+            pl.BlockSpec((1, 1, chunk, head_dim), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, seq_len, head_dim), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, seq_len, head_dim), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, head_dim), lambda b, h: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, heads, chunk, head_dim), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(cache_lens, q, k_slab, v_slab)
+
+
+def vmem_report(batch: int, heads: int, chunk: int, head_dim: int, seq_len: int,
+                kv_tile: int = 128, bytes_per_el: int = 4) -> dict:
+    """Static VMEM/FLOP estimate for one grid step (L1 perf deliverable).
+
+    interpret=True gives CPU-numpy timings only, so real-TPU performance is
+    estimated structurally: per-(slot, head) grid step resident bytes and
+    MXU work, reported by ``python -m compile.aot --report``.
+    """
+    q_bytes = chunk * head_dim * bytes_per_el
+    kv_tile_bytes = 2 * kv_tile * head_dim * bytes_per_el  # double for K and V
+    acc_bytes = (chunk * head_dim + 2 * chunk) * bytes_per_el
+    score_bytes = chunk * kv_tile * bytes_per_el
+    vmem = q_bytes + 2 * kv_tile_bytes + acc_bytes + score_bytes  # 2x: dbl-buffer
+    flops_per_tile = 2 * chunk * kv_tile * head_dim * 2  # QK^T and PV matmuls
+    tiles = seq_len // kv_tile
+    return {
+        "grid": [batch, heads],
+        "kv_tile": kv_tile,
+        "vmem_bytes_per_step": vmem,
+        "flops_per_grid_point": flops_per_tile * tiles,
+        "hbm_bytes_per_grid_point": tiles * kv_tile_bytes + 2 * q_bytes,
+        "arithmetic_intensity": (flops_per_tile * tiles)
+        / (tiles * kv_tile_bytes + 2 * q_bytes),
+    }

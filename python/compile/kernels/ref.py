@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the Pallas chunk-attention kernel.
+
+No pallas, no tiling — one dense masked softmax. This is the correctness
+ground truth the kernel is tested against (python/tests/test_kernel.py).
+"""
+
+import jax.numpy as jnp
+
+
+def chunk_attention_ref(q, k_slab, v_slab, cache_lens):
+    """Dense reference of kernels.attention.chunk_attention.
+
+    Shapes: q [B, H, C, Dh]; k_slab/v_slab [B, H, S, Dh]; cache_lens [B].
+    Returns [B, H, C, Dh].
+    """
+    batch, heads, chunk, head_dim = q.shape
+    seq_len = k_slab.shape[2]
+    scale = 1.0 / (head_dim**0.5)
+
+    # [B, C, S] mask: key j visible to query i of slot b iff j <= cache_len[b]+i
+    rows = cache_lens[:, None] + jnp.arange(chunk)[None, :]  # [B, C]
+    mask = jnp.arange(seq_len)[None, None, :] <= rows[:, :, None]  # [B, C, S]
+
+    s = jnp.einsum("bhcd,bhsd->bhcs", q * scale, k_slab)
+    s = jnp.where(mask[:, None, :, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhcs,bhsd->bhcd", p, v_slab)

@@ -1,0 +1,226 @@
+"""L2 — EchoLM: a small LLaMA-style transformer with a unified serving step.
+
+The model exposes exactly one entry point, ``step``: execute one engine
+iteration over a fixed number of batch *slots*, where every active slot
+carries either a decode token (chunk width 1) or a prefill chunk.  This is
+the batch shape Echo's scheduler emits (mixed chunked-prefill + decode,
+paper §2.1/§4.1), so the whole serving loop needs a single static-shape XLA
+program per (batch, chunk) bucket.
+
+Architecture: token embedding, N x [RMSNorm -> MHA (RoPE, Pallas
+chunk-attention kernel) -> RMSNorm -> SwiGLU], final RMSNorm, logit head,
+greedy argmax in-graph (so the coordinator round-trips token ids, not
+logit tensors).
+
+KV cache: a dense slab ``[L, 2, B, H, S, Dh]`` threaded through the step as
+an argument and returned updated.  Physical paging is *not* done here — the
+logical block accounting, prefix sharing, and eviction (the paper's
+contribution) live in the rust KV manager; the device program stays
+static-shape (see DESIGN.md "Hardware adaptation").
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import chunk_attention
+from .kernels.ref import chunk_attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class EchoLMConfig:
+    """Model + bucket geometry. The single source of truth; aot.py writes it
+    into artifacts/manifest.json and the rust runtime reads it back."""
+
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    head_dim: int = 32
+    n_layers: int = 4
+    ffn: int = 352
+    max_seq: int = 256  # S: per-slot KV slab length
+    max_batch: int = 8  # B: engine slots
+    rope_theta: float = 10000.0
+    kv_tile: int = 128
+
+    @property
+    def kv_shape(self) -> Tuple[int, ...]:
+        return (
+            self.n_layers,
+            2,
+            self.max_batch,
+            self.n_heads,
+            self.max_seq,
+            self.head_dim,
+        )
+
+    def param_specs(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Flat parameter table in the exact positional order of ``step``'s
+        leading arguments (and of artifacts/weights.bin)."""
+        L, D, H, Dh, F, V = (
+            self.n_layers,
+            self.d_model,
+            self.n_heads,
+            self.head_dim,
+            self.ffn,
+            self.vocab,
+        )
+        return [
+            ("embed", (V, D)),
+            ("wq", (L, D, H * Dh)),
+            ("wk", (L, D, H * Dh)),
+            ("wv", (L, D, H * Dh)),
+            ("wo", (L, H * Dh, D)),
+            ("w_gate", (L, D, F)),
+            ("w_up", (L, D, F)),
+            ("w_down", (L, F, D)),
+            ("norm_attn", (L, D)),
+            ("norm_mlp", (L, D)),
+            ("norm_final", (D,)),
+            ("w_out", (D, V)),
+        ]
+
+
+def init_params(cfg: EchoLMConfig, seed: int = 0) -> List[jax.Array]:
+    """Seeded random init (no pretrained weights are reachable offline; the
+    substitution is documented in DESIGN.md). Scaled so logits stay O(1)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in cfg.param_specs():
+        key, sub = jax.random.split(key)
+        if name.startswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = fan_in**-0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def _rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, positions, theta):
+    """Rotary embedding at absolute positions. x: [B, C, H, Dh]."""
+    half = x.shape[-1] // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, :, None].astype(jnp.float32) * freqs[None, None, :]
+    cos = jnp.cos(angles)[:, :, None, :]  # [B, C, 1, half]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _write_chunk(slab, new, starts):
+    """Write [B, H, C, Dh] `new` into [B, H, S, Dh] `slab` at per-slot token
+    offset `starts`. Positions past a slot's valid length become stale but
+    are never read (attention mask) and are overwritten before becoming
+    valid, so writing the full chunk unconditionally is safe."""
+
+    def one(slab_b, new_b, start):
+        return jax.lax.dynamic_update_slice(slab_b, new_b, (0, start, 0))
+
+    return jax.vmap(one)(slab, new, starts)
+
+
+def step(cfg: EchoLMConfig, params, kv, tokens, cache_lens, q_lens, *, use_kernel=True):
+    """One engine iteration over all slots.
+
+    Args:
+      params:     flat list per cfg.param_specs().
+      kv:         [L, 2, B, H, S, Dh] f32 slab.
+      tokens:     [B, C] int32; slot b's valid tokens are tokens[b, :q_lens[b]].
+      cache_lens: [B] int32 tokens already cached (absolute chunk offset).
+      q_lens:     [B] int32 valid chunk width per slot (0 = inactive slot).
+      use_kernel: pallas kernel (True) or jnp oracle (False, test-only).
+
+    Returns:
+      (next_tokens [B] int32, logits [B, V] f32, kv_out like kv)
+    """
+    (
+        embed,
+        wq,
+        wk,
+        wv,
+        wo,
+        w_gate,
+        w_up,
+        w_down,
+        norm_attn,
+        norm_mlp,
+        norm_final,
+        w_out,
+    ) = params
+    B, C = tokens.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    attn_fn = chunk_attention if use_kernel else chunk_attention_ref
+
+    positions = cache_lens[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]
+    x = embed[tokens]  # [B, C, D]
+
+    def layer(x, xs):
+        lwq, lwk, lwv, lwo, lwg, lwu, lwd, ln1, ln2, kv_l = xs
+        h = _rmsnorm(x, ln1)
+        q = (h @ lwq).reshape(B, C, H, Dh)
+        k = (h @ lwk).reshape(B, C, H, Dh)
+        v = (h @ lwv).reshape(B, C, H, Dh)
+        q = _rope(q, positions, cfg.rope_theta)
+        k = _rope(k, positions, cfg.rope_theta)
+
+        k_slab = _write_chunk(kv_l[0], k.transpose(0, 2, 1, 3), cache_lens)
+        v_slab = _write_chunk(kv_l[1], v.transpose(0, 2, 1, 3), cache_lens)
+
+        if use_kernel:
+            attn = attn_fn(
+                q.transpose(0, 2, 1, 3), k_slab, v_slab, cache_lens,
+                kv_tile=cfg.kv_tile,
+            )
+        else:
+            attn = attn_fn(q.transpose(0, 2, 1, 3), k_slab, v_slab, cache_lens)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, C, H * Dh)
+        x = x + attn @ lwo
+
+        h2 = _rmsnorm(x, ln2)
+        x = x + (jax.nn.silu(h2 @ lwg) * (h2 @ lwu)) @ lwd
+        return x, jnp.stack([k_slab, v_slab])
+
+    xs = (wq, wk, wv, wo, w_gate, w_up, w_down, norm_attn, norm_mlp, kv)
+    x, kv_out = jax.lax.scan(layer, x, xs)
+
+    x = _rmsnorm(x, norm_final)
+    # Hidden state at each slot's last valid chunk position (q_len - 1,
+    # clamped for inactive slots whose output the coordinator discards).
+    last = jnp.clip(q_lens - 1, 0, C - 1)
+    h_last = jnp.take_along_axis(x, last[:, None, None], axis=1)[:, 0, :]
+    logits = h_last @ w_out  # [B, V]
+    next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_tokens, logits, kv_out
+
+
+def make_step_fn(cfg: EchoLMConfig, chunk: int, *, use_kernel=True):
+    """Positional-arg step closure for one (max_batch, chunk) bucket —
+    the unit aot.py lowers to HLO."""
+
+    def fn(*args):
+        n = len(cfg.param_specs())
+        params = list(args[:n])
+        kv, tokens, cache_lens, q_lens = args[n : n + 4]
+        return step(cfg, params, kv, tokens, cache_lens, q_lens, use_kernel=use_kernel)
+
+    return fn
+
+
+def arg_specs(cfg: EchoLMConfig, chunk: int):
+    """ShapeDtypeStructs matching make_step_fn's positional args."""
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in cfg.param_specs()
+    ]
+    specs.append(jax.ShapeDtypeStruct(cfg.kv_shape, jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((cfg.max_batch, chunk), jnp.int32))
+    specs.append(jax.ShapeDtypeStruct((cfg.max_batch,), jnp.int32))
+    specs.append(jax.ShapeDtypeStruct((cfg.max_batch,), jnp.int32))
+    return specs

@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas chunk-attention kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps the shape/length space (batch, heads, chunk width, slab
+length, per-slot cache lengths); every case asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import chunk_attention, vmem_report
+from compile.kernels.ref import chunk_attention_ref
+
+
+def make_case(rng, batch, heads, chunk, seq_len, head_dim, dtype=jnp.float32):
+    q = jnp.asarray(rng.standard_normal((batch, heads, chunk, head_dim)), dtype)
+    k = jnp.asarray(rng.standard_normal((batch, heads, seq_len, head_dim)), dtype)
+    v = jnp.asarray(rng.standard_normal((batch, heads, seq_len, head_dim)), dtype)
+    lens = jnp.asarray(
+        rng.integers(0, seq_len - chunk + 1, size=(batch,)), jnp.int32
+    )
+    return q, k, v, lens
+
+
+@pytest.mark.parametrize("chunk", [1, 16, 64])
+@pytest.mark.parametrize("kv_tile", [64, 128])
+def test_kernel_matches_ref_buckets(chunk, kv_tile):
+    """The exact bucket geometries that aot.py ships."""
+    rng = np.random.default_rng(7 + chunk)
+    q, k, v, lens = make_case(rng, batch=8, heads=4, chunk=chunk, seq_len=256, head_dim=32)
+    got = chunk_attention(q, k, v, lens, kv_tile=kv_tile)
+    want = chunk_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    batch=st.integers(1, 4),
+    heads=st.integers(1, 3),
+    chunk=st.sampled_from([1, 2, 5, 8, 16]),
+    tiles=st.integers(1, 3),
+    head_dim=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(batch, heads, chunk, tiles, head_dim, seed):
+    kv_tile = 32
+    seq_len = kv_tile * tiles
+    if chunk > seq_len:
+        chunk = seq_len
+    rng = np.random.default_rng(seed)
+    q, k, v, lens = make_case(rng, batch, heads, chunk, seq_len, head_dim)
+    got = chunk_attention(q, k, v, lens, kv_tile=kv_tile)
+    want = chunk_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_zero_cache_len_decode():
+    """First token of a fresh request: attends only to itself."""
+    rng = np.random.default_rng(0)
+    q, k, v, _ = make_case(rng, 2, 2, 1, 64, 16)
+    lens = jnp.zeros((2,), jnp.int32)
+    got = chunk_attention(q, k, v, lens, kv_tile=32)
+    # softmax over a single visible key = that key's value exactly
+    np.testing.assert_allclose(got[:, :, 0, :], v[:, :, 0, :], rtol=1e-5, atol=1e-5)
+
+
+def test_full_slab_boundary():
+    """Chunk exactly fills the slab (cache_len + chunk == seq_len)."""
+    rng = np.random.default_rng(1)
+    chunk, seq_len = 16, 128
+    q, k, v, _ = make_case(rng, 3, 2, chunk, seq_len, 32)
+    lens = jnp.full((3,), seq_len - chunk, jnp.int32)
+    got = chunk_attention(q, k, v, lens, kv_tile=64)
+    want = chunk_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_stale_slab_tail_is_ignored():
+    """Entries past cache_len+chunk must not affect the output."""
+    rng = np.random.default_rng(2)
+    q, k, v, _ = make_case(rng, 2, 2, 4, 128, 16)
+    lens = jnp.asarray([10, 40], jnp.int32)
+    base = chunk_attention(q, k, v, lens, kv_tile=32)
+    # Poison everything beyond the valid region.
+    k2, v2 = np.asarray(k).copy(), np.asarray(v).copy()
+    for b, l in enumerate([10, 40]):
+        k2[b, :, l + 4 :, :] = 1e4
+        v2[b, :, l + 4 :, :] = -1e4
+    got = chunk_attention(q, jnp.asarray(k2), jnp.asarray(v2), lens, kv_tile=32)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+
+def test_mixed_lens_heterogeneous_batch():
+    """Echo-style batch: some slots decode deep in context, some prefill."""
+    rng = np.random.default_rng(3)
+    q, k, v, _ = make_case(rng, 4, 2, 8, 128, 16)
+    lens = jnp.asarray([0, 7, 63, 120], jnp.int32)
+    got = chunk_attention(q, k, v, lens, kv_tile=32)
+    want = chunk_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_kv_tile_invariance():
+    """Flash tiling must not change numerics."""
+    rng = np.random.default_rng(4)
+    q, k, v, lens = make_case(rng, 2, 2, 8, 128, 16)
+    outs = [
+        chunk_attention(q, k, v, lens, kv_tile=t) for t in (16, 32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
+
+
+def test_bad_tile_raises():
+    rng = np.random.default_rng(5)
+    q, k, v, lens = make_case(rng, 1, 1, 1, 100, 16)
+    with pytest.raises(ValueError):
+        chunk_attention(q, k, v, lens, kv_tile=64)
+
+
+def test_vmem_report_structure():
+    rep = vmem_report(8, 4, 64, 32, 256, 128)
+    assert rep["vmem_bytes_per_step"] > 0
+    assert rep["flops_per_grid_point"] == 2 * 64 * 128 * 32 * 2 * (256 // 128)
+    assert rep["arithmetic_intensity"] > 0

@@ -1,0 +1,87 @@
+//! `cargo bench --bench figures` — regenerates every table and figure of
+//! the paper's evaluation (§7) plus the DESIGN.md ablations, printing the
+//! same rows/series the paper reports and writing the raw data to
+//! bench_figures.json.
+//!
+//! Pass `-- quick` for CI-scale horizons, or a figure name (e.g. `-- fig6`)
+//! to run one.
+
+use echo::figures::{self, FigureOpts};
+use echo::utils::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let quick = args.iter().any(|a| a == "quick");
+    // cargo bench passes --bench; ignore flags.
+    let wanted: Vec<&str> = args
+        .iter()
+        .filter(|a| !a.starts_with('-') && *a != "quick")
+        .map(|s| s.as_str())
+        .collect();
+    let want = |name: &str| wanted.is_empty() || wanted.contains(&name);
+
+    let opts = if quick { FigureOpts::quick() } else { FigureOpts::standard() };
+    println!(
+        "figures: horizon={}s mean_rate={}/s seed={} (substrate: calibrated \
+         A100/LLaMA-8B cost model; see DESIGN.md substitutions)",
+        opts.horizon, opts.mean_rate, opts.seed
+    );
+    let mut out = Json::obj();
+    let t_all = std::time::Instant::now();
+
+    if want("table1") {
+        let (t, j) = figures::table1(opts.seed);
+        println!("{t}");
+        out = out.set("table1", j);
+    }
+    if want("fig2") {
+        let (t, j) = figures::fig2(&opts);
+        println!("{t}");
+        out = out.set("fig2", j);
+    }
+    if want("fig6") {
+        let (t, j) = figures::fig6(&opts)?;
+        println!("{t}");
+        out = out.set("fig6", j);
+    }
+    if want("fig7") {
+        let (t, j) = figures::fig7(&opts)?;
+        println!("{t}");
+        out = out.set("fig7", j);
+    }
+    if want("fig8") {
+        let (t, j) = figures::fig8(&opts)?;
+        println!("{t}");
+        out = out.set("fig8", j);
+    }
+    if want("fig9") {
+        let (t, j) = figures::fig9(&opts)?;
+        println!("{t}");
+        out = out.set("fig9", j);
+    }
+    if want("fig10") {
+        let (t, j) = figures::fig10(&opts)?;
+        println!("{t}");
+        out = out.set("fig10", j);
+    }
+    if want("fig11") {
+        let (t, j) = figures::fig11(&opts)?;
+        println!("{t}");
+        out = out.set("fig11", j);
+    }
+    if want("ablations") {
+        let (t, j) = figures::ablation_cache(&opts)?;
+        println!("{t}");
+        out = out.set("ablation_cache", j);
+        let (t, j) = figures::ablation_budget(&opts)?;
+        println!("{t}");
+        out = out.set("ablation_budget", j);
+    }
+
+    std::fs::write("bench_figures.json", out.pretty())?;
+    println!(
+        "\nwrote bench_figures.json ({:.1}s total)",
+        t_all.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

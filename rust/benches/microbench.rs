@@ -1,0 +1,239 @@
+//! `cargo bench --bench microbench` — hot-path micro-benchmarks of the L3
+//! coordinator (criterion is unreachable offline; this is a from-scratch
+//! timing harness with warmup + median-of-runs). Feeds EXPERIMENTS.md §Perf.
+//!
+//! Paths measured:
+//!   * scheduler decision per iteration at pool sizes 100/1000/5000
+//!   * KV manager: allocate/release cycle, prefix lookup, eviction churn
+//!   * radix index: insert/best_cached at depth
+//!   * estimator: batch_time + fit
+//!   * end-to-end sim iterations/second
+//!   * PJRT step latency per bucket (if artifacts are built)
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use echo::config::{SchedulerKind, SystemConfig};
+use echo::core::{PromptSpec, Request, RequestStore, TaskClass};
+use echo::engine::{sim::SimBackend, Engine};
+use echo::estimator::{BatchShape, PrefillItem, TimeModel};
+use echo::kvcache::{EvictionPolicy, KvManager};
+use echo::scheduler::{OfflinePool, RadixIndex, Scheduler};
+use echo::utils::rng::Rng;
+use echo::workload::{synthesize, DatasetSpec};
+
+/// Median wall-time per op over `runs` timed batches of `iters_per_run`.
+fn bench<F: FnMut()>(name: &str, iters_per_run: usize, runs: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters_per_run.min(100) {
+        f();
+    }
+    let mut samples: Vec<f64> = (0..runs)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_run {
+                f();
+            }
+            t0.elapsed().as_secs_f64() / iters_per_run as f64
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[samples.len() / 2];
+    let unit = if med < 1e-6 {
+        format!("{:.1} ns", med * 1e9)
+    } else if med < 1e-3 {
+        format!("{:.2} us", med * 1e6)
+    } else {
+        format!("{:.3} ms", med * 1e3)
+    };
+    println!("{name:<56} {unit:>12}/op");
+    med
+}
+
+fn bench_scheduler_decision(pool_size: usize) {
+    let mut cfg = SystemConfig::a100_llama8b();
+    cfg.scheduler.kind = SchedulerKind::Echo;
+    let block_size = cfg.cache.block_size;
+    let mut sched = Scheduler::new(
+        cfg.scheduler.clone(),
+        cfg.slo,
+        TimeModel::new(cfg.time_model),
+        block_size,
+    );
+    let mut store = RequestStore::new();
+    let mut queue = VecDeque::new();
+    let mut pool = OfflinePool::default_buckets();
+    let mut kv = KvManager::new(256, block_size, EvictionPolicy::TaskAware); // tiny memory: admissions fail fast
+    let mut rng = Rng::new(1);
+    let spec = DatasetSpec::loogle_qa_short();
+    let batch = synthesize(&spec, pool_size, TaskClass::Offline, 0.0, &mut store, &mut rng);
+    for &id in &batch.ids {
+        let r = store.get(id).clone();
+        let keys = r.prompt.content_keys(id, r.prompt.total_len, block_size);
+        kv.register_future(&keys);
+        pool.add(id, r.prompt.total_len, keys);
+    }
+    // One running online decode so the SLO path is active.
+    let online = store.fresh_id();
+    let mut r = Request::new(online, TaskClass::Online, 0.0, PromptSpec::sim(100, None), 64);
+    r.state = echo::core::ReqState::Running;
+    r.phase = echo::core::Phase::Decode;
+    r.computed = 100;
+    r.generated = 1;
+    r.token_times.push(0.0);
+    store.insert(r);
+    kv.allocate(online, TaskClass::Online, &[], 7, 0.0).unwrap();
+    let mut now = 0.0;
+    bench(
+        &format!("scheduler decision (Echo, pool={pool_size}, memory-tight)"),
+        200,
+        7,
+        || {
+            now += 0.01;
+            let out = sched.schedule(now, &mut store, &mut queue, &mut pool, &mut kv);
+            std::hint::black_box(out.plan.items.len());
+        },
+    );
+}
+
+fn bench_kv_ops() {
+    let mut kv = KvManager::new(8192, 16, EvictionPolicy::TaskAware);
+    let mut id = 0u64;
+    bench("kv allocate+release (32 blocks, keyed)", 500, 7, || {
+        id += 1;
+        let keys: Vec<u128> = (0..32).map(|i| ((id as u128) << 32) | i).collect();
+        kv.allocate(id, TaskClass::Offline, &keys, 32, id as f64).unwrap();
+        kv.release(id, true);
+    });
+    // Prefix lookup on a warm cache.
+    let keys: Vec<u128> = (0..512).map(|i| (7u128 << 96) | i).collect();
+    kv.flush_cache();
+    kv.register_future(&keys);
+    id += 1;
+    kv.allocate(id, TaskClass::Offline, &keys, 512, 0.0).unwrap();
+    kv.release(id, false);
+    bench("kv peek_prefix (512 cached blocks)", 2000, 7, || {
+        std::hint::black_box(kv.peek_prefix(&keys));
+    });
+    bench("kv eviction_preview (64 victims)", 2000, 7, || {
+        std::hint::black_box(kv.eviction_preview(64));
+    });
+    // Eviction churn: small cache, rotating working sets.
+    let mut kv = KvManager::new(256, 16, EvictionPolicy::TaskAware);
+    let mut epoch = 0u64;
+    bench("kv eviction churn (alloc 64 into full cache)", 300, 7, || {
+        epoch += 1;
+        let keys: Vec<u128> = (0..64).map(|i| ((epoch as u128) << 32) | i).collect();
+        kv.allocate(epoch, TaskClass::Offline, &keys, 64, epoch as f64).unwrap();
+        kv.release(epoch, true);
+    });
+}
+
+fn bench_radix() {
+    let mut idx = RadixIndex::default();
+    for r in 0..1000u64 {
+        let group = r % 20;
+        let keys: Vec<u128> = (0..64)
+            .map(|i| if i < 48 { ((group as u128) << 32) | i } else { ((r as u128) << 48) | i })
+            .collect();
+        idx.insert(r, keys);
+    }
+    let mut kv = KvManager::new(4096, 16, EvictionPolicy::TaskAware);
+    let warm: Vec<u128> = (0..48).map(|i| (3u128 << 32) | i).collect();
+    kv.register_future(&warm);
+    kv.allocate(1_000_001, TaskClass::Offline, &warm, 48, 0.0).unwrap();
+    kv.release(1_000_001, false);
+    bench("radix best_cached (1000 reqs, 48-deep warm path)", 1000, 7, || {
+        std::hint::black_box(idx.best_cached(&kv));
+    });
+}
+
+fn bench_estimator() {
+    let tm = TimeModel::new(SystemConfig::a100_llama8b().time_model);
+    let shape = BatchShape {
+        prefills: vec![PrefillItem { chunk: 512, context: 1024 }],
+        decode_lens: (0..64).map(|i| 500 + i * 13).collect(),
+    };
+    bench("estimator batch_time (1 prefill + 64 decodes)", 20_000, 7, || {
+        std::hint::black_box(tm.batch_time(&shape));
+    });
+}
+
+fn bench_sim_iterations() {
+    let mut cfg = SystemConfig::a100_llama8b();
+    cfg.scheduler.kind = SchedulerKind::Echo;
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), 2, 0.0);
+    let mut e = Engine::new(cfg, backend);
+    let mut rng = Rng::new(2);
+    let mut store = std::mem::take(&mut e.store);
+    let batch = synthesize(
+        &DatasetSpec::loogle_qa_short(),
+        400,
+        TaskClass::Offline,
+        0.0,
+        &mut store,
+        &mut rng,
+    );
+    e.store = store;
+    for &id in &batch.ids {
+        let r = e.store.get(id).clone();
+        let keys = r.prompt.content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
+        e.kv.register_future(&keys);
+        e.pool.add(id, r.prompt.total_len, keys);
+    }
+    for i in 0..500 {
+        let id = e.store.fresh_id();
+        e.submit_online(Request::new(
+            id,
+            TaskClass::Online,
+            i as f64 * 0.4,
+            PromptSpec::sim(300, None),
+            32,
+        ));
+    }
+    let t0 = Instant::now();
+    let mut iters = 0usize;
+    while e.clock < 120.0 {
+        if !e.step().unwrap() {
+            break;
+        }
+        iters += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<56} {:>9.0} iters/s  ({} iters, {:.2}s wall, {:.0}s simulated)",
+        "end-to-end sim engine", iters as f64 / wall, iters, wall, e.clock
+    );
+}
+
+fn bench_pjrt() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("pjrt step: skipped (run `make artifacts`)");
+        return;
+    }
+    let mut rt = echo::runtime::ModelRuntime::load(&dir).unwrap();
+    for &bucket in &[1usize, 16, 64] {
+        let secs = rt.bench_step(bucket, 128, 10).unwrap();
+        let toks = rt.manifest.max_batch * bucket;
+        println!(
+            "{:<56} {:>9.2} ms/step  ({} tokens -> {:.0} tok/s)",
+            format!("pjrt step bucket c{bucket} (context 128, all slots)"),
+            secs * 1e3,
+            toks,
+            toks as f64 / secs
+        );
+    }
+}
+
+fn main() {
+    println!("== microbench: L3 coordinator hot paths ==\n");
+    for pool in [100usize, 1000, 5000] {
+        bench_scheduler_decision(pool);
+    }
+    bench_kv_ops();
+    bench_radix();
+    bench_estimator();
+    bench_sim_iterations();
+    bench_pjrt();
+}

@@ -1,0 +1,404 @@
+//! `echo` binary command surface.
+//!
+//! Subcommands:
+//!   serve      — run the threaded server on the real PJRT model (demo load)
+//!   simulate   — mixed online/offline run on the cost-model backend
+//!   estimate   — deployer resource/throughput estimation (paper §5.4)
+//!   calibrate  — fit Eq. 6-8 coefficients against the PJRT backend
+//!   trace-gen  — generate a paper-shaped arrival trace to a JSON file
+//!   figures    — regenerate a paper table/figure (same code as `cargo bench`)
+//!   smoke      — PJRT wiring check
+
+use crate::config::{SchedulerKind, SystemConfig};
+use crate::core::{PromptSpec, Request, TaskClass};
+use crate::engine::{pjrt::PjrtBackend, sim::SimBackend, Engine};
+use crate::estimator::TimeModel;
+use crate::figures;
+use crate::runtime::ModelRuntime;
+use crate::sim::DeployerSim;
+use crate::trace::{Trace, TraceConfig};
+use crate::utils::cli::Cli;
+use crate::utils::json::Json;
+use crate::utils::rng::Rng;
+use crate::workload::{synthesize, DatasetSpec};
+
+const ABOUT: &str = "echo — co-scheduling of hybrid online-offline LLM serving tasks";
+
+pub fn run_cli() -> i32 {
+    let mut argv: Vec<String> = std::env::args().collect();
+    let program = if argv.is_empty() { "echo".into() } else { argv.remove(0) };
+    if argv.is_empty() {
+        eprintln!(
+            "{ABOUT}\n\nSubcommands: serve, simulate, estimate, calibrate, \
+             trace-gen, figures, smoke\nRun `{program} <cmd> --help` for options."
+        );
+        return 2;
+    }
+    let cmd = argv.remove(0);
+    let res = match cmd.as_str() {
+        "serve" => serve(&program, argv),
+        "simulate" => simulate(&program, argv),
+        "estimate" => estimate(&program, argv),
+        "calibrate" => calibrate(&program, argv),
+        "trace-gen" => trace_gen(&program, argv),
+        "figures" => figures_cmd(&program, argv),
+        "smoke" => smoke(),
+        other => {
+            eprintln!("unknown subcommand {other:?}");
+            return 2;
+        }
+    };
+    match res {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("echo {cmd}: {e:#}");
+            1
+        }
+    }
+}
+
+fn parse_or_usage(cli: &Cli, program: &str, argv: Vec<String>) -> Result<crate::utils::cli::Args, anyhow::Error> {
+    cli.parse_from(program, argv).map_err(|usage| anyhow::anyhow!("{usage}"))
+}
+
+fn load_config(args: &crate::utils::cli::Args) -> anyhow::Result<SystemConfig> {
+    let mut cfg = if !args.str("config").is_empty() {
+        SystemConfig::load(&args.str("config"))?
+    } else {
+        SystemConfig::preset(&args.str("preset"))?
+    };
+    if !args.str("strategy").is_empty() {
+        cfg.scheduler.kind = SchedulerKind::parse(&args.str("strategy"))?;
+    }
+    Ok(cfg)
+}
+
+fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new("serve a demo load on the real EchoLM model via PJRT")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("strategy", "echo", "bs | bs+e | bs+e+s | echo")
+        .opt("online", "12", "number of online demo requests")
+        .opt("offline", "8", "number of offline demo requests")
+        .opt("seed", "42", "rng seed");
+    let args = parse_or_usage(&cli, program, argv)?;
+
+    let rt = ModelRuntime::load(args.str("artifacts"))?;
+    println!(
+        "loaded {} (platform={}, buckets={:?}, {} params)",
+        rt.manifest.kv_shape.len(),
+        rt.platform(),
+        rt.buckets(),
+        rt.manifest.params.len()
+    );
+    let mut cfg = SystemConfig::cpu_echolm();
+    cfg.scheduler.kind = SchedulerKind::parse(&args.str("strategy"))?;
+    cfg.scheduler.max_batch = rt.manifest.max_batch;
+    cfg.cache.capacity_tokens = rt.manifest.max_batch * rt.manifest.max_seq;
+    let vocab = rt.manifest.vocab as u32;
+    let engine = Engine::new(cfg, PjrtBackend::new(rt));
+    let handle = crate::server::spawn(engine);
+
+    let mut rng = Rng::new(args.u64("seed").map_err(anyhow::Error::msg)?);
+    let n_off = args.usize("offline").map_err(anyhow::Error::msg)?;
+    let n_on = args.usize("online").map_err(anyhow::Error::msg)?;
+    let shared: Vec<u32> = (0..32).map(|_| rng.range_u64(1, (vocab - 1) as u64) as u32).collect();
+    for _ in 0..n_off {
+        let mut t = shared.clone();
+        t.extend((0..16).map(|_| rng.range_u64(1, (vocab - 1) as u64) as u32));
+        handle.submit_offline(PromptSpec::real(t), 8);
+    }
+    let mut rxs = Vec::new();
+    for _ in 0..n_on {
+        let t: Vec<u32> = (0..40).map(|_| rng.range_u64(1, (vocab - 1) as u64) as u32).collect();
+        rxs.push(handle.submit_online(PromptSpec::real(t), 8));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let c = rx.recv_timeout(std::time::Duration::from_secs(120))?;
+        println!(
+            "online #{i}: {} tokens, ttft={:.1}ms tpot={:.1}ms",
+            c.tokens.len(),
+            c.ttft.unwrap_or(0.0) * 1e3,
+            c.mean_tpot.unwrap_or(0.0) * 1e3
+        );
+    }
+    let engine = handle.shutdown();
+    println!("{}", engine.metrics.to_json(&engine.cfg.slo).pretty());
+    Ok(())
+}
+
+fn simulate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new("mixed online/offline run on the cost-model backend")
+        .opt("preset", "a100_llama8b", "config preset")
+        .opt("config", "", "config JSON file (overrides preset)")
+        .opt("strategy", "", "override scheduler strategy")
+        .opt("horizon", "600", "sim horizon, seconds")
+        .opt("rate", "12", "mean online arrival rate, req/s")
+        .opt("offline-dataset", "loogle_qa_short", "sharegpt | loogle_qa_short | loogle_qa_long | toolbench | nextqa")
+        .opt("offline-count", "0", "offline backlog size (0 = auto)")
+        .opt("seed", "42", "rng seed")
+        .opt("out", "", "write metrics JSON to this path");
+    let args = parse_or_usage(&cli, program, argv)?;
+    let cfg = load_config(&args)?;
+    let horizon = args.f64("horizon").map_err(anyhow::Error::msg)?;
+    let rate = args.f64("rate").map_err(anyhow::Error::msg)?;
+    let seed = args.u64("seed").map_err(anyhow::Error::msg)?;
+
+    let spec = dataset_by_name(&args.str("offline-dataset"))?;
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), seed, 0.02);
+    let slo = cfg.slo;
+    let kind = cfg.scheduler.kind;
+    let mut e = Engine::new(cfg, backend);
+    e.set_sample_interval(horizon / 480.0);
+    let trace = Trace::generate(&TraceConfig::compressed(horizon, rate, seed));
+    let mut rng = Rng::new(seed);
+    for &t in &trace.arrivals {
+        let id = e.store.fresh_id();
+        let len = rng.range_usize(50, 600);
+        let out = rng.range_usize(16, 256);
+        e.submit_online(Request::new(id, TaskClass::Online, t, PromptSpec::sim(len, None), out));
+    }
+    let mut n_off = args.usize("offline-count").map_err(anyhow::Error::msg)?;
+    if n_off == 0 {
+        let boost = if spec.shared_frac > 0.5 { 10.0 } else { 1.5 };
+        n_off =
+            ((horizon / (spec.mean_prompt as f64 / 9_500.0).max(0.02)) * boost) as usize + 64;
+    }
+    let mut store = std::mem::take(&mut e.store);
+    let mut batch = synthesize(&spec, n_off, TaskClass::Offline, 0.0, &mut store, &mut rng);
+    e.store = store;
+    // Interleave prefix groups in submission order (see figures::run_mixed).
+    rng.shuffle(&mut batch.ids);
+    for &id in &batch.ids {
+        let r = e.store.get(id).clone();
+        let keys = r.prompt.content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
+        e.kv.register_future(&keys);
+        e.pool.add(id, r.prompt.total_len, keys);
+    }
+    e.run_until(horizon)?;
+    let j = e
+        .metrics
+        .to_json(&slo)
+        .set("strategy", kind.name())
+        .set("offline_dataset", spec.name)
+        .set("hit_ratio", e.kv.stats.hit_ratio())
+        .set("horizon", horizon);
+    println!("{}", j.pretty());
+    if !args.str("out").is_empty() {
+        std::fs::write(args.str("out"), j.pretty())?;
+    }
+    Ok(())
+}
+
+fn estimate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new("deployer resource & throughput estimation (paper §5.4)")
+        .opt("preset", "a100_llama8b", "config preset")
+        .opt("config", "", "config JSON file")
+        .opt("strategy", "", "override scheduler strategy")
+        .opt("horizon", "600", "trace horizon, seconds")
+        .opt("rate", "12", "mean online arrival rate, req/s")
+        .opt("offline-dataset", "loogle_qa_short", "offline dataset")
+        .opt("offline-count", "200", "offline backlog size")
+        .opt("seed", "42", "rng seed");
+    let args = parse_or_usage(&cli, program, argv)?;
+    let cfg = load_config(&args)?;
+    let horizon = args.f64("horizon").map_err(anyhow::Error::msg)?;
+    let rate = args.f64("rate").map_err(anyhow::Error::msg)?;
+    let seed = args.u64("seed").map_err(anyhow::Error::msg)?;
+    let spec = dataset_by_name(&args.str("offline-dataset"))?;
+
+    let trace = Trace::generate(&TraceConfig::compressed(horizon, rate, seed));
+    let sim = DeployerSim::new(cfg);
+    // Peak window: around the tidal peak (13/24 of the compressed day).
+    let peak_mid = 13.0 / 24.0 * horizon;
+    let window = (peak_mid - horizon / 24.0, peak_mid + horizon / 24.0);
+    let report = sim.report(
+        &trace,
+        window,
+        &spec,
+        args.usize("offline-count").map_err(anyhow::Error::msg)?,
+        horizon,
+    )?;
+    println!("step 1 — minimal KV capacity at peak: {} tokens", report.min_capacity_tokens);
+    for (cap, a_ttft, a_tok) in &report.probes {
+        println!("  probe capacity={cap:>8} ttft_attain={a_ttft:.3} token_attain={a_tok:.3}");
+    }
+    println!(
+        "step 2 — offline throughput at capacity: {:.1} tok/s (online attain {:.3}/{:.3})",
+        report.offline_throughput, report.online_attainment.0, report.online_attainment.1
+    );
+    Ok(())
+}
+
+fn calibrate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new("fit Eq. 6-8 coefficients against the PJRT backend")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("reps", "5", "repetitions per point")
+        .opt("out", "", "write fitted config JSON to this path");
+    let args = parse_or_usage(&cli, program, argv)?;
+    use crate::estimator::{BatchShape, PrefillItem, TimeSample};
+    let mut rt = ModelRuntime::load(args.str("artifacts"))?;
+    let reps = args.usize("reps").map_err(anyhow::Error::msg)?;
+    let mut samples = Vec::new();
+    println!("micro-benchmarking prefill buckets…");
+    for &chunk in &[16usize, 64] {
+        for &context in &[0usize, 32, 64, 128, 192] {
+            if context + chunk > rt.manifest.max_seq {
+                continue;
+            }
+            let secs = rt.bench_step(rt.bucket_for(chunk)?, context, reps)?;
+            println!("  prefill chunk={chunk:>3} context={context:>4}: {:.2} ms", secs * 1e3);
+            // bench_step drives all slots: max_batch prefill items.
+            samples.push(TimeSample {
+                shape: BatchShape {
+                    prefills: vec![PrefillItem { chunk, context }; rt.manifest.max_batch],
+                    decode_lens: vec![],
+                },
+                seconds: secs,
+            });
+        }
+    }
+    println!("micro-benchmarking decode…");
+    for &context in &[8usize, 32, 64, 128, 192, 240] {
+        let secs = rt.bench_step(1, context, reps)?;
+        println!("  decode context={context:>4}: {:.2} ms", secs * 1e3);
+        samples.push(TimeSample {
+            shape: BatchShape {
+                prefills: vec![],
+                decode_lens: vec![context + 1; rt.manifest.max_batch],
+            },
+            seconds: secs,
+        });
+    }
+    let prior = SystemConfig::cpu_echolm().time_model;
+    let fitted = TimeModel::fit(&samples, prior);
+    let err = TimeModel::new(fitted).relative_error(&samples);
+    println!(
+        "fitted: alpha={:.3e} beta={:.3e} c={:.3e} gamma={:.3e} delta={:.3e} lambda={:.3} \
+         (mean rel. err {:.1}%)",
+        fitted.alpha, fitted.beta, fitted.c, fitted.gamma, fitted.delta, fitted.lambda,
+        err * 100.0
+    );
+    if !args.str("out").is_empty() {
+        let mut cfg = SystemConfig::cpu_echolm();
+        cfg.time_model = fitted;
+        std::fs::write(args.str("out"), cfg.to_json().pretty())?;
+        println!("wrote {}", args.str("out"));
+    }
+    Ok(())
+}
+
+fn trace_gen(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new("generate a paper-shaped online arrival trace")
+        .opt("horizon", "86400", "horizon, seconds")
+        .opt("rate", "1.2", "mean rate, req/s")
+        .opt("seed", "42", "rng seed")
+        .opt("out", "trace.json", "output path");
+    let args = parse_or_usage(&cli, program, argv)?;
+    let horizon = args.f64("horizon").map_err(anyhow::Error::msg)?;
+    let rate = args.f64("rate").map_err(anyhow::Error::msg)?;
+    let seed = args.u64("seed").map_err(anyhow::Error::msg)?;
+    let cfg = if (horizon - 86400.0).abs() < 1.0 {
+        TraceConfig::paper_24h(rate, seed)
+    } else {
+        TraceConfig::compressed(horizon, rate, seed)
+    };
+    let tr = Trace::generate(&cfg);
+    tr.save(&args.str("out"))?;
+    println!("wrote {} arrivals to {}", tr.len(), args.str("out"));
+    Ok(())
+}
+
+fn figures_cmd(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new("regenerate a paper table/figure")
+        .opt("which", "all", "table1|fig2|fig6|fig7|fig8|fig9|fig10|fig11|ablations|all")
+        .flag("quick", "small horizons (fast, CI-scale)")
+        .opt("out", "", "append JSON data to this path");
+    let args = parse_or_usage(&cli, program, argv)?;
+    let opts = if args.flag("quick") {
+        figures::FigureOpts::quick()
+    } else {
+        figures::FigureOpts::standard()
+    };
+    let mut out_json = Vec::new();
+    let which = args.str("which");
+    let want = |name: &str| which == "all" || which == name;
+    if want("table1") {
+        let (t, j) = figures::table1(opts.seed);
+        println!("{t}");
+        out_json.push(("table1", j));
+    }
+    if want("fig2") {
+        let (t, j) = figures::fig2(&opts);
+        println!("{t}");
+        out_json.push(("fig2", j));
+    }
+    if want("fig6") {
+        let (t, j) = figures::fig6(&opts)?;
+        println!("{t}");
+        out_json.push(("fig6", j));
+    }
+    if want("fig7") {
+        let (t, j) = figures::fig7(&opts)?;
+        println!("{t}");
+        out_json.push(("fig7", j));
+    }
+    if want("fig8") {
+        let (t, j) = figures::fig8(&opts)?;
+        println!("{t}");
+        out_json.push(("fig8", j));
+    }
+    if want("fig9") {
+        let (t, j) = figures::fig9(&opts)?;
+        println!("{t}");
+        out_json.push(("fig9", j));
+    }
+    if want("fig10") {
+        let (t, j) = figures::fig10(&opts)?;
+        println!("{t}");
+        out_json.push(("fig10", j));
+    }
+    if want("fig11") {
+        let (t, j) = figures::fig11(&opts)?;
+        println!("{t}");
+        out_json.push(("fig11", j));
+    }
+    if want("ablations") {
+        let (t, j) = figures::ablation_cache(&opts)?;
+        println!("{t}");
+        out_json.push(("ablation_cache", j));
+        let (t, j) = figures::ablation_budget(&opts)?;
+        println!("{t}");
+        out_json.push(("ablation_budget", j));
+    }
+    if !args.str("out").is_empty() {
+        let mut obj = Json::obj();
+        for (k, v) in out_json {
+            obj = obj.set(k, v);
+        }
+        std::fs::write(args.str("out"), obj.pretty())?;
+    }
+    Ok(())
+}
+
+fn dataset_by_name(name: &str) -> anyhow::Result<DatasetSpec> {
+    Ok(match name.to_ascii_lowercase().as_str() {
+        "sharegpt" => DatasetSpec::sharegpt(),
+        "loogle" => DatasetSpec::loogle(),
+        "loogle_qa_short" => DatasetSpec::loogle_qa_short(),
+        "loogle_qa_long" => DatasetSpec::loogle_qa_long(),
+        "toolbench" => DatasetSpec::toolbench(),
+        "nextqa" => DatasetSpec::nextqa(),
+        other => anyhow::bail!("unknown dataset {other:?}"),
+    })
+}
+
+fn smoke() -> anyhow::Result<()> {
+    let c = xla::PjRtClient::cpu()?;
+    println!(
+        "echo: pjrt platform={} devices={}",
+        c.platform_name(),
+        c.device_count()
+    );
+    Ok(())
+}

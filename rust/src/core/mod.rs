@@ -1,0 +1,12 @@
+//! Core domain types: requests, task classes, prompts, SLOs.
+//!
+//! Everything the scheduler/KV-manager/estimator agree on lives here; the
+//! modules themselves only exchange these types plus plain numbers.
+
+pub mod request;
+pub mod slo;
+pub mod store;
+
+pub use request::{Phase, PromptSpec, ReqState, Request, RequestId, TaskClass, Token};
+pub use slo::Slo;
+pub use store::RequestStore;

@@ -1,0 +1,378 @@
+//! Request lifecycle types shared by every Echo component.
+
+/// Globally unique request id (monotonic per run).
+pub type RequestId = u64;
+/// Vocabulary token id (EchoLM vocab is small; u32 covers any real model).
+pub type Token = u32;
+/// Prefix-sharing group id (workload generator assigns these).
+pub type GroupId = u64;
+
+/// Online = interactive, SLO-bound; Offline = batched, throughput-oriented
+/// (paper §2.2/§2.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskClass {
+    Online,
+    Offline,
+}
+
+impl TaskClass {
+    pub fn is_online(self) -> bool {
+        matches!(self, TaskClass::Online)
+    }
+}
+
+/// Prompt content. The simulation path carries only *structure* (lengths +
+/// prefix-group identity — all Echo's decisions depend on); the real-model
+/// path additionally carries token ids.
+#[derive(Clone, Debug)]
+pub struct PromptSpec {
+    pub total_len: usize,
+    /// `(group, shared_len)`: the first `shared_len` tokens are identical
+    /// across all requests of `group` (LooGLE-style shared article prefix).
+    pub shared_prefix: Option<(GroupId, usize)>,
+    /// Real token ids (PJRT backend only).
+    pub tokens: Option<Vec<Token>>,
+}
+
+impl PromptSpec {
+    pub fn sim(total_len: usize, shared_prefix: Option<(GroupId, usize)>) -> Self {
+        PromptSpec {
+            total_len,
+            shared_prefix,
+            tokens: None,
+        }
+    }
+
+    pub fn real(tokens: Vec<Token>) -> Self {
+        PromptSpec {
+            total_len: tokens.len(),
+            shared_prefix: None,
+            tokens: Some(tokens),
+        }
+    }
+
+    /// Content identity of the `i`-th `block_size`-token block of this
+    /// request's sequence, for `owner` being this request's id.
+    ///
+    /// Two requests' blocks get equal keys iff the blocks hold identical
+    /// token content, which is what prefix caching needs:
+    ///   * real tokens  -> chain hash over token ids;
+    ///   * sim + shared -> (group, index) within the shared region,
+    ///                     (owner, index) beyond it;
+    /// Chain hashing makes key_i depend on the whole prefix, like vLLM's
+    /// APC block hashes, so divergent suffixes never collide.
+    pub fn content_key(
+        &self,
+        owner: RequestId,
+        block_index: usize,
+        block_size: usize,
+        prev_key: u128,
+    ) -> u128 {
+        let start = block_index * block_size;
+        if let Some(tokens) = &self.tokens {
+            let end = ((block_index + 1) * block_size).min(tokens.len());
+            let mut h = prev_key ^ 0x517c_c1b7_2722_0a95;
+            for &t in &tokens[start..end] {
+                h = chain(h, t as u128);
+            }
+            // Partial final blocks are private to the owner (not shareable).
+            if end - start < block_size {
+                h = chain(h, 0x8000_0000_0000_0000_0000_0000_0000_0000u128 | owner as u128);
+            }
+            h
+        } else {
+            match self.shared_prefix {
+                Some((group, shared_len)) if start + block_size <= shared_len => {
+                    chain(prev_key, (group as u128) << 64 | block_index as u128)
+                }
+                _ => chain(
+                    prev_key,
+                    (1u128 << 120) | (owner as u128) << 32 | block_index as u128,
+                ),
+            }
+        }
+    }
+
+    /// Content keys for the first `n_tokens` of the sequence.
+    pub fn content_keys(
+        &self,
+        owner: RequestId,
+        n_tokens: usize,
+        block_size: usize,
+    ) -> Vec<u128> {
+        let n_blocks = n_tokens.div_ceil(block_size);
+        let mut keys = Vec::with_capacity(n_blocks);
+        let mut prev = 0u128;
+        for i in 0..n_blocks {
+            let k = self.content_key(owner, i, block_size, prev);
+            keys.push(k);
+            prev = k;
+        }
+        keys
+    }
+}
+
+fn chain(prev: u128, x: u128) -> u128 {
+    // 128-bit mix (two rounds of a xorshift-multiply).
+    let mut h = prev ^ x.wrapping_mul(0x9E37_79B9_7F4A_7C15_F39C_C060_5CED_C835);
+    h ^= h >> 67;
+    h = h.wrapping_mul(0xC2B2_AE3D_27D4_EB4F_1656_67B1_9E37_79F9);
+    h ^= h >> 59;
+    h
+}
+
+/// Request lifecycle. Preempted = recompute-mode preemption (paper §6):
+/// KV released; prompt + generated-so-far re-prefill when rescheduled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqState {
+    Queued,
+    Running,
+    Preempted,
+    Finished,
+}
+
+/// Inference phase (paper §2.1). `Prefill` covers first-time prompt
+/// processing *and* recompute-mode re-prefill after preemption.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Prefill,
+    Decode,
+}
+
+/// One serving request, online or offline.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub class: TaskClass,
+    pub arrival: f64,
+    pub prompt: PromptSpec,
+    pub max_new_tokens: usize,
+
+    // ---- progress ----
+    pub state: ReqState,
+    pub phase: Phase,
+    /// Positions whose KV is computed & resident on the device/simulated
+    /// cache. Reset by preemption. Prefill targets `seq_len()` (for a
+    /// resumed request that includes re-prefilling its generated tokens);
+    /// in decode phase the invariant is `computed == seq_len() - 1` (the
+    /// last emitted token's KV is written by the decode step consuming it).
+    pub computed: usize,
+    /// Output tokens emitted so far (survives preemption).
+    pub generated: usize,
+    /// Emitted token ids (real-model path; drives re-prefill content).
+    pub out_tokens: Vec<Token>,
+
+    // ---- latency bookkeeping ----
+    pub first_token_at: Option<f64>,
+    pub finished_at: Option<f64>,
+    pub token_times: Vec<f64>,
+    /// Times this request was preempted (recompute punishment accounting).
+    pub preemptions: usize,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        class: TaskClass,
+        arrival: f64,
+        prompt: PromptSpec,
+        max_new_tokens: usize,
+    ) -> Self {
+        Request {
+            id,
+            class,
+            arrival,
+            prompt,
+            max_new_tokens,
+            state: ReqState::Queued,
+            phase: Phase::Prefill,
+            computed: 0,
+            generated: 0,
+            out_tokens: Vec::new(),
+            first_token_at: None,
+            finished_at: None,
+            token_times: Vec::new(),
+            preemptions: 0,
+        }
+    }
+
+    /// Total sequence length whose KV must exist before the next decode:
+    /// prompt plus everything generated so far.
+    pub fn seq_len(&self) -> usize {
+        self.prompt.total_len + self.generated
+    }
+
+    /// Tokens still needing prefill (after recompute-mode preemption this
+    /// includes previously generated tokens).
+    pub fn remaining_prefill(&self) -> usize {
+        if self.phase == Phase::Decode {
+            0
+        } else {
+            self.seq_len().saturating_sub(self.computed)
+        }
+    }
+
+    pub fn in_prefill(&self) -> bool {
+        self.phase == Phase::Prefill
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.state == ReqState::Finished
+    }
+
+    /// Deadline for this request's next output token under `slo`
+    /// (paper §5.1: Latency_i = TTFT + i·TPOT, measured from arrival).
+    pub fn next_token_deadline(&self, slo: &crate::core::Slo) -> f64 {
+        self.arrival + slo.ttft + self.generated as f64 * slo.tpot
+    }
+
+    /// Record one emitted token at time `t` (prefill completion or a
+    /// decode step); returns true if that completed the request. Does NOT
+    /// advance `computed`: the emitted token's KV becomes resident only
+    /// when the *next* decode step consumes it (the engine advances
+    /// `computed` then).
+    pub fn record_token(&mut self, t: f64, token: Option<Token>) -> bool {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(t);
+        }
+        self.phase = Phase::Decode;
+        self.token_times.push(t);
+        self.generated += 1;
+        if let Some(tok) = token {
+            self.out_tokens.push(tok);
+        }
+        if self.generated >= self.max_new_tokens {
+            self.state = ReqState::Finished;
+            self.finished_at = Some(t);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Recompute-mode preemption: KV is released, progress in `computed`
+    /// resets, generated tokens are kept (they re-prefill later).
+    pub fn preempt(&mut self) {
+        debug_assert!(self.state == ReqState::Running);
+        self.state = ReqState::Preempted;
+        self.phase = Phase::Prefill;
+        self.computed = 0;
+        self.preemptions += 1;
+    }
+
+    /// TTFT if the first token has been emitted.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.arrival)
+    }
+
+    /// Mean TPOT over the emitted tokens (needs >= 2 tokens).
+    pub fn mean_tpot(&self) -> Option<f64> {
+        if self.token_times.len() < 2 {
+            return None;
+        }
+        let dt = self.token_times.last().unwrap() - self.token_times[0];
+        Some(dt / (self.token_times.len() - 1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Slo;
+
+    fn req(class: TaskClass) -> Request {
+        Request::new(1, class, 10.0, PromptSpec::sim(100, None), 5)
+    }
+
+    #[test]
+    fn lifecycle_counters() {
+        let mut r = req(TaskClass::Online);
+        assert_eq!(r.seq_len(), 100);
+        assert_eq!(r.remaining_prefill(), 100);
+        assert!(r.in_prefill());
+        r.computed = 100; // prefill target reached -> emission
+        assert!(!r.record_token(11.0, None));
+        assert!(!r.in_prefill(), "emission flips to decode phase");
+        assert_eq!(r.seq_len(), 101);
+        assert_eq!(r.computed, r.seq_len() - 1, "decode-phase invariant");
+        assert_eq!(r.generated, 1);
+        assert_eq!(r.ttft().unwrap(), 1.0);
+        for i in 0..4 {
+            r.computed += 1; // decode step writes the consumed token's KV
+            r.record_token(12.0 + i as f64, None);
+        }
+        assert!(r.is_finished());
+        assert_eq!(r.finished_at, Some(15.0));
+    }
+
+    #[test]
+    fn preemption_resets_computed_keeps_generated() {
+        let mut r = req(TaskClass::Offline);
+        r.state = ReqState::Running;
+        r.computed = 100;
+        r.record_token(11.0, None);
+        r.record_token(12.0, None);
+        r.preempt();
+        assert_eq!(r.computed, 0);
+        assert_eq!(r.generated, 2);
+        assert_eq!(r.remaining_prefill(), 102);
+        assert_eq!(r.preemptions, 1);
+    }
+
+    #[test]
+    fn deadline_tracks_generated() {
+        let slo = Slo {
+            ttft: 1.0,
+            tpot: 0.05,
+        };
+        let mut r = req(TaskClass::Online);
+        assert_eq!(r.next_token_deadline(&slo), 11.0);
+        r.computed = 100;
+        r.record_token(10.5, None);
+        assert!((r.next_token_deadline(&slo) - 11.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn content_keys_share_within_group() {
+        let a = PromptSpec::sim(64, Some((7, 48)));
+        let b = PromptSpec::sim(80, Some((7, 48)));
+        let c = PromptSpec::sim(64, Some((8, 48)));
+        let ka = a.content_keys(1, 64, 16);
+        let kb = b.content_keys(2, 80, 16);
+        let kc = c.content_keys(3, 64, 16);
+        // First 3 blocks (48 tokens) shared between a and b; not with c.
+        assert_eq!(&ka[..3], &kb[..3]);
+        assert_ne!(ka[3], kb[3]);
+        assert_ne!(ka[0], kc[0]);
+    }
+
+    #[test]
+    fn content_keys_real_tokens() {
+        let a = PromptSpec::real(vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        let b = PromptSpec::real(vec![1, 2, 3, 4, 9, 9, 9, 9]);
+        let ka = a.content_keys(1, 8, 4);
+        let kb = b.content_keys(2, 8, 4);
+        assert_eq!(ka[0], kb[0]); // identical first block
+        assert_ne!(ka[1], kb[1]); // divergent second block
+    }
+
+    #[test]
+    fn chain_hash_depends_on_prefix() {
+        // Same block content after different prefixes must differ.
+        let a = PromptSpec::real(vec![1, 2, 3, 4, 5, 6, 7, 8]);
+        let b = PromptSpec::real(vec![9, 9, 9, 9, 5, 6, 7, 8]);
+        let ka = a.content_keys(1, 8, 4);
+        let kb = b.content_keys(2, 8, 4);
+        assert_ne!(ka[1], kb[1]);
+    }
+
+    #[test]
+    fn partial_final_block_is_private() {
+        let a = PromptSpec::real(vec![1, 2, 3, 4, 5, 6]);
+        let b = PromptSpec::real(vec![1, 2, 3, 4, 5, 6]);
+        let ka = a.content_keys(1, 6, 4);
+        let kb = b.content_keys(2, 6, 4);
+        assert_eq!(ka[0], kb[0]);
+        assert_ne!(ka[1], kb[1]); // 2-token tail not shareable
+    }
+}

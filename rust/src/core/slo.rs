@@ -1,0 +1,37 @@
+//! SLO definition (paper §2.2, §5.1): TTFT bounds time-to-first-token,
+//! TPOT bounds the inter-token pace afterwards; per-token deadline is
+//! `arrival + TTFT + i·TPOT`.
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Slo {
+    /// Time-to-first-token bound, seconds (paper eval: 1.0).
+    pub ttft: f64,
+    /// Time-per-output-token bound, seconds (paper eval: 0.05).
+    pub tpot: f64,
+}
+
+impl Slo {
+    pub fn new(ttft: f64, tpot: f64) -> Self {
+        Slo { ttft, tpot }
+    }
+
+    /// The paper's evaluation setting (§7.2).
+    pub fn paper_eval() -> Self {
+        Slo {
+            ttft: 1.0,
+            tpot: 0.05,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_constants() {
+        let s = Slo::paper_eval();
+        assert_eq!(s.ttft, 1.0);
+        assert_eq!(s.tpot, 0.05);
+    }
+}

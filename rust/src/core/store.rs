@@ -1,0 +1,85 @@
+//! Request store: owns every request in the system by id.
+
+use std::collections::HashMap;
+
+use super::{ReqState, Request, RequestId};
+
+#[derive(Default)]
+pub struct RequestStore {
+    map: HashMap<RequestId, Request>,
+    next_id: RequestId,
+}
+
+impl RequestStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a request built elsewhere (workload generators assign ids via
+    /// `fresh_id`).
+    pub fn insert(&mut self, req: Request) {
+        self.next_id = self.next_id.max(req.id + 1);
+        self.map.insert(req.id, req);
+    }
+
+    pub fn fresh_id(&mut self) -> RequestId {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    pub fn get(&self, id: RequestId) -> &Request {
+        &self.map[&id]
+    }
+
+    pub fn get_mut(&mut self, id: RequestId) -> &mut Request {
+        self.map.get_mut(&id).expect("unknown request id")
+    }
+
+    pub fn try_get(&self, id: RequestId) -> Option<&Request> {
+        self.map.get(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Request> {
+        self.map.values()
+    }
+
+    /// Ids currently in a given state (unordered).
+    pub fn ids_in_state(&self, state: ReqState) -> Vec<RequestId> {
+        self.map
+            .values()
+            .filter(|r| r.state == state)
+            .map(|r| r.id)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{PromptSpec, TaskClass};
+
+    #[test]
+    fn insert_get_fresh() {
+        let mut s = RequestStore::new();
+        let id = s.fresh_id();
+        s.insert(Request::new(
+            id,
+            TaskClass::Online,
+            0.0,
+            PromptSpec::sim(10, None),
+            5,
+        ));
+        assert_eq!(s.get(id).id, id);
+        assert!(s.fresh_id() > id);
+        assert_eq!(s.len(), 1);
+    }
+}

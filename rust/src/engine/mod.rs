@@ -1,0 +1,323 @@
+//! Iteration engine: the vLLM-like serving loop Echo's components plug
+//! into. Each step = admit arrivals → schedule (plan) → execute on a
+//! backend → account tokens/completions/metrics.
+//!
+//! Backends:
+//!   * [`sim::SimBackend`]   — discrete-event cost-model execution (the
+//!     paper's evaluation scale: A100 + LLaMA-8B coefficients);
+//!   * `PjrtBackend` (runtime feature) — real EchoLM steps through the
+//!     PJRT CPU client, proving L1-L3 compose.
+
+pub mod pjrt;
+pub mod sim;
+
+use std::collections::VecDeque;
+
+use crate::config::{SystemConfig, SchedulerKind};
+use crate::core::{ReqState, Request, RequestId, RequestStore, TaskClass, Token};
+use crate::estimator::{MemoryPredictor, TimeModel};
+use crate::kvcache::{EvictionPolicy, KvManager};
+use crate::metrics::{Metrics, SampleCtl};
+use crate::scheduler::{OfflinePool, Plan, Scheduler, WorkKind};
+
+/// Result of executing one plan on a backend.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    /// Execution time in seconds (virtual for sim, wall for PJRT).
+    pub elapsed: f64,
+    /// Per plan-item emitted token: decodes always emit; prefill chunks
+    /// emit iff they complete the request's prefill this iteration.
+    pub tokens: Vec<Option<Token>>,
+}
+
+pub trait ExecutionBackend {
+    fn execute(&mut self, plan: &Plan, store: &RequestStore) -> anyhow::Result<StepResult>;
+    /// A request left the running set (finished or preempted) — free any
+    /// backend slot state.
+    fn on_release(&mut self, _req: RequestId) {}
+    fn name(&self) -> &'static str;
+}
+
+pub struct Engine<B: ExecutionBackend> {
+    pub cfg: SystemConfig,
+    pub store: RequestStore,
+    pub online_queue: VecDeque<RequestId>,
+    pub pool: OfflinePool,
+    pub kv: KvManager,
+    pub sched: Scheduler,
+    pub predictor: MemoryPredictor,
+    pub metrics: Metrics,
+    pub backend: B,
+    pub clock: f64,
+    /// Future online arrivals (sorted ascending; replayed into the queue).
+    arrivals: VecDeque<(f64, RequestId)>,
+    sample: SampleCtl,
+    /// Hard stop against pathological loops; generous (24 h at 10 ms/iter).
+    pub max_iterations: usize,
+}
+
+impl<B: ExecutionBackend> Engine<B> {
+    pub fn new(cfg: SystemConfig, backend: B) -> Self {
+        let policy = if cfg.scheduler.kind.uses_task_aware_cache() && cfg.cache.task_aware {
+            EvictionPolicy::TaskAware
+        } else {
+            EvictionPolicy::Lru
+        };
+        let kv = KvManager::new(cfg.capacity_blocks(), cfg.cache.block_size, policy);
+        let sched = Scheduler::new(
+            cfg.scheduler.clone(),
+            cfg.slo,
+            TimeModel::new(cfg.time_model),
+            cfg.cache.block_size,
+        );
+        let predictor = MemoryPredictor::new(cfg.predictor);
+        Engine {
+            store: RequestStore::new(),
+            online_queue: VecDeque::new(),
+            pool: OfflinePool::default_buckets(),
+            kv,
+            sched,
+            predictor,
+            metrics: Metrics::default(),
+            backend,
+            clock: 0.0,
+            arrivals: VecDeque::new(),
+            sample: SampleCtl::new(0.0),
+            max_iterations: 10_000_000,
+            cfg,
+        }
+    }
+
+    /// Configure series sampling cadence (seconds of sim time per point).
+    pub fn set_sample_interval(&mut self, dt: f64) {
+        self.sample = SampleCtl::new(dt);
+    }
+
+    /// Queue an online request for arrival at `req.arrival` (>= clock).
+    pub fn submit_online(&mut self, req: Request) {
+        debug_assert_eq!(req.class, TaskClass::Online);
+        let t = req.arrival;
+        let id = req.id;
+        self.store.insert(req);
+        // Insert keeping `arrivals` sorted (submissions are usually already
+        // in order; fall back to a scan when not).
+        match self.arrivals.back() {
+            Some(&(last, _)) if last <= t => self.arrivals.push_back((t, id)),
+            _ => {
+                let pos = self.arrivals.partition_point(|&(a, _)| a <= t);
+                self.arrivals.insert(pos, (t, id));
+            }
+        }
+        self.metrics.online_arrivals.push(t, 1.0);
+    }
+
+    /// Register an offline request in the pool (available immediately).
+    pub fn submit_offline(&mut self, req: Request) {
+        debug_assert_eq!(req.class, TaskClass::Offline);
+        let id = req.id;
+        let keys = req
+            .prompt
+            .content_keys(id, req.prompt.total_len, self.cfg.cache.block_size);
+        self.kv.register_future(&keys);
+        self.pool.add(id, req.prompt.total_len, keys);
+        self.store.insert(req);
+    }
+
+    fn online_kv_tokens(&self) -> usize {
+        self.store
+            .iter()
+            .filter(|r| r.class == TaskClass::Online && r.state == ReqState::Running)
+            .map(|r| self.kv.held_blocks(r.id) * self.cfg.cache.block_size)
+            .sum()
+    }
+
+    fn active_counts(&self) -> (usize, usize) {
+        let mut online = 0;
+        let mut offline = 0;
+        for r in self.store.iter() {
+            if r.state == ReqState::Running {
+                match r.class {
+                    TaskClass::Online => online += 1,
+                    TaskClass::Offline => offline += 1,
+                }
+            }
+        }
+        (online, offline)
+    }
+
+    fn finish_request(&mut self, id: RequestId) {
+        let (class, tokens_out, ttft, tpot, prompt_len) = {
+            let r = self.store.get(id);
+            (
+                r.class,
+                r.generated,
+                r.ttft(),
+                r.mean_tpot(),
+                r.prompt.total_len,
+            )
+        };
+        self.kv.release(id, true);
+        if class == TaskClass::Offline {
+            let keys = self
+                .store
+                .get(id)
+                .prompt
+                .content_keys(id, prompt_len, self.cfg.cache.block_size);
+            self.kv.unregister_future(&keys);
+        }
+        self.sched.on_finished(id);
+        self.backend.on_release(id);
+        self.metrics
+            .record_completion(class, tokens_out, prompt_len, ttft, tpot);
+    }
+
+    /// One engine iteration. Returns false when no work remains (or the
+    /// remaining work can never be scheduled).
+    pub fn step(&mut self) -> anyhow::Result<bool> {
+        // 1. replay due arrivals
+        while matches!(self.arrivals.front(), Some(&(t, _)) if t <= self.clock) {
+            let (_, id) = self.arrivals.pop_front().unwrap();
+            self.online_queue.push_back(id);
+        }
+
+        // 2. schedule
+        let outcome = self.sched.schedule(
+            self.clock,
+            &mut self.store,
+            &mut self.online_queue,
+            &mut self.pool,
+            &mut self.kv,
+        );
+        self.metrics.preemptions += outcome.preempted.len();
+        self.metrics.skipped_offline += outcome.skipped_offline;
+        for &victim in &outcome.preempted {
+            self.backend.on_release(victim);
+        }
+
+        if outcome.plan.is_empty() {
+            // Idle: jump to the next arrival if any.
+            if let Some(&(t, _)) = self.arrivals.front() {
+                self.clock = self.clock.max(t);
+                return Ok(true);
+            }
+            // No arrivals and nothing runnable. Any requests stuck in the
+            // queue/pool can never be scheduled (e.g. larger than memory).
+            if !self.online_queue.is_empty() || !self.pool.is_empty() {
+                log::warn!(
+                    "engine idle with {} queued / {} pooled unschedulable requests",
+                    self.online_queue.len(),
+                    self.pool.len()
+                );
+            }
+            return Ok(false);
+        }
+
+        // 3. execute
+        let result = self.backend.execute(&outcome.plan, &self.store)?;
+        self.clock += result.elapsed;
+        self.metrics.busy_time += result.elapsed;
+        self.metrics.iterations += 1;
+
+        // 4. token/completion accounting
+        debug_assert_eq!(result.tokens.len(), outcome.plan.items.len());
+        let mut finished = Vec::new();
+        let slo = self.cfg.slo;
+        for (item, token) in outcome.plan.items.iter().zip(&result.tokens) {
+            let r = self.store.get_mut(item.req);
+            let deadline = r.next_token_deadline(&slo);
+            let mut emitted = false;
+            match item.kind {
+                WorkKind::Prefill { chunk } => {
+                    r.computed += chunk;
+                    self.metrics.prefill_tokens_computed += chunk as u64;
+                    debug_assert!(r.computed <= r.seq_len());
+                    if r.computed >= r.seq_len() {
+                        // Prefill completed: the first (or next, after a
+                        // preemption re-prefill) token lands now. The
+                        // emitted token's own KV is not resident yet, so
+                        // computed stays at the old seq_len = new seq_len-1.
+                        emitted = true;
+                        if r.record_token(self.clock, *token) {
+                            finished.push(item.req);
+                        }
+                    }
+                }
+                WorkKind::Decode => {
+                    // The decode step wrote the consumed token's KV.
+                    r.computed += 1;
+                    debug_assert_eq!(r.computed, r.seq_len());
+                    emitted = true;
+                    if r.record_token(self.clock, *token) {
+                        finished.push(item.req);
+                    }
+                }
+            }
+            if emitted && self.store.get(item.req).class == TaskClass::Online {
+                self.metrics.online_tokens_checked += 1;
+                if self.clock <= deadline {
+                    self.metrics.online_token_deadlines_met += 1;
+                }
+            }
+        }
+        for id in finished {
+            self.finish_request(id);
+        }
+
+        // 5. predictor + threshold (Echo's cache manager input)
+        self.predictor.observe(self.clock, self.online_kv_tokens() as f64);
+        if self.cfg.cache.threshold && self.cfg.scheduler.kind == SchedulerKind::Echo {
+            let floor = self.cfg.cache.reserve_frac * self.cfg.cache.capacity_tokens as f64;
+            let cap = 0.5 * self.cfg.cache.capacity_tokens as f64;
+            let predicted = self.predictor.reserve_tokens(self.clock);
+            self.kv
+                .set_reserve_tokens(predicted.clamp(floor, cap) as usize);
+        }
+
+        // 6. series sampling
+        if self.sample.due(self.clock) {
+            let (on, off) = self.active_counts();
+            self.metrics.active_online.push(self.clock, on as f64);
+            self.metrics.active_offline.push(self.clock, off as f64);
+            let (running, c_on, c_off, free) = self.kv.occupancy_breakdown();
+            let bs = self.cfg.cache.block_size as f64;
+            self.metrics.mem_running.push(self.clock, running as f64 * bs);
+            self.metrics.mem_cached_online.push(self.clock, c_on as f64 * bs);
+            self.metrics
+                .mem_cached_offline
+                .push(self.clock, c_off as f64 * bs);
+            self.metrics.mem_free.push(self.clock, free as f64 * bs);
+            self.metrics
+                .hit_ratio
+                .push(self.clock, self.kv.stats.hit_ratio());
+            self.metrics
+                .cache_lookups_cum
+                .push(self.clock, self.kv.stats.lookup_blocks as f64);
+            self.metrics
+                .cache_hits_cum
+                .push(self.clock, self.kv.stats.hit_blocks as f64);
+        }
+        self.metrics.prefill_tokens_saved = self.kv.stats.saved_tokens;
+
+        Ok(true)
+    }
+
+    /// Run until idle or `deadline` (sim clock), whichever first.
+    pub fn run_until(&mut self, deadline: f64) -> anyhow::Result<()> {
+        let mut iters = 0usize;
+        while self.clock < deadline {
+            if !self.step()? {
+                break;
+            }
+            iters += 1;
+            if iters >= self.max_iterations {
+                anyhow::bail!("engine exceeded max_iterations {}", self.max_iterations);
+            }
+        }
+        Ok(())
+    }
+
+    /// Run to completion of all submitted work.
+    pub fn run(&mut self) -> anyhow::Result<()> {
+        self.run_until(f64::INFINITY)
+    }
+}

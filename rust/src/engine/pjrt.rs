@@ -1,0 +1,152 @@
+//! Real-execution backend: EchoLM steps through the PJRT CPU client.
+//!
+//! Proves the three layers compose: the same scheduler/KV-manager decisions
+//! that drive the simulation drive actual XLA executions here, and tokens
+//! come from the model's greedy head, not a sampler stub.
+//!
+//! Slot mapping: the device KV slab has `max_batch` fixed slots; a request
+//! gets a slot at first execution and keeps it until completion or
+//! preemption. The slab is dense (no physical paging), so prefix-cache
+//! fast-forward is disabled on this path (`cfg.scheduler` should keep
+//! chunked prefill on; logical block accounting still runs above) — see
+//! DESIGN.md "Hardware adaptation".
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{ExecutionBackend, StepResult};
+use crate::core::{RequestId, RequestStore, Token};
+use crate::runtime::ModelRuntime;
+use crate::scheduler::{Plan, WorkKind};
+
+pub struct PjrtBackend {
+    pub rt: ModelRuntime,
+    slots: HashMap<RequestId, usize>,
+    free_slots: Vec<usize>,
+}
+
+impl PjrtBackend {
+    pub fn new(rt: ModelRuntime) -> Self {
+        let b = rt.manifest.max_batch;
+        PjrtBackend {
+            rt,
+            slots: HashMap::new(),
+            free_slots: (0..b).rev().collect(),
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.rt.manifest.max_batch
+    }
+
+    fn slot_for(&mut self, req: RequestId) -> Result<usize> {
+        if let Some(&s) = self.slots.get(&req) {
+            return Ok(s);
+        }
+        let s = self
+            .free_slots
+            .pop()
+            .ok_or_else(|| anyhow!("no free device slots (batch > max_batch?)"))?;
+        self.slots.insert(req, s);
+        Ok(s)
+    }
+
+    /// The token at sequence position `pos` of a request (prompt, then
+    /// generated continuation).
+    fn token_at(store: &RequestStore, req: RequestId, pos: usize) -> Result<Token> {
+        let r = store.get(req);
+        let prompt = r
+            .prompt
+            .tokens
+            .as_ref()
+            .ok_or_else(|| anyhow!("PJRT backend needs real token prompts"))?;
+        if pos < prompt.len() {
+            Ok(prompt[pos])
+        } else {
+            r.out_tokens
+                .get(pos - prompt.len())
+                .copied()
+                .ok_or_else(|| anyhow!("position {pos} beyond generated tokens"))
+        }
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn execute(&mut self, plan: &Plan, store: &RequestStore) -> Result<StepResult> {
+        let b = self.rt.manifest.max_batch;
+        if plan.items.len() > b {
+            bail!("plan has {} items but device has {b} slots", plan.items.len());
+        }
+        // Bucket = smallest chunk width covering every item.
+        let widest = plan
+            .items
+            .iter()
+            .map(|i| match i.kind {
+                WorkKind::Prefill { chunk } => chunk,
+                WorkKind::Decode => 1,
+            })
+            .max()
+            .unwrap_or(1);
+        let bucket = self.rt.bucket_for(widest)?;
+
+        let mut tokens = vec![0i32; b * bucket];
+        let mut cache_lens = vec![0i32; b];
+        let mut q_lens = vec![0i32; b];
+        let mut slot_of_item = Vec::with_capacity(plan.items.len());
+        for item in &plan.items {
+            let slot = self.slot_for(item.req)?;
+            slot_of_item.push(slot);
+            let r = store.get(item.req);
+            let (start, width) = match item.kind {
+                WorkKind::Prefill { chunk } => (r.computed, chunk),
+                WorkKind::Decode => (r.computed, 1),
+            };
+            debug_assert!(
+                start + width <= r.seq_len(),
+                "work window {}..{} beyond seq {}",
+                start,
+                start + width,
+                r.seq_len()
+            );
+            for i in 0..width {
+                tokens[slot * bucket + i] = Self::token_at(store, item.req, start + i)? as i32;
+            }
+            cache_lens[slot] = start as i32;
+            q_lens[slot] = width as i32;
+        }
+
+        let t0 = std::time::Instant::now();
+        let out = self.rt.step(bucket, &tokens, &cache_lens, &q_lens)?;
+        let elapsed = t0.elapsed().as_secs_f64();
+
+        let result_tokens = plan
+            .items
+            .iter()
+            .zip(&slot_of_item)
+            .map(|(item, &slot)| {
+                let emitting = match item.kind {
+                    WorkKind::Decode => true,
+                    WorkKind::Prefill { chunk } => {
+                        store.get(item.req).remaining_prefill() <= chunk
+                    }
+                };
+                emitting.then(|| out.next_tokens[slot] as Token)
+            })
+            .collect();
+        Ok(StepResult {
+            elapsed,
+            tokens: result_tokens,
+        })
+    }
+
+    fn on_release(&mut self, req: RequestId) {
+        if let Some(slot) = self.slots.remove(&req) {
+            self.free_slots.push(slot);
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

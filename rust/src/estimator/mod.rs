@@ -1,0 +1,10 @@
+//! Estimation toolkits (paper §5): batch execution-time model (Eqs. 6-8)
+//! with micro-benchmark coefficient fitting, and the bursty-online memory
+//! predictor (§5.3). The resource/throughput deployer simulator (§5.4)
+//! composes these with the engine and lives in [`crate::sim`].
+
+pub mod memory;
+pub mod time_model;
+
+pub use memory::MemoryPredictor;
+pub use time_model::{BatchShape, PrefillItem, TimeModel, TimeSample};

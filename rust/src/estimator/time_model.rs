@@ -1,0 +1,363 @@
+//! Batch execution-time estimator (paper §5.2).
+//!
+//! Eq. 6:  Time_prefill = max(α·l² + β·l, c)          (one prefill request)
+//! Eq. 7:  Time_decode  = γ·max(L) + δ·mean(L)        (decode batch)
+//! Eq. 8:  Time_batch   = λ·max(Tp, Td) + (1-λ)·min(Tp, Td)
+//!
+//! Extension for chunked prefill (§2.1): a chunk of width `w` over an
+//! existing context of `o` tokens does the *incremental* quadratic
+//! attention work (o+w)² − o² = w² + 2wo, so its Eq. 6 feature is
+//! (w² + 2wo); with o = 0 this reduces exactly to the paper's form.
+//!
+//! Coefficients are fitted before deployment from micro-benchmarks
+//! (`TimeModel::fit`) via ordinary least squares.
+
+use crate::config::TimeModelConfig;
+use crate::utils::stats::least_squares;
+
+/// One prefill item in a batch: chunk width over an existing context.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefillItem {
+    pub chunk: usize,
+    pub context: usize,
+}
+
+impl PrefillItem {
+    /// Quadratic-work feature (w² + 2wo) of Eq. 6's extension.
+    pub fn quad_feature(&self) -> f64 {
+        let w = self.chunk as f64;
+        let o = self.context as f64;
+        w * w + 2.0 * w * o
+    }
+}
+
+/// The shape of an iteration batch — everything Eq. 6-8 need.
+#[derive(Clone, Debug, Default)]
+pub struct BatchShape {
+    pub prefills: Vec<PrefillItem>,
+    /// Context length (KV read span) per decode item.
+    pub decode_lens: Vec<usize>,
+}
+
+impl BatchShape {
+    pub fn is_empty(&self) -> bool {
+        self.prefills.is_empty() && self.decode_lens.is_empty()
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.prefills.iter().map(|p| p.chunk).sum::<usize>() + self.decode_lens.len()
+    }
+}
+
+/// A measured (shape, seconds) pair from micro-benchmarks.
+#[derive(Clone, Debug)]
+pub struct TimeSample {
+    pub shape: BatchShape,
+    pub seconds: f64,
+}
+
+/// Eq. 6-8 evaluator + fitter.
+#[derive(Clone, Copy, Debug)]
+pub struct TimeModel {
+    pub cfg: TimeModelConfig,
+}
+
+impl TimeModel {
+    pub fn new(cfg: TimeModelConfig) -> Self {
+        TimeModel { cfg }
+    }
+
+    /// Eq. 6 (chunk-extended): one prefill item.
+    pub fn prefill_item(&self, item: PrefillItem) -> f64 {
+        let t = self.cfg.alpha * item.quad_feature() + self.cfg.beta * item.chunk as f64;
+        t.max(self.cfg.c)
+    }
+
+    /// Prefill part of a batch (items processed one by one, §5.2).
+    pub fn prefill_time(&self, items: &[PrefillItem]) -> f64 {
+        items.iter().map(|&i| self.prefill_item(i)).sum()
+    }
+
+    /// Eq. 7: decode part of a batch.
+    pub fn decode_time(&self, lens: &[usize]) -> f64 {
+        if lens.is_empty() {
+            return 0.0;
+        }
+        let max = lens.iter().copied().max().unwrap() as f64;
+        let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+        self.cfg.gamma * max + self.cfg.delta * mean
+    }
+
+    /// Eq. 8: full batch.
+    pub fn batch_time(&self, shape: &BatchShape) -> f64 {
+        let tp = self.prefill_time(&shape.prefills);
+        let td = self.decode_time(&shape.decode_lens);
+        match (tp > 0.0, td > 0.0) {
+            (false, false) => 0.0,
+            (true, false) => tp,
+            (false, true) => td.max(self.cfg.c),
+            (true, true) => {
+                self.cfg.lambda * tp.max(td) + (1.0 - self.cfg.lambda) * tp.min(td)
+            }
+        }
+    }
+
+    /// Fit α, β, c, γ, δ, λ from micro-benchmark samples. Requires
+    /// prefill-only, decode-only, and mixed samples; falls back to the
+    /// prior config for any family with too few samples.
+    pub fn fit(samples: &[TimeSample], prior: TimeModelConfig) -> TimeModelConfig {
+        let mut cfg = prior;
+
+        // ---- prefill-only: items run one by one, so a batch's time is
+        // α·Σq + β·Σw (+ per-item floor, folded out by fitting sums) ------
+        let pre: Vec<&TimeSample> = samples
+            .iter()
+            .filter(|s| s.shape.decode_lens.is_empty() && !s.shape.prefills.is_empty())
+            .collect();
+        if pre.len() >= 4 {
+            let rows: Vec<Vec<f64>> = pre
+                .iter()
+                .map(|s| {
+                    let q: f64 = s.shape.prefills.iter().map(|i| i.quad_feature()).sum();
+                    let w: f64 = s.shape.prefills.iter().map(|i| i.chunk as f64).sum();
+                    vec![q, w]
+                })
+                .collect();
+            let y: Vec<f64> = pre.iter().map(|s| s.seconds).collect();
+            if let Some(beta) = least_squares(&rows, &y) {
+                if beta.iter().all(|b| b.is_finite()) {
+                    if beta[0] >= 0.0 {
+                        cfg.alpha = beta[0];
+                        cfg.beta = beta[1].max(0.0);
+                    } else {
+                        // Quadratic term not identifiable (e.g. a backend
+                        // whose attention scans a fixed-size slab): refit
+                        // the linear term alone with alpha pinned to 0.
+                        let rows1: Vec<Vec<f64>> =
+                            rows.iter().map(|r| vec![r[1]]).collect();
+                        if let Some(b1) = least_squares(&rows1, &y) {
+                            if b1[0].is_finite() {
+                                cfg.alpha = 0.0;
+                                cfg.beta = b1[0].max(0.0);
+                            }
+                        }
+                    }
+                }
+            }
+            // Floor: the fastest per-item prefill observed bounds it.
+            let min_t = pre
+                .iter()
+                .map(|s| s.seconds / s.shape.prefills.len() as f64)
+                .fold(f64::INFINITY, f64::min);
+            cfg.c = min_t.min(cfg.c.max(1e-6));
+        }
+
+        // ---- decode-only: t = γ·max + δ·mean ---------------------------
+        let dec: Vec<&TimeSample> = samples
+            .iter()
+            .filter(|s| s.shape.prefills.is_empty() && !s.shape.decode_lens.is_empty())
+            .collect();
+        if dec.len() >= 4 {
+            let rows: Vec<Vec<f64>> = dec
+                .iter()
+                .map(|s| {
+                    let lens = &s.shape.decode_lens;
+                    let max = lens.iter().copied().max().unwrap() as f64;
+                    let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
+                    vec![max, mean]
+                })
+                .collect();
+            let y: Vec<f64> = dec.iter().map(|s| s.seconds).collect();
+            let sse = |g: f64, d: f64| -> f64 {
+                rows.iter()
+                    .zip(&y)
+                    .map(|(r, &t)| {
+                        let p = g * r[0] + d * r[1];
+                        (p - t) * (p - t)
+                    })
+                    .sum()
+            };
+            let mut best: Option<(f64, f64, f64)> = None; // (sse, gamma, delta)
+            if let Some(beta) = least_squares(&rows, &y) {
+                if beta.iter().all(|b| b.is_finite() && *b >= 0.0) {
+                    best = Some((sse(beta[0], beta[1]), beta[0], beta[1]));
+                }
+            }
+            // Fallback for collinear designs (uniform batch lengths make
+            // max == mean): single combined coefficient on the mean.
+            let rows1: Vec<Vec<f64>> = rows.iter().map(|r| vec![r[1]]).collect();
+            if let Some(b1) = least_squares(&rows1, &y) {
+                if b1[0].is_finite() && b1[0] >= 0.0 {
+                    let cand = (sse(0.0, b1[0]), 0.0, b1[0]);
+                    if best.map_or(true, |b| cand.0 < b.0) {
+                        best = Some(cand);
+                    }
+                }
+            }
+            if let Some((_, g, d)) = best {
+                cfg.gamma = g;
+                cfg.delta = d;
+            }
+        }
+
+        // ---- mixed: λ from t = λ·max + (1-λ)·min ------------------------
+        let model = TimeModel::new(cfg);
+        let mut lambdas = Vec::new();
+        for s in samples {
+            if s.shape.prefills.is_empty() || s.shape.decode_lens.is_empty() {
+                continue;
+            }
+            let tp = model.prefill_time(&s.shape.prefills);
+            let td = model.decode_time(&s.shape.decode_lens);
+            let (hi, lo) = (tp.max(td), tp.min(td));
+            if hi - lo > 1e-9 {
+                lambdas.push(((s.seconds - lo) / (hi - lo)).clamp(0.0, 1.5));
+            }
+        }
+        if lambdas.len() >= 2 {
+            cfg.lambda =
+                (lambdas.iter().sum::<f64>() / lambdas.len() as f64).clamp(0.0, 1.0);
+        }
+        cfg
+    }
+
+    /// Mean relative error of the model against samples (calibration QA,
+    /// reported by `echo calibrate` and EXPERIMENTS.md).
+    pub fn relative_error(&self, samples: &[TimeSample]) -> f64 {
+        if samples.is_empty() {
+            return 0.0;
+        }
+        samples
+            .iter()
+            .map(|s| {
+                let est = self.batch_time(&s.shape);
+                (est - s.seconds).abs() / s.seconds.max(1e-9)
+            })
+            .sum::<f64>()
+            / samples.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TimeModelConfig {
+        TimeModelConfig {
+            alpha: 1e-8,
+            beta: 1e-4,
+            c: 5e-3,
+            gamma: 1e-5,
+            delta: 6e-5,
+            lambda: 0.8,
+        }
+    }
+
+    #[test]
+    fn prefill_floor_applies() {
+        let m = TimeModel::new(cfg());
+        let tiny = m.prefill_item(PrefillItem { chunk: 1, context: 0 });
+        assert_eq!(tiny, 5e-3);
+        let big = m.prefill_item(PrefillItem { chunk: 8192, context: 0 });
+        assert!(big > 0.8 && big < 2.0, "8k prefill ≈ 1s on A100: {big}");
+    }
+
+    #[test]
+    fn chunk_extension_reduces_to_eq6() {
+        let m = TimeModel::new(cfg());
+        let full = m.prefill_item(PrefillItem { chunk: 1000, context: 0 });
+        // α·l² + β·l directly
+        let direct = 1e-8 * 1e6 + 1e-4 * 1000.0;
+        assert!((full - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chunked_sum_exceeds_oneshot_quadratic_consistency() {
+        // Sum of incremental chunk features telescopes to the full square.
+        let m = TimeModel::new(TimeModelConfig { c: 0.0, ..cfg() });
+        let oneshot = m.prefill_item(PrefillItem { chunk: 2048, context: 0 });
+        let chunked: f64 = (0..4)
+            .map(|i| m.prefill_item(PrefillItem { chunk: 512, context: 512 * i }))
+            .sum();
+        assert!((oneshot - chunked).abs() < 1e-9, "{oneshot} vs {chunked}");
+    }
+
+    #[test]
+    fn decode_pooling() {
+        let m = TimeModel::new(cfg());
+        let t = m.decode_time(&[100, 200, 300]);
+        assert!((t - (1e-5 * 300.0 + 6e-5 * 200.0)).abs() < 1e-12);
+        assert_eq!(m.decode_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn batch_combines_between_max_and_sum() {
+        let m = TimeModel::new(cfg());
+        let shape = BatchShape {
+            prefills: vec![PrefillItem { chunk: 2048, context: 0 }],
+            decode_lens: vec![500; 16],
+        };
+        let tp = m.prefill_time(&shape.prefills);
+        let td = m.decode_time(&shape.decode_lens);
+        let tb = m.batch_time(&shape);
+        assert!(tb >= tp.max(td) * 0.999 - (1.0 - 0.8) * (tp.max(td) - tp.min(td)));
+        assert!(tb <= tp + td);
+        assert!(tb >= tp.min(td));
+    }
+
+    #[test]
+    fn fit_recovers_synthetic_coefficients() {
+        let truth = TimeModelConfig {
+            alpha: 3e-8,
+            beta: 2e-4,
+            c: 1e-3,
+            gamma: 2e-5,
+            delta: 8e-5,
+            lambda: 0.7,
+        };
+        let tm = TimeModel::new(truth);
+        let mut samples = Vec::new();
+        for l in [64usize, 128, 256, 512, 1024, 2048, 4096] {
+            for o in [0usize, 256, 1024] {
+                let shape = BatchShape {
+                    prefills: vec![PrefillItem { chunk: l, context: o }],
+                    decode_lens: vec![],
+                };
+                samples.push(TimeSample { seconds: tm.batch_time(&shape), shape });
+            }
+        }
+        for n in [1usize, 4, 16, 64] {
+            for len in [64usize, 512, 2048] {
+                let shape = BatchShape {
+                    prefills: vec![],
+                    decode_lens: (0..n).map(|i| len + i * 7).collect(),
+                };
+                samples.push(TimeSample { seconds: tm.batch_time(&shape), shape });
+            }
+        }
+        for l in [256usize, 1024] {
+            for n in [4usize, 32] {
+                let shape = BatchShape {
+                    prefills: vec![PrefillItem { chunk: l, context: 0 }],
+                    decode_lens: vec![800; n],
+                };
+                samples.push(TimeSample { seconds: tm.batch_time(&shape), shape });
+            }
+        }
+        let fitted = TimeModel::fit(&samples, cfg());
+        assert!((fitted.alpha - truth.alpha).abs() / truth.alpha < 0.05, "alpha {}", fitted.alpha);
+        assert!((fitted.beta - truth.beta).abs() / truth.beta < 0.05);
+        assert!((fitted.gamma - truth.gamma).abs() / truth.gamma < 0.05);
+        assert!((fitted.delta - truth.delta).abs() / truth.delta < 0.05);
+        assert!((fitted.lambda - truth.lambda).abs() < 0.05);
+        let err = TimeModel::new(fitted).relative_error(&samples);
+        assert!(err < 0.05, "mean relative error {err}");
+    }
+
+    #[test]
+    fn fit_with_no_samples_keeps_prior() {
+        let fitted = TimeModel::fit(&[], cfg());
+        assert_eq!(fitted.alpha, cfg().alpha);
+        assert_eq!(fitted.lambda, cfg().lambda);
+    }
+}

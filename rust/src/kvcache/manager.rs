@@ -1,0 +1,717 @@
+//! The KV cache manager implementation. See module docs in `mod.rs`.
+
+use std::collections::{BTreeSet, HashMap};
+
+use super::BlockId;
+use crate::core::{RequestId, TaskClass};
+
+/// LRU (vLLM default) or the paper's task-aware priority scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionPolicy {
+    Lru,
+    TaskAware,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    /// Prefix-lookup block counts (Fig. 9's hit-ratio numerator/denominator).
+    pub lookup_blocks: u64,
+    pub hit_blocks: u64,
+    /// Total evictions, and evictions of blocks that were still useful
+    /// (RC > 0) — each of those is a future re-prefill (the paper's
+    /// Punishment, Eq. 2).
+    pub evictions: u64,
+    pub useful_evictions: u64,
+    /// Tokens of punishment incurred (evicted-but-needed blocks x block_size).
+    pub punished_tokens: u64,
+    /// Tokens of prefill saved through prefix hits.
+    pub saved_tokens: u64,
+}
+
+impl CacheStats {
+    pub fn hit_ratio(&self) -> f64 {
+        if self.lookup_blocks == 0 {
+            0.0
+        } else {
+            self.hit_blocks as f64 / self.lookup_blocks as f64
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct BlockMeta {
+    /// Content key (chain hash); present while the block is reusable.
+    key: Option<u128>,
+    /// Requests currently holding the block (running/scheduled).
+    ref_count: u32,
+    /// Last access time (LAT column of Fig. 5).
+    last_access: f64,
+    /// Task class that produced the block.
+    class: TaskClass,
+    /// True once no unfinished request owns the content.
+    finished: bool,
+    /// Sort key currently registered in the free table.
+    table_key: Option<(u64, u64)>,
+}
+
+impl BlockMeta {
+    fn fresh() -> Self {
+        BlockMeta {
+            key: None,
+            ref_count: 0,
+            last_access: 0.0,
+            class: TaskClass::Offline,
+            finished: true,
+            table_key: None,
+        }
+    }
+}
+
+/// Allocation headroom snapshot used by the scheduler's feasibility checks.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Availability {
+    /// Never-used or fully-released blocks.
+    pub free: usize,
+    /// Cached blocks that can be evicted (free-table size).
+    pub evictable: usize,
+    /// Evictable blocks that are useless (priority 0: finished offline,
+    /// RC = 0) — evicting them costs nothing.
+    pub evictable_useless: usize,
+    /// Current reserve (threshold headroom) in blocks.
+    pub reserve: usize,
+}
+
+impl Availability {
+    /// Blocks an *offline* allocation may claim (must respect the reserve).
+    pub fn for_offline(&self) -> usize {
+        (self.free + self.evictable).saturating_sub(self.reserve)
+    }
+
+    /// Blocks an *online* allocation may claim.
+    pub fn for_online(&self) -> usize {
+        self.free + self.evictable
+    }
+}
+
+pub struct KvManager {
+    block_size: usize,
+    capacity: usize,
+    policy: EvictionPolicy,
+    blocks: Vec<BlockMeta>,
+    /// Blocks never allocated or whose content was dropped.
+    free_list: Vec<BlockId>,
+    /// Content key -> resident block (the APC prefix index).
+    cached: HashMap<u128, BlockId>,
+    /// Eviction order: (priority_bits, lat_bits, id). Only ref_count == 0
+    /// blocks live here.
+    free_table: BTreeSet<(u64, u64, BlockId)>,
+    /// Future reference counts per content key (offline requests that are
+    /// registered and unfinished, including currently running ones).
+    future_refs: HashMap<u128, u32>,
+    /// Blocks held per request.
+    owned: HashMap<RequestId, Vec<BlockId>>,
+    /// Threshold headroom in blocks (set from the memory predictor).
+    reserve_blocks: usize,
+    pub stats: CacheStats,
+}
+
+fn prio_bits(p: f64) -> u64 {
+    debug_assert!(p >= 0.0);
+    p.to_bits()
+}
+
+fn lat_bits(t: f64) -> u64 {
+    debug_assert!(t >= 0.0);
+    t.to_bits()
+}
+
+impl KvManager {
+    pub fn new(capacity_blocks: usize, block_size: usize, policy: EvictionPolicy) -> Self {
+        KvManager {
+            block_size,
+            capacity: capacity_blocks,
+            policy,
+            blocks: vec![BlockMeta::fresh(); capacity_blocks],
+            free_list: (0..capacity_blocks as BlockId).rev().collect(),
+            cached: HashMap::new(),
+            free_table: BTreeSet::new(),
+            future_refs: HashMap::new(),
+            owned: HashMap::new(),
+            reserve_blocks: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity
+    }
+
+    /// Set the burst-headroom threshold (tokens). Called by the engine each
+    /// predictor period; ignored under policies without thresholds.
+    pub fn set_reserve_tokens(&mut self, tokens: usize) {
+        self.reserve_blocks = tokens.div_ceil(self.block_size).min(self.capacity);
+    }
+
+    pub fn reserve_blocks(&self) -> usize {
+        self.reserve_blocks
+    }
+
+    /// Register future interest of an offline request in its content keys
+    /// (entering the pool / being admitted). RC drives eviction priority.
+    pub fn register_future(&mut self, keys: &[u128]) {
+        for &k in keys {
+            *self.future_refs.entry(k).or_insert(0) += 1;
+            if let Some(&b) = self.cached.get(&k) {
+                self.requeue_free(b);
+            }
+        }
+    }
+
+    /// Remove future interest (request finished or cancelled).
+    pub fn unregister_future(&mut self, keys: &[u128]) {
+        for &k in keys {
+            if let Some(rc) = self.future_refs.get_mut(&k) {
+                *rc -= 1;
+                if *rc == 0 {
+                    self.future_refs.remove(&k);
+                }
+            }
+            if let Some(&b) = self.cached.get(&k) {
+                self.requeue_free(b);
+            }
+        }
+    }
+
+    /// How many leading blocks of `keys` are resident right now (without
+    /// pinning them). Free for planning; does not touch stats.
+    pub fn peek_prefix(&self, keys: &[u128]) -> usize {
+        keys.iter()
+            .take_while(|k| self.cached.contains_key(k))
+            .count()
+    }
+
+    /// Current allocation headroom.
+    pub fn availability(&self) -> Availability {
+        let evictable = self.free_table.len();
+        // Priority-0 prefix of the table: entries with prio bits == 0.
+        let useless = self
+            .free_table
+            .iter()
+            .take_while(|&&(p, _, _)| p == 0)
+            .count();
+        Availability {
+            free: self.free_list.len(),
+            evictable,
+            evictable_useless: useless,
+            reserve: self.reserve_blocks,
+        }
+    }
+
+    /// Preview the punishment (tokens needing future recomputation) of
+    /// evicting the next `n` victims, without mutating anything.
+    pub fn eviction_preview(&self, n: usize) -> u64 {
+        let mut punished = 0u64;
+        for (i, &(_, _, b)) in self.free_table.iter().enumerate() {
+            if i >= n {
+                break;
+            }
+            if self.block_rc(b) > 0 {
+                punished += self.block_size as u64;
+            }
+        }
+        punished
+    }
+
+    fn block_rc(&self, b: BlockId) -> u32 {
+        self.blocks[b as usize]
+            .key
+            .and_then(|k| self.future_refs.get(&k).copied())
+            .unwrap_or(0)
+    }
+
+    /// Paper §4.2 priority of a *free* (ref_count == 0) block.
+    fn priority(&self, b: BlockId) -> f64 {
+        if self.policy == EvictionPolicy::Lru {
+            return 0.0; // pure LAT ordering
+        }
+        let meta = &self.blocks[b as usize];
+        let rc = self.block_rc(b);
+        match (meta.class, rc) {
+            (TaskClass::Offline, rc) if rc > 0 => rc as f64,
+            (TaskClass::Online, _) if meta.finished => 0.5,
+            (TaskClass::Online, rc) if rc > 0 => rc as f64, // preempted-online content
+            _ => 0.0,
+        }
+    }
+
+    fn requeue_free(&mut self, b: BlockId) {
+        let old = self.blocks[b as usize].table_key.take();
+        if let Some((p, t)) = old {
+            self.free_table.remove(&(p, t, b));
+        }
+        if self.blocks[b as usize].ref_count == 0 && self.blocks[b as usize].key.is_some() {
+            let key = (
+                prio_bits(self.priority(b)),
+                lat_bits(self.blocks[b as usize].last_access),
+                b,
+            );
+            self.free_table.insert(key);
+            self.blocks[b as usize].table_key = Some((key.0, key.1));
+        }
+    }
+
+    fn remove_from_free_table(&mut self, b: BlockId) {
+        if let Some((p, t)) = self.blocks[b as usize].table_key.take() {
+            self.free_table.remove(&(p, t, b));
+        }
+    }
+
+    /// Evict the lowest-priority free block; returns its id. Records
+    /// punishment if the block was still wanted.
+    fn evict_one(&mut self) -> Option<BlockId> {
+        let &(p, t, b) = self.free_table.iter().next()?;
+        self.free_table.remove(&(p, t, b));
+        let meta = &mut self.blocks[b as usize];
+        meta.table_key = None;
+        self.stats.evictions += 1;
+        if let Some(k) = meta.key.take() {
+            self.cached.remove(&k);
+            if self.future_refs.get(&k).copied().unwrap_or(0) > 0 {
+                self.stats.useful_evictions += 1;
+                self.stats.punished_tokens += self.block_size as u64;
+            }
+        }
+        Some(b)
+    }
+
+    /// Take one physical block (free list first, then eviction).
+    fn take_block(&mut self) -> Option<BlockId> {
+        if let Some(b) = self.free_list.pop() {
+            return Some(b);
+        }
+        self.evict_one()
+    }
+
+    /// Pin the longest cached prefix of `keys` for `req` and allocate fresh
+    /// blocks so that `total_blocks` are held. Returns the number of tokens
+    /// already covered by cache hits (the fast-forward), or None if memory
+    /// does not permit (the caller should have checked availability; None
+    /// only happens under races with the reserve rule).
+    ///
+    /// `class` drives both the reserve rule and the metadata of the fresh
+    /// blocks; `keys` may be shorter than `total_blocks` for generated
+    /// (decode) blocks, which are unshareable and get no content key.
+    pub fn allocate(
+        &mut self,
+        req: RequestId,
+        class: TaskClass,
+        keys: &[u128],
+        total_blocks: usize,
+        now: f64,
+    ) -> Option<usize> {
+        debug_assert!(!self.owned.contains_key(&req), "request already holds blocks");
+        // 1. Count prefix hits (pin later, after feasibility is known).
+        let hit_blocks = self.peek_prefix(&keys[..keys.len().min(total_blocks)]);
+        self.stats.lookup_blocks += keys.len().min(total_blocks) as u64;
+        self.stats.hit_blocks += hit_blocks as u64;
+
+        let fresh_needed = total_blocks - hit_blocks;
+        // Hit blocks sitting in the free table leave it when pinned, so
+        // they consume allocatable headroom exactly like fresh blocks
+        // (this also makes the reserve threshold apply to reactivations).
+        let hits_from_free = keys
+            .iter()
+            .take(hit_blocks)
+            .filter(|k| {
+                let b = self.cached[k];
+                self.blocks[b as usize].ref_count == 0
+            })
+            .count();
+        let avail = self.availability();
+        let allowed = match class {
+            TaskClass::Online => avail.for_online(),
+            TaskClass::Offline => avail.for_offline(),
+        };
+        if fresh_needed + hits_from_free > allowed {
+            // Keep lookups counted; hits unused.
+            return None;
+        }
+
+        let mut held = Vec::with_capacity(total_blocks);
+        // 2. Pin hits.
+        for &k in keys.iter().take(hit_blocks) {
+            let b = *self.cached.get(&k).expect("peeked block vanished");
+            let meta = &mut self.blocks[b as usize];
+            meta.ref_count += 1;
+            meta.last_access = now;
+            meta.finished = false;
+            self.remove_from_free_table(b);
+            held.push(b);
+        }
+        self.stats.saved_tokens += (hit_blocks * self.block_size) as u64;
+
+        // 3. Fresh blocks (keyed for prompt region, unkeyed past `keys`).
+        for i in hit_blocks..total_blocks {
+            let b = self.take_block().expect("availability check lied");
+            let meta = &mut self.blocks[b as usize];
+            meta.ref_count = 1;
+            meta.last_access = now;
+            meta.class = class;
+            meta.finished = false;
+            meta.key = keys.get(i).copied();
+            meta.table_key = None;
+            if let Some(k) = meta.key {
+                self.cached.insert(k, b);
+            }
+            held.push(b);
+        }
+        self.owned.insert(req, held);
+        Some(hit_blocks * self.block_size)
+    }
+
+    /// Append `n` fresh unshareable blocks to a running request (decode
+    /// growth). Returns false if memory does not permit.
+    pub fn grow(&mut self, req: RequestId, class: TaskClass, n: usize, now: f64) -> bool {
+        let avail = self.availability();
+        let allowed = match class {
+            TaskClass::Online => avail.for_online(),
+            TaskClass::Offline => avail.for_offline(),
+        };
+        if n > allowed {
+            return false;
+        }
+        for _ in 0..n {
+            let b = self.take_block().expect("availability check lied");
+            let meta = &mut self.blocks[b as usize];
+            meta.ref_count = 1;
+            meta.last_access = now;
+            meta.class = class;
+            meta.finished = false;
+            meta.key = None;
+            meta.table_key = None;
+            self.owned.entry(req).or_default().push(b);
+        }
+        true
+    }
+
+    /// Touch all blocks of `req` (scheduled this iteration).
+    pub fn touch(&mut self, req: RequestId, now: f64) {
+        if let Some(blocks) = self.owned.get(&req).cloned() {
+            for b in blocks {
+                self.blocks[b as usize].last_access = now;
+            }
+        }
+    }
+
+    /// Number of blocks currently held by `req`.
+    pub fn held_blocks(&self, req: RequestId) -> usize {
+        self.owned.get(&req).map_or(0, |v| v.len())
+    }
+
+    /// Total blocks held by running requests.
+    pub fn occupied_blocks(&self) -> usize {
+        self.capacity - self.free_list.len() - self.free_table.len()
+    }
+
+    /// Release a request's blocks (preemption or completion). Content-keyed
+    /// blocks go to the free table (still reusable); unkeyed blocks return
+    /// to the free list.
+    pub fn release(&mut self, req: RequestId, finished: bool) {
+        let Some(blocks) = self.owned.remove(&req) else {
+            return;
+        };
+        for b in blocks {
+            let meta = &mut self.blocks[b as usize];
+            debug_assert!(meta.ref_count > 0);
+            meta.ref_count -= 1;
+            if meta.ref_count > 0 {
+                continue; // still pinned by a sharing sibling
+            }
+            meta.finished = finished;
+            if meta.key.is_some() {
+                self.requeue_free(b);
+            } else {
+                self.free_list.push(b);
+            }
+        }
+    }
+
+    /// Drop every cached (free-table) block — test/bench helper for
+    /// measuring cold-cache behaviour.
+    pub fn flush_cache(&mut self) {
+        while self.evict_one().map(|b| self.free_list.push(b)).is_some() {}
+    }
+
+    /// Tokens of KV currently resident (running + reusable cache).
+    pub fn resident_tokens(&self) -> usize {
+        (self.capacity - self.free_list.len()) * self.block_size
+    }
+
+    /// Memory-occupancy breakdown for Fig. 10: (running, cached_online,
+    /// cached_offline, free) in blocks.
+    pub fn occupancy_breakdown(&self) -> (usize, usize, usize, usize) {
+        let running = self.occupied_blocks();
+        let mut cached_online = 0;
+        let mut cached_offline = 0;
+        for &(_, _, b) in &self.free_table {
+            match self.blocks[b as usize].class {
+                TaskClass::Online => cached_online += 1,
+                TaskClass::Offline => cached_offline += 1,
+            }
+        }
+        (running, cached_online, cached_offline, self.free_list.len())
+    }
+
+    /// Invariant checker used by property tests.
+    #[doc(hidden)]
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let owned_total: usize = self.owned.values().map(|v| v.len()).sum();
+        let mut refs = vec![0u32; self.capacity];
+        for v in self.owned.values() {
+            for &b in v {
+                refs[b as usize] += 1;
+            }
+        }
+        for (i, meta) in self.blocks.iter().enumerate() {
+            if meta.ref_count != refs[i] {
+                return Err(format!(
+                    "block {i}: ref_count {} != owners {}",
+                    meta.ref_count, refs[i]
+                ));
+            }
+            if meta.ref_count > 0 && meta.table_key.is_some() {
+                return Err(format!("block {i}: pinned but in free table"));
+            }
+        }
+        let in_table = self.free_table.len();
+        let in_free = self.free_list.len();
+        // Every block is free, in the table, or pinned (shared pins may
+        // make pinned-block count < owned_total).
+        let pinned = self.blocks.iter().filter(|m| m.ref_count > 0).count();
+        if in_table + in_free + pinned != self.capacity {
+            return Err(format!(
+                "partition broken: table {in_table} + free {in_free} + pinned {pinned} != {}",
+                self.capacity
+            ));
+        }
+        for (&k, &b) in &self.cached {
+            if self.blocks[b as usize].key != Some(k) {
+                return Err(format!("cached index stale for key {k:x}"));
+            }
+        }
+        for &(p, t, b) in &self.free_table {
+            if self.blocks[b as usize].table_key != Some((p, t)) {
+                return Err(format!("free table stale for block {b}"));
+            }
+        }
+        let _ = owned_total;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BS: usize = 16;
+
+    fn keys(owner: RequestId, n: usize) -> Vec<u128> {
+        // distinct unshared keys
+        (0..n).map(|i| ((owner as u128) << 64) | i as u128).collect()
+    }
+
+    fn shared_keys(group: u128, n: usize) -> Vec<u128> {
+        (0..n).map(|i| (group << 96) | i as u128).collect()
+    }
+
+    #[test]
+    fn allocate_and_release_roundtrip() {
+        let mut m = KvManager::new(10, BS, EvictionPolicy::TaskAware);
+        let ks = keys(1, 4);
+        let ff = m.allocate(1, TaskClass::Offline, &ks, 4, 0.0).unwrap();
+        assert_eq!(ff, 0);
+        assert_eq!(m.held_blocks(1), 4);
+        assert_eq!(m.occupied_blocks(), 4);
+        m.check_invariants().unwrap();
+        m.release(1, true);
+        assert_eq!(m.occupied_blocks(), 0);
+        assert_eq!(m.availability().evictable, 4);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_hit_fast_forwards() {
+        let mut m = KvManager::new(10, BS, EvictionPolicy::TaskAware);
+        let shared = shared_keys(7, 3);
+        m.register_future(&shared); // sibling interest keeps blocks alive
+        m.allocate(1, TaskClass::Offline, &shared, 3, 0.0).unwrap();
+        m.release(1, true);
+        // Second request with same prefix + 2 private blocks.
+        let mut ks2 = shared.clone();
+        ks2.extend(keys(2, 2));
+        let ff = m.allocate(2, TaskClass::Offline, &ks2, 5, 1.0).unwrap();
+        assert_eq!(ff, 3 * BS, "3 shared blocks fast-forwarded");
+        assert!(m.stats.hit_ratio() > 0.0);
+        assert_eq!(m.stats.saved_tokens, (3 * BS) as u64);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_order_respects_task_priority() {
+        let mut m = KvManager::new(4, BS, EvictionPolicy::TaskAware);
+        // Offline block with future interest (rc=1).
+        let off = keys(1, 1);
+        m.register_future(&off);
+        m.allocate(1, TaskClass::Offline, &off, 1, 0.0).unwrap();
+        m.release(1, false);
+        // Finished online block (later LAT — LRU would evict offline first anyway,
+        // so make online *older* to prove priority dominates LAT).
+        let on = keys(2, 1);
+        m.allocate(2, TaskClass::Online, &on, 1, 0.5).unwrap();
+        m.release(2, true);
+        // Finished offline rc=0 (newest).
+        let dead = keys(3, 1);
+        m.allocate(3, TaskClass::Offline, &dead, 1, 5.0).unwrap();
+        m.release(3, true);
+
+        // Demand 3 fresh blocks: eviction order must be dead (p0),
+        // online-finished (p0.5), offline-rc1 (p1).
+        m.allocate(4, TaskClass::Online, &keys(4, 4), 4, 6.0).unwrap();
+        assert_eq!(m.stats.evictions, 3);
+        assert_eq!(m.stats.useful_evictions, 1, "only the rc=1 block was useful");
+        assert_eq!(m.stats.punished_tokens, BS as u64);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn lru_ignores_priority() {
+        let mut m = KvManager::new(2, BS, EvictionPolicy::Lru);
+        let off = keys(1, 1);
+        m.register_future(&off); // rc=1 — would be protected under TaskAware
+        m.allocate(1, TaskClass::Offline, &off, 1, 0.0).unwrap();
+        m.release(1, false);
+        let on = keys(2, 1);
+        m.allocate(2, TaskClass::Online, &on, 1, 1.0).unwrap();
+        m.release(2, true);
+        // One fresh block needed: LRU evicts oldest = the useful offline block.
+        m.allocate(3, TaskClass::Online, &keys(3, 1), 1, 2.0).unwrap();
+        assert_eq!(m.stats.useful_evictions, 1);
+    }
+
+    #[test]
+    fn task_aware_protects_useful_block() {
+        let mut m = KvManager::new(2, BS, EvictionPolicy::TaskAware);
+        let off = keys(1, 1);
+        m.register_future(&off);
+        m.allocate(1, TaskClass::Offline, &off, 1, 0.0).unwrap();
+        m.release(1, false);
+        let on = keys(2, 1);
+        m.allocate(2, TaskClass::Online, &on, 1, 1.0).unwrap();
+        m.release(2, true);
+        m.allocate(3, TaskClass::Online, &keys(3, 1), 1, 2.0).unwrap();
+        assert_eq!(
+            m.stats.useful_evictions, 0,
+            "task-aware policy must evict the finished online block instead"
+        );
+        // The offline block is still hittable.
+        assert_eq!(m.peek_prefix(&off), 1);
+    }
+
+    #[test]
+    fn reserve_blocks_offline_not_online() {
+        let mut m = KvManager::new(10, BS, EvictionPolicy::TaskAware);
+        m.set_reserve_tokens(4 * BS);
+        assert_eq!(m.availability().for_offline(), 6);
+        assert_eq!(m.availability().for_online(), 10);
+        // Offline may take 6, not 7.
+        assert!(m.allocate(1, TaskClass::Offline, &keys(1, 7), 7, 0.0).is_none());
+        assert!(m.allocate(1, TaskClass::Offline, &keys(1, 6), 6, 0.0).is_some());
+        // Online can use the reserve.
+        assert!(m.allocate(2, TaskClass::Online, &keys(2, 4), 4, 0.0).is_some());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_pin_survives_single_release() {
+        let mut m = KvManager::new(10, BS, EvictionPolicy::TaskAware);
+        let shared = shared_keys(9, 2);
+        m.register_future(&shared);
+        m.register_future(&shared);
+        m.allocate(1, TaskClass::Offline, &shared, 2, 0.0).unwrap();
+        let ff = m.allocate(2, TaskClass::Offline, &shared, 2, 0.1).unwrap();
+        assert_eq!(ff, 2 * BS);
+        m.release(1, true);
+        m.unregister_future(&shared);
+        // Request 2 still holds the blocks.
+        assert_eq!(m.held_blocks(2), 2);
+        assert_eq!(m.occupied_blocks(), 2);
+        m.check_invariants().unwrap();
+        m.release(2, true);
+        m.unregister_future(&shared);
+        assert_eq!(m.occupied_blocks(), 0);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn grow_appends_unkeyed() {
+        let mut m = KvManager::new(5, BS, EvictionPolicy::TaskAware);
+        m.allocate(1, TaskClass::Online, &keys(1, 2), 2, 0.0).unwrap();
+        assert!(m.grow(1, TaskClass::Online, 2, 1.0));
+        assert_eq!(m.held_blocks(1), 4);
+        m.release(1, true);
+        // Unkeyed decode blocks return to the free list, keyed ones to cache.
+        let a = m.availability();
+        assert_eq!(a.evictable, 2);
+        assert_eq!(a.free, 3);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn eviction_preview_counts_useful() {
+        let mut m = KvManager::new(4, BS, EvictionPolicy::TaskAware);
+        let off = keys(1, 2);
+        m.register_future(&off);
+        m.allocate(1, TaskClass::Offline, &off, 2, 0.0).unwrap();
+        m.release(1, false);
+        let dead = keys(2, 2);
+        m.allocate(2, TaskClass::Offline, &dead, 2, 1.0).unwrap();
+        m.release(2, true);
+        // Victims in order: 2 dead blocks (p0), then 2 useful (rc=1).
+        assert_eq!(m.eviction_preview(2), 0);
+        assert_eq!(m.eviction_preview(3), BS as u64);
+        assert_eq!(m.eviction_preview(4), 2 * BS as u64);
+    }
+
+    #[test]
+    fn flush_cache_empties_table() {
+        let mut m = KvManager::new(8, BS, EvictionPolicy::TaskAware);
+        m.allocate(1, TaskClass::Offline, &keys(1, 3), 3, 0.0).unwrap();
+        m.release(1, true);
+        m.flush_cache();
+        let a = m.availability();
+        assert_eq!(a.evictable, 0);
+        assert_eq!(a.free, 8);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rc_change_requeues_priority() {
+        let mut m = KvManager::new(2, BS, EvictionPolicy::TaskAware);
+        let a = keys(1, 1);
+        let b = keys(2, 1);
+        m.register_future(&a);
+        m.allocate(1, TaskClass::Offline, &a, 1, 0.0).unwrap();
+        m.release(1, false);
+        m.allocate(2, TaskClass::Offline, &b, 1, 1.0).unwrap();
+        m.release(2, false);
+        m.register_future(&b); // b now rc=1, a rc=1 — tie broken by LAT (a older)
+        m.unregister_future(&a); // a drops to rc=0 => evicted first despite age
+        m.allocate(3, TaskClass::Online, &keys(3, 1), 1, 2.0).unwrap();
+        assert_eq!(m.peek_prefix(&b), 1, "b must survive");
+        assert_eq!(m.peek_prefix(&a), 0, "a (rc=0) must be the victim");
+    }
+}

@@ -1,0 +1,26 @@
+//! Task-aware KV cache manager (paper §4.2).
+//!
+//! Block-granular KV accounting with automatic prefix caching (APC): blocks
+//! are identified by content keys (chain hashes, see
+//! [`crate::core::PromptSpec::content_key`]); a prefix index maps keys to
+//! resident blocks so a new request reuses any cached prefix.
+//!
+//! Eviction is the paper's contribution: the free table is ordered by
+//! (priority, last-access-time) where priority encodes the *source task
+//! class* and the *future reference count* (RC):
+//!
+//!   running online blocks     — never in the free table (priority = ∞)
+//!   offline blocks, RC > 0    — priority = RC
+//!   finished online blocks    — priority = 0.5
+//!   finished offline, RC = 0  — priority = 0 (evicted first)
+//!
+//! A **threshold** reserves headroom for bursty online arrivals: offline
+//! allocations must leave `reserve_tokens` allocatable; online allocations
+//! may dip into the reserve (that is what it is for).
+
+pub mod manager;
+
+pub use manager::{Availability, CacheStats, EvictionPolicy, KvManager};
+
+/// Physical block handle (index into the manager's metadata table).
+pub type BlockId = u32;

@@ -1,0 +1,25 @@
+//! Echo: efficient co-scheduling of hybrid online-offline tasks for LLM serving.
+//!
+//! Reproduction of the paper's three-component system — KV-cache-aware task
+//! scheduler, task-aware KV cache manager, and estimation toolkits — as a
+//! rust coordinator (layer 3) driving an AOT-compiled JAX/Pallas model
+//! (layers 2/1) through the PJRT C API. See DESIGN.md for the inventory and
+//! EXPERIMENTS.md for the paper-vs-measured record.
+
+pub mod config;
+pub mod core;
+pub mod engine;
+pub mod estimator;
+pub mod figures;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod sim;
+pub mod trace;
+pub mod utils;
+pub mod workload;
+
+mod cli;
+pub use cli::run_cli;

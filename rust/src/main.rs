@@ -1,0 +1,4 @@
+//! Echo leader entrypoint. CLI surface is wired up in `echo::cli`.
+fn main() {
+    std::process::exit(echo::run_cli());
+}

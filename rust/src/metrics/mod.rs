@@ -1,0 +1,248 @@
+//! Serving metrics: per-request latency (TTFT/TPOT), throughput, SLO
+//! attainment, and the time series behind Figures 8-11 (active requests,
+//! memory breakdown, prefix-cache hit ratio, predictor traces).
+
+use crate::core::TaskClass;
+use crate::utils::json::Json;
+use crate::utils::stats::{Summary, TimeSeries};
+
+/// Snapshot cadence control: long simulations sample series sparsely.
+#[derive(Clone, Copy, Debug)]
+pub struct SampleCtl {
+    min_interval: f64,
+    last: f64,
+}
+
+impl SampleCtl {
+    pub fn new(min_interval: f64) -> Self {
+        SampleCtl {
+            min_interval,
+            last: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn due(&mut self, t: f64) -> bool {
+        if t - self.last >= self.min_interval {
+            self.last = t;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    // ---- per-request latency (online) ----
+    pub online_ttft: Vec<f64>,
+    pub online_tpot: Vec<f64>,
+    // ---- completions & token counts ----
+    pub online_completed: usize,
+    pub offline_completed: usize,
+    pub online_tokens_out: u64,
+    pub offline_tokens_out: u64,
+    /// Billed tokens (prompt + output) of completed offline requests — the
+    /// batch-API work unit behind the paper's offline-throughput metric
+    /// (benefit = tokens processed, Eq. 1; a cache-hit prefix still counts:
+    /// the request's tokens were served, just without recompute).
+    pub offline_billed_tokens: u64,
+    /// Prefill tokens actually computed (recompute shows up here).
+    pub prefill_tokens_computed: u64,
+    /// Prefill tokens skipped via prefix-cache fast-forward.
+    pub prefill_tokens_saved: u64,
+    // ---- per-token SLO attainment (paper §5.1: token i's deadline is
+    // arrival + TTFT + i·TPOT; a token is attained if it lands by then) ----
+    pub online_tokens_checked: u64,
+    pub online_token_deadlines_met: u64,
+    // ---- engine counters ----
+    pub iterations: usize,
+    pub busy_time: f64,
+    pub preemptions: usize,
+    pub skipped_offline: usize,
+    // ---- time series (Figures 8-10) ----
+    pub active_online: TimeSeries,
+    pub active_offline: TimeSeries,
+    pub mem_running: TimeSeries,
+    pub mem_cached_online: TimeSeries,
+    pub mem_cached_offline: TimeSeries,
+    pub mem_free: TimeSeries,
+    pub hit_ratio: TimeSeries,
+    /// Cumulative prefix-lookup / hit block counts (windowed ratios for
+    /// Fig. 9 are differenced from these).
+    pub cache_lookups_cum: TimeSeries,
+    pub cache_hits_cum: TimeSeries,
+    pub online_arrivals: TimeSeries,
+}
+
+/// Windowed ratio series from two cumulative counters sampled at the same
+/// instants: d(hits)/d(lookups) per step, carrying the last value through
+/// empty windows.
+pub fn windowed_ratio(lookups: &TimeSeries, hits: &TimeSeries) -> TimeSeries {
+    let mut out = TimeSeries::default();
+    let mut last = (0.0, 0.0);
+    let mut last_ratio = 0.0;
+    for (&(t, l), &(_, h)) in lookups.points.iter().zip(&hits.points) {
+        let dl = l - last.0;
+        let dh = h - last.1;
+        if dl > 0.0 {
+            last_ratio = (dh / dl).clamp(0.0, 1.0);
+        }
+        out.push(t, last_ratio);
+        last = (l, h);
+    }
+    out
+}
+
+impl Metrics {
+    pub fn record_completion(
+        &mut self,
+        class: TaskClass,
+        tokens_out: usize,
+        prompt_len: usize,
+        ttft: Option<f64>,
+        tpot: Option<f64>,
+    ) {
+        match class {
+            TaskClass::Online => {
+                self.online_completed += 1;
+                self.online_tokens_out += tokens_out as u64;
+                if let Some(t) = ttft {
+                    self.online_ttft.push(t);
+                }
+                if let Some(t) = tpot {
+                    self.online_tpot.push(t);
+                }
+            }
+            TaskClass::Offline => {
+                self.offline_completed += 1;
+                self.offline_tokens_out += tokens_out as u64;
+                self.offline_billed_tokens += (prompt_len + tokens_out) as u64;
+            }
+        }
+    }
+
+    /// Offline throughput = billed tokens (prompt + output) of completed
+    /// offline requests per second of busy time — the quantity Fig. 6
+    /// compares across strategies (the batch API charges per processed
+    /// token, and the paper's benefit counts processed tokens).
+    pub fn offline_throughput(&self) -> f64 {
+        if self.busy_time <= 0.0 {
+            0.0
+        } else {
+            self.offline_billed_tokens as f64 / self.busy_time
+        }
+    }
+
+    /// Output-only offline throughput (secondary view).
+    pub fn offline_output_throughput(&self) -> f64 {
+        if self.busy_time <= 0.0 {
+            0.0
+        } else {
+            self.offline_tokens_out as f64 / self.busy_time
+        }
+    }
+
+    pub fn online_throughput(&self) -> f64 {
+        if self.busy_time <= 0.0 {
+            0.0
+        } else {
+            self.online_tokens_out as f64 / self.busy_time
+        }
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.online_ttft)
+    }
+
+    pub fn tpot_summary(&self) -> Summary {
+        Summary::of(&self.online_tpot)
+    }
+
+    /// (TTFT attainment, per-token deadline attainment) against an SLO.
+    /// The token measure follows §5.1's cumulative deadline form, which is
+    /// what the scheduler enforces; distribution summaries of raw TTFT/TPOT
+    /// remain available for Fig. 7.
+    pub fn slo_attainment(&self, slo: &crate::core::Slo) -> (f64, f64) {
+        let token = if self.online_tokens_checked == 0 {
+            1.0
+        } else {
+            self.online_token_deadlines_met as f64 / self.online_tokens_checked as f64
+        };
+        (Summary::attainment(&self.online_ttft, slo.ttft), token)
+    }
+
+    pub fn to_json(&self, slo: &crate::core::Slo) -> Json {
+        let ttft = self.ttft_summary();
+        let tpot = self.tpot_summary();
+        let (a_ttft, a_tpot) = self.slo_attainment(slo);
+        Json::obj()
+            .set("iterations", self.iterations)
+            .set("busy_time", self.busy_time)
+            .set("online_completed", self.online_completed)
+            .set("offline_completed", self.offline_completed)
+            .set("online_tokens_out", self.online_tokens_out)
+            .set("offline_tokens_out", self.offline_tokens_out)
+            .set("offline_billed_tokens", self.offline_billed_tokens)
+            .set("offline_throughput_tok_s", self.offline_throughput())
+            .set("offline_output_throughput_tok_s", self.offline_output_throughput())
+            .set("online_throughput_tok_s", self.online_throughput())
+            .set("prefill_tokens_computed", self.prefill_tokens_computed)
+            .set("prefill_tokens_saved", self.prefill_tokens_saved)
+            .set("preemptions", self.preemptions)
+            .set("skipped_offline", self.skipped_offline)
+            .set(
+                "ttft",
+                Json::obj()
+                    .set("p50", ttft.p50)
+                    .set("p90", ttft.p90)
+                    .set("p99", ttft.p99)
+                    .set("mean", ttft.mean)
+                    .set("attainment", a_ttft),
+            )
+            .set(
+                "tpot",
+                Json::obj()
+                    .set("p50", tpot.p50)
+                    .set("p90", tpot.p90)
+                    .set("p99", tpot.p99)
+                    .set("mean", tpot.mean)
+                    .set("attainment", a_tpot),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Slo;
+
+    #[test]
+    fn completion_accounting() {
+        let mut m = Metrics::default();
+        m.busy_time = 10.0;
+        m.record_completion(TaskClass::Offline, 100, 400, None, None);
+        m.record_completion(TaskClass::Online, 20, 50, Some(0.5), Some(0.04));
+        assert_eq!(m.offline_completed, 1);
+        assert_eq!(m.online_completed, 1);
+        assert!((m.offline_throughput() - 50.0).abs() < 1e-12);
+        assert!((m.offline_output_throughput() - 10.0).abs() < 1e-12);
+        let (a_ttft, a_tpot) = m.slo_attainment(&Slo::paper_eval());
+        assert_eq!(a_ttft, 1.0);
+        assert_eq!(a_tpot, 1.0);
+    }
+
+    #[test]
+    fn sample_ctl_rate_limits() {
+        let mut s = SampleCtl::new(1.0);
+        assert!(s.due(0.0));
+        assert!(!s.due(0.5));
+        assert!(s.due(1.01));
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let m = Metrics::default();
+        let j = m.to_json(&Slo::paper_eval());
+        assert!(j.at("ttft.attainment").is_some());
+    }
+}

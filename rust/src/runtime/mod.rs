@@ -1,0 +1,302 @@
+//! PJRT runtime: loads the AOT artifacts (`make artifacts`) and executes
+//! EchoLM steps on the PJRT CPU client. Python never runs here — the HLO
+//! text + weights.bin + manifest.json are the entire interface (see
+//! python/compile/aot.py for the producing side and the argument-order
+//! contract).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::utils::json::Json;
+
+/// One parameter tensor's manifest row.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub byte_offset: usize,
+    pub byte_len: usize,
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+    pub max_batch: usize,
+    pub kv_shape: Vec<usize>,
+    pub params: Vec<ParamSpec>,
+    pub weights_bytes: usize,
+    /// chunk width -> HLO file name
+    pub buckets: BTreeMap<usize, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let cfg = j.get("config").ok_or_else(|| anyhow!("manifest missing config"))?;
+        let u = |p: &str| -> Result<usize> {
+            cfg.get(p)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest config missing {p}"))
+        };
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("param missing shape"))?
+                        .iter()
+                        .filter_map(Json::as_usize)
+                        .collect(),
+                    byte_offset: p
+                        .get("byte_offset")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("param missing byte_offset"))?,
+                    byte_len: p
+                        .get("byte_len")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("param missing byte_len"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut buckets = BTreeMap::new();
+        for b in j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing buckets"))?
+        {
+            let chunk = b
+                .get("chunk")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("bucket missing chunk"))?;
+            let hlo = b
+                .get("hlo")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("bucket missing hlo"))?;
+            buckets.insert(chunk, hlo.to_string());
+        }
+        Ok(Manifest {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_heads: u("n_heads")?,
+            head_dim: u("head_dim")?,
+            n_layers: u("n_layers")?,
+            max_seq: u("max_seq")?,
+            max_batch: u("max_batch")?,
+            kv_shape: j
+                .get("kv_shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("manifest missing kv_shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            params,
+            weights_bytes: j
+                .get("weights_bytes")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing weights_bytes"))?,
+            buckets,
+        })
+    }
+}
+
+/// Output of one model step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    /// Greedy next token per slot (garbage for inactive slots).
+    pub next_tokens: Vec<i32>,
+    /// Last-position logits per slot, row-major [B, vocab].
+    pub logits: Vec<f32>,
+}
+
+/// The loaded model: compiled executables per chunk bucket + device-held
+/// weights, with the KV slab threaded between steps.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    weights: Vec<xla::Literal>,
+    /// KV slab literal [L, 2, B, H, S, Dh]; replaced after every step.
+    kv: xla::Literal,
+    kv_dims: Vec<usize>,
+}
+
+// SAFETY: the xla crate's handles use Rc + raw PJRT pointers, making them
+// !Send by default. Every Rc clone (client handles inside executables)
+// lives inside this struct, so moving the *whole* ModelRuntime to another
+// thread transfers all owners together; it is never shared across threads
+// (the server moves it into the single coordinator thread at spawn). The
+// PJRT CPU client itself is safe to use from the thread that owns it.
+unsafe impl Send for ModelRuntime {}
+
+impl ModelRuntime {
+    /// Load artifacts and compile every bucket on the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<ModelRuntime> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+
+        // Weights.
+        let blob = std::fs::read(dir.join("weights.bin"))
+            .with_context(|| format!("reading {}/weights.bin", dir.display()))?;
+        if blob.len() != manifest.weights_bytes {
+            bail!(
+                "weights.bin is {} bytes, manifest says {}",
+                blob.len(),
+                manifest.weights_bytes
+            );
+        }
+        let mut weights = Vec::with_capacity(manifest.params.len());
+        for p in &manifest.params {
+            let bytes = &blob[p.byte_offset..p.byte_offset + p.byte_len];
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &p.shape,
+                bytes,
+            )?;
+            weights.push(lit);
+        }
+
+        // Executables.
+        let mut executables = BTreeMap::new();
+        for (&chunk, hlo) in &manifest.buckets {
+            let path = dir.join(hlo);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(chunk, exe);
+        }
+        if executables.is_empty() {
+            bail!("no buckets in manifest");
+        }
+
+        let kv_dims = manifest.kv_shape.clone();
+        let kv = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &kv_dims);
+        Ok(ModelRuntime {
+            manifest,
+            client,
+            executables,
+            weights,
+            kv,
+            kv_dims,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Chunk buckets available, ascending.
+    pub fn buckets(&self) -> Vec<usize> {
+        self.executables.keys().copied().collect()
+    }
+
+    /// Smallest bucket that fits `chunk` tokens.
+    pub fn bucket_for(&self, chunk: usize) -> Result<usize> {
+        self.executables
+            .keys()
+            .copied()
+            .find(|&b| b >= chunk)
+            .ok_or_else(|| anyhow!("no bucket fits chunk {chunk}"))
+    }
+
+    /// Zero the KV slab (fresh serving session).
+    pub fn reset_kv(&mut self) {
+        self.kv = xla::Literal::create_from_shape(xla::PrimitiveType::F32, &self.kv_dims);
+    }
+
+    /// Execute one step in the given bucket.
+    ///
+    /// `tokens` is row-major [max_batch, bucket_chunk]; `cache_lens` and
+    /// `q_lens` are per-slot. Inactive slots: q_len 0. The KV slab advances
+    /// in place (slots addressed by index).
+    pub fn step(
+        &mut self,
+        bucket: usize,
+        tokens: &[i32],
+        cache_lens: &[i32],
+        q_lens: &[i32],
+    ) -> Result<StepOutput> {
+        let b = self.manifest.max_batch;
+        if tokens.len() != b * bucket || cache_lens.len() != b || q_lens.len() != b {
+            bail!(
+                "step shape mismatch: tokens {} (want {}), lens {}/{}",
+                tokens.len(),
+                b * bucket,
+                cache_lens.len(),
+                q_lens.len()
+            );
+        }
+        for i in 0..b {
+            let end = cache_lens[i] + q_lens[i];
+            if cache_lens[i] < 0 || q_lens[i] < 0 || end as usize > self.manifest.max_seq {
+                bail!(
+                    "slot {i}: cache_len {} + q_len {} exceeds max_seq {}",
+                    cache_lens[i],
+                    q_lens[i],
+                    self.manifest.max_seq
+                );
+            }
+        }
+        let exe = self
+            .executables
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("unknown bucket {bucket}"))?;
+
+        let tokens_lit = xla::Literal::vec1(tokens).reshape(&[b as i64, bucket as i64])?;
+        let cache_lit = xla::Literal::vec1(cache_lens);
+        let qlens_lit = xla::Literal::vec1(q_lens);
+
+        let mut args: Vec<&xla::Literal> = self.weights.iter().collect();
+        args.push(&self.kv);
+        args.push(&tokens_lit);
+        args.push(&cache_lit);
+        args.push(&qlens_lit);
+
+        let result = exe.execute::<&xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?;
+        let (next_lit, logits_lit, kv_lit) = out.to_tuple3()?;
+        self.kv = kv_lit;
+        Ok(StepOutput {
+            next_tokens: next_lit.to_vec::<i32>()?,
+            logits: logits_lit.to_vec::<f32>()?,
+        })
+    }
+
+    /// Wall-clock micro-benchmark of a bucket with all slots active at a
+    /// given context length — feeds the estimator's coefficient fitting.
+    pub fn bench_step(&mut self, bucket: usize, context: usize, reps: usize) -> Result<f64> {
+        let b = self.manifest.max_batch;
+        let tokens = vec![1i32; b * bucket];
+        let cache = vec![context as i32; b];
+        let q = vec![bucket as i32; b];
+        // warmup
+        self.step(bucket, &tokens, &cache, &q)?;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            self.step(bucket, &tokens, &cache, &q)?;
+        }
+        Ok(t0.elapsed().as_secs_f64() / reps as f64)
+    }
+}

@@ -1,0 +1,840 @@
+//! KV-cache-aware task scheduler (paper §4.1).
+//!
+//! Per iteration the scheduler builds a batch (a [`Plan`]) out of
+//!   * all running online decodes (always scheduled, FCFS admission),
+//!   * online prefill chunks (FCFS, chunked prefill),
+//!   * offline work selected by the strategy under SLO + memory constraints.
+//!
+//! The search-space reduction is the paper's "last batch" observation: the
+//! batch starts from the previous iteration's running set minus completions
+//! and only *mutations* are considered — preempt an offline request for
+//! memory, admit an offline prefill (preferring candidates whose prefix is
+//! cached), continue an offline decode whose KV is resident. Candidates are
+//! scored by Eq. 4, `(Benefit − Punishment) / Time`.
+//!
+//! Strategy ladder (§7.1): BS (priority preemption, no estimator), BS+E
+//! (+SLO-constrained admission), BS+E+S (+KV-aware selection), Echo
+//! (+task-aware cache manager, configured at the KvManager level).
+
+pub mod plan;
+pub mod pool;
+
+pub use plan::{Plan, PlanItem, WorkKind};
+pub use pool::{OfflinePool, RadixIndex};
+
+use std::collections::VecDeque;
+
+use crate::config::{SchedulerConfig, SchedulerKind};
+use crate::core::{ReqState, RequestId, RequestStore, Slo, TaskClass};
+use crate::estimator::{BatchShape, PrefillItem, TimeModel};
+use crate::kvcache::KvManager;
+
+/// What the scheduler decided beyond the plan itself.
+#[derive(Debug, Default)]
+pub struct Outcome {
+    pub plan: Plan,
+    pub admitted_online: Vec<RequestId>,
+    pub admitted_offline: Vec<RequestId>,
+    pub preempted: Vec<RequestId>,
+    /// Offline decodes left idle this iteration to honor the SLO.
+    pub skipped_offline: usize,
+}
+
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+    pub slo: Slo,
+    pub time_model: TimeModel,
+    block_size: usize,
+    /// Admission (LIFO preemption) order of running offline requests.
+    running_offline: Vec<RequestId>,
+}
+
+/// Minimum useful SLO slack; below this the budget is treated as violated
+/// anyway and offline admission stops.
+const MIN_BUDGET: f64 = 1e-4;
+/// Score epsilon: protects Eq. 4's division when a mutation adds ~no time.
+const EPS_TIME: f64 = 1e-6;
+
+impl Scheduler {
+    pub fn new(
+        cfg: SchedulerConfig,
+        slo: Slo,
+        time_model: TimeModel,
+        block_size: usize,
+    ) -> Self {
+        Scheduler {
+            cfg,
+            slo,
+            time_model,
+            block_size,
+            running_offline: Vec::new(),
+        }
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Forget a request that finished (engine calls this on completion).
+    pub fn on_finished(&mut self, id: RequestId) {
+        self.running_offline.retain(|&r| r != id);
+    }
+
+    /// Number of offline requests currently admitted.
+    pub fn running_offline_count(&self) -> usize {
+        self.running_offline.len()
+    }
+
+    /// Preempt the most recently admitted offline request (recompute mode):
+    /// release KV, reset progress, push back into the pool.
+    fn preempt_one_offline(
+        &mut self,
+        store: &mut RequestStore,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+        out: &mut Outcome,
+    ) -> bool {
+        let Some(victim) = self.running_offline.pop() else {
+            return false;
+        };
+        let req = store.get_mut(victim);
+        req.preempt();
+        kv.release(victim, false);
+        let keys = req
+            .prompt
+            .content_keys(victim, req.prompt.total_len, self.block_size);
+        pool.add(victim, req.prompt.total_len, keys);
+        out.preempted.push(victim);
+        true
+    }
+
+    /// SLO budget for the iteration: tightest slack among online requests
+    /// that make progress in this batch (paper §5.1).
+    fn slo_budget(
+        &self,
+        now: f64,
+        store: &RequestStore,
+        online_decodes: &[RequestId],
+        online_prefills: &[(RequestId, usize)],
+    ) -> f64 {
+        let mut budget = f64::INFINITY;
+        for &r in online_decodes {
+            budget = budget.min(store.get(r).next_token_deadline(&self.slo) - now);
+        }
+        for &(r, chunk) in online_prefills {
+            let req = store.get(r);
+            // If this chunk completes the prefill, the first token lands at
+            // the end of this iteration: it must beat the TTFT deadline.
+            if req.remaining_prefill() <= chunk {
+                budget = budget.min(req.arrival + self.slo.ttft - now);
+            }
+        }
+        budget
+    }
+
+    /// Build this iteration's plan. Mutates request states, the pool, and
+    /// the KV manager (admissions allocate, preemptions release).
+    pub fn schedule(
+        &mut self,
+        now: f64,
+        store: &mut RequestStore,
+        online_queue: &mut VecDeque<RequestId>,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+    ) -> Outcome {
+        let mut out = Outcome::default();
+
+        // ---- 1. partition the carried-over running set ------------------
+        let mut running: Vec<RequestId> = store.ids_in_state(ReqState::Running);
+        running.sort_unstable(); // deterministic order (admission order)
+        let mut online_decodes = Vec::new();
+        let mut online_prefills = Vec::new(); // (id, remaining)
+        let mut offline_decodes = Vec::new();
+        let mut offline_prefills = Vec::new();
+        for id in running {
+            let r = store.get(id);
+            match (r.class, r.in_prefill()) {
+                (TaskClass::Online, false) => online_decodes.push(id),
+                (TaskClass::Online, true) => online_prefills.push(id),
+                (TaskClass::Offline, false) => offline_decodes.push(id),
+                (TaskClass::Offline, true) => offline_prefills.push(id),
+            }
+        }
+
+        // ---- 2. decode block growth (next token's KV slot) --------------
+        // Idempotent: grow only when held blocks cannot hold seq_len + 1.
+        // Online decode growth may preempt offline requests; offline decode
+        // growth failure preempts the request itself.
+        for &id in &online_decodes {
+            let needed = self.blocks_for(store.get(id).seq_len() + 1);
+            while kv.held_blocks(id) < needed {
+                let missing = needed - kv.held_blocks(id);
+                if kv.grow(id, TaskClass::Online, missing, now) {
+                    break;
+                }
+                if !self.preempt_one_offline(store, pool, kv, &mut out) {
+                    break; // genuinely out of memory: decode stalls
+                }
+            }
+        }
+        offline_decodes.retain(|&id| {
+            // The online growth loop above may have preempted this request
+            // already; drop it from the batch without double-preempting.
+            if store.get(id).state != ReqState::Running {
+                return false;
+            }
+            let needed = self.blocks_for(store.get(id).seq_len() + 1);
+            let held = kv.held_blocks(id);
+            if held >= needed {
+                return true;
+            }
+            if kv.grow(id, TaskClass::Offline, needed - held, now) {
+                true
+            } else {
+                // Self-preempt: cheapest victim is the request that cannot
+                // even hold its next token.
+                let req = store.get_mut(id);
+                req.preempt();
+                kv.release(id, false);
+                let keys = req
+                    .prompt
+                    .content_keys(id, req.prompt.total_len, self.block_size);
+                pool.add(id, req.prompt.total_len, keys);
+                self.running_offline.retain(|&r| r != id);
+                out.preempted.push(id);
+                false
+            }
+        });
+
+        // ---- 3. online admission (FCFS), preempting offline on OOM ------
+        while let Some(&head) = online_queue.front() {
+            if online_decodes.len() + online_prefills.len() + 1 > self.cfg.max_batch {
+                break;
+            }
+            let (total_blocks, keys, _prompt_len) = {
+                let r = store.get(head);
+                (
+                    self.blocks_for(r.seq_len() + 1),
+                    r.prompt.content_keys(head, r.prompt.total_len, self.block_size),
+                    r.prompt.total_len,
+                )
+            };
+            let mut admitted = false;
+            loop {
+                match kv.allocate(head, TaskClass::Online, &keys, total_blocks, now) {
+                    Some(ff) => {
+                        let r = store.get_mut(head);
+                        r.state = ReqState::Running;
+                        // Cap: even a full prefix hit recomputes >= 1 token
+                        // (the logits source for the next token).
+                        r.computed = if self.cfg.fast_forward {
+                            ff.min(r.seq_len().saturating_sub(1))
+                        } else {
+                            0
+                        };
+                        admitted = true;
+                        break;
+                    }
+                    None => {
+                        if !self.preempt_one_offline(store, pool, kv, &mut out) {
+                            break;
+                        }
+                    }
+                }
+            }
+            if !admitted {
+                break; // memory full of online work; queue waits
+            }
+            online_queue.pop_front();
+            out.admitted_online.push(head);
+            if store.get(head).in_prefill() {
+                online_prefills.push(head);
+            } else {
+                online_decodes.push(head); // fully cache-hit prompt
+            }
+        }
+
+        // Online admission may have preempted carried-over offline work;
+        // scrub anything no longer running from the batch lists.
+        offline_decodes.retain(|&id| store.get(id).state == ReqState::Running);
+        offline_prefills.retain(|&id| store.get(id).state == ReqState::Running);
+
+        // ---- 4. mandatory online items ----------------------------------
+        let mut shape = BatchShape::default();
+        let mut items = Vec::new();
+        let mut token_budget = self.cfg.max_batched_tokens;
+
+        for &id in &online_decodes {
+            items.push(PlanItem {
+                req: id,
+                kind: WorkKind::Decode,
+            });
+            shape.decode_lens.push(store.get(id).seq_len());
+            token_budget = token_budget.saturating_sub(1);
+        }
+        // FCFS order for online prefills (arrival order == id order here).
+        online_prefills.sort_by_key(|&id| {
+            let r = store.get(id);
+            (r.arrival as u64, id)
+        });
+        let mut online_prefill_chunks = Vec::new();
+        for &id in &online_prefills {
+            if token_budget == 0 {
+                break;
+            }
+            let r = store.get(id);
+            let chunk = r.remaining_prefill().min(self.cfg.chunk).min(token_budget);
+            if chunk == 0 {
+                continue;
+            }
+            items.push(PlanItem {
+                req: id,
+                kind: WorkKind::Prefill { chunk },
+            });
+            shape.prefills.push(PrefillItem {
+                chunk,
+                context: r.computed,
+            });
+            token_budget -= chunk;
+            online_prefill_chunks.push((id, chunk));
+        }
+
+        let budget = if self.cfg.kind.uses_estimator() {
+            self.slo_budget(now, store, &online_decodes, &online_prefill_chunks)
+        } else {
+            f64::INFINITY
+        };
+
+        // ---- 5. offline work, cheapest first: resident decodes ----------
+        let mut slots_left = self.cfg.max_batch.saturating_sub(items.len());
+        for &id in &offline_decodes {
+            if slots_left == 0 || token_budget == 0 {
+                break;
+            }
+            let len = store.get(id).seq_len();
+            let mut trial = shape.clone();
+            trial.decode_lens.push(len);
+            if self.cfg.kind.uses_estimator()
+                && self.time_model.batch_time(&trial) > budget
+            {
+                out.skipped_offline += 1;
+                continue; // stays running & resident, idles this iteration
+            }
+            shape = trial;
+            items.push(PlanItem {
+                req: id,
+                kind: WorkKind::Decode,
+            });
+            token_budget -= 1;
+            slots_left -= 1;
+        }
+
+        // ---- 6. continue running offline prefills ------------------------
+        for &id in &offline_prefills {
+            if slots_left == 0 || token_budget == 0 {
+                break;
+            }
+            let r = store.get(id);
+            let chunk = r.remaining_prefill().min(self.cfg.chunk).min(token_budget);
+            if chunk == 0 {
+                continue;
+            }
+            let mut trial = shape.clone();
+            trial.prefills.push(PrefillItem {
+                chunk,
+                context: r.computed,
+            });
+            if self.cfg.kind.uses_estimator()
+                && self.time_model.batch_time(&trial) > budget
+            {
+                out.skipped_offline += 1;
+                continue;
+            }
+            shape = trial;
+            items.push(PlanItem {
+                req: id,
+                kind: WorkKind::Prefill { chunk },
+            });
+            token_budget -= chunk;
+            slots_left -= 1;
+        }
+
+        // ---- 7. new offline admissions -----------------------------------
+        if budget > MIN_BUDGET {
+            match self.cfg.kind {
+                SchedulerKind::Bs | SchedulerKind::BsE => self.admit_fcfs(
+                    now,
+                    store,
+                    pool,
+                    kv,
+                    &mut items,
+                    &mut shape,
+                    &mut token_budget,
+                    &mut slots_left,
+                    budget,
+                    &mut out,
+                ),
+                SchedulerKind::BsES | SchedulerKind::Echo => self.admit_kv_aware(
+                    now,
+                    store,
+                    pool,
+                    kv,
+                    &mut items,
+                    &mut shape,
+                    &mut token_budget,
+                    &mut slots_left,
+                    budget,
+                    &mut out,
+                ),
+            }
+        }
+
+        let est_time = if self.cfg.kind.uses_estimator() {
+            self.time_model.batch_time(&shape)
+        } else {
+            0.0
+        };
+        out.plan = Plan {
+            items,
+            shape,
+            est_time,
+        };
+        out
+    }
+
+    /// BS / BS+E: admit pool head FCFS while memory (and, for BS+E, the
+    /// SLO estimate) allows.
+    #[allow(clippy::too_many_arguments)]
+    fn admit_fcfs(
+        &mut self,
+        now: f64,
+        store: &mut RequestStore,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+        items: &mut Vec<PlanItem>,
+        shape: &mut BatchShape,
+        token_budget: &mut usize,
+        slots_left: &mut usize,
+        budget: f64,
+        out: &mut Outcome,
+    ) {
+        while *slots_left > 0 && *token_budget > 0 {
+            let Some(head) = pool.fcfs_head() else { break };
+            let (prompt_len, seq_len, keys) = {
+                let r = store.get(head);
+                (
+                    r.prompt.total_len,
+                    r.seq_len(),
+                    r.prompt.content_keys(head, r.prompt.total_len, self.block_size),
+                )
+            };
+            let total_blocks = self.blocks_for(seq_len + 1);
+            let hit_blocks = kv.peek_prefix(&keys[..keys.len().min(total_blocks)]);
+            let ff = if self.cfg.fast_forward {
+                (hit_blocks * self.block_size).min(seq_len - 1)
+            } else {
+                0
+            };
+            let chunk = (seq_len - ff).min(self.cfg.chunk).min(*token_budget);
+            // estimator check (BS skips: budget = inf)
+            let mut trial = shape.clone();
+            if chunk > 0 {
+                trial.prefills.push(PrefillItem {
+                    chunk,
+                    context: ff,
+                });
+            } else {
+                trial.decode_lens.push(seq_len);
+            }
+            if self.cfg.kind.uses_estimator() && self.time_model.batch_time(&trial) > budget
+            {
+                break; // FCFS: if the head does not fit, stop
+            }
+            if kv
+                .allocate(head, TaskClass::Offline, &keys, total_blocks, now)
+                .is_none()
+            {
+                break; // memory: offline never preempts anything
+            }
+            pool.remove(head, prompt_len);
+            let r = store.get_mut(head);
+            r.state = ReqState::Running;
+            r.computed = ff;
+            self.running_offline.push(head);
+            out.admitted_offline.push(head);
+            *shape = trial;
+            if chunk > 0 {
+                items.push(PlanItem {
+                    req: head,
+                    kind: WorkKind::Prefill { chunk },
+                });
+                *token_budget -= chunk;
+            } else {
+                items.push(PlanItem {
+                    req: head,
+                    kind: WorkKind::Decode,
+                });
+                *token_budget -= 1;
+            }
+            *slots_left -= 1;
+        }
+    }
+
+    /// BS+E+S / Echo: evaluate pool candidates (prefix-cached heads + FCFS
+    /// heads per bucket) and admit by Eq. 4 score while feasible.
+    #[allow(clippy::too_many_arguments)]
+    fn admit_kv_aware(
+        &mut self,
+        now: f64,
+        store: &mut RequestStore,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+        items: &mut Vec<PlanItem>,
+        shape: &mut BatchShape,
+        token_budget: &mut usize,
+        slots_left: &mut usize,
+        budget: f64,
+        out: &mut Outcome,
+    ) {
+        while *slots_left > 0 && *token_budget > 0 {
+            let candidates = pool.candidates(kv, self.cfg.mutation_budget);
+            if candidates.is_empty() {
+                break;
+            }
+            let base_time = self.time_model.batch_time(shape);
+            let avail = kv.availability();
+            let mut best: Option<(f64, RequestId, usize, usize, BatchShape)> = None;
+            for id in candidates {
+                let r = store.get(id);
+                let prompt_len = r.prompt.total_len;
+                let seq_len = r.seq_len();
+                let keys = r.prompt.content_keys(id, prompt_len, self.block_size);
+                let total_blocks = self.blocks_for(seq_len + 1);
+                let hit_blocks = kv.peek_prefix(&keys[..keys.len().min(total_blocks)]);
+                let ff = if self.cfg.fast_forward {
+                    (hit_blocks * self.block_size).min(seq_len - 1)
+                } else {
+                    0
+                };
+                let fresh = total_blocks - hit_blocks;
+                if fresh > avail.for_offline() {
+                    continue;
+                }
+                let chunk = (seq_len - ff).min(self.cfg.chunk).min(*token_budget);
+                let mut trial = shape.clone();
+                if chunk > 0 {
+                    trial.prefills.push(PrefillItem {
+                        chunk,
+                        context: ff,
+                    });
+                } else {
+                    trial.decode_lens.push(seq_len);
+                }
+                let t = self.time_model.batch_time(&trial);
+                if t > budget {
+                    continue;
+                }
+                // Eq. 4: benefit = tokens made progress (cache fast-forward
+                // is free benefit); punishment = tokens future requests
+                // will have to re-prefill because of our evictions.
+                let need_evict = fresh.saturating_sub(avail.free);
+                let punish = kv.eviction_preview(need_evict) as f64;
+                let benefit = (ff + chunk.max(1)) as f64;
+                let dt = (t - base_time).max(EPS_TIME);
+                let score = (benefit - punish) / dt;
+                if score <= 0.0 {
+                    continue;
+                }
+                if best.as_ref().map_or(true, |b| score > b.0) {
+                    best = Some((score, id, ff, chunk, trial));
+                }
+            }
+            let Some((_, id, ff, chunk, trial)) = best else { break };
+            let (prompt_len, keys, total_blocks) = {
+                let r = store.get(id);
+                (
+                    r.prompt.total_len,
+                    r.prompt.content_keys(id, r.prompt.total_len, self.block_size),
+                    self.blocks_for(r.seq_len() + 1),
+                )
+            };
+            if kv
+                .allocate(id, TaskClass::Offline, &keys, total_blocks, now)
+                .is_none()
+            {
+                break;
+            }
+            pool.remove(id, prompt_len);
+            let r = store.get_mut(id);
+            r.state = ReqState::Running;
+            r.computed = ff;
+            self.running_offline.push(id);
+            out.admitted_offline.push(id);
+            *shape = trial;
+            if chunk > 0 {
+                items.push(PlanItem {
+                    req: id,
+                    kind: WorkKind::Prefill { chunk },
+                });
+                *token_budget -= chunk;
+            } else {
+                items.push(PlanItem {
+                    req: id,
+                    kind: WorkKind::Decode,
+                });
+                *token_budget -= 1;
+            }
+            *slots_left -= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::core::{PromptSpec, Request};
+    use crate::estimator::TimeModel;
+    use crate::kvcache::EvictionPolicy;
+
+    struct Fixture {
+        sched: Scheduler,
+        store: RequestStore,
+        queue: VecDeque<RequestId>,
+        pool: OfflinePool,
+        kv: KvManager,
+    }
+
+    fn fixture(kind: SchedulerKind, capacity_blocks: usize) -> Fixture {
+        let mut cfg = SystemConfig::a100_llama8b();
+        cfg.scheduler.kind = kind;
+        cfg.scheduler.max_batch = 8;
+        cfg.scheduler.max_batched_tokens = 512;
+        cfg.scheduler.chunk = 128;
+        let policy = if kind.uses_task_aware_cache() {
+            EvictionPolicy::TaskAware
+        } else {
+            EvictionPolicy::Lru
+        };
+        Fixture {
+            sched: Scheduler::new(
+                cfg.scheduler.clone(),
+                cfg.slo,
+                TimeModel::new(cfg.time_model),
+                cfg.cache.block_size,
+            ),
+            store: RequestStore::new(),
+            queue: VecDeque::new(),
+            pool: OfflinePool::default_buckets(),
+            kv: KvManager::new(capacity_blocks, cfg.cache.block_size, policy),
+        }
+    }
+
+    fn add_online(f: &mut Fixture, arrival: f64, prompt: usize, out: usize) -> RequestId {
+        let id = f.store.fresh_id();
+        f.store.insert(Request::new(
+            id,
+            TaskClass::Online,
+            arrival,
+            PromptSpec::sim(prompt, None),
+            out,
+        ));
+        f.queue.push_back(id);
+        id
+    }
+
+    fn add_offline(f: &mut Fixture, prompt: usize, out: usize) -> RequestId {
+        let id = f.store.fresh_id();
+        let spec = PromptSpec::sim(prompt, None);
+        let keys = spec.content_keys(id, prompt, 16);
+        f.kv.register_future(&keys);
+        f.store
+            .insert(Request::new(id, TaskClass::Offline, 0.0, spec, out));
+        f.pool.add(id, prompt, keys);
+        id
+    }
+
+    #[test]
+    fn admits_online_fcfs_and_prefills() {
+        let mut f = fixture(SchedulerKind::Echo, 1000);
+        let a = add_online(&mut f, 0.0, 300, 10);
+        let b = add_online(&mut f, 0.1, 300, 10);
+        let out = f
+            .sched
+            .schedule(0.2, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert_eq!(out.admitted_online, vec![a, b]);
+        assert_eq!(out.plan.n_prefills(), 2);
+        // chunked: 128-token chunks
+        assert_eq!(out.plan.total_tokens(), 256);
+        assert_eq!(f.store.get(a).state, ReqState::Running);
+    }
+
+    #[test]
+    fn offline_admitted_when_idle() {
+        let mut f = fixture(SchedulerKind::Echo, 1000);
+        let o = add_offline(&mut f, 200, 20);
+        let out = f
+            .sched
+            .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert_eq!(out.admitted_offline, vec![o]);
+        assert!(f.pool.is_empty());
+        assert_eq!(out.plan.n_prefills(), 1);
+    }
+
+    #[test]
+    fn online_preempts_offline_on_oom() {
+        // capacity: 40 blocks = 640 tokens
+        let mut f = fixture(SchedulerKind::Echo, 40);
+        let o = add_offline(&mut f, 500, 20);
+        let out = f
+            .sched
+            .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert_eq!(out.admitted_offline, vec![o]);
+        // Online arrives needing 400 tokens: must preempt the offline req.
+        let a = add_online(&mut f, 1.0, 400, 10);
+        let out = f
+            .sched
+            .schedule(1.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert_eq!(out.admitted_online, vec![a]);
+        assert_eq!(out.preempted, vec![o]);
+        assert_eq!(f.store.get(o).state, ReqState::Preempted);
+        assert_eq!(f.store.get(o).computed, 0);
+        assert_eq!(f.pool.len(), 1, "victim returns to the pool");
+        f.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn slo_blocks_offline_admission_bse() {
+        let mut f = fixture(SchedulerKind::BsE, 10_000);
+        // Online decode with a nearly-due deadline.
+        let a = add_online(&mut f, 0.0, 100, 50);
+        f.sched
+            .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        let r = f.store.get_mut(a);
+        r.computed = 100; // prefill done
+        r.record_token(0.9, None);
+        // A huge offline prefill would blow the TPOT deadline.
+        add_offline(&mut f, 8000, 100);
+        let now = 0.94; // deadline = arrival + 1.0 + 1*0.05 = 1.05 → slack 0.11s
+        let out = f
+            .sched
+            .schedule(now, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        // prefill chunk of 128 over 8000-context ≈ fine, but the admission
+        // estimate uses the whole batch; with slack 0.11 s the chunk fits —
+        // tighten: move to 1.049 (slack 1 ms < c=6 ms floor).
+        let _ = out;
+        let out2 = f
+            .sched
+            .schedule(1.049, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert!(out2.admitted_offline.is_empty(), "no offline under 1ms slack");
+        assert!(out2.plan.n_decodes() >= 1, "online decode still runs");
+    }
+
+    #[test]
+    fn bs_ignores_slo() {
+        let mut f = fixture(SchedulerKind::Bs, 10_000);
+        let a = add_online(&mut f, 0.0, 100, 50);
+        f.sched
+            .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        let r = f.store.get_mut(a);
+        r.computed = 100;
+        r.record_token(0.9, None);
+        add_offline(&mut f, 8000, 100);
+        let out = f
+            .sched
+            .schedule(1.049, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert_eq!(out.admitted_offline.len(), 1, "BS admits regardless of SLO");
+    }
+
+    #[test]
+    fn kv_aware_prefers_cached_candidate() {
+        let mut f = fixture(SchedulerKind::Echo, 10_000);
+        // Two offline groups; warm the cache with group g's prefix.
+        let g: u64 = 99;
+        let id1 = f.store.fresh_id();
+        let spec1 = PromptSpec::sim(320, Some((g, 320)));
+        let keys1 = spec1.content_keys(id1, 320, 16);
+        f.kv.register_future(&keys1);
+        f.store
+            .insert(Request::new(id1, TaskClass::Offline, 0.0, spec1, 10));
+        f.pool.add(id1, 320, keys1.clone());
+        // Unrelated offline request, same size.
+        let id2 = add_offline(&mut f, 320, 10);
+        // Warm cache: simulate sibling of group g having run.
+        let warm = f.store.fresh_id();
+        f.kv.allocate(warm, TaskClass::Offline, &keys1[..10], 10, 0.0)
+            .unwrap();
+        f.kv.release(warm, true);
+        let out = f
+            .sched
+            .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert!(!out.admitted_offline.is_empty());
+        assert_eq!(
+            out.admitted_offline[0], id1,
+            "cached-prefix candidate must win (id2={id2})"
+        );
+        // Fast-forward applied:
+        assert_eq!(f.store.get(id1).computed, 160);
+    }
+
+    #[test]
+    fn decode_growth_preempts_offline_for_online() {
+        let mut f = fixture(SchedulerKind::Echo, 11);
+        // Online request: 159 prompt + 1 = 10 blocks at admission.
+        let a = add_online(&mut f, 0.0, 159, 50);
+        f.sched
+            .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        f.store.get_mut(a).computed = 159; // prefill complete -> decode-ready
+        // Offline fills the last free block.
+        let o = add_offline(&mut f, 10, 5);
+        f.sched
+            .schedule(0.6, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert_eq!(f.store.get(o).state, ReqState::Running);
+        // A token lands: seq_len 160 fills the 10 blocks; the next decode
+        // needs an 11th block -> offline must be preempted.
+        f.store.get_mut(a).record_token(0.65, None);
+        let out = f
+            .sched
+            .schedule(0.7, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert!(out.preempted.contains(&o), "preempted={:?}", out.preempted);
+        f.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn growth_is_idempotent_when_decode_skipped() {
+        let mut f = fixture(SchedulerKind::Echo, 100);
+        let a = add_online(&mut f, 0.0, 31, 50);
+        f.sched
+            .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        f.store.get_mut(a).computed = 31;
+        f.store.get_mut(a).record_token(0.1, None); // seq 32 = 2 blocks full
+        // Two schedules without token progress must not leak blocks.
+        f.sched
+            .schedule(0.2, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        let held_once = f.kv.held_blocks(a);
+        f.sched
+            .schedule(0.3, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert_eq!(f.kv.held_blocks(a), held_once);
+        assert_eq!(held_once, 3); // blocks_for(33)
+        f.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn deterministic_given_same_inputs() {
+        let run = || {
+            let mut f = fixture(SchedulerKind::Echo, 500);
+            add_online(&mut f, 0.0, 300, 10);
+            for _ in 0..5 {
+                add_offline(&mut f, 200, 10);
+            }
+            let out = f
+                .sched
+                .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+            (
+                out.plan.items.iter().map(|i| i.req).collect::<Vec<_>>(),
+                out.admitted_offline,
+            )
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,55 @@
+//! Iteration plan: the batch the scheduler hands to the execution backend.
+
+use crate::core::RequestId;
+use crate::estimator::BatchShape;
+
+/// Work assigned to one request in this iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkKind {
+    /// Process `chunk` prompt tokens (chunked prefill).
+    Prefill { chunk: usize },
+    /// Generate one token.
+    Decode,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct PlanItem {
+    pub req: RequestId,
+    pub kind: WorkKind,
+}
+
+/// The selected batch plus its estimator view.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    pub items: Vec<PlanItem>,
+    pub shape: BatchShape,
+    /// Estimated execution time (Eq. 8); 0 if the estimator is disabled.
+    pub est_time: f64,
+}
+
+impl Plan {
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn n_prefills(&self) -> usize {
+        self.items
+            .iter()
+            .filter(|i| matches!(i.kind, WorkKind::Prefill { .. }))
+            .count()
+    }
+
+    pub fn n_decodes(&self) -> usize {
+        self.items.len() - self.n_prefills()
+    }
+
+    pub fn total_tokens(&self) -> usize {
+        self.items
+            .iter()
+            .map(|i| match i.kind {
+                WorkKind::Prefill { chunk } => chunk,
+                WorkKind::Decode => 1,
+            })
+            .sum()
+    }
+}

@@ -1,0 +1,309 @@
+//! Offline request pool (paper §6, "Online queue and offline pool").
+//!
+//! Offline requests are bucketed by prompt-length range; inside each bucket
+//! a radix tree over content-key sequences groups requests by shared
+//! prefix. The scheduler asks for *candidates*: per bucket, the FCFS head
+//! plus the head of the prefix group whose cached prefix is longest right
+//! now — which is exactly the "reorganize for spatial locality" trick the
+//! paper credits for the cache-hit gains (§7.3), with a search budget far
+//! below trying the whole pool.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::core::RequestId;
+use crate::kvcache::KvManager;
+
+/// Radix tree over block content-key sequences. Each node = one block key;
+/// requests register their full key path; lookup walks the cached prefix.
+#[derive(Default)]
+pub struct RadixIndex {
+    root: Node,
+    paths: HashMap<RequestId, Vec<u128>>,
+}
+
+#[derive(Default)]
+struct Node {
+    // BTreeMap: deterministic iteration order (candidate selection must be
+    // reproducible across runs).
+    children: BTreeMap<u128, Node>,
+    /// Requests whose key path ends at or passes through this node, kept
+    /// only at the *leaf* (full path) to bound memory.
+    requests: Vec<RequestId>,
+}
+
+impl RadixIndex {
+    pub fn insert(&mut self, id: RequestId, keys: Vec<u128>) {
+        let mut node = &mut self.root;
+        for &k in &keys {
+            node = node.children.entry(k).or_default();
+        }
+        node.requests.push(id);
+        self.paths.insert(id, keys);
+    }
+
+    pub fn remove(&mut self, id: RequestId) {
+        let Some(keys) = self.paths.remove(&id) else {
+            return;
+        };
+        Self::remove_rec(&mut self.root, &keys, id);
+    }
+
+    fn remove_rec(node: &mut Node, keys: &[u128], id: RequestId) -> bool {
+        match keys.split_first() {
+            None => {
+                node.requests.retain(|&r| r != id);
+            }
+            Some((&k, rest)) => {
+                if let Some(child) = node.children.get_mut(&k) {
+                    if Self::remove_rec(child, rest, id) {
+                        node.children.remove(&k);
+                    }
+                }
+            }
+        }
+        node.children.is_empty() && node.requests.is_empty()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.paths.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.paths.len()
+    }
+
+    /// Walk as deep as the KV manager has the path cached and return the
+    /// request reachable from the deepest cached node plus the depth
+    /// (cached blocks usable by that request).
+    pub fn best_cached(&self, kv: &KvManager) -> Option<(RequestId, usize)> {
+        let mut node = &self.root;
+        let mut depth = 0usize;
+        loop {
+            let mut advanced = false;
+            for (&k, child) in &node.children {
+                if kv.peek_prefix(&[k]) == 1 {
+                    node = child;
+                    depth += 1;
+                    advanced = true;
+                    break;
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+        if depth == 0 {
+            return None;
+        }
+        Self::any_request(node).map(|id| (id, depth))
+    }
+
+    fn any_request(node: &Node) -> Option<RequestId> {
+        if let Some(&id) = node.requests.first() {
+            return Some(id);
+        }
+        node.children.values().find_map(Self::any_request)
+    }
+}
+
+struct Bucket {
+    /// Inclusive upper prompt-length bound of this bucket.
+    max_len: usize,
+    /// FCFS order within the bucket.
+    fifo: Vec<RequestId>,
+    index: RadixIndex,
+}
+
+/// Pool of pending offline requests (not currently running).
+pub struct OfflinePool {
+    buckets: Vec<Bucket>,
+    len: usize,
+}
+
+impl OfflinePool {
+    /// `bounds`: ascending bucket upper bounds; a catch-all bucket is
+    /// appended automatically.
+    pub fn new(bounds: &[usize]) -> Self {
+        let mut buckets: Vec<Bucket> = bounds
+            .iter()
+            .map(|&b| Bucket {
+                max_len: b,
+                fifo: Vec::new(),
+                index: RadixIndex::default(),
+            })
+            .collect();
+        buckets.push(Bucket {
+            max_len: usize::MAX,
+            fifo: Vec::new(),
+            index: RadixIndex::default(),
+        });
+        OfflinePool { buckets, len: 0 }
+    }
+
+    /// Default bucket bounds for the paper's workloads (short chat /
+    /// medium tool / long document prompts).
+    pub fn default_buckets() -> Self {
+        Self::new(&[512, 2048, 8192])
+    }
+
+    fn bucket_mut(&mut self, prompt_len: usize) -> &mut Bucket {
+        let i = self
+            .buckets
+            .iter()
+            .position(|b| prompt_len <= b.max_len)
+            .expect("catch-all bucket");
+        &mut self.buckets[i]
+    }
+
+    /// Add a pending offline request with its content-key path.
+    pub fn add(&mut self, id: RequestId, prompt_len: usize, keys: Vec<u128>) {
+        let b = self.bucket_mut(prompt_len);
+        b.fifo.push(id);
+        b.index.insert(id, keys);
+        self.len += 1;
+    }
+
+    /// Remove (scheduled or cancelled).
+    pub fn remove(&mut self, id: RequestId, prompt_len: usize) {
+        let b = self.bucket_mut(prompt_len);
+        if let Some(pos) = b.fifo.iter().position(|&r| r == id) {
+            b.fifo.remove(pos);
+            b.index.remove(id);
+            self.len -= 1;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Global FCFS head (the BS / BS+E policies).
+    pub fn fcfs_head(&self) -> Option<RequestId> {
+        // Oldest insertion across buckets: compare by id (monotonic).
+        self.buckets
+            .iter()
+            .filter_map(|b| b.fifo.first().copied())
+            .min()
+    }
+
+    /// Candidate set for the KV-aware plan generator: per bucket the FCFS
+    /// head + the request with the deepest currently-cached prefix, capped
+    /// at `budget` total.
+    pub fn candidates(&self, kv: &KvManager, budget: usize) -> Vec<RequestId> {
+        let mut out = Vec::new();
+        for b in &self.buckets {
+            if let Some((id, _depth)) = b.index.best_cached(kv) {
+                if !out.contains(&id) {
+                    out.push(id);
+                }
+            }
+            if let Some(&head) = b.fifo.first() {
+                if !out.contains(&head) {
+                    out.push(head);
+                }
+            }
+            // A couple of FCFS followers widen the search cheaply.
+            for &id in b.fifo.iter().skip(1).take(2) {
+                if !out.contains(&id) {
+                    out.push(id);
+                }
+            }
+            if out.len() >= budget {
+                out.truncate(budget);
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::TaskClass;
+    use crate::kvcache::{EvictionPolicy, KvManager};
+
+    fn kv() -> KvManager {
+        KvManager::new(64, 16, EvictionPolicy::TaskAware)
+    }
+
+    fn keyseq(tag: u128, n: usize) -> Vec<u128> {
+        (0..n).map(|i| (tag << 32) | i as u128).collect()
+    }
+
+    #[test]
+    fn radix_insert_remove() {
+        let mut idx = RadixIndex::default();
+        idx.insert(1, keyseq(10, 3));
+        idx.insert(2, keyseq(10, 5)); // shares 3-block prefix
+        idx.insert(3, keyseq(20, 2));
+        assert_eq!(idx.len(), 3);
+        idx.remove(2);
+        assert_eq!(idx.len(), 2);
+        idx.remove(1);
+        idx.remove(3);
+        assert!(idx.is_empty());
+        assert!(idx.root.children.is_empty(), "tree must prune empty paths");
+    }
+
+    #[test]
+    fn best_cached_follows_cache_state() {
+        let mut idx = RadixIndex::default();
+        idx.insert(1, keyseq(10, 4));
+        idx.insert(2, keyseq(20, 4));
+        let mut m = kv();
+        assert!(idx.best_cached(&m).is_none());
+        // Cache 2 blocks of group 20's path.
+        let cached = keyseq(20, 2);
+        m.register_future(&cached);
+        m.allocate(99, TaskClass::Offline, &cached, 2, 0.0).unwrap();
+        m.release(99, false);
+        let (id, depth) = idx.best_cached(&m).unwrap();
+        assert_eq!(id, 2);
+        assert_eq!(depth, 2);
+    }
+
+    #[test]
+    fn pool_buckets_and_fcfs() {
+        let mut p = OfflinePool::new(&[100, 1000]);
+        p.add(5, 50, keyseq(1, 3));
+        p.add(6, 500, keyseq(2, 30));
+        p.add(7, 5000, keyseq(3, 300));
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.fcfs_head(), Some(5));
+        p.remove(5, 50);
+        assert_eq!(p.fcfs_head(), Some(6));
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn candidates_prefer_cached_groups() {
+        let mut p = OfflinePool::new(&[100]);
+        // Two requests in the same bucket, different groups.
+        p.add(1, 50, keyseq(10, 3));
+        p.add(2, 50, keyseq(20, 3));
+        let mut m = kv();
+        let cached = keyseq(20, 3);
+        m.register_future(&cached);
+        m.allocate(99, TaskClass::Offline, &cached, 3, 0.0).unwrap();
+        m.release(99, false);
+        let c = p.candidates(&m, 8);
+        assert!(c.contains(&2), "cached-prefix request must be a candidate");
+        assert!(c.contains(&1), "FCFS head must be a candidate");
+        assert_eq!(c[0], 2, "cached candidate ranks first");
+    }
+
+    #[test]
+    fn candidates_respect_budget() {
+        let mut p = OfflinePool::new(&[]);
+        for i in 0..20 {
+            p.add(i, 10, keyseq(i as u128, 2));
+        }
+        let m = kv();
+        assert!(p.candidates(&m, 3).len() <= 3);
+    }
+}

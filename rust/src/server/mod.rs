@@ -1,0 +1,206 @@
+//! Threaded serving front-end (tokio is not reachable offline; the
+//! coordinator is a std::thread event loop with mpsc channels, which is all
+//! a single-instance serving leader needs).
+//!
+//! Architecture:
+//!   * client threads submit [`ServerRequest`]s through a channel (online
+//!     requests carry a completion channel for the response);
+//!   * the coordinator thread owns the [`Engine`] and alternates between
+//!     draining the submission channel and running engine steps;
+//!   * `shutdown()` drains remaining work, then joins and returns the
+//!     engine (metrics intact).
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::thread::JoinHandle;
+
+use crate::core::{PromptSpec, Request, RequestId, TaskClass, Token};
+use crate::engine::{Engine, ExecutionBackend};
+
+/// A completed request's client-visible result.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: RequestId,
+    pub tokens: Vec<Token>,
+    pub ttft: Option<f64>,
+    pub mean_tpot: Option<f64>,
+}
+
+pub enum ServerRequest {
+    Online {
+        prompt: PromptSpec,
+        max_new_tokens: usize,
+        reply: Sender<Completion>,
+    },
+    Offline {
+        prompt: PromptSpec,
+        max_new_tokens: usize,
+    },
+    Shutdown,
+}
+
+pub struct ServerHandle<B: ExecutionBackend + Send + 'static> {
+    pub tx: Sender<ServerRequest>,
+    join: JoinHandle<Engine<B>>,
+}
+
+impl<B: ExecutionBackend + Send + 'static> ServerHandle<B> {
+    /// Submit an online request; returns the channel the completion will
+    /// arrive on.
+    pub fn submit_online(
+        &self,
+        prompt: PromptSpec,
+        max_new_tokens: usize,
+    ) -> Receiver<Completion> {
+        let (reply, rx) = channel();
+        self.tx
+            .send(ServerRequest::Online {
+                prompt,
+                max_new_tokens,
+                reply,
+            })
+            .expect("server gone");
+        rx
+    }
+
+    pub fn submit_offline(&self, prompt: PromptSpec, max_new_tokens: usize) {
+        self.tx
+            .send(ServerRequest::Offline {
+                prompt,
+                max_new_tokens,
+            })
+            .expect("server gone");
+    }
+
+    /// Drain outstanding work and return the engine.
+    pub fn shutdown(self) -> Engine<B> {
+        let _ = self.tx.send(ServerRequest::Shutdown);
+        self.join.join().expect("coordinator panicked")
+    }
+}
+
+/// Spawn the coordinator thread around an engine. The engine's virtual
+/// clock is advanced by execution only; arrival timestamps use a wall
+/// clock anchored at server start so TTFT measurements are real.
+pub fn spawn<B: ExecutionBackend + Send + 'static>(mut engine: Engine<B>) -> ServerHandle<B> {
+    let (tx, rx) = channel::<ServerRequest>();
+    let join = std::thread::spawn(move || {
+        let t0 = std::time::Instant::now();
+        let mut replies: std::collections::HashMap<RequestId, Sender<Completion>> =
+            Default::default();
+        let mut shutting_down = false;
+        loop {
+            // 1. drain submissions
+            loop {
+                match rx.try_recv() {
+                    Ok(ServerRequest::Online {
+                        prompt,
+                        max_new_tokens,
+                        reply,
+                    }) => {
+                        let now = t0.elapsed().as_secs_f64();
+                        // Engine clock lags wall clock when idle; anchor
+                        // arrivals to whichever is ahead so deadlines are
+                        // consistent.
+                        let arrival = now.max(engine.clock);
+                        let id = engine.store.fresh_id();
+                        replies.insert(id, reply);
+                        engine.submit_online(Request::new(
+                            id,
+                            TaskClass::Online,
+                            arrival,
+                            prompt,
+                            max_new_tokens,
+                        ));
+                    }
+                    Ok(ServerRequest::Offline {
+                        prompt,
+                        max_new_tokens,
+                    }) => {
+                        let id = engine.store.fresh_id();
+                        let arrival = engine.clock;
+                        engine.submit_offline(Request::new(
+                            id,
+                            TaskClass::Offline,
+                            arrival,
+                            prompt,
+                            max_new_tokens,
+                        ));
+                    }
+                    Ok(ServerRequest::Shutdown) => shutting_down = true,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        shutting_down = true;
+                        break;
+                    }
+                }
+            }
+
+            // Keep the virtual clock moving with wall time while serving
+            // live traffic (otherwise deadlines are meaningless).
+            engine.clock = engine.clock.max(t0.elapsed().as_secs_f64());
+
+            // 2. one engine step
+            let progressed = engine.step().unwrap_or(false);
+
+            // 3. deliver completions
+            let done: Vec<RequestId> = replies
+                .keys()
+                .copied()
+                .filter(|&id| engine.store.get(id).is_finished())
+                .collect();
+            for id in done {
+                let r = engine.store.get(id);
+                let completion = Completion {
+                    id,
+                    tokens: r.out_tokens.clone(),
+                    ttft: r.ttft(),
+                    mean_tpot: r.mean_tpot(),
+                };
+                if let Some(reply) = replies.remove(&id) {
+                    let _ = reply.send(completion);
+                }
+            }
+
+            if !progressed {
+                if shutting_down {
+                    break;
+                }
+                // Idle: block briefly for new work.
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        engine
+    });
+    ServerHandle { tx, join }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::engine::sim::SimBackend;
+    use crate::estimator::TimeModel;
+
+    #[test]
+    fn serve_roundtrip_online_and_offline() {
+        let cfg = SystemConfig::a100_llama8b();
+        let backend = SimBackend::new(TimeModel::new(cfg.time_model), 3, 0.0);
+        let engine = Engine::new(cfg, backend);
+        let h = spawn(engine);
+
+        let rx1 = h.submit_online(PromptSpec::sim(200, None), 8);
+        let rx2 = h.submit_online(PromptSpec::sim(400, None), 4);
+        h.submit_offline(PromptSpec::sim(1000, None), 16);
+
+        let c1 = rx1.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        let c2 = rx2.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+        assert_eq!(c1.tokens.len(), 8);
+        assert_eq!(c2.tokens.len(), 4);
+        assert!(c1.ttft.is_some());
+
+        let engine = h.shutdown();
+        assert_eq!(engine.metrics.online_completed, 2);
+        assert_eq!(engine.metrics.offline_completed, 1);
+        engine.kv.check_invariants().unwrap();
+    }
+}

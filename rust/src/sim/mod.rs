@@ -1,0 +1,216 @@
+//! Resource & throughput simulator for system deployers (paper §5.4).
+//!
+//! Step 1 — peak-window resource estimation: replay a short window around
+//! the online trace's peak against increasing KV capacity until the online
+//! SLO attainment target is met (no offline load).
+//!
+//! Step 2 — offline throughput estimation: with chosen resources, replay a
+//! long horizon with the offline backlog co-scheduled and report the
+//! achievable offline token throughput.
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::core::{PromptSpec, Request, TaskClass};
+use crate::engine::{sim::SimBackend, Engine};
+use crate::estimator::TimeModel;
+use crate::trace::Trace;
+use crate::utils::rng::Rng;
+use crate::workload::{synthesize, DatasetSpec};
+
+#[derive(Clone, Debug)]
+pub struct DeployerReport {
+    /// Smallest KV capacity (tokens) meeting the SLO target at peak.
+    pub min_capacity_tokens: usize,
+    /// Capacities probed: (capacity, ttft attainment, token attainment).
+    pub probes: Vec<(usize, f64, f64)>,
+    /// Offline throughput (tokens/s) at the chosen capacity (step 2).
+    pub offline_throughput: f64,
+    /// Online attainment at the chosen capacity with offline co-scheduled.
+    pub online_attainment: (f64, f64),
+}
+
+pub struct DeployerSim {
+    pub cfg: SystemConfig,
+    /// Target attainment (paper eval: 0.9).
+    pub target: f64,
+    pub online_spec: DatasetSpec,
+}
+
+impl DeployerSim {
+    pub fn new(cfg: SystemConfig) -> Self {
+        DeployerSim {
+            cfg,
+            target: 0.9,
+            online_spec: DatasetSpec::sharegpt(),
+        }
+    }
+
+    fn build_engine(&self, capacity: usize, seed: u64) -> Engine<SimBackend> {
+        let mut cfg = self.cfg.clone();
+        cfg.cache.capacity_tokens = capacity;
+        let backend = SimBackend::new(TimeModel::new(cfg.time_model), seed, 0.02);
+        Engine::new(cfg, backend)
+    }
+
+    /// Step 1: smallest capacity meeting the SLO target over the peak
+    /// window (doubling then bisection).
+    pub fn min_resources_at_peak(&self, peak_arrivals: &[f64]) -> Result<(usize, Vec<(usize, f64, f64)>)> {
+        let mut probes = Vec::new();
+        let run = |capacity: usize| -> Result<(f64, f64)> {
+            let mut e = self.build_engine(capacity, 7);
+            let mut rng = Rng::new(13);
+            // Submit online requests along the window.
+            for &t in peak_arrivals {
+                let id = e.store.fresh_id();
+                let prompt = rng_prompt(&self.online_spec, &mut rng);
+                e.submit_online(Request::new(
+                    id,
+                    TaskClass::Online,
+                    t,
+                    prompt.0,
+                    prompt.1,
+                ));
+            }
+            e.run()?;
+            Ok(e.metrics.slo_attainment(&e.cfg.slo))
+        };
+        // Doubling search.
+        let mut lo = self.cfg.cache.block_size * 64;
+        let mut hi = lo;
+        loop {
+            let (a_ttft, a_tok) = run(hi)?;
+            probes.push((hi, a_ttft, a_tok));
+            if a_ttft >= self.target && a_tok >= self.target {
+                break;
+            }
+            hi *= 2;
+            if hi > 100_000_000 {
+                anyhow::bail!("no capacity meets the SLO target (workload too hot)");
+            }
+        }
+        // Bisection between hi/2 and hi.
+        lo = hi / 2;
+        while hi - lo > self.cfg.cache.block_size * 64 {
+            let mid = (lo + hi) / 2;
+            let (a_ttft, a_tok) = run(mid)?;
+            probes.push((mid, a_ttft, a_tok));
+            if a_ttft >= self.target && a_tok >= self.target {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        Ok((hi, probes))
+    }
+
+    /// Step 2: offline throughput over a horizon at fixed capacity.
+    pub fn offline_throughput(
+        &self,
+        capacity: usize,
+        arrivals: &[f64],
+        offline_spec: &DatasetSpec,
+        n_offline: usize,
+        horizon: f64,
+    ) -> Result<(f64, (f64, f64))> {
+        let mut e = self.build_engine(capacity, 11);
+        let mut rng = Rng::new(17);
+        for &t in arrivals {
+            let id = e.store.fresh_id();
+            let (prompt, out) = rng_prompt(&self.online_spec, &mut rng);
+            e.submit_online(Request::new(id, TaskClass::Online, t, prompt, out));
+        }
+        let mut store = std::mem::take(&mut e.store);
+        let batch = synthesize(offline_spec, n_offline, TaskClass::Offline, 0.0, &mut store, &mut rng);
+        e.store = store;
+        for &id in &batch.ids {
+            let r = e.store.get(id).clone();
+            let keys = r
+                .prompt
+                .content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
+            e.kv.register_future(&keys);
+            e.pool.add(id, r.prompt.total_len, keys);
+        }
+        e.run_until(horizon)?;
+        Ok((
+            e.metrics.offline_tokens_out as f64 / e.clock.max(1e-9),
+            e.metrics.slo_attainment(&e.cfg.slo),
+        ))
+    }
+
+    /// Full §5.4 report over a trace.
+    pub fn report(
+        &self,
+        trace: &Trace,
+        peak_window: (f64, f64),
+        offline_spec: &DatasetSpec,
+        n_offline: usize,
+        horizon: f64,
+    ) -> Result<DeployerReport> {
+        let peak: Vec<f64> = trace
+            .arrivals
+            .iter()
+            .copied()
+            .filter(|&t| t >= peak_window.0 && t < peak_window.1)
+            .map(|t| t - peak_window.0)
+            .collect();
+        let (min_cap, probes) = self.min_resources_at_peak(&peak)?;
+        let (thr, attain) =
+            self.offline_throughput(min_cap.max(self.cfg.cache.capacity_tokens), &trace.arrivals, offline_spec, n_offline, horizon)?;
+        Ok(DeployerReport {
+            min_capacity_tokens: min_cap,
+            probes,
+            offline_throughput: thr,
+            online_attainment: attain,
+        })
+    }
+}
+
+fn rng_prompt(spec: &DatasetSpec, rng: &mut Rng) -> (PromptSpec, usize) {
+    // Single-request draw mirroring workload::synthesize's marginals.
+    let mu = (spec.mean_prompt as f64).ln() - spec.prompt_sigma * spec.prompt_sigma / 2.0;
+    let len = (rng.lognormal(mu, spec.prompt_sigma).round() as usize).clamp(2, spec.mean_prompt * 8);
+    let mu_o = (spec.mean_out as f64).ln() - spec.out_sigma * spec.out_sigma / 2.0;
+    let out = (rng.lognormal(mu_o, spec.out_sigma).round() as usize).clamp(2, spec.mean_out * 8);
+    (PromptSpec::sim(len, None), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceConfig;
+
+    #[test]
+    fn step1_finds_minimal_capacity() {
+        let mut cfg = SystemConfig::a100_llama8b();
+        cfg.scheduler.max_batch = 32;
+        let sim = DeployerSim::new(cfg);
+        // Modest peak: 1 req every 2 s for 60 s.
+        let peak: Vec<f64> = (0..30).map(|i| i as f64 * 2.0).collect();
+        let (cap, probes) = sim.min_resources_at_peak(&peak).unwrap();
+        assert!(cap >= 1024, "cap {cap}");
+        assert!(!probes.is_empty());
+        // The chosen capacity meets the target; the probe just below (if
+        // recorded as failing) does not.
+        let ok = probes.iter().find(|&&(c, a, b)| c == cap && a >= 0.9 && b >= 0.9);
+        assert!(ok.is_some());
+    }
+
+    #[test]
+    fn step2_reports_positive_offline_throughput() {
+        let cfg = SystemConfig::a100_llama8b();
+        let sim = DeployerSim::new(cfg);
+        let tr = Trace::generate(&TraceConfig::compressed(120.0, 0.3, 5));
+        let (thr, (a_ttft, _)) = sim
+            .offline_throughput(
+                100_000,
+                &tr.arrivals,
+                &DatasetSpec::loogle_qa_short().scaled(0.05),
+                40,
+                400.0,
+            )
+            .unwrap();
+        assert!(thr > 0.0, "thr {thr}");
+        assert!(a_ttft >= 0.9, "ttft attainment {a_ttft}");
+    }
+}

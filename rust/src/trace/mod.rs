@@ -1,0 +1,303 @@
+//! Online-arrival trace generation and replay (paper §2.2, Fig. 2).
+//!
+//! The paper uses a proprietary 24-hour provider trace with two stated
+//! properties: a *tidal* pattern (peak 12:00-14:00, trough 04:00-06:00,
+//! peak/trough ≈ 6×) and short-scale *burstiness*. We synthesize the same
+//! shape: a sinusoid-of-day base rate modulated by a 2-state MMPP
+//! (Markov-modulated Poisson process) whose burst state multiplies the
+//! rate. Arrival times come from Lewis thinning, so any non-negative
+//! rate function is supported. Traces are reproducible (seeded) and can be
+//! scaled to the testbed capacity like the paper does (§7.1).
+
+use crate::utils::json::Json;
+use crate::utils::rng::Rng;
+
+pub const DAY: f64 = 86_400.0;
+
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Trace horizon in seconds.
+    pub horizon: f64,
+    /// Mean arrival rate (req/s) averaged over the tide.
+    pub mean_rate: f64,
+    /// Peak-to-trough ratio of the tidal pattern (paper: ≈ 6).
+    pub tidal_ratio: f64,
+    /// Hour of day (0-24) of the tidal peak (paper: ~13:00).
+    pub peak_hour: f64,
+    /// Period of the tide in seconds (DAY, or compressed for fast runs).
+    pub period: f64,
+    /// Burst state rate multiplier.
+    pub burst_mult: f64,
+    /// Mean sojourn in burst / calm states (seconds).
+    pub burst_mean: f64,
+    pub calm_mean: f64,
+    pub seed: u64,
+}
+
+impl TraceConfig {
+    /// Paper-shaped 24 h trace.
+    pub fn paper_24h(mean_rate: f64, seed: u64) -> Self {
+        TraceConfig {
+            horizon: DAY,
+            mean_rate,
+            tidal_ratio: 6.0,
+            peak_hour: 13.0,
+            period: DAY,
+            burst_mult: 3.0,
+            burst_mean: 30.0,
+            calm_mean: 600.0,
+            seed,
+        }
+    }
+
+    /// Same shape compressed to `horizon` seconds (fast evaluation runs;
+    /// the tide still completes exactly one day-cycle).
+    pub fn compressed(horizon: f64, mean_rate: f64, seed: u64) -> Self {
+        TraceConfig {
+            horizon,
+            period: horizon,
+            burst_mean: (30.0 * horizon / DAY).max(2.0),
+            calm_mean: (600.0 * horizon / DAY).max(20.0),
+            ..Self::paper_24h(mean_rate, seed)
+        }
+    }
+
+    /// Tidal base rate at time t (req/s), before burst modulation.
+    /// Shaped so mean over a period = mean_rate and max/min = tidal_ratio.
+    pub fn tidal_rate(&self, t: f64) -> f64 {
+        let ratio = self.tidal_ratio.max(1.0);
+        // rate = m * (1 + a*cos(phase)) with a = (ratio-1)/(ratio+1)
+        let a = (ratio - 1.0) / (ratio + 1.0);
+        let peak_t = self.peak_hour / 24.0 * self.period;
+        let phase = (t - peak_t) / self.period * std::f64::consts::TAU;
+        self.mean_rate * (1.0 + a * phase.cos())
+    }
+}
+
+/// A generated trace: arrival offsets (sorted, seconds from start) plus the
+/// burst-state intervals for inspection.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub arrivals: Vec<f64>,
+    /// [start, end) intervals spent in the burst state.
+    pub burst_intervals: Vec<(f64, f64)>,
+}
+
+impl Trace {
+    pub fn generate(cfg: &TraceConfig) -> Trace {
+        let mut rng = Rng::new(cfg.seed);
+        // 1. Burst-state schedule (alternating exponential sojourns).
+        let mut bursts = Vec::new();
+        let mut t = 0.0;
+        let mut in_burst = false;
+        // Randomize the initial phase.
+        if rng.bool(cfg.burst_mean / (cfg.burst_mean + cfg.calm_mean)) {
+            in_burst = true;
+        }
+        let mut burst_start = 0.0;
+        while t < cfg.horizon {
+            let sojourn = if in_burst {
+                rng.exponential(1.0 / cfg.burst_mean)
+            } else {
+                rng.exponential(1.0 / cfg.calm_mean)
+            };
+            t += sojourn;
+            if in_burst {
+                bursts.push((burst_start, t.min(cfg.horizon)));
+            } else {
+                burst_start = t;
+            }
+            in_burst = !in_burst;
+        }
+
+        // 2. Lewis thinning against the max possible rate.
+        let lambda_max = cfg.mean_rate
+            * (1.0 + (cfg.tidal_ratio - 1.0) / (cfg.tidal_ratio + 1.0))
+            * cfg.burst_mult.max(1.0);
+        let mut arrivals = Vec::new();
+        let mut t = 0.0;
+        let in_burst_at = |t: f64, bursts: &[(f64, f64)]| {
+            // bursts are sorted; binary search the interval
+            match bursts.binary_search_by(|&(s, _)| s.partial_cmp(&t).unwrap()) {
+                Ok(_) => true,
+                Err(i) => i > 0 && t < bursts[i - 1].1,
+            }
+        };
+        loop {
+            t += rng.exponential(lambda_max);
+            if t >= cfg.horizon {
+                break;
+            }
+            let mut rate = cfg.tidal_rate(t);
+            if in_burst_at(t, &bursts) {
+                rate *= cfg.burst_mult;
+            }
+            if rng.f64() < rate / lambda_max {
+                arrivals.push(t);
+            }
+        }
+        Trace {
+            arrivals,
+            burst_intervals: bursts,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Scale timestamps by `factor` (paper §7.1: scale the real-world trace
+    /// so arrivals match testbed capacity while keeping the distribution
+    /// shape). factor > 1 stretches (lower rate).
+    pub fn scale_time(&self, factor: f64) -> Trace {
+        Trace {
+            arrivals: self.arrivals.iter().map(|&t| t * factor).collect(),
+            burst_intervals: self
+                .burst_intervals
+                .iter()
+                .map(|&(a, b)| (a * factor, b * factor))
+                .collect(),
+        }
+    }
+
+    /// Requests per bin (Fig. 2's plotted series).
+    pub fn rate_series(&self, horizon: f64, bins: usize) -> Vec<f64> {
+        let mut counts = vec![0.0; bins];
+        let w = horizon / bins as f64;
+        for &t in &self.arrivals {
+            if t < horizon {
+                counts[((t / w) as usize).min(bins - 1)] += 1.0;
+            }
+        }
+        counts.iter().map(|c| c / w).collect()
+    }
+
+    // ---- persistence (JSON lines of arrival offsets) --------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj().set(
+            "arrivals",
+            Json::Arr(self.arrivals.iter().map(|&t| Json::Num(t)).collect()),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> Option<Trace> {
+        let arrivals = j
+            .get("arrivals")?
+            .as_arr()?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        Some(Trace {
+            arrivals,
+            burst_intervals: Vec::new(),
+        })
+    }
+
+    pub fn save(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Trace> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Trace::from_json(&j).ok_or_else(|| anyhow::anyhow!("bad trace file"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_rate_close_to_config() {
+        let cfg = TraceConfig {
+            burst_mult: 1.0, // isolate the tide
+            ..TraceConfig::paper_24h(0.5, 1)
+        };
+        let tr = Trace::generate(&cfg);
+        let measured = tr.len() as f64 / cfg.horizon;
+        assert!(
+            (measured - 0.5).abs() < 0.05,
+            "measured {measured} vs 0.5"
+        );
+    }
+
+    #[test]
+    fn tidal_ratio_visible() {
+        let cfg = TraceConfig {
+            burst_mult: 1.0,
+            ..TraceConfig::paper_24h(1.0, 2)
+        };
+        let tr = Trace::generate(&cfg);
+        let series = tr.rate_series(DAY, 24); // hourly bins
+        let peak = series.iter().cloned().fold(0.0, f64::max);
+        let trough = series.iter().cloned().fold(f64::INFINITY, f64::min);
+        let ratio = peak / trough.max(1e-9);
+        assert!(ratio > 3.0 && ratio < 12.0, "ratio {ratio}");
+        // Peak bin near 13:00.
+        let peak_bin = series
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!((10..=16).contains(&peak_bin), "peak at hour {peak_bin}");
+    }
+
+    #[test]
+    fn bursts_raise_local_rate() {
+        let cfg = TraceConfig {
+            tidal_ratio: 1.0, // isolate bursts
+            burst_mult: 5.0,
+            burst_mean: 50.0,
+            calm_mean: 50.0,
+            ..TraceConfig::paper_24h(1.0, 3)
+        };
+        let tr = Trace::generate(&cfg);
+        // Rate inside burst intervals should exceed outside.
+        let mut in_b = 0.0;
+        let mut in_t = 0.0;
+        for &(s, e) in &tr.burst_intervals {
+            in_t += e - s;
+            in_b += tr.arrivals.iter().filter(|&&t| t >= s && t < e).count() as f64;
+        }
+        let out_t = cfg.horizon - in_t;
+        let out_b = tr.len() as f64 - in_b;
+        assert!(in_t > 0.0 && out_t > 0.0);
+        let ratio = (in_b / in_t) / (out_b / out_t);
+        assert!(ratio > 2.5, "burst rate ratio {ratio}");
+    }
+
+    #[test]
+    fn deterministic_and_sorted() {
+        let cfg = TraceConfig::compressed(1000.0, 2.0, 7);
+        let a = Trace::generate(&cfg);
+        let b = Trace::generate(&cfg);
+        assert_eq!(a.arrivals, b.arrivals);
+        assert!(a.arrivals.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn scaling_preserves_count() {
+        let cfg = TraceConfig::compressed(500.0, 1.0, 9);
+        let tr = Trace::generate(&cfg);
+        let scaled = tr.scale_time(2.0);
+        assert_eq!(tr.len(), scaled.len());
+        assert!((scaled.arrivals[0] - tr.arrivals[0] * 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = TraceConfig::compressed(200.0, 1.0, 11);
+        let tr = Trace::generate(&cfg);
+        let j = tr.to_json();
+        let tr2 = Trace::from_json(&j).unwrap();
+        assert_eq!(tr.arrivals.len(), tr2.arrivals.len());
+    }
+}

@@ -1,0 +1,127 @@
+//! Terminal plotting for the bench harness: bar charts and line series,
+//! so `cargo bench` output mirrors the paper's figures without plotting
+//! dependencies.
+
+/// Horizontal bar chart: one labelled row per (label, value).
+pub fn bar_chart(title: &str, rows: &[(String, f64)], unit: &str) -> String {
+    let mut out = format!("\n== {title} ==\n");
+    let max = rows.iter().map(|r| r.1).fold(0.0, f64::max).max(1e-12);
+    let label_w = rows.iter().map(|r| r.0.len()).max().unwrap_or(4).max(4);
+    for (label, v) in rows {
+        let w = ((v / max) * 48.0).round() as usize;
+        out.push_str(&format!(
+            "{label:<label_w$} | {:<48} {v:.3} {unit}\n",
+            "#".repeat(w)
+        ));
+    }
+    out
+}
+
+/// Multi-series line plot over a shared x range, one braille-less char
+/// canvas (rows = value axis, cols = time axis). Series are labelled with
+/// distinct glyphs.
+pub fn line_plot(
+    title: &str,
+    series: &[(&str, &[f64])],
+    height: usize,
+    y_label: &str,
+) -> String {
+    const GLYPHS: [char; 6] = ['*', 'o', '+', 'x', '@', '~'];
+    let width = series.iter().map(|s| s.1.len()).max().unwrap_or(0);
+    if width == 0 {
+        return format!("\n== {title} == (no data)\n");
+    }
+    let max = series
+        .iter()
+        .flat_map(|s| s.1.iter())
+        .cloned()
+        .fold(0.0, f64::max)
+        .max(1e-12);
+    let mut canvas = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (x, &y) in ys.iter().enumerate() {
+            let row = ((1.0 - (y / max).clamp(0.0, 1.0)) * (height - 1) as f64).round() as usize;
+            canvas[row][x] = GLYPHS[si % GLYPHS.len()];
+        }
+    }
+    let mut out = format!("\n== {title} ==  (y max = {max:.3} {y_label})\n");
+    for (i, row) in canvas.iter().enumerate() {
+        let margin = if i == 0 {
+            format!("{max:>9.2} ")
+        } else if i == height - 1 {
+            format!("{:>9.2} ", 0.0)
+        } else {
+            " ".repeat(10)
+        };
+        out.push_str(&margin);
+        out.push('|');
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&" ".repeat(10));
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str("  legend: ");
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={}  ", GLYPHS[si % GLYPHS.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+/// Fixed-width table.
+pub fn table(title: &str, headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = format!("\n== {title} ==\n");
+    let line = |cells: &[String], widths: &[usize]| {
+        let mut s = String::new();
+        for (c, w) in cells.iter().zip(widths) {
+            s.push_str(&format!("{c:<w$}  "));
+        }
+        s.trim_end().to_string() + "\n"
+    };
+    out.push_str(&line(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push_str(&format!(
+        "{}\n",
+        widths.iter().map(|w| "-".repeat(*w + 2)).collect::<String>()
+    ));
+    for row in rows {
+        out.push_str(&line(row, &widths));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_chart_renders() {
+        let s = bar_chart("t", &[("a".into(), 1.0), ("bb".into(), 2.0)], "x");
+        assert!(s.contains("bb"));
+        assert!(s.contains("####"));
+    }
+
+    #[test]
+    fn line_plot_renders() {
+        let ys: Vec<f64> = (0..50).map(|i| (i as f64 / 5.0).sin().abs()).collect();
+        let s = line_plot("t", &[("sin", &ys)], 8, "u");
+        assert!(s.contains("legend"));
+        assert!(s.matches('\n').count() > 8);
+    }
+
+    #[test]
+    fn table_renders() {
+        let s = table("t", &["a", "b"], &[vec!["1".into(), "22".into()]]);
+        assert!(s.contains("22"));
+    }
+}

@@ -1,0 +1,219 @@
+//! Tiny CLI argument parser (clap is not reachable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generated `--help` text. Each binary declares its options up front so
+//! help stays accurate.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub program: String,
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+pub struct Cli {
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(about: &'static str) -> Self {
+        Cli {
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self, program: &str) -> String {
+        let mut s = format!("{}\n\nUsage: {} [options] [args]\n\nOptions:\n", self.about, program);
+        for o in &self.opts {
+            let lhs = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <v>", o.name)
+            };
+            let def = o
+                .default
+                .filter(|d| !d.is_empty())
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{lhs:28} {}{def}\n", o.help));
+        }
+        s.push_str("  --help                     show this help\n");
+        s
+    }
+
+    /// Parse an iterator of args (excluding argv[0] handled by caller).
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        &self,
+        program: &str,
+        argv: I,
+    ) -> Result<Args, String> {
+        let mut out = Args {
+            program: program.to_string(),
+            ..Default::default()
+        };
+        for o in &self.opts {
+            if let (Some(d), false) = (o.default, o.is_flag) {
+                out.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage(program));
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage(program)))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(format!("flag --{key} takes no value"));
+                    }
+                    out.flags.insert(key, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{key} needs a value"))?,
+                    };
+                    out.values.insert(key, v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse_env(&self) -> Result<Args, String> {
+        let mut argv = std::env::args();
+        let program = argv.next().unwrap_or_else(|| "echo".into());
+        self.parse_from(&program, argv)
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, key: &str) -> String {
+        self.get(key).unwrap_or_default().to_string()
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64, String> {
+        self.str(key)
+            .parse()
+            .map_err(|_| format!("--{key}: expected a number, got {:?}", self.str(key)))
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize, String> {
+        self.str(key)
+            .parse()
+            .map_err(|_| format!("--{key}: expected an integer, got {:?}", self.str(key)))
+    }
+
+    pub fn u64(&self, key: &str) -> Result<u64, String> {
+        self.str(key)
+            .parse()
+            .map_err(|_| format!("--{key}: expected an integer, got {:?}", self.str(key)))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test")
+            .opt("rate", "1.5", "arrival rate")
+            .opt("out", "", "output path")
+            .flag("verbose", "chatty")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        cli().parse_from("t", args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.f64("rate").unwrap(), 1.5);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn value_forms() {
+        let a = parse(&["--rate", "2.0", "--out=x.json", "--verbose", "pos1"]).unwrap();
+        assert_eq!(a.f64("rate").unwrap(), 2.0);
+        assert_eq!(a.str("out"), "x.json");
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--rate"]).is_err());
+    }
+
+    #[test]
+    fn help_is_err_with_usage() {
+        let e = parse(&["--help"]).unwrap_err();
+        assert!(e.contains("--rate"));
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = parse(&["--rate", "abc"]).unwrap();
+        assert!(a.f64("rate").is_err());
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared substrates built from scratch for the offline environment:
+//! PRNG + distributions, JSON, statistics, CLI parsing, property testing.
+pub mod ascii;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

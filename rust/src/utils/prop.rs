@@ -1,0 +1,127 @@
+//! Property-testing mini-framework (proptest is not reachable offline).
+//!
+//! A property is a closure over a seeded [`Gen`]; the harness runs it for N
+//! random cases and, on failure, retries the failing seed with shrinking
+//! *sizes* (the generator scales all magnitudes by `gen.size`), reporting
+//! the smallest failing size and its seed so failures reproduce exactly.
+
+use super::rng::Rng;
+
+/// Random case generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// Magnitude scale in (0, 1]; shrinking retries lower sizes.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    /// Integer in [lo, hi_max] where the effective hi shrinks with size.
+    pub fn int(&mut self, lo: usize, hi_max: usize) -> usize {
+        let hi = lo + (((hi_max - lo) as f64) * self.size).round() as usize;
+        self.rng.range_usize(lo, hi.max(lo))
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.size * self.rng.f64()
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Vector with size-scaled length.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.int(0, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        self.rng.choose(xs)
+    }
+}
+
+/// Outcome of a property: Ok or a failure message.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: assert-like failure constructor.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Run `cases` random cases of the property. Panics (test failure) with the
+/// reproducing seed + the failure of the smallest failing size.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) -> PropResult) {
+    let base = 0x9E37_79B9_7F4A_7C15u64 ^ fnv(name);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x2545_F491_4F6C_DD1D));
+        if let Err(msg) = prop(&mut Gen::new(seed, 1.0)) {
+            // Shrink: retry the same seed at smaller sizes.
+            let mut best = (1.0, msg);
+            for &size in &[0.5, 0.25, 0.1, 0.05, 0.02] {
+                if let Err(m) = prop(&mut Gen::new(seed, size)) {
+                    best = (size, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 smallest failing size {}):\n  {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, |g| {
+            let a = g.f64(-100.0, 100.0);
+            let b = g.f64(-100.0, 100.0);
+            prop_assert!((a + b - (b + a)).abs() < 1e-12, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports() {
+        check("always-fails", 5, |g| {
+            let x = g.int(0, 10);
+            prop_assert!(x > 100, "x={x} not > 100");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sizes_shrink_vectors() {
+        let mut big = Gen::new(1, 1.0);
+        let mut small = Gen::new(1, 0.05);
+        let v_big: Vec<usize> = big.vec(1000, |g| g.int(0, 9));
+        let v_small: Vec<usize> = small.vec(1000, |g| g.int(0, 9));
+        assert!(v_small.len() <= v_big.len().max(60));
+    }
+}

@@ -1,0 +1,388 @@
+//! Statistics substrate: summaries, percentiles, sliding windows, time
+//! series, and the small dense least-squares solver the execution-time
+//! estimator's coefficient fitting (paper §5.2) relies on.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population variance (0 for len < 2).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile by linear interpolation on a sorted copy. p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile of an already-sorted slice.
+pub fn percentile_sorted(v: &[f64], p: f64) -> f64 {
+    if v.is_empty() {
+        return 0.0;
+    }
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+/// Latency-style summary of a sample.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary::default();
+        }
+        let mut v: Vec<f64> = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            count: v.len(),
+            mean: mean(&v),
+            std: std_dev(&v),
+            min: v[0],
+            p50: percentile_sorted(&v, 50.0),
+            p90: percentile_sorted(&v, 90.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: v[v.len() - 1],
+        }
+    }
+
+    /// Fraction of samples <= threshold (SLO attainment).
+    pub fn attainment(xs: &[f64], threshold: f64) -> f64 {
+        if xs.is_empty() {
+            return 1.0;
+        }
+        xs.iter().filter(|&&x| x <= threshold).count() as f64 / xs.len() as f64
+    }
+}
+
+/// Fixed-capacity sliding window over (time, value) observations — the
+/// memory predictor's trailing-hour history (paper §5.3).
+#[derive(Clone, Debug)]
+pub struct SlidingWindow {
+    horizon: f64,
+    items: std::collections::VecDeque<(f64, f64)>,
+}
+
+impl SlidingWindow {
+    pub fn new(horizon: f64) -> Self {
+        SlidingWindow {
+            horizon,
+            items: Default::default(),
+        }
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.items.push_back((t, v));
+        let cutoff = t - self.horizon;
+        while matches!(self.items.front(), Some(&(ft, _)) if ft < cutoff) {
+            self.items.pop_front();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.items.is_empty() {
+            return 0.0;
+        }
+        self.items.iter().map(|&(_, v)| v).sum::<f64>() / self.items.len() as f64
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.items.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self
+            .items
+            .iter()
+            .map(|&(_, v)| (v - m) * (v - m))
+            .sum::<f64>()
+            / self.items.len() as f64)
+            .sqrt()
+    }
+
+    /// μ + k·σ — the paper's burst headroom rule (k = 2 covers ~95%).
+    pub fn mean_plus_k_sigma(&self, k: f64) -> f64 {
+        self.mean() + k * self.std()
+    }
+}
+
+/// A named time series, appended during a run and binned for figures.
+#[derive(Clone, Debug, Default)]
+pub struct TimeSeries {
+    pub points: Vec<(f64, f64)>,
+}
+
+impl TimeSeries {
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    /// Average value per fixed-width time bin over [t0, t1).
+    pub fn binned(&self, t0: f64, t1: f64, bins: usize) -> Vec<f64> {
+        let mut sums = vec![0.0; bins];
+        let mut counts = vec![0usize; bins];
+        let w = (t1 - t0) / bins as f64;
+        for &(t, v) in &self.points {
+            if t < t0 || t >= t1 {
+                continue;
+            }
+            let i = (((t - t0) / w) as usize).min(bins - 1);
+            sums[i] += v;
+            counts[i] += 1;
+        }
+        sums.iter()
+            .zip(&counts)
+            .map(|(&s, &c)| if c == 0 { 0.0 } else { s / c as f64 })
+            .collect()
+    }
+
+    /// Count of points per bin (for arrival-rate plots).
+    pub fn rate_binned(&self, t0: f64, t1: f64, bins: usize) -> Vec<f64> {
+        let mut counts = vec![0.0; bins];
+        let w = (t1 - t0) / bins as f64;
+        for &(t, _) in &self.points {
+            if t < t0 || t >= t1 {
+                continue;
+            }
+            let i = (((t - t0) / w) as usize).min(bins - 1);
+            counts[i] += 1.0;
+        }
+        counts
+    }
+}
+
+/// Ordinary least squares via normal equations (XᵀX)β = Xᵀy with Gaussian
+/// elimination + partial pivoting. Feature count is tiny (≤ 4: the
+/// estimator fits α, β | γ, δ | λ), so this is exact enough and dependency
+/// free.
+pub fn least_squares(rows: &[Vec<f64>], y: &[f64]) -> Option<Vec<f64>> {
+    let n = rows.len();
+    if n == 0 || n != y.len() {
+        return None;
+    }
+    let k = rows[0].len();
+    if k == 0 || rows.iter().any(|r| r.len() != k) {
+        return None;
+    }
+    // Build normal equations A = XᵀX (k×k), b = Xᵀy.
+    let mut a = vec![vec![0.0; k]; k];
+    let mut b = vec![0.0; k];
+    for (row, &yy) in rows.iter().zip(y) {
+        for i in 0..k {
+            b[i] += row[i] * yy;
+            for j in 0..k {
+                a[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    // Tikhonov jitter for singular designs.
+    for i in 0..k {
+        a[i][i] += 1e-12;
+    }
+    solve_dense(&mut a, &mut b)
+}
+
+/// In-place Gaussian elimination with partial pivoting; returns x solving Ax=b.
+pub fn solve_dense(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..n {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv][col].abs() < 1e-14 {
+            return None;
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        for r in col + 1..n {
+            let f = a[r][col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for c in col + 1..n {
+            s -= a[col][c] * x[c];
+        }
+        x[col] = s / a[col][col];
+    }
+    Some(x)
+}
+
+/// Exponentially weighted moving average.
+#[derive(Clone, Copy, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        Ewma { alpha, value: None }
+    }
+
+    pub fn push(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let s = Summary::of(&xs);
+        assert_eq!(s.count, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 50.0) - 5.0).abs() < 1e-12);
+        assert!((percentile(&xs, 90.0) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn attainment() {
+        let xs = [0.1, 0.2, 0.3, 0.4];
+        assert!((Summary::attainment(&xs, 0.25) - 0.5).abs() < 1e-12);
+        assert_eq!(Summary::attainment(&[], 1.0), 1.0);
+    }
+
+    #[test]
+    fn sliding_window_evicts() {
+        let mut w = SlidingWindow::new(10.0);
+        for t in 0..20 {
+            w.push(t as f64, t as f64);
+        }
+        assert!(w.len() <= 11);
+        assert!(w.mean() > 12.0);
+    }
+
+    #[test]
+    fn mu_plus_2sigma() {
+        let mut w = SlidingWindow::new(1e9);
+        for i in 0..1000 {
+            w.push(i as f64, if i % 2 == 0 { 10.0 } else { 20.0 });
+        }
+        let v = w.mean_plus_k_sigma(2.0);
+        assert!((v - 25.0).abs() < 0.1, "v={v}");
+    }
+
+    #[test]
+    fn least_squares_recovers_line() {
+        // y = 3x + 7
+        let rows: Vec<Vec<f64>> = (0..50).map(|i| vec![i as f64, 1.0]).collect();
+        let y: Vec<f64> = (0..50).map(|i| 3.0 * i as f64 + 7.0).collect();
+        let beta = least_squares(&rows, &y).unwrap();
+        assert!((beta[0] - 3.0).abs() < 1e-9);
+        assert!((beta[1] - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn least_squares_quadratic() {
+        // y = 2e-6 x^2 + 1e-3 x  (prefill-shaped, Eq. 6)
+        let rows: Vec<Vec<f64>> = (1..100)
+            .map(|i| {
+                let l = (i * 50) as f64;
+                vec![l * l, l]
+            })
+            .collect();
+        let y: Vec<f64> = rows.iter().map(|r| 2e-6 * r[0] + 1e-3 * r[1]).collect();
+        let beta = least_squares(&rows, &y).unwrap();
+        assert!((beta[0] - 2e-6).abs() < 1e-10);
+        assert!((beta[1] - 1e-3).abs() < 1e-7);
+    }
+
+    #[test]
+    fn timeseries_binning() {
+        let mut ts = TimeSeries::default();
+        for i in 0..100 {
+            ts.push(i as f64, (i % 10) as f64);
+        }
+        let b = ts.binned(0.0, 100.0, 10);
+        assert_eq!(b.len(), 10);
+        assert!((b[0] - 4.5).abs() < 1e-12);
+        let r = ts.rate_binned(0.0, 100.0, 4);
+        assert_eq!(r, vec![25.0, 25.0, 25.0, 25.0]);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..30 {
+            e.push(8.0);
+        }
+        assert!((e.get() - 8.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,203 @@
+//! End-to-end: the full Echo stack (scheduler + KV manager + estimator +
+//! engine) driving the real EchoLM model through PJRT — mixed online and
+//! offline requests, chunked prefill, preemption, completion.
+//!
+//! Requires `make artifacts`; skips gracefully otherwise.
+
+use echo::config::{SchedulerKind, SystemConfig};
+use echo::core::{PromptSpec, Request, TaskClass};
+use echo::engine::{pjrt::PjrtBackend, Engine};
+use echo::runtime::ModelRuntime;
+use echo::utils::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn engine(kind: SchedulerKind) -> Option<Engine<PjrtBackend>> {
+    let dir = artifacts_dir()?;
+    let rt = ModelRuntime::load(&dir).unwrap();
+    let mut cfg = SystemConfig::cpu_echolm();
+    cfg.scheduler.kind = kind;
+    cfg.model.n_layers = rt.manifest.n_layers;
+    cfg.model.n_kv_heads = rt.manifest.n_heads;
+    cfg.model.head_dim = rt.manifest.head_dim;
+    cfg.scheduler.max_batch = rt.manifest.max_batch;
+    // Device slab budget: max_batch x max_seq positions.
+    cfg.cache.capacity_tokens = rt.manifest.max_batch * rt.manifest.max_seq;
+    Some(Engine::new(cfg, PjrtBackend::new(rt)))
+}
+
+fn random_prompt(rng: &mut Rng, len: usize, vocab: u32) -> Vec<u32> {
+    (0..len)
+        .map(|_| rng.range_u64(1, (vocab - 1) as u64) as u32)
+        .collect()
+}
+
+#[test]
+fn mixed_online_offline_on_real_model() {
+    let Some(mut e) = engine(SchedulerKind::Echo) else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let vocab = e.backend.rt.manifest.vocab as u32;
+    let mut rng = Rng::new(42);
+
+    // 4 offline requests sharing a literal 32-token prefix.
+    let shared = random_prompt(&mut rng, 32, vocab);
+    let mut offline = Vec::new();
+    for _ in 0..4 {
+        let mut tokens = shared.clone();
+        tokens.extend(random_prompt(&mut rng, 16, vocab));
+        let id = e.store.fresh_id();
+        offline.push(id);
+        e.submit_offline(Request::new(
+            id,
+            TaskClass::Offline,
+            0.0,
+            PromptSpec::real(tokens),
+            6,
+        ));
+    }
+
+    // 3 online requests arriving over the first fraction of a second.
+    let mut online_ids = Vec::new();
+    for i in 0..3 {
+        let id = e.store.fresh_id();
+        online_ids.push(id);
+        e.submit_online(Request::new(
+            id,
+            TaskClass::Online,
+            0.05 * i as f64,
+            PromptSpec::real(random_prompt(&mut rng, 40, vocab)),
+            8,
+        ));
+    }
+
+    e.run().unwrap();
+
+    assert_eq!(e.metrics.online_completed, 3);
+    assert_eq!(e.metrics.offline_completed, 4);
+    for &id in &online_ids {
+        let r = e.store.get(id);
+        assert_eq!(r.out_tokens.len(), 8);
+        assert!(r.out_tokens.iter().all(|&t| (t as usize) < vocab as usize));
+    }
+    e.kv.check_invariants().unwrap();
+    assert!(e.metrics.offline_throughput() > 0.0);
+}
+
+#[test]
+fn preemption_recompute_preserves_greedy_continuation() {
+    // A request preempted mid-decode must, after recompute-mode re-prefill,
+    // continue with exactly the tokens it would have produced undisturbed
+    // (test_model.py proves this at the python layer; this proves it
+    // through the full rust stack).
+    let Some(mut e) = engine(SchedulerKind::Echo) else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let vocab = e.backend.rt.manifest.vocab as u32;
+    let mut rng = Rng::new(7);
+    let tokens = random_prompt(&mut rng, 30, vocab);
+
+    // Undisturbed run (fresh engine).
+    let undisturbed = {
+        let mut e2 = engine(SchedulerKind::Echo).unwrap();
+        let id = e2.store.fresh_id();
+        e2.submit_offline(Request::new(
+            id,
+            TaskClass::Offline,
+            0.0,
+            PromptSpec::real(tokens.clone()),
+            10,
+        ));
+        e2.run().unwrap();
+        e2.store.get(id).out_tokens.clone()
+    };
+    assert_eq!(undisturbed.len(), 10);
+
+    // Disturbed run: an online burst that forces preemption of the victim.
+    let victim = e.store.fresh_id();
+    e.submit_offline(Request::new(
+        victim,
+        TaskClass::Offline,
+        0.0,
+        PromptSpec::real(tokens.clone()),
+        10,
+    ));
+    for i in 0..8 {
+        let t = random_prompt(&mut rng, 200, vocab);
+        let id = e.store.fresh_id();
+        e.submit_online(Request::new(
+            id,
+            TaskClass::Online,
+            0.2 + 0.01 * i as f64,
+            PromptSpec::real(t),
+            4,
+        ));
+    }
+    e.run().unwrap();
+    let disturbed = e.store.get(victim).out_tokens.clone();
+    assert_eq!(e.store.get(victim).generated, 10);
+    assert_eq!(
+        disturbed, undisturbed,
+        "recompute-mode preemption must not change outputs (preemptions={})",
+        e.store.get(victim).preemptions
+    );
+    e.kv.check_invariants().unwrap();
+}
+
+#[test]
+fn calibration_fits_real_backend() {
+    // Micro-benchmark the real model and fit the Eq. 6-8 coefficients; the
+    // fitted model should predict the sampled step times decently (CPU
+    // timing noise bounds how tight this can be).
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    use echo::estimator::{BatchShape, PrefillItem, TimeModel, TimeSample};
+    let mut rt = ModelRuntime::load(&dir).unwrap();
+    let mut samples = Vec::new();
+    for &(chunk, context) in
+        &[(16usize, 0usize), (16, 64), (64, 0), (64, 128), (16, 128), (64, 64)]
+    {
+        let secs = rt
+            .bench_step(rt.bucket_for(chunk).unwrap(), context, 3)
+            .unwrap();
+        // bench_step drives ALL slots, so the measured batch holds
+        // max_batch prefill items.
+        samples.push(TimeSample {
+            shape: BatchShape {
+                prefills: vec![PrefillItem { chunk, context }; rt.manifest.max_batch],
+                decode_lens: vec![],
+            },
+            seconds: secs,
+        });
+    }
+    for &context in &[16usize, 64, 128, 192] {
+        let secs = rt.bench_step(1, context, 3).unwrap();
+        samples.push(TimeSample {
+            shape: BatchShape {
+                prefills: vec![],
+                decode_lens: vec![context + 1; rt.manifest.max_batch],
+            },
+            seconds: secs,
+        });
+    }
+    let prior = SystemConfig::cpu_echolm().time_model;
+    let fitted = TimeModel::fit(&samples, prior);
+    let err = TimeModel::new(fitted).relative_error(&samples);
+    // The CPU interpret-mode backend's cost is constant-dominated (the
+    // Pallas kernel scans the whole fixed slab), which the paper's
+    // quadratic/linear form can only approximate; the fit must still be a
+    // large improvement over the unfitted prior.
+    let prior_err = TimeModel::new(prior).relative_error(&samples);
+    assert!(err < 1.0, "fitted model relative error {err}");
+    assert!(
+        err < prior_err * 0.5,
+        "fit must at least halve the prior's error: {err} vs {prior_err}"
+    );
+}

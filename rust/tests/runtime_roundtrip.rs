@@ -1,0 +1,110 @@
+//! Integration: python-AOT artifacts -> rust PJRT load -> execute, and the
+//! greedy continuation must match python's golden.json token for token.
+//! This is the cross-language numerics proof of the L1/L2/runtime stack.
+//!
+//! Requires `make artifacts` (skips gracefully when missing so plain
+//! `cargo test` works before the artifacts are built).
+
+use echo::runtime::ModelRuntime;
+use echo::utils::json::Json;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn golden_greedy_roundtrip() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return;
+    };
+    let golden_text = std::fs::read_to_string(dir.join("golden.json")).unwrap();
+    let golden = Json::parse(&golden_text).unwrap();
+    let prompt: Vec<i32> = golden
+        .get("prompt")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect();
+    let expected: Vec<i32> = golden
+        .get("generated")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap() as i32)
+        .collect();
+    let wide = golden.get("prefill_bucket").unwrap().as_usize().unwrap();
+
+    let mut rt = ModelRuntime::load(&dir).unwrap();
+    let b = rt.manifest.max_batch;
+
+    // Chunked prefill on slot 0 through the widest bucket.
+    let mut pos = 0usize;
+    let mut next = -1i32;
+    while pos < prompt.len() {
+        let width = wide.min(prompt.len() - pos);
+        let mut tokens = vec![0i32; b * wide];
+        tokens[..width].copy_from_slice(&prompt[pos..pos + width]);
+        let mut cache = vec![0i32; b];
+        cache[0] = pos as i32;
+        let mut q = vec![0i32; b];
+        q[0] = width as i32;
+        let out = rt.step(wide, &tokens, &cache, &q).unwrap();
+        next = out.next_tokens[0];
+        pos += width;
+    }
+    let mut generated = vec![next];
+
+    // Greedy decode through the c1 bucket.
+    for i in 0..expected.len() - 1 {
+        let mut tokens = vec![0i32; b];
+        tokens[0] = *generated.last().unwrap();
+        let mut cache = vec![0i32; b];
+        cache[0] = (prompt.len() + i) as i32;
+        let mut q = vec![0i32; b];
+        q[0] = 1;
+        let out = rt.step(1, &tokens, &cache, &q).unwrap();
+        generated.push(out.next_tokens[0]);
+    }
+
+    assert_eq!(
+        generated, expected,
+        "rust PJRT continuation diverged from python golden"
+    );
+}
+
+#[test]
+fn manifest_and_buckets_load() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let rt = ModelRuntime::load(&dir).unwrap();
+    assert_eq!(rt.platform(), "cpu");
+    assert!(!rt.buckets().is_empty());
+    assert_eq!(rt.bucket_for(1).unwrap(), 1);
+    assert_eq!(rt.bucket_for(2).unwrap(), 16);
+    assert_eq!(rt.bucket_for(17).unwrap(), 64);
+    assert!(rt.bucket_for(65).is_err());
+}
+
+#[test]
+fn step_rejects_overflow() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let mut rt = ModelRuntime::load(&dir).unwrap();
+    let b = rt.manifest.max_batch;
+    let s = rt.manifest.max_seq;
+    let tokens = vec![0i32; b];
+    let mut cache = vec![0i32; b];
+    cache[0] = s as i32; // cache_len + q_len exceeds the slab
+    let mut q = vec![0i32; b];
+    q[0] = 1;
+    assert!(rt.step(1, &tokens, &cache, &q).is_err());
+}
