@@ -1,0 +1,68 @@
+//! Cluster co-serving demo: a fleet of Echo replicas behind the
+//! prefix-affinity router replays the paper-shaped tidal trace while an
+//! offline backlog floods the fleet through work-stealing; a second run
+//! lets the tidal autoscaler breathe the fleet between 1 and 4 replicas.
+//!
+//!     cargo run --release --example cluster_sim
+
+use echo::cluster::{
+    offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig, ClusterSim,
+    ScalePolicy,
+};
+use echo::config::SystemConfig;
+use echo::trace::{Trace, TraceConfig};
+use echo::workload::DatasetSpec;
+
+fn main() -> anyhow::Result<()> {
+    let horizon = 240.0;
+    let rate = 12.0;
+    let seed = 42;
+    let trace = Trace::generate(&TraceConfig::compressed(horizon, rate, seed));
+    let online = online_jobs_from_trace(&trace, &online_session_spec(), seed ^ 0x00ff);
+    let spec = DatasetSpec::loogle_qa_short();
+    println!(
+        "tidal trace: {} online arrivals over {horizon:.0}s; offline backlog: {}",
+        online.len(),
+        spec.name
+    );
+
+    for (label, replicas, scale) in [
+        ("fixed fleet of 4", 4usize, None),
+        ("autoscaled 1-4", 1, Some(ScalePolicy::tidal(1, 4))),
+    ] {
+        let mut base = SystemConfig::a100_llama8b();
+        base.seed = seed;
+        let mut cc = ClusterConfig::new(base, replicas);
+        cc.scale = scale;
+        let mut sim = ClusterSim::new(cc);
+        sim.submit_offline_backlog(offline_jobs(&spec, 2_000, seed ^ 0x0ff0));
+        let report = sim.run(&online, horizon)?;
+        println!("\n== {label} ==");
+        for r in &report.replicas {
+            println!(
+                "  replica {}: online {} (ttft att {:.1}%, token att {:.1}%), \
+                 offline {} ({} billed tok), hit {:.1}%",
+                r.replica,
+                r.online_completed,
+                r.ttft_attainment * 100.0,
+                r.token_attainment * 100.0,
+                r.offline_completed,
+                r.offline_billed_tokens,
+                r.hit_ratio * 100.0
+            );
+        }
+        println!(
+            "  cluster: offline {:.0} tok/s, online attain {:.3}/{:.3}, \
+             hit {:.1}%, affinity {}/{} dispatches, peak {} replicas (mean {:.2})",
+            report.offline_throughput,
+            report.online_attainment.0,
+            report.online_attainment.1,
+            report.cluster_hit_ratio * 100.0,
+            report.router.affinity_routed,
+            report.router.dispatched_online,
+            report.peak_replicas,
+            report.mean_replicas
+        );
+    }
+    Ok(())
+}

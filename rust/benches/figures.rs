@@ -77,6 +77,11 @@ fn main() -> anyhow::Result<()> {
         println!("{t}");
         out = out.set("ablation_budget", j);
     }
+    if want("cluster") {
+        let (t, j) = figures::fig_cluster(&opts)?;
+        println!("{t}");
+        out = out.set("cluster", j);
+    }
 
     std::fs::write("bench_figures.json", out.pretty())?;
     println!(

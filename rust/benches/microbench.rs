@@ -206,6 +206,12 @@ fn bench_sim_iterations() {
     );
 }
 
+#[cfg(not(feature = "runtime"))]
+fn bench_pjrt() {
+    println!("pjrt step: skipped (built without the `runtime` feature)");
+}
+
+#[cfg(feature = "runtime")]
 fn bench_pjrt() {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("manifest.json").exists() {

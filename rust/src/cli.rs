@@ -9,11 +9,15 @@
 //!   figures    — regenerate a paper table/figure (same code as `cargo bench`)
 //!   smoke      — PJRT wiring check
 
+use crate::cluster::{ClusterConfig, ClusterSim, ScalePolicy};
 use crate::config::{SchedulerKind, SystemConfig};
 use crate::core::{PromptSpec, Request, TaskClass};
-use crate::engine::{pjrt::PjrtBackend, sim::SimBackend, Engine};
+#[cfg(feature = "runtime")]
+use crate::engine::pjrt::PjrtBackend;
+use crate::engine::{sim::SimBackend, Engine};
 use crate::estimator::TimeModel;
 use crate::figures;
+#[cfg(feature = "runtime")]
 use crate::runtime::ModelRuntime;
 use crate::sim::DeployerSim;
 use crate::trace::{Trace, TraceConfig};
@@ -29,7 +33,7 @@ pub fn run_cli() -> i32 {
     let program = if argv.is_empty() { "echo".into() } else { argv.remove(0) };
     if argv.is_empty() {
         eprintln!(
-            "{ABOUT}\n\nSubcommands: serve, simulate, estimate, calibrate, \
+            "{ABOUT}\n\nSubcommands: serve, simulate, cluster, estimate, calibrate, \
              trace-gen, figures, smoke\nRun `{program} <cmd> --help` for options."
         );
         return 2;
@@ -38,6 +42,7 @@ pub fn run_cli() -> i32 {
     let res = match cmd.as_str() {
         "serve" => serve(&program, argv),
         "simulate" => simulate(&program, argv),
+        "cluster" => cluster(&program, argv),
         "estimate" => estimate(&program, argv),
         "calibrate" => calibrate(&program, argv),
         "trace-gen" => trace_gen(&program, argv),
@@ -73,6 +78,15 @@ fn load_config(args: &crate::utils::cli::Args) -> anyhow::Result<SystemConfig> {
     Ok(cfg)
 }
 
+#[cfg(not(feature = "runtime"))]
+fn serve(_program: &str, _argv: Vec<String>) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "built without the `runtime` feature: the PJRT backend is unavailable \
+         (add the external `xla` dependency and rebuild with `--features runtime`)"
+    )
+}
+
+#[cfg(feature = "runtime")]
 fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let cli = Cli::new("serve a demo load on the real EchoLM model via PJRT")
         .opt("artifacts", "artifacts", "artifact directory")
@@ -160,9 +174,7 @@ fn simulate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     }
     let mut n_off = args.usize("offline-count").map_err(anyhow::Error::msg)?;
     if n_off == 0 {
-        let boost = if spec.shared_frac > 0.5 { 10.0 } else { 1.5 };
-        n_off =
-            ((horizon / (spec.mean_prompt as f64 / 9_500.0).max(0.02)) * boost) as usize + 64;
+        n_off = figures::backlog_size(&spec, horizon);
     }
     let mut store = std::mem::take(&mut e.store);
     let mut batch = synthesize(&spec, n_off, TaskClass::Offline, 0.0, &mut store, &mut rng);
@@ -186,6 +198,138 @@ fn simulate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     println!("{}", j.pretty());
     if !args.str("out").is_empty() {
         std::fs::write(args.str("out"), j.pretty())?;
+    }
+    Ok(())
+}
+
+fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "multi-replica co-serving: prefix-affinity router, offline \
+         work-stealing, tidal autoscaling",
+    )
+    .opt("preset", "a100_llama8b", "per-replica config preset")
+    .opt("config", "", "config JSON file (overrides preset)")
+    .opt("strategy", "", "override scheduler strategy")
+    .opt("replicas", "4", "initial replica count")
+    .opt("horizon", "240", "sim horizon, seconds (the tide compresses onto it)")
+    .opt("rate", "12", "mean online arrival rate across the cluster, req/s")
+    .opt("offline-dataset", "loogle_qa_short", "sharegpt | loogle_qa_short | loogle_qa_long | toolbench | nextqa")
+    .opt("offline-count", "0", "offline backlog size (0 = auto from horizon x replicas)")
+    .opt("sync-dt", "0.25", "router/digest sync quantum, seconds")
+    .flag("autoscale", "scale the fleet with the tide (deployer-estimator driven)")
+    .opt("min-replicas", "1", "autoscale floor")
+    .opt("max-replicas", "0", "autoscale ceiling (0 = 2x --replicas)")
+    .opt("seed", "42", "rng seed")
+    .opt("out", "", "write the cluster report JSON to this path");
+    let args = parse_or_usage(&cli, program, argv)?;
+    let mut base = load_config(&args)?;
+    let horizon = args.f64("horizon").map_err(anyhow::Error::msg)?;
+    let rate = args.f64("rate").map_err(anyhow::Error::msg)?;
+    let seed = args.u64("seed").map_err(anyhow::Error::msg)?;
+    let replicas = args.usize("replicas").map_err(anyhow::Error::msg)?.max(1);
+    base.seed = seed;
+
+    let mut cc = ClusterConfig::new(base, replicas);
+    cc.sync_dt = args.f64("sync-dt").map_err(anyhow::Error::msg)?.max(1e-3);
+    // Largest fleet the run can reach — backlog auto-sizing must cover it.
+    let mut fleet_cap = replicas;
+    if args.flag("autoscale") {
+        let min = args.usize("min-replicas").map_err(anyhow::Error::msg)?.max(1);
+        let mut max = args.usize("max-replicas").map_err(anyhow::Error::msg)?;
+        if max == 0 {
+            max = replicas * 2;
+        }
+        let max = max.max(min);
+        cc.scale = Some(ScalePolicy::tidal(min, max));
+        fleet_cap = max;
+    }
+
+    let spec = dataset_by_name(&args.str("offline-dataset"))?;
+    let mut n_off = args.usize("offline-count").map_err(anyhow::Error::msg)?;
+    if n_off == 0 {
+        n_off = figures::backlog_size(&spec, horizon) * fleet_cap;
+    }
+
+    let trace = Trace::generate(&TraceConfig::compressed(horizon, rate, seed));
+    // Session-prefix online mix (multi-turn/system-prompt reuse) so the
+    // router's prefix affinity has real shared prefixes to exploit.
+    let online = crate::cluster::online_jobs_from_trace(
+        &trace,
+        &crate::cluster::online_session_spec(),
+        seed ^ 0x00ff,
+    );
+    println!(
+        "cluster: {} replicas{} | {} online arrivals over {horizon:.0}s \
+         (tidal, mean {rate}/s) | {n_off} offline jobs ({})",
+        replicas,
+        if cc.scale.is_some() { " (autoscaled)" } else { "" },
+        online.len(),
+        spec.name
+    );
+
+    let mut sim = ClusterSim::new(cc);
+    sim.submit_offline_backlog(crate::cluster::offline_jobs(&spec, n_off, seed ^ 0x0ff0));
+    let report = sim.run(&online, horizon)?;
+
+    let rows: Vec<Vec<String>> = report
+        .replicas
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.replica),
+                format!("{:.0}", r.spawned_at),
+                r.retired_at.map_or("-".into(), |t| format!("{t:.0}")),
+                format!("{}", r.online_completed),
+                format!("{:.1}%", r.ttft_attainment * 100.0),
+                format!("{:.1}%", r.token_attainment * 100.0),
+                format!("{}", r.offline_completed),
+                format!("{}", r.offline_billed_tokens),
+                format!("{:.1}%", r.hit_ratio * 100.0),
+                format!("{}", r.preemptions),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        crate::utils::ascii::table(
+            "Per-replica SLO attainment and offline service",
+            &[
+                "Replica", "spawn", "retire", "online", "TTFT att.", "token att.",
+                "offline", "billed tok", "hit ratio", "preempt",
+            ],
+            &rows,
+        )
+    );
+    println!(
+        "aggregate: offline throughput {:.1} tok/s over the horizon \
+         ({:.1} tok/s per busy-second)",
+        report.offline_throughput,
+        report.aggregate.offline_throughput()
+    );
+    println!(
+        "online SLO attainment: ttft {:.3}, per-token {:.3} \
+         ({} completions across the fleet)",
+        report.online_attainment.0,
+        report.online_attainment.1,
+        report.aggregate.online_completed
+    );
+    println!(
+        "cluster cache-hit rate: {:.1}% | router: {} dispatched, {} by \
+         affinity ({} predicted hit-tokens), {} capacity vetoes, {} overflow",
+        report.cluster_hit_ratio * 100.0,
+        report.router.dispatched_online,
+        report.router.affinity_routed,
+        report.router.predicted_hit_tokens,
+        report.router.capacity_vetoes,
+        report.router.overflow_dispatches
+    );
+    println!(
+        "fleet: peak {} replicas, mean {:.2}; backlog remaining {}",
+        report.peak_replicas, report.mean_replicas, report.backlog_remaining
+    );
+    if !args.str("out").is_empty() {
+        std::fs::write(args.str("out"), report.to_json().pretty())?;
+        println!("wrote {}", args.str("out"));
     }
     Ok(())
 }
@@ -230,6 +374,16 @@ fn estimate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "runtime"))]
+fn calibrate(_program: &str, _argv: Vec<String>) -> anyhow::Result<()> {
+    anyhow::bail!(
+        "built without the `runtime` feature: calibration needs the PJRT \
+         backend (add the external `xla` dependency and rebuild with \
+         `--features runtime`)"
+    )
+}
+
+#[cfg(feature = "runtime")]
 fn calibrate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let cli = Cli::new("fit Eq. 6-8 coefficients against the PJRT backend")
         .opt("artifacts", "artifacts", "artifact directory")
@@ -311,7 +465,7 @@ fn trace_gen(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
 
 fn figures_cmd(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let cli = Cli::new("regenerate a paper table/figure")
-        .opt("which", "all", "table1|fig2|fig6|fig7|fig8|fig9|fig10|fig11|ablations|all")
+        .opt("which", "all", "table1|fig2|fig6|fig7|fig8|fig9|fig10|fig11|ablations|cluster|all")
         .flag("quick", "small horizons (fast, CI-scale)")
         .opt("out", "", "append JSON data to this path");
     let args = parse_or_usage(&cli, program, argv)?;
@@ -371,6 +525,11 @@ fn figures_cmd(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         println!("{t}");
         out_json.push(("ablation_budget", j));
     }
+    if want("cluster") {
+        let (t, j) = figures::fig_cluster(&opts)?;
+        println!("{t}");
+        out_json.push(("cluster", j));
+    }
     if !args.str("out").is_empty() {
         let mut obj = Json::obj();
         for (k, v) in out_json {
@@ -393,6 +552,16 @@ fn dataset_by_name(name: &str) -> anyhow::Result<DatasetSpec> {
     })
 }
 
+#[cfg(not(feature = "runtime"))]
+fn smoke() -> anyhow::Result<()> {
+    anyhow::bail!(
+        "built without the `runtime` feature: no PJRT client to smoke-test \
+         (add the external `xla` dependency and rebuild with \
+         `--features runtime`)"
+    )
+}
+
+#[cfg(feature = "runtime")]
 fn smoke() -> anyhow::Result<()> {
     let c = xla::PjRtClient::cpu()?;
     println!(

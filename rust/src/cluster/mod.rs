@@ -1,0 +1,43 @@
+//! Cluster co-serving layer: a fleet of Echo replicas behind a router.
+//!
+//! The paper evaluates Echo on a single engine instance; production serving
+//! at provider scale runs many replicas, and the related cluster systems
+//! (HyGen's elastic online/offline co-location, ConServe's fleet-wide
+//! harvesting of idle capacity) show that is where the next wins live.
+//! This module composes Echo's estimation toolkits into that layer:
+//!
+//!   * [`Replica`] wraps an `Engine<SimBackend>` and publishes a cheap
+//!     [`LoadDigest`] each sync step — queue/KV pressure plus a *prefix
+//!     summary* (the content keys resident in its cache, see
+//!     `KvManager::cached_key_sample`).
+//!   * [`Router`] dispatches online arrivals by **prefix affinity**: a
+//!     cluster-level radix index over the replica summaries finds the
+//!     replica already holding the request's shared prefix (chain-hashed
+//!     block keys commit to their whole prefix, so a flat key-set walk *is*
+//!     a radix descent). Ties break on estimator-predicted latency
+//!     (Eq. 6-8), and affinity never routes to a replica whose KV headroom
+//!     cannot admit the request.
+//!   * [`ClusterSim`] replays the tidal trace against N replicas, floods
+//!     the offline backlog via **work-stealing** (least-loaded replicas
+//!     pull from the shared backlog; starved replicas steal from the
+//!     fattest pool when the backlog runs dry), and optionally runs a
+//!     [`ScalePolicy`] that grows/shrinks the fleet with the tide using
+//!     the deployer-estimator's demand arithmetic (§5.4 inverted: replicas
+//!     instead of KV tokens). Scale-down drains: pending offline work
+//!     returns to the backlog, running requests finish, then the replica
+//!     retires with its metrics preserved.
+//!
+//! Reporting: per-replica SLO attainment and cache hit rates, plus
+//! cluster-level rollups (`Metrics::aggregate`), offline throughput over
+//! the wall horizon, router decision stats, and the replica-count timeline.
+
+pub mod replica;
+pub mod router;
+pub mod sim;
+
+pub use replica::{LoadDigest, Replica};
+pub use router::{affinity_keys, ClusterRadixIndex, Router, RouterStats};
+pub use sim::{
+    offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig, ClusterReport,
+    ClusterSim, JobSpec, OnlineJob, ReplicaReport, ScalePolicy,
+};

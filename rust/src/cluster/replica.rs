@@ -1,0 +1,166 @@
+//! One cluster member: an `Engine<SimBackend>` plus the load/KV-pressure
+//! digest it publishes to the router each sync step.
+
+use crate::config::SystemConfig;
+use crate::core::{ReqState, TaskClass};
+use crate::engine::{sim::SimBackend, Engine};
+use crate::estimator::TimeModel;
+
+/// Per-replica backend seed: replica 0 keeps the base seed unchanged, so a
+/// single-replica cluster replays exactly like a bare engine (the N=1
+/// equivalence the router tests pin down).
+pub fn replica_seed(base: u64, id: usize) -> u64 {
+    base ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// Cheap snapshot of a replica's load, published to the router each sync
+/// quantum. Everything the dispatch decision needs, nothing engine-internal.
+#[derive(Clone, Debug)]
+pub struct LoadDigest {
+    pub replica: usize,
+    /// Replica virtual clock at publication (informational: telemetry and
+    /// future staleness weighting; dispatch does not read it today).
+    pub clock: f64,
+    /// Online requests accepted but not yet running.
+    pub queued_online: usize,
+    pub running_online: usize,
+    pub running_offline: usize,
+    /// Pending offline requests in the pool (work-stealing signal).
+    pub pool_backlog: usize,
+    /// Online prefill tokens still to compute (queued prompts + running
+    /// prefill remainders) — the estimator's queue-delay feature.
+    pub pending_prefill_tokens: usize,
+    /// Online-allocatable KV headroom in blocks (free + evictable).
+    pub free_blocks: usize,
+    pub block_size: usize,
+    /// Draining replicas take no new online work.
+    pub draining: bool,
+    /// Prefix summary: content keys resident in this replica's KV cache.
+    pub cached_keys: Vec<u128>,
+}
+
+pub struct Replica {
+    pub id: usize,
+    pub engine: Engine<SimBackend>,
+    /// Scale-down in progress: no new work, finish what is running.
+    pub draining: bool,
+    /// Sim-time this replica joined the fleet (autoscaling timeline).
+    pub spawned_at: f64,
+}
+
+impl Replica {
+    pub fn new(id: usize, cfg: SystemConfig, jitter: f64, spawned_at: f64) -> Self {
+        let seed = replica_seed(cfg.seed, id);
+        let backend = SimBackend::new(TimeModel::new(cfg.time_model), seed, jitter);
+        Replica {
+            id,
+            engine: Engine::new(cfg, backend),
+            draining: false,
+            spawned_at,
+        }
+    }
+
+    /// Publish the current load digest. `summary_cap` bounds the prefix
+    /// summary size (the router's per-replica index memory).
+    pub fn digest(&self, summary_cap: usize) -> LoadDigest {
+        let e = &self.engine;
+        let mut queued_online = 0usize;
+        let mut running_online = 0usize;
+        let mut running_offline = 0usize;
+        let mut pending_prefill_tokens = 0usize;
+        for r in e.store.iter() {
+            match (r.state, r.class) {
+                (ReqState::Running, TaskClass::Online) => {
+                    running_online += 1;
+                    if r.in_prefill() {
+                        pending_prefill_tokens += r.remaining_prefill();
+                    }
+                }
+                (ReqState::Running, TaskClass::Offline) => running_offline += 1,
+                (ReqState::Queued, TaskClass::Online) => {
+                    queued_online += 1;
+                    pending_prefill_tokens += r.seq_len();
+                }
+                _ => {}
+            }
+        }
+        let avail = e.kv.availability();
+        LoadDigest {
+            replica: self.id,
+            clock: e.clock,
+            queued_online,
+            running_online,
+            running_offline,
+            pool_backlog: e.pool.len(),
+            pending_prefill_tokens,
+            free_blocks: avail.for_online(),
+            block_size: e.cfg.cache.block_size,
+            draining: self.draining,
+            cached_keys: e.kv.cached_key_sample(summary_cap),
+        }
+    }
+
+    /// True when nothing is running or pending — a draining replica in this
+    /// state can retire. Inert store entries left behind by work-stealing
+    /// (`ReqState::Queued` offline orphans) do not block retirement.
+    pub fn is_idle(&self) -> bool {
+        let e = &self.engine;
+        e.backlog_online() == 0
+            && e.pool.is_empty()
+            && e.store
+                .iter()
+                .all(|r| !matches!(r.state, ReqState::Running | ReqState::Preempted))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{PromptSpec, Request};
+
+    #[test]
+    fn replica_zero_keeps_base_seed() {
+        assert_eq!(replica_seed(42, 0), 42);
+        assert_ne!(replica_seed(42, 1), 42);
+        assert_ne!(replica_seed(42, 1), replica_seed(42, 2));
+    }
+
+    #[test]
+    fn digest_tracks_submissions() {
+        let mut rep = Replica::new(0, SystemConfig::a100_llama8b(), 0.0, 0.0);
+        assert!(rep.is_idle());
+        let d = rep.digest(usize::MAX);
+        assert_eq!(d.queued_online, 0);
+        assert_eq!(d.pool_backlog, 0);
+        assert!(d.free_blocks > 0);
+
+        let id = rep.engine.store.fresh_id();
+        rep.engine.submit_online(Request::new(
+            id,
+            TaskClass::Online,
+            1.0,
+            PromptSpec::sim(200, None),
+            8,
+        ));
+        let id2 = rep.engine.store.fresh_id();
+        rep.engine.submit_offline(Request::new(
+            id2,
+            TaskClass::Offline,
+            0.0,
+            PromptSpec::sim(300, None),
+            8,
+        ));
+        let d = rep.digest(usize::MAX);
+        assert_eq!(d.queued_online, 1);
+        assert_eq!(d.pending_prefill_tokens, 200);
+        assert_eq!(d.pool_backlog, 1);
+        assert!(!rep.is_idle());
+
+        rep.engine.run().unwrap();
+        assert!(rep.is_idle());
+        let d = rep.digest(usize::MAX);
+        assert_eq!(d.queued_online + d.running_online + d.running_offline, 0);
+        // Finished work leaves reusable cache behind — the prefix summary.
+        assert!(!d.cached_keys.is_empty());
+    }
+}

@@ -1,0 +1,437 @@
+//! Cluster router: prefix-affinity dispatch with estimator tie-breaking.
+//!
+//! The router owns a cluster-level radix index built from replica prefix
+//! summaries. Block content keys are chain hashes (each key commits to its
+//! entire prefix — see `PromptSpec::content_key`), so the index can store a
+//! flat per-replica key set and a membership walk down a request's key
+//! sequence is exactly a radix-tree descent: the walk stops at the first
+//! key the replica does not hold, and its length is the cached depth.
+//!
+//! Dispatch rule for an online arrival:
+//!   1. prefix affinity — the replica with the deepest cached prefix wins,
+//!      *unless* admitting the request there would exceed its online
+//!      KV headroom (capacity veto);
+//!   2. ties (typically depth 0) break on estimator-predicted latency
+//!      (Eq. 6-8 over the digest's queue state), then on replica id;
+//!   3. if no replica has headroom, the least-predicted-latency replica
+//!      takes the overflow (its scheduler will preempt offline work).
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::core::PromptSpec;
+use crate::estimator::{PrefillItem, TimeModel};
+
+use super::replica::LoadDigest;
+
+/// Leading content keys of `prompt` that are owner-independent (shared
+/// across requests of the same prefix group), probed with owner 0. Keys of
+/// private-tail blocks are excluded so affinity depth never overestimates.
+pub fn affinity_keys(prompt: &PromptSpec, block_size: usize) -> Vec<u128> {
+    let shareable_blocks = match (&prompt.tokens, prompt.shared_prefix) {
+        // Real tokens: every full block is content-addressed.
+        (Some(tokens), _) => tokens.len() / block_size,
+        // Sim prompts: blocks fully inside the shared region.
+        (None, Some((_, shared_len))) => shared_len / block_size,
+        (None, None) => 0,
+    };
+    let mut keys = prompt.content_keys(0, prompt.total_len, block_size);
+    keys.truncate(shareable_blocks);
+    keys
+}
+
+/// Cluster-level radix index over replica prefix summaries. Chain-hashed
+/// keys make the per-replica key set an implicit radix tree (see module
+/// docs); `cached_depth` is the descent.
+#[derive(Default)]
+pub struct ClusterRadixIndex {
+    sets: HashMap<usize, HashSet<u128>>,
+}
+
+impl ClusterRadixIndex {
+    /// Replace a replica's summary (called on digest sync).
+    pub fn update(&mut self, replica: usize, keys: &[u128]) {
+        self.sets.insert(replica, keys.iter().copied().collect());
+    }
+
+    /// Optimistically add keys a replica is about to cache (dispatch-time
+    /// update, so same-group arrivals within one sync quantum co-locate).
+    pub fn extend(&mut self, replica: usize, keys: &[u128]) {
+        self.sets.entry(replica).or_default().extend(keys.iter().copied());
+    }
+
+    pub fn remove(&mut self, replica: usize) {
+        self.sets.remove(&replica);
+    }
+
+    /// Radix descent: leading keys of `keys` the replica holds.
+    pub fn cached_depth(&self, replica: usize, keys: &[u128]) -> usize {
+        match self.sets.get(&replica) {
+            Some(set) => keys.iter().take_while(|k| set.contains(k)).count(),
+            None => 0,
+        }
+    }
+
+    pub fn total_keys(&self) -> usize {
+        self.sets.values().map(|s| s.len()).sum()
+    }
+}
+
+/// Router decision counters (cluster report).
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    pub dispatched_online: usize,
+    /// Dispatches won by a warm prefix (depth > 0).
+    pub affinity_routed: usize,
+    /// Tokens the affinity target already held at dispatch time.
+    pub predicted_hit_tokens: u64,
+    /// A warm replica lost a dispatch because its KV headroom was short.
+    pub capacity_vetoes: usize,
+    /// No replica had headroom; least-loaded took the overflow.
+    pub overflow_dispatches: usize,
+}
+
+pub struct Router {
+    pub index: ClusterRadixIndex,
+    /// Last synced digest per replica. BTreeMap: deterministic iteration
+    /// (dispatch decisions must reproduce across runs).
+    digests: BTreeMap<usize, LoadDigest>,
+    time_model: TimeModel,
+    block_size: usize,
+    pub stats: RouterStats,
+}
+
+impl Router {
+    pub fn new(time_model: TimeModel, block_size: usize) -> Self {
+        Router {
+            index: ClusterRadixIndex::default(),
+            digests: BTreeMap::new(),
+            time_model,
+            block_size,
+            stats: RouterStats::default(),
+        }
+    }
+
+    /// Absorb a freshly published digest.
+    pub fn sync(&mut self, d: LoadDigest) {
+        self.index.update(d.replica, &d.cached_keys);
+        self.digests.insert(d.replica, d);
+    }
+
+    /// Drop a retired replica.
+    pub fn forget(&mut self, replica: usize) {
+        self.index.remove(replica);
+        self.digests.remove(&replica);
+    }
+
+    pub fn digest(&self, replica: usize) -> Option<&LoadDigest> {
+        self.digests.get(&replica)
+    }
+
+    pub fn known_replicas(&self) -> impl Iterator<Item = usize> + '_ {
+        self.digests.keys().copied()
+    }
+
+    /// Estimator-predicted latency for a new arrival on this replica:
+    /// its own fresh prefill (Eq. 6, chunk-extended) queued behind the
+    /// replica's pending prefill work, plus an iteration tax per running
+    /// request (each decode round the arrival must share).
+    pub fn predicted_latency(&self, d: &LoadDigest, fresh_tokens: usize, context: usize) -> f64 {
+        let own = self.time_model.prefill_item(PrefillItem {
+            chunk: fresh_tokens.max(1),
+            context,
+        });
+        let queued = if d.pending_prefill_tokens > 0 {
+            self.time_model.prefill_item(PrefillItem {
+                chunk: d.pending_prefill_tokens,
+                context: 0,
+            })
+        } else {
+            0.0
+        };
+        let decode_tax = (d.running_online + d.running_offline) as f64 * self.time_model.cfg.c;
+        own + queued + decode_tax
+    }
+
+    /// Optimistic digest update so a burst within one sync quantum spreads
+    /// instead of piling onto a single stale-looking replica; the index
+    /// extension co-locates same-group arrivals.
+    fn note_dispatch(
+        &mut self,
+        replica: usize,
+        prompt_len: usize,
+        hit_tokens: usize,
+        fresh: usize,
+        keys: &[u128],
+    ) {
+        self.stats.dispatched_online += 1;
+        if let Some(d) = self.digests.get_mut(&replica) {
+            d.queued_online += 1;
+            d.pending_prefill_tokens += prompt_len - hit_tokens;
+            d.free_blocks = d.free_blocks.saturating_sub(fresh);
+        }
+        self.index.extend(replica, keys);
+    }
+
+    /// Affinity/latency score of one replica for one arrival:
+    /// `(depth, hit_tokens, fresh_blocks, predicted_latency)`.
+    fn score(
+        &self,
+        d: &LoadDigest,
+        keys: &[u128],
+        total_blocks: usize,
+        prompt_len: usize,
+    ) -> (usize, usize, usize, f64) {
+        let depth = self.index.cached_depth(d.replica, keys).min(total_blocks);
+        let hit_tokens = (depth * self.block_size).min(prompt_len.saturating_sub(1));
+        let fresh = total_blocks - depth;
+        let predicted = self.predicted_latency(d, prompt_len - hit_tokens, hit_tokens);
+        (depth, hit_tokens, fresh, predicted)
+    }
+
+    /// Route one online arrival; returns `(replica, predicted_hit_tokens)`.
+    /// `None` only when the router knows no replica at all.
+    pub fn route_online(&mut self, prompt: &PromptSpec) -> Option<(usize, usize)> {
+        let keys = affinity_keys(prompt, self.block_size);
+        let total_blocks = (prompt.total_len + 1).div_ceil(self.block_size);
+
+        // (depth, hit_tokens, fresh_blocks, predicted, replica)
+        let mut best_feasible: Option<(usize, usize, usize, f64, usize)> = None;
+        let mut best_any: Option<(f64, usize, usize)> = None; // (predicted, replica, fresh)
+        let mut deepest_vetoed = 0usize;
+        let mut candidates = 0usize;
+        for d in self.digests.values().filter(|d| !d.draining) {
+            candidates += 1;
+            let (depth, hit_tokens, fresh, predicted) =
+                self.score(d, &keys, total_blocks, prompt.total_len);
+            if fresh <= d.free_blocks {
+                let better = match &best_feasible {
+                    None => true,
+                    Some(&(bd, _, _, bp, _)) => {
+                        depth > bd || (depth == bd && predicted < bp)
+                    }
+                };
+                if better {
+                    best_feasible = Some((depth, hit_tokens, fresh, predicted, d.replica));
+                }
+            } else {
+                deepest_vetoed = deepest_vetoed.max(depth);
+            }
+            if best_any.map_or(true, |(bp, _, _)| predicted < bp) {
+                best_any = Some((predicted, d.replica, fresh));
+            }
+        }
+        if candidates == 0 {
+            // Only draining replicas remain (a scale-down transient, not a
+            // capacity problem): dispatch to the least-predicted-latency
+            // one without charging overflow/veto stats.
+            let mut fallback: Option<(f64, usize, usize, usize)> = None;
+            for d in self.digests.values() {
+                let (_, hit, fresh, predicted) =
+                    self.score(d, &keys, total_blocks, prompt.total_len);
+                if fallback.map_or(true, |(bp, _, _, _)| predicted < bp) {
+                    fallback = Some((predicted, d.replica, hit, fresh));
+                }
+            }
+            let (_, replica, hit_tokens, fresh) = fallback?;
+            self.note_dispatch(replica, prompt.total_len, hit_tokens, fresh, &keys);
+            return Some((replica, hit_tokens));
+        }
+
+        let (replica, hit_tokens, fresh) = match best_feasible {
+            Some((depth, hit_tokens, fresh, _, replica)) => {
+                if depth > 0 {
+                    self.stats.affinity_routed += 1;
+                    self.stats.predicted_hit_tokens += hit_tokens as u64;
+                }
+                if deepest_vetoed > depth {
+                    self.stats.capacity_vetoes += 1;
+                }
+                (replica, hit_tokens, fresh)
+            }
+            None => {
+                let (_, replica, fresh) = best_any?;
+                self.stats.overflow_dispatches += 1;
+                if deepest_vetoed > 0 {
+                    self.stats.capacity_vetoes += 1;
+                }
+                (replica, 0, fresh)
+            }
+        };
+        self.note_dispatch(replica, prompt.total_len, hit_tokens, fresh, &keys);
+        Some((replica, hit_tokens))
+    }
+
+    /// Live (non-draining) replicas ordered for offline work-stealing:
+    /// emptiest pool first, then fewest running/queued, then id.
+    pub fn steal_order(&self) -> Vec<usize> {
+        let mut ids: Vec<usize> = self
+            .digests
+            .values()
+            .filter(|d| !d.draining)
+            .map(|d| d.replica)
+            .collect();
+        ids.sort_by_key(|r| {
+            let d = &self.digests[r];
+            (
+                d.pool_backlog,
+                d.running_offline + d.running_online + d.queued_online,
+                *r,
+            )
+        });
+        ids
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn digest(replica: usize, free_blocks: usize) -> LoadDigest {
+        LoadDigest {
+            replica,
+            clock: 0.0,
+            queued_online: 0,
+            running_online: 0,
+            running_offline: 0,
+            pool_backlog: 0,
+            pending_prefill_tokens: 0,
+            free_blocks,
+            block_size: 16,
+            draining: false,
+            cached_keys: Vec::new(),
+        }
+    }
+
+    fn router() -> Router {
+        let cfg = SystemConfig::a100_llama8b();
+        Router::new(TimeModel::new(cfg.time_model), cfg.cache.block_size)
+    }
+
+    fn shared_prompt(group: u64, len: usize, shared_len: usize) -> PromptSpec {
+        PromptSpec::sim(len, Some((group, shared_len)))
+    }
+
+    #[test]
+    fn affinity_keys_exclude_private_tail() {
+        let p = shared_prompt(7, 320, 160);
+        let keys = affinity_keys(&p, 16);
+        assert_eq!(keys.len(), 10, "160 shared tokens = 10 shareable blocks");
+        let q = PromptSpec::sim(320, None);
+        assert!(affinity_keys(&q, 16).is_empty(), "no sharing, no affinity");
+    }
+
+    #[test]
+    fn warm_replica_wins() {
+        let mut r = router();
+        let p = shared_prompt(9, 480, 320);
+        let keys = affinity_keys(&p, 16);
+        let mut d0 = digest(0, 10_000);
+        d0.cached_keys = keys[..8].to_vec();
+        r.sync(d0);
+        r.sync(digest(1, 10_000));
+        let (replica, hit) = r.route_online(&p).unwrap();
+        assert_eq!(replica, 0);
+        assert_eq!(hit, 8 * 16);
+        assert_eq!(r.stats.affinity_routed, 1);
+    }
+
+    #[test]
+    fn capacity_vetoes_warm_replica() {
+        let mut r = router();
+        let p = shared_prompt(9, 480, 320);
+        let keys = affinity_keys(&p, 16);
+        // Warm but nearly out of memory: 480+1 tokens need 31 blocks,
+        // 20 cached leaves 11 fresh > 4 free.
+        let mut d0 = digest(0, 4);
+        d0.cached_keys = keys.clone();
+        r.sync(d0);
+        r.sync(digest(1, 10_000));
+        let (replica, _) = r.route_online(&p).unwrap();
+        assert_eq!(replica, 1, "warm replica must be vetoed on capacity");
+        assert_eq!(r.stats.capacity_vetoes, 1);
+    }
+
+    #[test]
+    fn cold_ties_break_on_predicted_latency() {
+        let mut r = router();
+        let mut d0 = digest(0, 10_000);
+        d0.pending_prefill_tokens = 50_000; // long queue
+        d0.running_online = 30;
+        r.sync(d0);
+        r.sync(digest(1, 10_000));
+        let p = PromptSpec::sim(300, None);
+        let (replica, hit) = r.route_online(&p).unwrap();
+        assert_eq!(replica, 1, "idle replica must win the cold tie");
+        assert_eq!(hit, 0);
+    }
+
+    #[test]
+    fn overflow_goes_to_least_loaded() {
+        let mut r = router();
+        r.sync(digest(0, 0));
+        let mut d1 = digest(1, 0);
+        d1.pending_prefill_tokens = 9_999;
+        r.sync(d1);
+        let p = PromptSpec::sim(300, None);
+        let (replica, _) = r.route_online(&p).unwrap();
+        assert_eq!(replica, 0);
+        assert_eq!(r.stats.overflow_dispatches, 1);
+    }
+
+    #[test]
+    fn optimistic_updates_spread_bursts() {
+        let mut r = router();
+        r.sync(digest(0, 10_000));
+        r.sync(digest(1, 10_000));
+        let p = PromptSpec::sim(300, None);
+        let (first, _) = r.route_online(&p).unwrap();
+        let (second, _) = r.route_online(&p).unwrap();
+        assert_ne!(first, second, "second arrival must see the first's load");
+        assert_eq!(r.stats.dispatched_online, 2);
+    }
+
+    #[test]
+    fn draining_excluded_until_last_resort() {
+        let mut r = router();
+        let mut d0 = digest(0, 10_000);
+        d0.draining = true;
+        r.sync(d0);
+        r.sync(digest(1, 10_000));
+        let p = PromptSpec::sim(100, None);
+        assert_eq!(r.route_online(&p).unwrap().0, 1);
+        // Only draining replicas left: still dispatches (exactly once).
+        r.forget(1);
+        assert_eq!(r.route_online(&p).unwrap().0, 0);
+    }
+
+    #[test]
+    fn steal_order_prefers_empty_pools() {
+        let mut r = router();
+        let mut d0 = digest(0, 100);
+        d0.pool_backlog = 50;
+        r.sync(d0);
+        r.sync(digest(1, 100));
+        let mut d2 = digest(2, 100);
+        d2.draining = true;
+        r.sync(d2);
+        assert_eq!(r.steal_order(), vec![1, 0]);
+    }
+
+    #[test]
+    fn radix_index_walks_chain_prefix() {
+        let mut idx = ClusterRadixIndex::default();
+        let p = shared_prompt(3, 640, 640);
+        let keys = affinity_keys(&p, 16);
+        idx.update(0, &keys[..5]);
+        assert_eq!(idx.cached_depth(0, &keys), 5);
+        assert_eq!(idx.cached_depth(1, &keys), 0);
+        // A different group shares no keys (chain hashes commit to prefix).
+        let q = shared_prompt(4, 640, 640);
+        assert_eq!(idx.cached_depth(0, &affinity_keys(&q, 16)), 0);
+        idx.extend(0, &keys);
+        assert_eq!(idx.cached_depth(0, &keys), keys.len());
+        idx.remove(0);
+        assert_eq!(idx.cached_depth(0, &keys), 0);
+    }
+}

@@ -1,0 +1,811 @@
+//! Cluster co-simulation driver: replays a tidal online trace against N
+//! Echo replicas behind the router, floods the offline backlog via
+//! work-stealing, and optionally autoscales the fleet with the tide.
+//!
+//! Time advances in sync quanta: each quantum the driver dispatches due
+//! arrivals through the router, advances every replica's engine to the
+//! quantum end (`Engine::run_until` caps idle jumps, so replica clocks stay
+//! aligned), republishes load digests, rebalances offline work, and
+//! evaluates the scaling policy. A single-replica cluster replays exactly
+//! like a bare engine (the N=1 equivalence test pins this down).
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::core::{PromptSpec, ReqState, Request, TaskClass};
+use crate::estimator::{PrefillItem, TimeModel};
+use crate::metrics::Metrics;
+use crate::trace::Trace;
+use crate::utils::json::Json;
+use crate::utils::rng::Rng;
+use crate::workload::DatasetSpec;
+
+use super::replica::Replica;
+use super::router::{Router, RouterStats};
+
+/// A store-independent offline work unit: replicas materialize it into
+/// their own `RequestStore` on admission, so jobs can move between the
+/// cluster backlog and any replica's pool. Prefix-group identity lives in
+/// the `PromptSpec`, so affinity survives the moves.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub prompt: PromptSpec,
+    pub max_new_tokens: usize,
+}
+
+/// One online arrival to replay (sorted by `at`).
+#[derive(Clone, Debug)]
+pub struct OnlineJob {
+    pub at: f64,
+    pub prompt: PromptSpec,
+    pub max_new_tokens: usize,
+}
+
+/// Tidal autoscaling policy. The decision reuses the deployer estimator's
+/// arithmetic (§5.4) inverted for replicas: predicted demand = trailing
+/// arrival rate × estimated per-request busy seconds (Eq. 6-8 with batch
+/// amortization), and the fleet grows until demand / replicas falls under
+/// `target_util` (scale-down only below `low_util` — a hysteresis band, the
+/// same headroom idea as the §5.3 burst reserve).
+#[derive(Clone, Debug)]
+pub struct ScalePolicy {
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Seconds of sim time between policy evaluations.
+    pub eval_period: f64,
+    /// Trailing window for the arrival-rate estimate.
+    pub rate_window: f64,
+    pub target_util: f64,
+    pub low_util: f64,
+}
+
+impl ScalePolicy {
+    /// Defaults tuned for the paper-shaped tide (≈6× peak/trough): the
+    /// fleet breathes between `min` and `max` across the day.
+    pub fn tidal(min_replicas: usize, max_replicas: usize) -> Self {
+        ScalePolicy {
+            min_replicas: min_replicas.max(1),
+            max_replicas: max_replicas.max(min_replicas.max(1)),
+            eval_period: 5.0,
+            rate_window: 30.0,
+            target_util: 0.35,
+            low_util: 0.20,
+        }
+    }
+
+    /// Replica count the policy wants given predicted demand (busy-seconds
+    /// per second) and the current fleet size.
+    pub fn required_replicas(&self, demand: f64, current: usize) -> usize {
+        let up = (demand / self.target_util).ceil() as usize;
+        let down = (demand / self.low_util).ceil() as usize;
+        let want = if up > current {
+            up
+        } else if down < current {
+            down
+        } else {
+            current
+        };
+        want.clamp(self.min_replicas, self.max_replicas)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Per-replica system config (`seed` also seeds the replica backends).
+    pub base: SystemConfig,
+    /// Initial fleet size.
+    pub replicas: usize,
+    /// Router/digest sync quantum, seconds of sim time.
+    pub sync_dt: f64,
+    /// Refill a replica's pool from the backlog when it drops below this.
+    pub steal_low_water: usize,
+    /// Jobs moved per steal.
+    pub steal_batch: usize,
+    /// Prefix-summary size cap per digest.
+    pub summary_cap: usize,
+    /// Backend execution-time jitter (0 = deterministic).
+    pub jitter: f64,
+    pub scale: Option<ScalePolicy>,
+}
+
+impl ClusterConfig {
+    pub fn new(base: SystemConfig, replicas: usize) -> Self {
+        // Default prefix-summary cap = the config's whole cache: a resident
+        // block is one key, so this never truncates (truncation degrades
+        // affinity depth — see `KvManager::cached_key_sample`) while still
+        // bounding digest memory by the cache size.
+        let summary_cap = base.capacity_blocks();
+        ClusterConfig {
+            base,
+            replicas: replicas.max(1),
+            sync_dt: 0.25,
+            steal_low_water: 8,
+            steal_batch: 16,
+            summary_cap,
+            jitter: 0.02,
+            scale: None,
+        }
+    }
+}
+
+/// Per-replica outcome (live replicas report `retired_at: None`).
+#[derive(Clone, Debug)]
+pub struct ReplicaReport {
+    pub replica: usize,
+    pub spawned_at: f64,
+    pub retired_at: Option<f64>,
+    pub online_completed: usize,
+    pub offline_completed: usize,
+    pub offline_billed_tokens: u64,
+    pub ttft_attainment: f64,
+    pub token_attainment: f64,
+    pub hit_ratio: f64,
+    pub lookup_blocks: u64,
+    pub hit_blocks: u64,
+    pub busy_time: f64,
+    pub preemptions: usize,
+    /// Full metrics rollup source (feeds `Metrics::aggregate`).
+    pub metrics: Metrics,
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub horizon: f64,
+    pub replicas: Vec<ReplicaReport>,
+    /// Cluster-wide rollup (`Metrics::aggregate` over every replica that
+    /// ever served, including retired ones).
+    pub aggregate: Metrics,
+    /// Billed offline tokens per second of *wall* horizon (the cluster's
+    /// delivered batch-API throughput, not per-GPU-busy-second).
+    pub offline_throughput: f64,
+    pub online_attainment: (f64, f64),
+    /// Pooled prefix-cache hit rate across the fleet.
+    pub cluster_hit_ratio: f64,
+    pub router: RouterStats,
+    /// (time, live replicas) after each sync quantum.
+    pub timeline: Vec<(f64, usize)>,
+    pub peak_replicas: usize,
+    pub mean_replicas: f64,
+    /// Offline jobs still undispatched at the horizon.
+    pub backlog_remaining: usize,
+}
+
+impl ClusterReport {
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("replica", r.replica)
+                    .set("spawned_at", r.spawned_at)
+                    .set("retired_at", r.retired_at.map(Json::Num).unwrap_or(Json::Null))
+                    .set("online_completed", r.online_completed)
+                    .set("offline_completed", r.offline_completed)
+                    .set("offline_billed_tokens", r.offline_billed_tokens)
+                    .set("ttft_attainment", r.ttft_attainment)
+                    .set("token_attainment", r.token_attainment)
+                    .set("hit_ratio", r.hit_ratio)
+                    .set("busy_time", r.busy_time)
+                    .set("preemptions", r.preemptions)
+            })
+            .collect();
+        let timeline: Vec<Json> = self
+            .timeline
+            .iter()
+            .map(|&(t, n)| Json::Arr(vec![Json::Num(t), Json::Num(n as f64)]))
+            .collect();
+        Json::obj()
+            .set("horizon", self.horizon)
+            .set("replicas", Json::Arr(rows))
+            .set("offline_throughput_tok_s", self.offline_throughput)
+            .set("ttft_attainment", self.online_attainment.0)
+            .set("token_attainment", self.online_attainment.1)
+            .set("cluster_hit_ratio", self.cluster_hit_ratio)
+            .set("dispatched_online", self.router.dispatched_online)
+            .set("affinity_routed", self.router.affinity_routed)
+            .set("predicted_hit_tokens", self.router.predicted_hit_tokens)
+            .set("capacity_vetoes", self.router.capacity_vetoes)
+            .set("overflow_dispatches", self.router.overflow_dispatches)
+            .set("peak_replicas", self.peak_replicas)
+            .set("mean_replicas", self.mean_replicas)
+            .set("backlog_remaining", self.backlog_remaining)
+            .set("timeline", Json::Arr(timeline))
+    }
+}
+
+pub struct ClusterSim {
+    pub cfg: ClusterConfig,
+    pub replicas: Vec<Replica>,
+    pub router: Router,
+    /// Cluster-level offline backlog replicas steal from.
+    pub backlog: VecDeque<JobSpec>,
+    retired: Vec<ReplicaReport>,
+    next_replica_id: usize,
+    timeline: Vec<(f64, usize)>,
+    /// (arrival, estimated busy-seconds) of recent dispatches — the
+    /// autoscaler's demand window.
+    rate_window: VecDeque<(f64, f64)>,
+    service_model: TimeModel,
+}
+
+impl ClusterSim {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        let service_model = TimeModel::new(cfg.base.time_model);
+        let router = Router::new(service_model, cfg.base.cache.block_size);
+        let mut sim = ClusterSim {
+            replicas: Vec::new(),
+            router,
+            backlog: VecDeque::new(),
+            retired: Vec::new(),
+            next_replica_id: 0,
+            timeline: Vec::new(),
+            rate_window: VecDeque::new(),
+            service_model,
+            cfg,
+        };
+        for _ in 0..sim.cfg.replicas {
+            sim.spawn_replica(0.0);
+        }
+        sim
+    }
+
+    /// Queue offline jobs on the cluster backlog (work-stealing feeds them
+    /// to replicas).
+    pub fn submit_offline_backlog(&mut self, jobs: impl IntoIterator<Item = JobSpec>) {
+        self.backlog.extend(jobs);
+    }
+
+    pub fn active_replicas(&self) -> usize {
+        self.replicas.iter().filter(|r| !r.draining).count()
+    }
+
+    fn spawn_replica(&mut self, now: f64) {
+        let id = self.next_replica_id;
+        self.next_replica_id += 1;
+        let mut rep = Replica::new(id, self.cfg.base.clone(), self.cfg.jitter, now);
+        // Join at cluster time: a mid-run spawn must not execute work "in
+        // the past" (its virtual seconds would inflate fleet throughput).
+        rep.engine.clock = now;
+        self.router.sync(rep.digest(self.cfg.summary_cap));
+        self.replicas.push(rep);
+    }
+
+    fn replica_mut(&mut self, id: usize) -> &mut Replica {
+        self.replicas
+            .iter_mut()
+            .find(|r| r.id == id)
+            .expect("router routed to an unknown replica")
+    }
+
+    fn pool_len(&self, id: usize) -> usize {
+        self.replicas
+            .iter()
+            .find(|r| r.id == id)
+            .map_or(0, |r| r.engine.pool.len())
+    }
+
+    // Digest publication is a full snapshot per replica per quantum (store
+    // scan + cached-key copy). That is the same O(store) the scheduler
+    // already pays every iteration, so it is not the sim's bottleneck, but
+    // delta summaries are the obvious next step if sync_dt ever shrinks
+    // (see DESIGN.md open follow-ups).
+    fn sync_router(&mut self) {
+        for rep in &self.replicas {
+            self.router.sync(rep.digest(self.cfg.summary_cap));
+        }
+    }
+
+    fn submit_offline_to(&mut self, id: usize, job: JobSpec) {
+        let rep = self.replica_mut(id);
+        let arrival = rep.engine.clock;
+        let rid = rep.engine.store.fresh_id();
+        rep.engine.submit_offline(Request::new(
+            rid,
+            TaskClass::Offline,
+            arrival,
+            job.prompt,
+            job.max_new_tokens,
+        ));
+    }
+
+    /// Pull a request out of a replica's pool and back into a [`JobSpec`].
+    /// The donor's store keeps an inert `Queued` entry (stores have no
+    /// removal); reports count completions via metrics, so it is harmless.
+    /// Preempted victims are demoted to `Queued` too — otherwise a stolen
+    /// preempted request would block `Replica::is_idle` (and retirement)
+    /// forever. A stolen preempted request restarts from scratch on the
+    /// thief (recompute semantics, like preemption itself).
+    fn extract_jobs(&mut self, id: usize, n: usize) -> Vec<JobSpec> {
+        let rep = self.replica_mut(id);
+        let victims = rep.engine.pool.steal_candidates(n);
+        let block_size = rep.engine.cfg.cache.block_size;
+        let mut jobs = Vec::with_capacity(victims.len());
+        for rid in victims {
+            let (prompt, out, keys) = {
+                let r = rep.engine.store.get(rid);
+                (
+                    r.prompt.clone(),
+                    r.max_new_tokens,
+                    r.prompt.content_keys(rid, r.prompt.total_len, block_size),
+                )
+            };
+            rep.engine.pool.remove(rid, prompt.total_len);
+            rep.engine.kv.unregister_future(&keys);
+            rep.engine.store.get_mut(rid).state = ReqState::Queued;
+            jobs.push(JobSpec {
+                prompt,
+                max_new_tokens: out,
+            });
+        }
+        jobs
+    }
+
+    /// Offline load balancing: least-loaded replicas pull from the cluster
+    /// backlog until their pool reaches the low-water mark; when the
+    /// backlog is dry, a starved replica steals half the fattest pool.
+    fn work_steal(&mut self) {
+        let order = self.router.steal_order();
+        for &rid in &order {
+            while !self.backlog.is_empty() && self.pool_len(rid) < self.cfg.steal_low_water {
+                let take = self.cfg.steal_batch.min(self.backlog.len());
+                for _ in 0..take {
+                    let job = self.backlog.pop_front().expect("checked non-empty");
+                    self.submit_offline_to(rid, job);
+                }
+            }
+        }
+        if !self.backlog.is_empty() {
+            return;
+        }
+        // Backlog dry: rebalance pools toward a starved replica.
+        let Some(&thief) = order.first() else { return };
+        if self.pool_len(thief) > 0 {
+            return;
+        }
+        let victim = order
+            .iter()
+            .copied()
+            .filter(|&r| r != thief)
+            .max_by_key(|&r| (self.pool_len(r), r));
+        let Some(victim) = victim else { return };
+        let victim_len = self.pool_len(victim);
+        if victim_len < 2 {
+            return;
+        }
+        let n = (victim_len / 2).min(self.cfg.steal_batch).max(1);
+        let jobs = self.extract_jobs(victim, n);
+        for job in jobs {
+            self.submit_offline_to(thief, job);
+        }
+    }
+
+    /// Estimated busy-seconds one online request costs the fleet: fresh
+    /// prefill (Eq. 6) plus its share of decode iterations (Eq. 7 amortized
+    /// over a half-full batch — decode cost is per *batch*, not per item).
+    fn service_estimate(&self, prompt_len: usize, out_len: usize) -> f64 {
+        let tm = &self.service_model;
+        let prefill = tm.prefill_item(PrefillItem {
+            chunk: prompt_len.max(1),
+            context: 0,
+        });
+        let ctx = prompt_len + out_len / 2;
+        let batch = (self.cfg.base.scheduler.max_batch / 2).max(1) as f64;
+        let decode = out_len as f64 * (tm.cfg.gamma + tm.cfg.delta) * ctx as f64 / batch;
+        prefill + decode
+    }
+
+    fn evaluate_scaling(&mut self, policy: &ScalePolicy, now: f64) {
+        while matches!(self.rate_window.front(), Some(&(t, _)) if t < now - policy.rate_window) {
+            self.rate_window.pop_front();
+        }
+        let window = policy.rate_window.min(now).max(1e-9);
+        let demand: f64 = self.rate_window.iter().map(|&(_, s)| s).sum::<f64>() / window;
+        let current = self.active_replicas();
+        let want = policy.required_replicas(demand, current);
+        if want > current {
+            // Un-drain first (cheapest capacity: caches still warm), then
+            // spawn cold replicas.
+            let mut needed = want - current;
+            for rep in &mut self.replicas {
+                if needed == 0 {
+                    break;
+                }
+                if rep.draining {
+                    rep.draining = false;
+                    needed -= 1;
+                }
+            }
+            for _ in 0..needed {
+                self.spawn_replica(now);
+            }
+            self.sync_router();
+        } else if want < current {
+            // Drain the newest replicas (coldest caches) first.
+            let to_drain = current - want;
+            let mut ids: Vec<usize> = self
+                .replicas
+                .iter()
+                .filter(|r| !r.draining)
+                .map(|r| r.id)
+                .collect();
+            ids.sort_unstable_by(|a, b| b.cmp(a));
+            for id in ids.into_iter().take(to_drain) {
+                self.replica_mut(id).draining = true;
+                // Its pending offline work goes back to the shared backlog.
+                let jobs = self.extract_jobs(id, usize::MAX);
+                self.backlog.extend(jobs);
+            }
+            self.sync_router();
+        }
+    }
+
+    fn retire_drained(&mut self, now: f64) {
+        let slo = self.cfg.base.slo;
+        let mut retiring: Vec<usize> = Vec::new();
+        for rep in &self.replicas {
+            if rep.draining && rep.is_idle() {
+                retiring.push(rep.id);
+            }
+        }
+        for id in retiring {
+            let pos = self
+                .replicas
+                .iter()
+                .position(|r| r.id == id)
+                .expect("retiring id is live");
+            let rep = self.replicas.remove(pos);
+            self.router.forget(id);
+            self.retired
+                .push(replica_report(&rep, Some(now), &slo));
+        }
+    }
+
+    /// Replay `online` (sorted by arrival) against the fleet until
+    /// `horizon` (sim seconds), then report.
+    pub fn run(&mut self, online: &[OnlineJob], horizon: f64) -> Result<ClusterReport> {
+        debug_assert!(
+            online.windows(2).all(|w| w[0].at <= w[1].at),
+            "online jobs must be sorted by arrival"
+        );
+        // t = 0 sync: flood pools from the backlog before the first step.
+        self.sync_router();
+        self.work_steal();
+
+        let mut idx = 0usize;
+        let mut t = 0.0;
+        let mut next_eval = 0.0;
+        while t < horizon {
+            let t_end = (t + self.cfg.sync_dt).min(horizon);
+
+            // 1. dispatch arrivals due in (t, t_end]
+            while idx < online.len() && online[idx].at <= t_end {
+                let job = &online[idx];
+                idx += 1;
+                let Some((rid, _hit)) = self.router.route_online(&job.prompt) else {
+                    continue; // no replicas at all (cannot happen with min >= 1)
+                };
+                if self.cfg.scale.is_some() {
+                    let service =
+                        self.service_estimate(job.prompt.total_len, job.max_new_tokens);
+                    self.rate_window.push_back((job.at, service));
+                }
+                let rep = self.replica_mut(rid);
+                let id = rep.engine.store.fresh_id();
+                rep.engine.submit_online(Request::new(
+                    id,
+                    TaskClass::Online,
+                    job.at,
+                    job.prompt.clone(),
+                    job.max_new_tokens,
+                ));
+            }
+
+            // 2. advance every replica to the quantum end. A replica whose
+            // clock lags the quantum start sat idle in cluster time (its
+            // run_until returned early with nothing runnable): fast-forward
+            // it so work it receives now executes at cluster time rather
+            // than burning the lag as phantom busy-seconds. Observationally
+            // identical for a bare engine (nothing runs while idle), so
+            // N=1 equivalence is preserved.
+            for rep in &mut self.replicas {
+                if rep.engine.clock < t {
+                    rep.engine.clock = t;
+                }
+                rep.engine.run_until(t_end)?;
+            }
+
+            // 3. republish digests, retire drained fleet members
+            self.sync_router();
+            self.retire_drained(t_end);
+
+            // 4. offline work-stealing
+            self.work_steal();
+
+            // 5. autoscaling
+            if let Some(policy) = self.cfg.scale.clone() {
+                if t_end >= next_eval {
+                    self.evaluate_scaling(&policy, t_end);
+                    next_eval = t_end + policy.eval_period;
+                }
+            }
+
+            self.timeline.push((t_end, self.active_replicas()));
+            t = t_end;
+        }
+        Ok(self.report(horizon))
+    }
+
+    fn report(&self, horizon: f64) -> ClusterReport {
+        let slo = self.cfg.base.slo;
+        let mut reps: Vec<ReplicaReport> = self.retired.clone();
+        for rep in &self.replicas {
+            reps.push(replica_report(rep, None, &slo));
+        }
+        reps.sort_by_key(|r| r.replica);
+        let aggregate = Metrics::aggregate(reps.iter().map(|r| &r.metrics));
+        let online_attainment = aggregate.slo_attainment(&slo);
+        let lookups: u64 = reps.iter().map(|r| r.lookup_blocks).sum();
+        let hits: u64 = reps.iter().map(|r| r.hit_blocks).sum();
+        let peak = self.timeline.iter().map(|&(_, n)| n).max().unwrap_or(0);
+        let mean = if self.timeline.is_empty() {
+            self.active_replicas() as f64
+        } else {
+            self.timeline.iter().map(|&(_, n)| n as f64).sum::<f64>()
+                / self.timeline.len() as f64
+        };
+        ClusterReport {
+            horizon,
+            offline_throughput: aggregate.offline_billed_tokens as f64 / horizon.max(1e-9),
+            online_attainment,
+            cluster_hit_ratio: if lookups == 0 {
+                0.0
+            } else {
+                hits as f64 / lookups as f64
+            },
+            router: self.router.stats.clone(),
+            timeline: self.timeline.clone(),
+            peak_replicas: peak,
+            mean_replicas: mean,
+            backlog_remaining: self.backlog.len(),
+            aggregate,
+            replicas: reps,
+        }
+    }
+}
+
+fn replica_report(rep: &Replica, retired_at: Option<f64>, slo: &crate::core::Slo) -> ReplicaReport {
+    let m = &rep.engine.metrics;
+    let (ttft_attainment, token_attainment) = m.slo_attainment(slo);
+    ReplicaReport {
+        replica: rep.id,
+        spawned_at: rep.spawned_at,
+        retired_at,
+        online_completed: m.online_completed,
+        offline_completed: m.offline_completed,
+        offline_billed_tokens: m.offline_billed_tokens,
+        ttft_attainment,
+        token_attainment,
+        hit_ratio: rep.engine.kv.stats.hit_ratio(),
+        lookup_blocks: rep.engine.kv.stats.lookup_blocks,
+        hit_blocks: rep.engine.kv.stats.hit_blocks,
+        busy_time: m.busy_time,
+        preemptions: m.preemptions,
+        metrics: m.clone(),
+    }
+}
+
+// ---- workload builders (shared by the CLI, figures, and examples) --------
+
+/// Online mix for the cluster drivers: ShareGPT-scale turns with heavy
+/// session-prefix reuse (multi-turn context and shared system prompts) —
+/// the online trait that makes prefix-affinity routing matter. With 60% of
+/// a ~308-token prompt shared per session group, affinity walks reach
+/// ~11 blocks deep on a warm replica.
+pub fn online_session_spec() -> DatasetSpec {
+    DatasetSpec {
+        name: "Online session-prefix",
+        shared_frac: 0.6,
+        group_size: 8,
+        ..DatasetSpec::sharegpt()
+    }
+}
+
+/// Online jobs from a trace with a dataset's prompt/output marginals *and*
+/// its prefix-group topology (reuses `workload::synthesize`, so
+/// `shared_frac`/`group_size` are honored — affinity routing only has work
+/// to do if online prompts actually share prefixes). Group members are
+/// shuffled across the tide so locality must be recovered by the router.
+pub fn online_jobs_from_trace(trace: &Trace, spec: &DatasetSpec, seed: u64) -> Vec<OnlineJob> {
+    let mut store = crate::core::RequestStore::new();
+    let mut rng = Rng::new(seed);
+    let batch = crate::workload::synthesize(
+        spec,
+        trace.len(),
+        TaskClass::Online,
+        0.0,
+        &mut store,
+        &mut rng,
+    );
+    let mut ids = batch.ids;
+    rng.shuffle(&mut ids);
+    trace
+        .arrivals
+        .iter()
+        .zip(ids)
+        .map(|(&at, id)| {
+            let r = store.get(id);
+            OnlineJob {
+                at,
+                prompt: r.prompt.clone(),
+                max_new_tokens: r.max_new_tokens,
+            }
+        })
+        .collect()
+}
+
+/// Offline backlog with the dataset's prefix-group topology, shuffled so
+/// FCFS order interleaves groups (locality must be *recovered* by the
+/// KV-aware selector and the router's affinity, like §4.1's R2/R5 example).
+pub fn offline_jobs(spec: &DatasetSpec, n: usize, seed: u64) -> Vec<JobSpec> {
+    let mut store = crate::core::RequestStore::new();
+    let mut rng = Rng::new(seed);
+    let batch = crate::workload::synthesize(spec, n, TaskClass::Offline, 0.0, &mut store, &mut rng);
+    let mut jobs: Vec<JobSpec> = batch
+        .ids
+        .iter()
+        .map(|&id| {
+            let r = store.get(id);
+            JobSpec {
+                prompt: r.prompt.clone(),
+                max_new_tokens: r.max_new_tokens,
+            }
+        })
+        .collect();
+    rng.shuffle(&mut jobs);
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceConfig;
+
+    fn small_cfg() -> ClusterConfig {
+        let mut base = SystemConfig::a100_llama8b();
+        base.cache.capacity_tokens = 30_000;
+        base.scheduler.max_batch = 16;
+        ClusterConfig::new(base, 2)
+    }
+
+    fn tiny_online(n: usize, dt: f64) -> Vec<OnlineJob> {
+        (0..n)
+            .map(|i| OnlineJob {
+                at: 0.5 + i as f64 * dt,
+                prompt: PromptSpec::sim(200 + (i % 5) * 40, None),
+                max_new_tokens: 8 + (i % 4) * 4,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn cluster_completes_mixed_load() {
+        let mut sim = ClusterSim::new(small_cfg());
+        let jobs = offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 24, 7);
+        let n_jobs = jobs.len();
+        sim.submit_offline_backlog(jobs);
+        let online = tiny_online(30, 1.0);
+        let report = sim.run(&online, 120.0).unwrap();
+        assert_eq!(report.router.dispatched_online, 30);
+        assert_eq!(report.aggregate.online_completed, 30);
+        assert_eq!(report.aggregate.offline_completed, n_jobs);
+        assert_eq!(report.backlog_remaining, 0);
+        assert!(report.offline_throughput > 0.0);
+        assert!(report.online_attainment.0 >= 0.9);
+        for rep in &sim.replicas {
+            rep.engine.kv.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn work_stealing_spreads_backlog() {
+        let mut sim = ClusterSim::new(small_cfg());
+        sim.submit_offline_backlog(offline_jobs(
+            &DatasetSpec::loogle_qa_short().scaled(0.05),
+            40,
+            9,
+        ));
+        let report = sim.run(&[], 60.0).unwrap();
+        // Both replicas must have served offline work.
+        let served: Vec<usize> = report
+            .replicas
+            .iter()
+            .map(|r| r.offline_completed)
+            .collect();
+        assert!(
+            served.iter().all(|&c| c > 0),
+            "both replicas serve offline work: {served:?}"
+        );
+        assert_eq!(served.iter().sum::<usize>(), 40);
+    }
+
+    #[test]
+    fn deterministic_cluster_runs() {
+        let run = || {
+            let mut sim = ClusterSim::new(small_cfg());
+            sim.submit_offline_backlog(offline_jobs(
+                &DatasetSpec::toolbench().scaled(0.1),
+                30,
+                11,
+            ));
+            let online = tiny_online(40, 0.7);
+            let r = sim.run(&online, 90.0).unwrap();
+            (
+                r.aggregate.iterations,
+                r.aggregate.offline_tokens_out,
+                r.router.dispatched_online,
+                r.router.affinity_routed,
+                r.cluster_hit_ratio.to_bits(),
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn session_prefix_online_mix_exercises_affinity() {
+        let mut sim = ClusterSim::new(small_cfg());
+        let trace = Trace::generate(&TraceConfig::compressed(90.0, 3.0, 8));
+        let online = online_jobs_from_trace(&trace, &online_session_spec(), 8);
+        let n = online.len();
+        let report = sim.run(&online, 90.0).unwrap();
+        assert_eq!(report.router.dispatched_online, n);
+        assert!(
+            report.router.affinity_routed > 0,
+            "session groups must trigger warm-prefix routing"
+        );
+        assert!(report.router.predicted_hit_tokens > 0);
+    }
+
+    #[test]
+    fn autoscaler_follows_the_tide() {
+        let mut cfg = small_cfg();
+        cfg.replicas = 1;
+        cfg.scale = Some(ScalePolicy {
+            eval_period: 5.0,
+            rate_window: 20.0,
+            ..ScalePolicy::tidal(1, 4)
+        });
+        let mut sim = ClusterSim::new(cfg);
+        let trace = Trace::generate(&TraceConfig::compressed(240.0, 6.0, 5));
+        let online = online_jobs_from_trace(&trace, &DatasetSpec::sharegpt(), 5);
+        let report = sim.run(&online, 240.0).unwrap();
+        assert!(
+            report.peak_replicas > 1,
+            "peak load must trigger scale-up (peak {})",
+            report.peak_replicas
+        );
+        assert!(
+            report.mean_replicas < report.peak_replicas as f64,
+            "the fleet must breathe: mean {} vs peak {}",
+            report.mean_replicas,
+            report.peak_replicas
+        );
+        assert_eq!(report.router.dispatched_online, online.len());
+    }
+
+    #[test]
+    fn scale_policy_hysteresis() {
+        let p = ScalePolicy::tidal(1, 8);
+        // demand 1.0 busy-s/s at target 0.35 → 3 replicas
+        assert_eq!(p.required_replicas(1.0, 1), 3);
+        // holding zone: neither up (ceil(1.0/0.35)=3) nor down (ceil(1.0/0.2)=5 > 3)
+        assert_eq!(p.required_replicas(1.0, 3), 3);
+        assert_eq!(p.required_replicas(1.0, 4), 4, "inside the hysteresis band");
+        // collapse when demand drops
+        assert_eq!(p.required_replicas(0.05, 6), 1);
+        // clamped
+        assert_eq!(p.required_replicas(10.0, 1), 8);
+    }
+}

@@ -8,6 +8,7 @@
 //!   * `PjrtBackend` (runtime feature) — real EchoLM steps through the
 //!     PJRT CPU client, proving L1-L3 compose.
 
+#[cfg(feature = "runtime")]
 pub mod pjrt;
 pub mod sim;
 
@@ -54,6 +55,11 @@ pub struct Engine<B: ExecutionBackend> {
     sample: SampleCtl,
     /// Hard stop against pathological loops; generous (24 h at 10 ms/iter).
     pub max_iterations: usize,
+    /// Ceiling for idle-time jumps: when the engine is idle it fast-forwards
+    /// to the next arrival, but never past this cap. `run_until` pins it to
+    /// the deadline so co-simulated engines (cluster replicas stepped in
+    /// sync quanta) stay time-aligned instead of overshooting the quantum.
+    clock_cap: f64,
 }
 
 impl<B: ExecutionBackend> Engine<B> {
@@ -84,6 +90,7 @@ impl<B: ExecutionBackend> Engine<B> {
             arrivals: VecDeque::new(),
             sample: SampleCtl::new(0.0),
             max_iterations: 10_000_000,
+            clock_cap: f64::INFINITY,
             cfg,
         }
     }
@@ -195,9 +202,9 @@ impl<B: ExecutionBackend> Engine<B> {
         }
 
         if outcome.plan.is_empty() {
-            // Idle: jump to the next arrival if any.
+            // Idle: jump to the next arrival if any (never past the cap).
             if let Some(&(t, _)) = self.arrivals.front() {
-                self.clock = self.clock.max(t);
+                self.clock = self.clock.max(t.min(self.clock_cap));
                 return Ok(true);
             }
             // No arrivals and nothing runnable. Any requests stuck in the
@@ -301,19 +308,38 @@ impl<B: ExecutionBackend> Engine<B> {
         Ok(true)
     }
 
-    /// Run until idle or `deadline` (sim clock), whichever first.
+    /// Online requests accepted but not yet running (future arrivals plus
+    /// the admission queue) — part of the cluster load digest.
+    pub fn backlog_online(&self) -> usize {
+        self.arrivals.len() + self.online_queue.len()
+    }
+
+    /// Run until idle or `deadline` (sim clock), whichever first. Idle
+    /// fast-forwards are capped at the deadline, so repeated `run_until`
+    /// calls over consecutive quanta replay exactly like one long call.
     pub fn run_until(&mut self, deadline: f64) -> anyhow::Result<()> {
+        let prev_cap = self.clock_cap;
+        self.clock_cap = self.clock_cap.min(deadline);
         let mut iters = 0usize;
-        while self.clock < deadline {
-            if !self.step()? {
-                break;
+        let result = loop {
+            if self.clock >= deadline {
+                break Ok(());
+            }
+            match self.step() {
+                Ok(true) => {}
+                Ok(false) => break Ok(()),
+                Err(e) => break Err(e),
             }
             iters += 1;
             if iters >= self.max_iterations {
-                anyhow::bail!("engine exceeded max_iterations {}", self.max_iterations);
+                break Err(anyhow::anyhow!(
+                    "engine exceeded max_iterations {}",
+                    self.max_iterations
+                ));
             }
-        }
-        Ok(())
+        };
+        self.clock_cap = prev_cap;
+        result
     }
 
     /// Run to completion of all submitted work.

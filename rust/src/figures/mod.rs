@@ -71,7 +71,8 @@ pub struct RunResult {
 /// Offline backlog sized so it outlasts the horizon for every dataset,
 /// even when prefix caching accelerates requests ~10x (§7.2 submits the
 /// whole backlog up front; a drained pool would cap measured throughput).
-fn backlog_size(spec: &DatasetSpec, horizon: f64) -> usize {
+/// Shared with the `simulate`/`cluster` CLI auto-sizing.
+pub fn backlog_size(spec: &DatasetSpec, horizon: f64) -> usize {
     let per_req = (spec.mean_prompt as f64 / 9_500.0).max(0.02);
     let cache_boost = if spec.shared_frac > 0.5 { 10.0 } else { 1.5 };
     ((horizon / per_req) * cache_boost) as usize + 64
@@ -576,6 +577,132 @@ pub fn ablation_budget(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
         &rows,
     );
     Ok((text, Json::obj().set("rows", Json::Arr(jrows))))
+}
+
+// ------------------------------------------------------- Cluster scaling
+
+/// Cluster co-serving figure (beyond the paper, toward the ROADMAP's
+/// production scale): the same tidal trace replayed against fleets of 1, 2,
+/// and 4 replicas plus one tidally-autoscaled fleet. Reports per-fleet SLO
+/// attainment, delivered offline throughput, cluster cache-hit rate, and
+/// the autoscaler's replica-count timeline against the arrival tide.
+pub fn fig_cluster(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
+    use crate::cluster::{
+        offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig, ClusterSim,
+        ScalePolicy,
+    };
+    let spec = DatasetSpec::loogle_qa_short();
+    let trace = Trace::generate(&TraceConfig::compressed(
+        opts.horizon,
+        opts.mean_rate,
+        opts.seed,
+    ));
+    // Session-prefix online mix: affinity routing needs shared prefixes.
+    let online = online_jobs_from_trace(&trace, &online_session_spec(), opts.seed ^ 0x00ff);
+
+    // `fleet_cap` = the largest replica count the run can reach; the
+    // backlog must outlast the horizon even at that size, or throughput is
+    // capped by starvation instead of capacity.
+    let run = |n: usize, fleet_cap: usize, scale: Option<ScalePolicy>| {
+        let mut base = SystemConfig::a100_llama8b();
+        base.seed = opts.seed;
+        let mut cc = ClusterConfig::new(base, n);
+        cc.scale = scale;
+        let mut sim = ClusterSim::new(cc);
+        let n_jobs = backlog_size(&spec, opts.horizon) * fleet_cap;
+        sim.submit_offline_backlog(offline_jobs(&spec, n_jobs, opts.seed ^ 0x0ff0));
+        sim.run(&online, opts.horizon)
+    };
+
+    let mut rows = Vec::new();
+    let mut jrows = Vec::new();
+    let mut record = |label: String, r: &crate::cluster::ClusterReport| {
+        rows.push(vec![
+            label.clone(),
+            format!("{:.1}%", r.online_attainment.0 * 100.0),
+            format!("{:.1}%", r.online_attainment.1 * 100.0),
+            format!("{:.0}", r.offline_throughput),
+            format!("{:.1}%", r.cluster_hit_ratio * 100.0),
+            format!("{:.1}%", {
+                let d = r.router.dispatched_online.max(1);
+                r.router.affinity_routed as f64 / d as f64 * 100.0
+            }),
+            format!("{:.2}", r.mean_replicas),
+        ]);
+        jrows.push(
+            Json::obj()
+                .set("fleet", label)
+                .set("ttft_attainment", r.online_attainment.0)
+                .set("token_attainment", r.online_attainment.1)
+                .set("offline_throughput_tok_s", r.offline_throughput)
+                .set("cluster_hit_ratio", r.cluster_hit_ratio)
+                .set("affinity_routed", r.router.affinity_routed)
+                .set("capacity_vetoes", r.router.capacity_vetoes)
+                .set("mean_replicas", r.mean_replicas)
+                .set("peak_replicas", r.peak_replicas),
+        );
+    };
+
+    for n in [1usize, 2, 4] {
+        let r = run(n, n, None)?;
+        record(format!("fixed x{n}"), &r);
+    }
+    let auto_start = 1usize;
+    let auto = run(auto_start, 4, Some(ScalePolicy::tidal(auto_start, 4)))?;
+    record("autoscaled 1-4".to_string(), &auto);
+
+    let mut text = ascii::table(
+        "Cluster: tidal trace vs fleet size (prefix-affinity router + \
+         offline work-stealing)",
+        &[
+            "Fleet", "TTFT att.", "token att.", "off. tok/s", "hit ratio",
+            "affinity", "mean N",
+        ],
+        &rows,
+    );
+
+    // Autoscaler timeline vs the arrival tide.
+    let bins = 96;
+    let rate = trace.rate_series(opts.horizon, bins);
+    let max_rate = rate.iter().cloned().fold(1e-9, f64::max);
+    let rate_norm: Vec<f64> = rate.iter().map(|r| r / max_rate).collect();
+    let mut fleet = vec![0.0; bins];
+    let w = opts.horizon / bins as f64;
+    let mut cur = auto_start as f64;
+    let mut ti = 0usize;
+    for (b, slot) in fleet.iter_mut().enumerate() {
+        let t_bin = (b as f64 + 1.0) * w;
+        while ti < auto.timeline.len() && auto.timeline[ti].0 <= t_bin {
+            cur = auto.timeline[ti].1 as f64;
+            ti += 1;
+        }
+        *slot = cur;
+    }
+    let peak = auto.peak_replicas.max(1) as f64;
+    let fleet_norm: Vec<f64> = fleet.iter().map(|n| n / peak).collect();
+    text.push_str(&ascii::line_plot(
+        &format!(
+            "Cluster autoscaling: replicas (peak {}) track the tide \
+             (normalized)",
+            auto.peak_replicas
+        ),
+        &[("arrival rate", &rate_norm), ("replicas", &fleet_norm)],
+        10,
+        "normalized",
+    ));
+    let j = Json::obj()
+        .set("rows", Json::Arr(jrows))
+        .set(
+            "autoscale_timeline",
+            Json::Arr(
+                auto.timeline
+                    .iter()
+                    .map(|&(t, n)| Json::Arr(vec![Json::Num(t), Json::Num(n as f64)]))
+                    .collect(),
+            ),
+        )
+        .set("rate_bins", rate);
+    Ok((text, j))
 }
 
 #[cfg(test)]

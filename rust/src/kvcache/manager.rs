@@ -194,6 +194,29 @@ impl KvManager {
             .count()
     }
 
+    /// Content keys of all resident (pinned or reusable) blocks — the
+    /// prefix summary a cluster replica publishes to the router's radix
+    /// index. Chain-hashed keys commit to their whole prefix, so a flat key
+    /// set is enough for the router to walk cached prefixes remotely.
+    ///
+    /// `cap` bounds the digest size; when the cache holds more keys the
+    /// sample is truncated deterministically (sorted order) so routing
+    /// stays reproducible across runs. Numeric key order is unrelated to
+    /// chain-prefix order, so truncation can break leading chains and
+    /// degrade remote affinity-depth walks — size `cap` to the cache
+    /// (`capacity_blocks`, the `ClusterConfig::new` default) unless digest
+    /// memory genuinely needs bounding below that.
+    pub fn cached_key_sample(&self, cap: usize) -> Vec<u128> {
+        if self.cached.len() <= cap {
+            self.cached.keys().copied().collect()
+        } else {
+            let mut keys: Vec<u128> = self.cached.keys().copied().collect();
+            keys.sort_unstable();
+            keys.truncate(cap);
+            keys
+        }
+    }
+
     /// Current allocation headroom.
     pub fn availability(&self) -> Availability {
         let evictable = self.free_table.len();

@@ -6,6 +6,7 @@
 //! (layers 2/1) through the PJRT C API. See DESIGN.md for the inventory and
 //! EXPERIMENTS.md for the paper-vs-measured record.
 
+pub mod cluster;
 pub mod config;
 pub mod core;
 pub mod engine;
@@ -13,6 +14,7 @@ pub mod estimator;
 pub mod figures;
 pub mod kvcache;
 pub mod metrics;
+#[cfg(feature = "runtime")]
 pub mod runtime;
 pub mod scheduler;
 pub mod server;

@@ -94,6 +94,38 @@ pub fn windowed_ratio(lookups: &TimeSeries, hits: &TimeSeries) -> TimeSeries {
 }
 
 impl Metrics {
+    /// Fold `other` into this rollup (cluster aggregation): counters add,
+    /// per-request latency samples concatenate, busy time sums (so the
+    /// aggregate's throughputs are per-GPU-busy-second across the fleet).
+    /// Time series are deliberately left untouched — they are per-engine
+    /// views over one virtual clock; the cluster keeps its own timeline.
+    pub fn merge_from(&mut self, other: &Metrics) {
+        self.online_ttft.extend_from_slice(&other.online_ttft);
+        self.online_tpot.extend_from_slice(&other.online_tpot);
+        self.online_completed += other.online_completed;
+        self.offline_completed += other.offline_completed;
+        self.online_tokens_out += other.online_tokens_out;
+        self.offline_tokens_out += other.offline_tokens_out;
+        self.offline_billed_tokens += other.offline_billed_tokens;
+        self.prefill_tokens_computed += other.prefill_tokens_computed;
+        self.prefill_tokens_saved += other.prefill_tokens_saved;
+        self.online_tokens_checked += other.online_tokens_checked;
+        self.online_token_deadlines_met += other.online_token_deadlines_met;
+        self.iterations += other.iterations;
+        self.busy_time += other.busy_time;
+        self.preemptions += other.preemptions;
+        self.skipped_offline += other.skipped_offline;
+    }
+
+    /// Aggregate rollup over per-replica metrics (cluster reporting).
+    pub fn aggregate<'a>(parts: impl IntoIterator<Item = &'a Metrics>) -> Metrics {
+        let mut m = Metrics::default();
+        for p in parts {
+            m.merge_from(p);
+        }
+        m
+    }
+
     pub fn record_completion(
         &mut self,
         class: TaskClass,
@@ -244,5 +276,26 @@ mod tests {
         let m = Metrics::default();
         let j = m.to_json(&Slo::paper_eval());
         assert!(j.at("ttft.attainment").is_some());
+    }
+
+    #[test]
+    fn aggregate_rolls_up_counters_and_samples() {
+        let mut a = Metrics::default();
+        a.busy_time = 5.0;
+        a.record_completion(TaskClass::Online, 10, 100, Some(0.4), Some(0.03));
+        a.record_completion(TaskClass::Offline, 50, 500, None, None);
+        let mut b = Metrics::default();
+        b.busy_time = 3.0;
+        b.record_completion(TaskClass::Online, 20, 200, Some(1.4), Some(0.06));
+        let agg = Metrics::aggregate([&a, &b]);
+        assert_eq!(agg.online_completed, 2);
+        assert_eq!(agg.offline_completed, 1);
+        assert_eq!(agg.online_tokens_out, 30);
+        assert_eq!(agg.offline_billed_tokens, 550);
+        assert_eq!(agg.online_ttft.len(), 2);
+        assert!((agg.busy_time - 8.0).abs() < 1e-12);
+        // Attainment over the pooled samples: one of two TTFTs meets 1.0 s.
+        let (a_ttft, _) = agg.slo_attainment(&Slo::paper_eval());
+        assert!((a_ttft - 0.5).abs() < 1e-12);
     }
 }

@@ -181,6 +181,19 @@ impl OfflinePool {
         self.len == 0
     }
 
+    /// Newest `n` pending ids across all buckets (id order == submission
+    /// order). These are the cheapest victims for cluster work-stealing:
+    /// taking the tail preserves FCFS fairness for the head of the pool.
+    pub fn steal_candidates(&self, n: usize) -> Vec<RequestId> {
+        let mut all: Vec<RequestId> = self
+            .buckets
+            .iter()
+            .flat_map(|b| b.fifo.iter().copied())
+            .collect();
+        all.sort_unstable();
+        all.split_off(all.len().saturating_sub(n))
+    }
+
     /// Global FCFS head (the BS / BS+E policies).
     pub fn fcfs_head(&self) -> Option<RequestId> {
         // Oldest insertion across buckets: compare by id (monotonic).

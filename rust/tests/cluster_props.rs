@@ -1,0 +1,251 @@
+//! Router/cluster properties: every online request is dispatched exactly
+//! once, prefix affinity never routes onto a replica past its KV headroom,
+//! and a single-replica cluster replays *identically* to a bare engine
+//! (the router adds no scheduling deviation).
+
+use echo::cluster::{
+    affinity_keys, offline_jobs, ClusterConfig, ClusterSim, LoadDigest, OnlineJob, Router,
+};
+use echo::config::SystemConfig;
+use echo::core::{PromptSpec, Request, TaskClass};
+use echo::engine::{sim::SimBackend, Engine};
+use echo::estimator::TimeModel;
+use echo::trace::{Trace, TraceConfig};
+use echo::utils::prop::{check, Gen};
+use echo::workload::DatasetSpec;
+
+fn base_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::a100_llama8b();
+    cfg.cache.capacity_tokens = 30_000;
+    cfg.scheduler.max_batch = 16;
+    cfg
+}
+
+fn online_from_gen(g: &mut Gen, n: usize, horizon: f64) -> Vec<OnlineJob> {
+    let mut jobs: Vec<OnlineJob> = (0..n)
+        .map(|_| {
+            let shared = g.bool(0.4);
+            let len = g.int(40, 800);
+            let prompt = if shared {
+                let group = g.int(1, 4) as u64;
+                let shared_len = (len * 3 / 4).max(16);
+                PromptSpec::sim(len, Some((group, shared_len)))
+            } else {
+                PromptSpec::sim(len, None)
+            };
+            OnlineJob {
+                at: g.f64(0.0, horizon * 0.6),
+                prompt,
+                max_new_tokens: g.int(2, 32),
+            }
+        })
+        .collect();
+    jobs.sort_by(|a, b| a.at.partial_cmp(&b.at).unwrap());
+    jobs
+}
+
+#[test]
+fn every_request_dispatched_exactly_once() {
+    check("dispatch-exactly-once", 15, |g| {
+        let replicas = g.int(1, 4);
+        let horizon = 30.0 + g.f64(0.0, 30.0);
+        let n = g.int(1, 80);
+        let online = online_from_gen(g, n, horizon);
+        let mut cc = ClusterConfig::new(base_cfg(), replicas);
+        cc.jitter = 0.0;
+        let mut sim = ClusterSim::new(cc);
+        sim.submit_offline_backlog(offline_jobs(
+            &DatasetSpec::toolbench().scaled(0.1),
+            g.int(0, 20),
+            g.rng.next_u64(),
+        ));
+        let report = sim
+            .run(&online, horizon)
+            .map_err(|e| format!("cluster: {e}"))?;
+        if report.router.dispatched_online != n {
+            return Err(format!(
+                "router dispatched {} of {n}",
+                report.router.dispatched_online
+            ));
+        }
+        let placed: usize = sim
+            .replicas
+            .iter()
+            .map(|r| {
+                r.engine
+                    .store
+                    .iter()
+                    .filter(|q| q.class == TaskClass::Online)
+                    .count()
+            })
+            .sum();
+        if placed != n {
+            return Err(format!("{placed} of {n} requests placed on replicas"));
+        }
+        for rep in &sim.replicas {
+            rep.engine.kv.check_invariants()?;
+        }
+        Ok(())
+    });
+}
+
+fn digest(replica: usize, free_blocks: usize, pending: usize) -> LoadDigest {
+    LoadDigest {
+        replica,
+        clock: 0.0,
+        queued_online: 0,
+        running_online: 0,
+        running_offline: 0,
+        pool_backlog: 0,
+        pending_prefill_tokens: pending,
+        free_blocks,
+        block_size: 16,
+        draining: false,
+        cached_keys: Vec::new(),
+    }
+}
+
+#[test]
+fn affinity_never_routes_over_kv_capacity() {
+    check("affinity-capacity", 40, |g| {
+        let cfg = SystemConfig::a100_llama8b();
+        let block_size = cfg.cache.block_size;
+        let mut router = Router::new(TimeModel::new(cfg.time_model), block_size);
+        let n_rep = g.int(1, 5);
+        for r in 0..n_rep {
+            let mut d = digest(r, g.int(0, 80), g.int(0, 4_000));
+            // Randomly warm some replicas with a group's prefix.
+            if g.bool(0.6) {
+                let group = g.int(1, 3) as u64;
+                let warm_prompt = PromptSpec::sim(1_024, Some((group, 1_024)));
+                let keys = affinity_keys(&warm_prompt, block_size);
+                d.cached_keys = keys[..g.int(1, keys.len())].to_vec();
+            }
+            router.sync(d);
+        }
+        for _ in 0..g.int(1, 30) {
+            let group = g.int(1, 3) as u64;
+            let len = g.int(32, 1_500);
+            let prompt = if g.bool(0.7) {
+                PromptSpec::sim(len, Some((group, (len * 4 / 5).max(16))))
+            } else {
+                PromptSpec::sim(len, None)
+            };
+            let keys = affinity_keys(&prompt, block_size);
+            let total_blocks = (prompt.total_len + 1).div_ceil(block_size);
+            // Decision inputs *before* the call (the router mutates its
+            // view optimistically after dispatch).
+            let pre: Vec<(usize, usize, usize)> = router
+                .known_replicas()
+                .map(|r| {
+                    let depth = router.index.cached_depth(r, &keys).min(total_blocks);
+                    let free = router.digest(r).unwrap().free_blocks;
+                    (r, depth, free)
+                })
+                .collect();
+            let overflow_before = router.stats.overflow_dispatches;
+            let Some((chosen, _)) = router.route_online(&prompt) else {
+                return Err("router refused a dispatch".into());
+            };
+            let (_, depth, free) = *pre
+                .iter()
+                .find(|&&(r, _, _)| r == chosen)
+                .expect("chosen replica was known");
+            let fresh = total_blocks - depth;
+            let overflowed = router.stats.overflow_dispatches > overflow_before;
+            if fresh > free && !overflowed {
+                return Err(format!(
+                    "routed onto replica {chosen} needing {fresh} fresh \
+                     blocks with only {free} free (not an overflow)"
+                ));
+            }
+            if overflowed {
+                // Overflow is only legal when *no* replica had headroom.
+                for &(r, d, f) in &pre {
+                    if total_blocks - d <= f {
+                        return Err(format!(
+                            "overflow dispatch although replica {r} had room"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn n1_cluster_matches_bare_engine() {
+    let horizon = 90.0;
+    let cfg = base_cfg();
+    let trace = Trace::generate(&TraceConfig::compressed(horizon, 1.5, 21));
+    let mut rng = echo::utils::rng::Rng::new(33);
+    let online: Vec<OnlineJob> = trace
+        .arrivals
+        .iter()
+        .map(|&at| OnlineJob {
+            at,
+            prompt: PromptSpec::sim(rng.range_usize(50, 500), None),
+            max_new_tokens: rng.range_usize(4, 48),
+        })
+        .collect();
+    let offline = offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 30, 17);
+
+    // --- single-replica cluster -----------------------------------------
+    let mut cc = ClusterConfig::new(cfg.clone(), 1);
+    // Flood the whole backlog at t=0 so pool state matches the bare run.
+    cc.steal_low_water = usize::MAX;
+    cc.steal_batch = usize::MAX;
+    let jitter = cc.jitter;
+    let mut sim = ClusterSim::new(cc);
+    sim.submit_offline_backlog(offline.clone());
+    let report = sim.run(&online, horizon).unwrap();
+    let cluster_engine = &sim.replicas[0].engine;
+
+    // --- bare engine, same submissions in the same order ----------------
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), cfg.seed, jitter);
+    let mut e = Engine::new(cfg, backend);
+    for job in &offline {
+        let id = e.store.fresh_id();
+        e.submit_offline(Request::new(
+            id,
+            TaskClass::Offline,
+            0.0,
+            job.prompt.clone(),
+            job.max_new_tokens,
+        ));
+    }
+    for job in &online {
+        let id = e.store.fresh_id();
+        e.submit_online(Request::new(
+            id,
+            TaskClass::Online,
+            job.at,
+            job.prompt.clone(),
+            job.max_new_tokens,
+        ));
+    }
+    e.run_until(horizon).unwrap();
+
+    assert_eq!(report.router.dispatched_online, online.len());
+    assert_eq!(e.metrics.iterations, cluster_engine.metrics.iterations);
+    assert_eq!(e.metrics.online_completed, cluster_engine.metrics.online_completed);
+    assert_eq!(e.metrics.offline_completed, cluster_engine.metrics.offline_completed);
+    assert_eq!(e.metrics.online_tokens_out, cluster_engine.metrics.online_tokens_out);
+    assert_eq!(e.metrics.offline_tokens_out, cluster_engine.metrics.offline_tokens_out);
+    assert_eq!(
+        e.metrics.prefill_tokens_computed,
+        cluster_engine.metrics.prefill_tokens_computed
+    );
+    assert_eq!(e.metrics.preemptions, cluster_engine.metrics.preemptions);
+    assert_eq!(e.kv.stats.evictions, cluster_engine.kv.stats.evictions);
+    assert_eq!(e.kv.stats.hit_blocks, cluster_engine.kv.stats.hit_blocks);
+    assert_eq!(
+        e.metrics.busy_time.to_bits(),
+        cluster_engine.metrics.busy_time.to_bits(),
+        "virtual time must match bit-exactly"
+    );
+    assert_eq!(e.metrics.online_ttft, cluster_engine.metrics.online_ttft);
+    e.kv.check_invariants().unwrap();
+    cluster_engine.kv.check_invariants().unwrap();
+}

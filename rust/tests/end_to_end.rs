@@ -4,6 +4,8 @@
 //!
 //! Requires `make artifacts`; skips gracefully otherwise.
 
+#![cfg(feature = "runtime")]
+
 use echo::config::{SchedulerKind, SystemConfig};
 use echo::core::{PromptSpec, Request, TaskClass};
 use echo::engine::{pjrt::PjrtBackend, Engine};

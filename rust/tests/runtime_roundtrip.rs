@@ -5,6 +5,8 @@
 //! Requires `make artifacts` (skips gracefully when missing so plain
 //! `cargo test` works before the artifacts are built).
 
+#![cfg(feature = "runtime")]
+
 use echo::runtime::ModelRuntime;
 use echo::utils::json::Json;
 

@@ -1,0 +1,45 @@
+//! Minimal offline stand-in for the `log` crate: the five level macros,
+//! with warn/error printed to stderr and the chatty levels compiled to
+//! type-checked no-ops. No logger registry — a single-process research
+//! codebase doesn't need one, and the call sites only use the macros.
+
+#[macro_export]
+macro_rules! error {
+    ($($t:tt)*) => {
+        eprintln!("[ERROR] {}", format!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($t:tt)*) => {
+        eprintln!("[WARN] {}", format!($($t)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => {
+        if false {
+            let _ = format!($($t)*);
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => {
+        if false {
+            let _ = format!($($t)*);
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($t:tt)*) => {
+        if false {
+            let _ = format!($($t)*);
+        }
+    };
+}
