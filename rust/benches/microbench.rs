@@ -1,77 +1,249 @@
 //! `cargo bench --bench microbench` — hot-path micro-benchmarks of the L3
 //! coordinator (criterion is unreachable offline; this is a from-scratch
-//! timing harness with warmup + median-of-runs). Feeds EXPERIMENTS.md §Perf.
+//! timing harness with warmup-discard + median/relative-stddev reporting).
+//! Feeds EXPERIMENTS.md §Perf and the machine-readable perf trajectory.
 //!
-//! Paths measured:
-//!   * scheduler decision per iteration at pool sizes 100/1000/5000
+//! Paths measured, each as a (baseline, incremental) pair where a pre-PR
+//! path exists:
+//!   * scheduler decision per iteration at pool sizes 100/1000/5000 —
+//!     clone-trial `OracleScheduler` vs. apply/undo `Scheduler`
+//!   * router digest sync at replica counts 1/4/16 over a 5000-key cache —
+//!     full prefix-summary resync vs. delta (churn-only) protocol
+//!   * radix index (arena): insert/remove churn and `best_cached`
 //!   * KV manager: allocate/release cycle, prefix lookup, eviction churn
-//!   * radix index: insert/best_cached at depth
-//!   * estimator: batch_time + fit
+//!   * content keys: direct chain hash vs. interned accessor
+//!   * estimator: `batch_time` re-scan vs. `batch_time_inc` aggregates
 //!   * end-to-end sim iterations/second
 //!   * PJRT step latency per bucket (if artifacts are built)
+//!
+//! Flags (after `--`):
+//!   `--bench-json <path>`        write the machine-readable report
+//!                                (default name: BENCH_PR2.json) and
+//!                                self-validate it by re-parsing
+//!   `--quick`                    tiny iteration counts (CI smoke: proves
+//!                                the harness runs headless; timings are
+//!                                meaningless)
+//!   `--write-experiments <path>` rewrite the `<!-- perf:begin/end -->`
+//!                                block of EXPERIMENTS.md with the
+//!                                before/after table
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
+use echo::cluster::{LoadDigest, PrefixSummary, Router};
 use echo::config::{SchedulerKind, SystemConfig};
 use echo::core::{PromptSpec, Request, RequestStore, TaskClass};
 use echo::engine::{sim::SimBackend, Engine};
-use echo::estimator::{BatchShape, PrefillItem, TimeModel};
+use echo::estimator::{BatchShape, PrefillItem, TimeModel, TrialShape};
 use echo::kvcache::{EvictionPolicy, KvManager};
-use echo::scheduler::{OfflinePool, RadixIndex, Scheduler};
+use echo::scheduler::{OfflinePool, OracleScheduler, RadixIndex, Scheduler};
+use echo::utils::json::Json;
 use echo::utils::rng::Rng;
 use echo::workload::{synthesize, DatasetSpec};
 
-/// Median wall-time per op over `runs` timed batches of `iters_per_run`.
-fn bench<F: FnMut()>(name: &str, iters_per_run: usize, runs: usize, mut f: F) -> f64 {
-    // warmup
-    for _ in 0..iters_per_run.min(100) {
-        f();
-    }
-    let mut samples: Vec<f64> = (0..runs)
-        .map(|_| {
-            let t0 = Instant::now();
-            for _ in 0..iters_per_run {
-                f();
-            }
-            t0.elapsed().as_secs_f64() / iters_per_run as f64
-        })
-        .collect();
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let med = samples[samples.len() / 2];
-    let unit = if med < 1e-6 {
-        format!("{:.1} ns", med * 1e9)
-    } else if med < 1e-3 {
-        format!("{:.2} us", med * 1e6)
-    } else {
-        format!("{:.3} ms", med * 1e3)
-    };
-    println!("{name:<56} {unit:>12}/op");
-    med
+// ---- harness -------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct BenchEntry {
+    /// Display name.
+    name: String,
+    /// Category the perf gate keys on: "scheduler-decision", "digest-sync",
+    /// "radix", "kv-alloc-release", ...
+    path: String,
+    /// "baseline" (pre-PR code path) or "incremental".
+    variant: String,
+    /// Problem size (pool size, replica count, ... 0 if not applicable).
+    size: usize,
+    median_ns: f64,
+    rel_stddev: f64,
+    iters: usize,
+    runs: usize,
 }
 
-fn bench_scheduler_decision(pool_size: usize) {
+struct Harness {
+    entries: Vec<BenchEntry>,
+    /// Scale factor for iteration counts (quick mode shrinks to ~nothing).
+    scale: f64,
+}
+
+impl Harness {
+    fn new(quick: bool) -> Self {
+        Harness {
+            entries: Vec::new(),
+            scale: if quick { 0.01 } else { 1.0 },
+        }
+    }
+
+    /// Median wall-time per op over `runs` timed batches of `iters` ops,
+    /// after one warmup batch whose samples are discarded (cold caches,
+    /// lazy allocations, and branch-predictor warmup never pollute the
+    /// recorded runs). Also reports relative stddev across the runs so
+    /// noisy numbers are visibly noisy.
+    fn bench<F: FnMut()>(
+        &mut self,
+        name: &str,
+        path: &str,
+        variant: &str,
+        size: usize,
+        iters: usize,
+        mut f: F,
+    ) -> f64 {
+        let iters = ((iters as f64 * self.scale) as usize).max(2);
+        let runs = 7usize;
+        // Warmup batch: run and discard.
+        for _ in 0..iters.min(200) {
+            f();
+        }
+        let mut samples: Vec<f64> = (0..runs)
+            .map(|_| {
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    f();
+                }
+                t0.elapsed().as_secs_f64() / iters as f64
+            })
+            .collect();
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / samples.len() as f64;
+        let rel_sd = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+        let unit = if med < 1e-6 {
+            format!("{:.1} ns", med * 1e9)
+        } else if med < 1e-3 {
+            format!("{:.2} us", med * 1e6)
+        } else {
+            format!("{:.3} ms", med * 1e3)
+        };
+        println!("{name:<62} {unit:>12}/op  (±{:>4.1}%)", rel_sd * 100.0);
+        self.entries.push(BenchEntry {
+            name: name.to_string(),
+            path: path.to_string(),
+            variant: variant.to_string(),
+            size,
+            median_ns: med * 1e9,
+            rel_stddev: rel_sd,
+            iters,
+            runs,
+        });
+        med
+    }
+
+    fn median_of(&self, path: &str, variant: &str, size: usize) -> Option<f64> {
+        self.entries
+            .iter()
+            .find(|e| e.path == path && e.variant == variant && e.size == size)
+            .map(|e| e.median_ns)
+    }
+
+    /// baseline / incremental speedup for one (path, size) pair.
+    fn speedup(&self, path: &str, size: usize) -> Option<f64> {
+        let base = self.median_of(path, "baseline", size)?;
+        let inc = self.median_of(path, "incremental", size)?;
+        if inc > 0.0 {
+            Some(base / inc)
+        } else {
+            None
+        }
+    }
+
+    fn to_json(&self, quick: bool) -> Json {
+        let rows: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::obj()
+                    .set("name", e.name.as_str())
+                    .set("path", e.path.as_str())
+                    .set("variant", e.variant.as_str())
+                    .set("size", e.size)
+                    .set("median_ns", e.median_ns)
+                    .set("rel_stddev", e.rel_stddev)
+                    .set("iters", e.iters)
+                    .set("runs", e.runs)
+            })
+            .collect();
+        let mut speedups = Json::obj();
+        for (path, size) in [
+            ("scheduler-decision", 100usize),
+            ("scheduler-decision", 1000),
+            ("scheduler-decision", 5000),
+            ("digest-sync", 1),
+            ("digest-sync", 4),
+            ("digest-sync", 16),
+        ] {
+            if let Some(s) = self.speedup(path, size) {
+                speedups = speedups.set(&format!("{path}@{size}"), s);
+            }
+        }
+        Json::obj()
+            .set("bench", "BENCH_PR2")
+            .set(
+                "note",
+                "baseline = pre-PR code paths (clone-trial scheduler, full \
+                 digest resync) recorded by the same harness run",
+            )
+            .set("quick_mode", quick)
+            .set("entries", Json::Arr(rows))
+            .set("speedups", speedups)
+    }
+}
+
+// ---- scheduler decision: oracle vs delta ---------------------------------
+
+enum SchedImpl {
+    Delta(Scheduler),
+    Oracle(OracleScheduler),
+}
+
+impl SchedImpl {
+    fn schedule(
+        &mut self,
+        now: f64,
+        store: &mut RequestStore,
+        queue: &mut VecDeque<u64>,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+    ) -> usize {
+        match self {
+            SchedImpl::Delta(s) => s.schedule(now, store, queue, pool, kv).plan.items.len(),
+            SchedImpl::Oracle(s) => s.schedule(now, store, queue, pool, kv).plan.items.len(),
+        }
+    }
+}
+
+fn bench_scheduler_decision(h: &mut Harness, pool_size: usize, variant: &str) {
     let mut cfg = SystemConfig::a100_llama8b();
     cfg.scheduler.kind = SchedulerKind::Echo;
     let block_size = cfg.cache.block_size;
-    let mut sched = Scheduler::new(
-        cfg.scheduler.clone(),
-        cfg.slo,
-        TimeModel::new(cfg.time_model),
-        block_size,
-    );
+    let mut sched = match variant {
+        "incremental" => SchedImpl::Delta(Scheduler::new(
+            cfg.scheduler.clone(),
+            cfg.slo,
+            TimeModel::new(cfg.time_model),
+            block_size,
+        )),
+        _ => SchedImpl::Oracle(OracleScheduler::new(
+            cfg.scheduler.clone(),
+            cfg.slo,
+            TimeModel::new(cfg.time_model),
+            block_size,
+        )),
+    };
     let mut store = RequestStore::new();
     let mut queue = VecDeque::new();
     let mut pool = OfflinePool::default_buckets();
-    let mut kv = KvManager::new(256, block_size, EvictionPolicy::TaskAware); // tiny memory: admissions fail fast
+    // Tiny memory: admissions fail fast, so the steady-state decision cost
+    // (partition + candidate search) dominates.
+    let mut kv = KvManager::new(256, block_size, EvictionPolicy::TaskAware);
     let mut rng = Rng::new(1);
     let spec = DatasetSpec::loogle_qa_short();
     let batch = synthesize(&spec, pool_size, TaskClass::Offline, 0.0, &mut store, &mut rng);
     for &id in &batch.ids {
-        let r = store.get(id).clone();
-        let keys = r.prompt.content_keys(id, r.prompt.total_len, block_size);
+        let keys = store.get(id).content_key_path(block_size).to_vec();
         kv.register_future(&keys);
-        pool.add(id, r.prompt.total_len, keys);
+        pool.add(id, store.get(id).prompt.total_len, keys);
     }
     // One running online decode so the SLO path is active.
     let online = store.fresh_id();
@@ -83,28 +255,154 @@ fn bench_scheduler_decision(pool_size: usize) {
     r.token_times.push(0.0);
     store.insert(r);
     kv.allocate(online, TaskClass::Online, &[], 7, 0.0).unwrap();
+    if let SchedImpl::Delta(ref mut s) = sched {
+        s.adopt_running(online); // seeded Running outside the scheduler
+    }
     let mut now = 0.0;
-    bench(
-        &format!("scheduler decision (Echo, pool={pool_size}, memory-tight)"),
+    h.bench(
+        &format!("scheduler decision [{variant}] (Echo, pool={pool_size})"),
+        "scheduler-decision",
+        variant,
+        pool_size,
         200,
-        7,
         || {
             now += 0.01;
-            let out = sched.schedule(now, &mut store, &mut queue, &mut pool, &mut kv);
-            std::hint::black_box(out.plan.items.len());
+            let n = sched.schedule(now, &mut store, &mut queue, &mut pool, &mut kv);
+            std::hint::black_box(n);
         },
     );
 }
 
-fn bench_kv_ops() {
+// ---- digest sync: full resync vs delta protocol --------------------------
+
+/// One replica's cache, pre-warmed with `warm` distinct keys, plus an epoch
+/// counter for generating churn.
+struct SyncReplica {
+    kv: KvManager,
+    replica: usize,
+    epoch: u64,
+}
+
+impl SyncReplica {
+    fn new(replica: usize, warm: usize, delta: bool) -> Self {
+        let mut kv = KvManager::new(warm, 16, EvictionPolicy::TaskAware);
+        if delta {
+            kv.enable_key_churn();
+        }
+        // Warm the cache to capacity in slabs.
+        let mut id = 0u64;
+        let mut key = 0u128;
+        let slab = 250usize.min(warm);
+        let mut left = warm;
+        while left > 0 {
+            let n = slab.min(left);
+            id += 1;
+            let keys: Vec<u128> = (0..n)
+                .map(|_| {
+                    key += 1;
+                    ((replica as u128) << 96) | key
+                })
+                .collect();
+            kv.allocate(id, TaskClass::Offline, &keys, n, id as f64).unwrap();
+            kv.release(id, true);
+            left -= n;
+        }
+        let _ = kv.take_key_churn(); // deltas start from the warm state
+        SyncReplica { kv, replica, epoch: 0 }
+    }
+
+    /// Cache 8 fresh keys (evicting 8 old ones): the per-quantum churn.
+    fn churn(&mut self) {
+        self.epoch += 1;
+        let id = 1_000_000 + self.epoch;
+        let epoch_tag = (1u128 << 90) | ((self.epoch as u128) << 8);
+        let keys: Vec<u128> = (0..8)
+            .map(|i| ((self.replica as u128) << 96) | epoch_tag | i)
+            .collect();
+        self.kv
+            .allocate(id, TaskClass::Offline, &keys, 8, self.epoch as f64)
+            .unwrap();
+        self.kv.release(id, true);
+    }
+
+    fn digest(&mut self, full: bool) -> LoadDigest {
+        let summary = if full {
+            // Pre-PR cost: rebuild the summary from the hash index (the
+            // incremental sorted mirror did not exist before this PR).
+            PrefixSummary::Full(self.kv.cached_key_sample_rebuild(usize::MAX))
+        } else {
+            let (added, removed) = self.kv.take_key_churn().expect("churn enabled");
+            PrefixSummary::Delta { added, removed }
+        };
+        LoadDigest {
+            replica: self.replica,
+            clock: self.epoch as f64,
+            queued_online: 0,
+            running_online: 0,
+            running_offline: 0,
+            pool_backlog: 0,
+            pending_prefill_tokens: 0,
+            free_blocks: 1000,
+            block_size: 16,
+            draining: false,
+            summary,
+        }
+    }
+}
+
+fn bench_digest_sync(h: &mut Harness, replicas: usize, variant: &str) {
+    const WARM_KEYS: usize = 5000;
+    let full = variant == "baseline";
+    let cfg = SystemConfig::a100_llama8b();
+    let mut router = Router::new(TimeModel::new(cfg.time_model), 16);
+    let mut reps: Vec<SyncReplica> = (0..replicas)
+        .map(|r| SyncReplica::new(r, WARM_KEYS, !full))
+        .collect();
+    // Initial full sync for both protocols (the delta path's base state).
+    for rep in &mut reps {
+        let d = rep.digest(true);
+        router.sync(d);
+    }
+    if !full {
+        for rep in &mut reps {
+            let _ = rep.kv.take_key_churn();
+        }
+    }
+    h.bench(
+        &format!("digest sync [{variant}] ({replicas} replicas x {WARM_KEYS} keys, churn 8)"),
+        "digest-sync",
+        variant,
+        replicas,
+        40,
+        || {
+            for rep in &mut reps {
+                rep.churn();
+                let d = rep.digest(full);
+                router.sync(d);
+            }
+            std::hint::black_box(router.index.total_keys());
+        },
+    );
+}
+
+// ---- kv / radix / estimator / content keys --------------------------------
+
+fn bench_kv_ops(h: &mut Harness) {
     let mut kv = KvManager::new(8192, 16, EvictionPolicy::TaskAware);
     let mut id = 0u64;
-    bench("kv allocate+release (32 blocks, keyed)", 500, 7, || {
-        id += 1;
-        let keys: Vec<u128> = (0..32).map(|i| ((id as u128) << 32) | i).collect();
-        kv.allocate(id, TaskClass::Offline, &keys, 32, id as f64).unwrap();
-        kv.release(id, true);
-    });
+    h.bench(
+        "kv allocate+release (32 blocks, keyed)",
+        "kv-alloc-release",
+        "incremental",
+        32,
+        500,
+        || {
+            id += 1;
+            let keys: Vec<u128> = (0..32).map(|i| ((id as u128) << 32) | i).collect();
+            kv.allocate(id, TaskClass::Offline, &keys, 32, id as f64).unwrap();
+            kv.release(id, true);
+        },
+    );
     // Prefix lookup on a warm cache.
     let keys: Vec<u128> = (0..512).map(|i| (7u128 << 96) | i).collect();
     kv.flush_cache();
@@ -112,24 +410,45 @@ fn bench_kv_ops() {
     id += 1;
     kv.allocate(id, TaskClass::Offline, &keys, 512, 0.0).unwrap();
     kv.release(id, false);
-    bench("kv peek_prefix (512 cached blocks)", 2000, 7, || {
-        std::hint::black_box(kv.peek_prefix(&keys));
-    });
-    bench("kv eviction_preview (64 victims)", 2000, 7, || {
-        std::hint::black_box(kv.eviction_preview(64));
-    });
+    h.bench(
+        "kv peek_prefix (512 cached blocks)",
+        "kv-peek",
+        "incremental",
+        512,
+        2000,
+        || {
+            std::hint::black_box(kv.peek_prefix(&keys));
+        },
+    );
+    h.bench(
+        "kv eviction_preview (64 victims)",
+        "kv-evict-preview",
+        "incremental",
+        64,
+        2000,
+        || {
+            std::hint::black_box(kv.eviction_preview(64));
+        },
+    );
     // Eviction churn: small cache, rotating working sets.
     let mut kv = KvManager::new(256, 16, EvictionPolicy::TaskAware);
     let mut epoch = 0u64;
-    bench("kv eviction churn (alloc 64 into full cache)", 300, 7, || {
-        epoch += 1;
-        let keys: Vec<u128> = (0..64).map(|i| ((epoch as u128) << 32) | i).collect();
-        kv.allocate(epoch, TaskClass::Offline, &keys, 64, epoch as f64).unwrap();
-        kv.release(epoch, true);
-    });
+    h.bench(
+        "kv eviction churn (alloc 64 into full cache)",
+        "kv-evict-churn",
+        "incremental",
+        64,
+        300,
+        || {
+            epoch += 1;
+            let keys: Vec<u128> = (0..64).map(|i| ((epoch as u128) << 32) | i).collect();
+            kv.allocate(epoch, TaskClass::Offline, &keys, 64, epoch as f64).unwrap();
+            kv.release(epoch, true);
+        },
+    );
 }
 
-fn bench_radix() {
+fn bench_radix(h: &mut Harness) {
     let mut idx = RadixIndex::default();
     for r in 0..1000u64 {
         let group = r % 20;
@@ -143,23 +462,95 @@ fn bench_radix() {
     kv.register_future(&warm);
     kv.allocate(1_000_001, TaskClass::Offline, &warm, 48, 0.0).unwrap();
     kv.release(1_000_001, false);
-    bench("radix best_cached (1000 reqs, 48-deep warm path)", 1000, 7, || {
-        std::hint::black_box(idx.best_cached(&kv));
-    });
+    h.bench(
+        "radix best_cached (1000 reqs, 48-deep warm path)",
+        "radix",
+        "incremental",
+        1000,
+        1000,
+        || {
+            std::hint::black_box(idx.best_cached(&kv));
+        },
+    );
+    let mut next = 10_000u64;
+    h.bench(
+        "radix insert+remove (64-key path, arena)",
+        "radix-churn",
+        "incremental",
+        64,
+        2000,
+        || {
+            next += 1;
+            let keys: Vec<u128> = (0..64).map(|i| ((next as u128) << 40) | i).collect();
+            idx.insert(next, keys);
+            idx.remove(next);
+        },
+    );
 }
 
-fn bench_estimator() {
+fn bench_estimator(h: &mut Harness) {
     let tm = TimeModel::new(SystemConfig::a100_llama8b().time_model);
     let shape = BatchShape {
         prefills: vec![PrefillItem { chunk: 512, context: 1024 }],
         decode_lens: (0..64).map(|i| 500 + i * 13).collect(),
     };
-    bench("estimator batch_time (1 prefill + 64 decodes)", 20_000, 7, || {
-        std::hint::black_box(tm.batch_time(&shape));
-    });
+    h.bench(
+        "estimator batch_time re-scan (1 prefill + 64 decodes)",
+        "estimator",
+        "baseline",
+        64,
+        20_000,
+        || {
+            std::hint::black_box(tm.batch_time(&shape));
+        },
+    );
+    let mut trial = TrialShape::from_shape(&tm, shape.clone());
+    h.bench(
+        "estimator trial push/score/undo (O(1) aggregates)",
+        "estimator",
+        "incremental",
+        64,
+        20_000,
+        || {
+            let u = trial.push_decode(1333);
+            std::hint::black_box(tm.batch_time_inc(&trial));
+            trial.undo(u);
+        },
+    );
 }
 
-fn bench_sim_iterations() {
+fn bench_content_keys(h: &mut Harness) {
+    let r = Request::new(
+        42,
+        TaskClass::Offline,
+        0.0,
+        PromptSpec::sim(2048, Some((9, 1536))),
+        32,
+    );
+    h.bench(
+        "content keys, direct chain hash (2048-token prompt)",
+        "content-keys",
+        "baseline",
+        2048,
+        5000,
+        || {
+            std::hint::black_box(r.prompt.content_keys(42, 2048, 16).len());
+        },
+    );
+    let _ = r.content_key_path(16); // populate the intern cache
+    h.bench(
+        "content keys, interned accessor (same prompt)",
+        "content-keys",
+        "incremental",
+        2048,
+        5000,
+        || {
+            std::hint::black_box(r.content_key_path(16).len());
+        },
+    );
+}
+
+fn bench_sim_iterations(quick: bool) {
     let mut cfg = SystemConfig::a100_llama8b();
     cfg.scheduler.kind = SchedulerKind::Echo;
     let backend = SimBackend::new(TimeModel::new(cfg.time_model), 2, 0.0);
@@ -168,7 +559,7 @@ fn bench_sim_iterations() {
     let mut store = std::mem::take(&mut e.store);
     let batch = synthesize(
         &DatasetSpec::loogle_qa_short(),
-        400,
+        if quick { 40 } else { 400 },
         TaskClass::Offline,
         0.0,
         &mut store,
@@ -176,12 +567,9 @@ fn bench_sim_iterations() {
     );
     e.store = store;
     for &id in &batch.ids {
-        let r = e.store.get(id).clone();
-        let keys = r.prompt.content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
-        e.kv.register_future(&keys);
-        e.pool.add(id, r.prompt.total_len, keys);
+        e.register_offline(id);
     }
-    for i in 0..500 {
+    for i in 0..(if quick { 50 } else { 500 }) {
         let id = e.store.fresh_id();
         e.submit_online(Request::new(
             id,
@@ -191,9 +579,10 @@ fn bench_sim_iterations() {
             32,
         ));
     }
+    let horizon = if quick { 10.0 } else { 120.0 };
     let t0 = Instant::now();
     let mut iters = 0usize;
-    while e.clock < 120.0 {
+    while e.clock < horizon {
         if !e.step().unwrap() {
             break;
         }
@@ -201,8 +590,12 @@ fn bench_sim_iterations() {
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(
-        "{:<56} {:>9.0} iters/s  ({} iters, {:.2}s wall, {:.0}s simulated)",
-        "end-to-end sim engine", iters as f64 / wall, iters, wall, e.clock
+        "{:<62} {:>9.0} iters/s  ({} iters, {:.2}s wall, {:.0}s simulated)",
+        "end-to-end sim engine",
+        iters as f64 / wall.max(1e-9),
+        iters,
+        wall,
+        e.clock
     );
 }
 
@@ -223,7 +616,7 @@ fn bench_pjrt() {
         let secs = rt.bench_step(bucket, 128, 10).unwrap();
         let toks = rt.manifest.max_batch * bucket;
         println!(
-            "{:<56} {:>9.2} ms/step  ({} tokens -> {:.0} tok/s)",
+            "{:<62} {:>9.2} ms/step  ({} tokens -> {:.0} tok/s)",
             format!("pjrt step bucket c{bucket} (context 128, all slots)"),
             secs * 1e3,
             toks,
@@ -232,14 +625,156 @@ fn bench_pjrt() {
     }
 }
 
-fn main() {
-    println!("== microbench: L3 coordinator hot paths ==\n");
-    for pool in [100usize, 1000, 5000] {
-        bench_scheduler_decision(pool);
+// ---- reporting -----------------------------------------------------------
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else {
+        format!("{:.3} ms", ns / 1e6)
     }
-    bench_kv_ops();
-    bench_radix();
-    bench_estimator();
-    bench_sim_iterations();
+}
+
+/// Markdown before/after table for EXPERIMENTS.md §Perf.
+fn perf_table(h: &Harness) -> String {
+    let mut out = String::new();
+    out.push_str("| path | size | before (median/op) | after (median/op) | speedup |\n");
+    out.push_str("|---|---|---|---|---|\n");
+    for (path, size) in [
+        ("scheduler-decision", 100usize),
+        ("scheduler-decision", 1000),
+        ("scheduler-decision", 5000),
+        ("digest-sync", 1),
+        ("digest-sync", 4),
+        ("digest-sync", 16),
+        ("estimator", 64),
+        ("content-keys", 2048),
+    ] {
+        let (Some(b), Some(i)) = (
+            h.median_of(path, "baseline", size),
+            h.median_of(path, "incremental", size),
+        ) else {
+            continue;
+        };
+        out.push_str(&format!(
+            "| {path} | {size} | {} | {} | {:.1}x |\n",
+            fmt_ns(b),
+            fmt_ns(i),
+            b / i.max(1e-9)
+        ));
+    }
+    for (path, size, label) in [
+        ("radix", 1000usize, "radix best_cached"),
+        ("radix-churn", 64, "radix insert+remove"),
+        ("kv-alloc-release", 32, "kv allocate+release"),
+    ] {
+        if let Some(m) = h.median_of(path, "incremental", size) {
+            out.push_str(&format!("| {label} | {size} | — | {} | — |\n", fmt_ns(m)));
+        }
+    }
+    out
+}
+
+fn write_experiments(path: &str, table: &str) {
+    const BEGIN: &str = "<!-- perf:begin -->";
+    const END: &str = "<!-- perf:end -->";
+    // `cargo bench` sets cwd to the package root (rust/); EXPERIMENTS.md
+    // lives one level up. Fall back there if the given path is missing.
+    let path: String = if std::path::Path::new(path).exists() {
+        path.to_string()
+    } else {
+        format!("../{path}")
+    };
+    let path = path.as_str();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        eprintln!("--write-experiments: cannot read {path}");
+        return;
+    };
+    let (Some(b), Some(e)) = (text.find(BEGIN), text.find(END)) else {
+        eprintln!("--write-experiments: {path} has no perf markers");
+        return;
+    };
+    if e < b {
+        eprintln!("--write-experiments: malformed markers in {path}");
+        return;
+    }
+    let new = format!(
+        "{}{}\n{}\n{}",
+        &text[..b],
+        BEGIN,
+        table.trim_end(),
+        &text[e..]
+    );
+    if std::fs::write(path, new).is_ok() {
+        println!("wrote §Perf table to {path}");
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a == "--quick");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--bench-json")
+        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR2.json".into()));
+    let experiments_path = args
+        .iter()
+        .position(|a| a == "--write-experiments")
+        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "EXPERIMENTS.md".into()));
+
+    println!("== microbench: L3 coordinator hot paths ==\n");
+    let mut h = Harness::new(quick);
+    for pool in [100usize, 1000, 5000] {
+        for variant in ["baseline", "incremental"] {
+            bench_scheduler_decision(&mut h, pool, variant);
+        }
+    }
+    for replicas in [1usize, 4, 16] {
+        for variant in ["baseline", "incremental"] {
+            bench_digest_sync(&mut h, replicas, variant);
+        }
+    }
+    bench_kv_ops(&mut h);
+    bench_radix(&mut h);
+    bench_estimator(&mut h);
+    bench_content_keys(&mut h);
+    bench_sim_iterations(quick);
     bench_pjrt();
+
+    println!();
+    for (path, size) in [("scheduler-decision", 5000usize), ("digest-sync", 16)] {
+        if let Some(s) = h.speedup(path, size) {
+            println!("speedup {path}@{size}: {s:.1}x (gate: >= 2x)");
+        }
+    }
+
+    if let Some(path) = json_path {
+        let j = h.to_json(quick);
+        let text = j.pretty();
+        std::fs::write(&path, &text).expect("write bench json");
+        // Self-validate: the emitted report must round-trip through the
+        // in-repo JSON parser (the CI smoke step relies on this).
+        let parsed = Json::parse(&text).expect("BENCH_PR2.json must parse");
+        let n = parsed
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .map(|a| a.len())
+            .unwrap_or(0);
+        assert_eq!(n, h.entries.len(), "entry count must survive round-trip");
+        for (p, s) in [("scheduler-decision", 5000usize), ("digest-sync", 16)] {
+            assert!(
+                parsed
+                    .at(&format!("speedups.{p}@{s}"))
+                    .and_then(|v| v.as_f64())
+                    .is_some(),
+                "gate speedup {p}@{s} missing from report"
+            );
+        }
+        println!("wrote {path} ({n} entries, validated)");
+    }
+    if let Some(path) = experiments_path {
+        write_experiments(&path, &perf_table(&h));
+    }
 }

@@ -182,10 +182,7 @@ fn simulate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     // Interleave prefix groups in submission order (see figures::run_mixed).
     rng.shuffle(&mut batch.ids);
     for &id in &batch.ids {
-        let r = e.store.get(id).clone();
-        let keys = r.prompt.content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
-        e.kv.register_future(&keys);
-        e.pool.add(id, r.prompt.total_len, keys);
+        e.register_offline(id);
     }
     e.run_until(horizon)?;
     let j = e

@@ -36,7 +36,7 @@ pub mod router;
 pub mod sim;
 
 pub use replica::{LoadDigest, Replica};
-pub use router::{affinity_keys, ClusterRadixIndex, Router, RouterStats};
+pub use router::{affinity_keys, ClusterRadixIndex, PrefixSummary, Router, RouterStats};
 pub use sim::{
     offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig, ClusterReport,
     ClusterSim, JobSpec, OnlineJob, ReplicaReport, ScalePolicy,

@@ -6,6 +6,8 @@ use crate::core::{ReqState, TaskClass};
 use crate::engine::{sim::SimBackend, Engine};
 use crate::estimator::TimeModel;
 
+use super::router::PrefixSummary;
+
 /// Per-replica backend seed: replica 0 keeps the base seed unchanged, so a
 /// single-replica cluster replays exactly like a bare engine (the N=1
 /// equivalence the router tests pin down).
@@ -35,8 +37,9 @@ pub struct LoadDigest {
     pub block_size: usize,
     /// Draining replicas take no new online work.
     pub draining: bool,
-    /// Prefix summary: content keys resident in this replica's KV cache.
-    pub cached_keys: Vec<u128>,
+    /// Prefix summary: resident content keys, full or as churn since the
+    /// previous publication (see [`PrefixSummary`]).
+    pub summary: PrefixSummary,
 }
 
 pub struct Replica {
@@ -46,29 +49,42 @@ pub struct Replica {
     pub draining: bool,
     /// Sim-time this replica joined the fleet (autoscaling timeline).
     pub spawned_at: f64,
+    /// Whether the router holds an untruncated full summary from us — the
+    /// precondition for publishing deltas.
+    published_full: bool,
 }
 
 impl Replica {
     pub fn new(id: usize, cfg: SystemConfig, jitter: f64, spawned_at: f64) -> Self {
         let seed = replica_seed(cfg.seed, id);
         let backend = SimBackend::new(TimeModel::new(cfg.time_model), seed, jitter);
+        let mut engine = Engine::new(cfg, backend);
+        // Delta-digest protocol: record key churn from the very first block.
+        engine.kv.enable_key_churn();
         Replica {
             id,
-            engine: Engine::new(cfg, backend),
+            engine,
             draining: false,
             spawned_at,
+            published_full: false,
         }
     }
 
     /// Publish the current load digest. `summary_cap` bounds the prefix
     /// summary size (the router's per-replica index memory).
-    pub fn digest(&self, summary_cap: usize) -> LoadDigest {
+    ///
+    /// The first publication (and any publication while the cache exceeds
+    /// `summary_cap`) ships a full summary; afterwards only the key churn
+    /// since the previous digest is shipped, so a sync quantum costs
+    /// O(churn) rather than O(cache size). Load counters scan only the
+    /// engine's live (unfinished) requests, not the whole store history.
+    pub fn digest(&mut self, summary_cap: usize) -> LoadDigest {
         let e = &self.engine;
         let mut queued_online = 0usize;
         let mut running_online = 0usize;
         let mut running_offline = 0usize;
         let mut pending_prefill_tokens = 0usize;
-        for r in e.store.iter() {
+        for r in e.live_requests() {
             match (r.state, r.class) {
                 (ReqState::Running, TaskClass::Online) => {
                     running_online += 1;
@@ -85,7 +101,7 @@ impl Replica {
             }
         }
         let avail = e.kv.availability();
-        LoadDigest {
+        let digest_base = LoadDigest {
             replica: self.id,
             clock: e.clock,
             queued_online,
@@ -96,19 +112,36 @@ impl Replica {
             free_blocks: avail.for_online(),
             block_size: e.cfg.cache.block_size,
             draining: self.draining,
-            cached_keys: e.kv.cached_key_sample(summary_cap),
+            summary: PrefixSummary::Full(Vec::new()),
+        };
+        let truncating = self.engine.kv.cached_key_count() > summary_cap;
+        let summary = if self.published_full && !truncating {
+            match self.engine.kv.take_key_churn() {
+                Some((added, removed)) => PrefixSummary::Delta { added, removed },
+                None => PrefixSummary::Full(self.engine.kv.cached_key_sample(summary_cap)),
+            }
+        } else {
+            // Drain the churn log first so the next delta starts exactly at
+            // this snapshot, then sample (no mutation in between).
+            let _ = self.engine.kv.take_key_churn();
+            self.published_full = !truncating;
+            PrefixSummary::Full(self.engine.kv.cached_key_sample(summary_cap))
+        };
+        LoadDigest {
+            summary,
+            ..digest_base
         }
     }
 
     /// True when nothing is running or pending — a draining replica in this
     /// state can retire. Inert store entries left behind by work-stealing
-    /// (`ReqState::Queued` offline orphans) do not block retirement.
+    /// (`ReqState::Queued` offline orphans) do not block retirement; only
+    /// live (unfinished, un-stolen) requests are scanned.
     pub fn is_idle(&self) -> bool {
         let e = &self.engine;
         e.backlog_online() == 0
             && e.pool.is_empty()
-            && e.store
-                .iter()
+            && e.live_requests()
                 .all(|r| !matches!(r.state, ReqState::Running | ReqState::Preempted))
     }
 }
@@ -133,6 +166,10 @@ mod tests {
         assert_eq!(d.queued_online, 0);
         assert_eq!(d.pool_backlog, 0);
         assert!(d.free_blocks > 0);
+        assert!(
+            matches!(d.summary, PrefixSummary::Full(_)),
+            "first publication must be a full summary"
+        );
 
         let id = rep.engine.store.fresh_id();
         rep.engine.submit_online(Request::new(
@@ -160,7 +197,18 @@ mod tests {
         assert!(rep.is_idle());
         let d = rep.digest(usize::MAX);
         assert_eq!(d.queued_online + d.running_online + d.running_offline, 0);
-        // Finished work leaves reusable cache behind — the prefix summary.
-        assert!(!d.cached_keys.is_empty());
+        // Finished work leaves reusable cache behind; after the initial
+        // full summary the digest ships it as added-key churn.
+        match d.summary {
+            PrefixSummary::Delta { ref added, .. } => {
+                assert!(!added.is_empty(), "run must have cached new keys")
+            }
+            PrefixSummary::Full(_) => panic!("steady-state digest must be a delta"),
+        }
+        assert_eq!(
+            rep.engine.kv.take_key_churn(),
+            Some((vec![], vec![])),
+            "digest must drain the churn log"
+        );
     }
 }

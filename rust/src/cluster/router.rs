@@ -26,17 +26,27 @@ use super::replica::LoadDigest;
 /// Leading content keys of `prompt` that are owner-independent (shared
 /// across requests of the same prefix group), probed with owner 0. Keys of
 /// private-tail blocks are excluded so affinity depth never overestimates.
+///
+/// Thin copying wrapper over the interned [`PromptSpec::affinity_keys`]
+/// (kept for callers that want an owned vector); the router itself uses
+/// the interned slice directly and never re-hashes a prompt it has seen.
 pub fn affinity_keys(prompt: &PromptSpec, block_size: usize) -> Vec<u128> {
-    let shareable_blocks = match (&prompt.tokens, prompt.shared_prefix) {
-        // Real tokens: every full block is content-addressed.
-        (Some(tokens), _) => tokens.len() / block_size,
-        // Sim prompts: blocks fully inside the shared region.
-        (None, Some((_, shared_len))) => shared_len / block_size,
-        (None, None) => 0,
-    };
-    let mut keys = prompt.content_keys(0, prompt.total_len, block_size);
-    keys.truncate(shareable_blocks);
-    keys
+    prompt.affinity_keys(block_size).to_vec()
+}
+
+/// A replica's prefix summary as shipped in a [`LoadDigest`].
+///
+/// `Full` replaces the router's view of the replica; `Delta` carries only
+/// the keys cached/evicted since the replica's previous summary, so a sync
+/// quantum costs O(churn) instead of O(cache size). The two protocols
+/// converge to identical router state at every sync boundary (equivalence
+/// property test); replicas fall back to `Full` on first publication and
+/// whenever the summary cap would truncate (a truncated delta base would
+/// desync).
+#[derive(Clone, Debug)]
+pub enum PrefixSummary {
+    Full(Vec<u128>),
+    Delta { added: Vec<u128>, removed: Vec<u128> },
 }
 
 /// Cluster-level radix index over replica prefix summaries. Chain-hashed
@@ -53,10 +63,38 @@ impl ClusterRadixIndex {
         self.sets.insert(replica, keys.iter().copied().collect());
     }
 
+    /// Apply a delta summary: drop `removed`, then add `added`. The sets
+    /// are disjoint (the replica cancels within-window churn), so order
+    /// only matters for defensiveness.
+    pub fn apply_delta(&mut self, replica: usize, added: &[u128], removed: &[u128]) {
+        let set = self.sets.entry(replica).or_default();
+        for k in removed {
+            set.remove(k);
+        }
+        set.extend(added.iter().copied());
+    }
+
     /// Optimistically add keys a replica is about to cache (dispatch-time
     /// update, so same-group arrivals within one sync quantum co-locate).
     pub fn extend(&mut self, replica: usize, keys: &[u128]) {
         self.sets.entry(replica).or_default().extend(keys.iter().copied());
+    }
+
+    /// Like `extend`, but returns the keys that were actually new — the
+    /// router records those as speculative and retracts them at the next
+    /// sync (a truly-cached key reappears in the replica's own summary,
+    /// full or delta; an uncached one must not linger).
+    fn extend_tracked(&mut self, replica: usize, keys: &[u128]) -> Vec<u128> {
+        let set = self.sets.entry(replica).or_default();
+        keys.iter().copied().filter(|&k| set.insert(k)).collect()
+    }
+
+    fn retract(&mut self, replica: usize, keys: &[u128]) {
+        if let Some(set) = self.sets.get_mut(&replica) {
+            for k in keys {
+                set.remove(k);
+            }
+        }
     }
 
     pub fn remove(&mut self, replica: usize) {
@@ -73,6 +111,19 @@ impl ClusterRadixIndex {
 
     pub fn total_keys(&self) -> usize {
         self.sets.values().map(|s| s.len()).sum()
+    }
+
+    /// Sorted key set the index holds for one replica (test introspection:
+    /// the delta-vs-full equivalence property compares these directly).
+    #[doc(hidden)]
+    pub fn replica_key_set(&self, replica: usize) -> Vec<u128> {
+        let mut v: Vec<u128> = self
+            .sets
+            .get(&replica)
+            .map(|s| s.iter().copied().collect())
+            .unwrap_or_default();
+        v.sort_unstable();
+        v
     }
 }
 
@@ -95,6 +146,11 @@ pub struct Router {
     /// Last synced digest per replica. BTreeMap: deterministic iteration
     /// (dispatch decisions must reproduce across runs).
     digests: BTreeMap<usize, LoadDigest>,
+    /// Keys speculatively added per replica at dispatch time since its
+    /// last sync; retracted when the replica's own summary arrives (under
+    /// the delta protocol nothing else would ever clean up a speculation
+    /// the replica did not actually cache).
+    optimistic: HashMap<usize, Vec<u128>>,
     time_model: TimeModel,
     block_size: usize,
     pub stats: RouterStats,
@@ -105,15 +161,27 @@ impl Router {
         Router {
             index: ClusterRadixIndex::default(),
             digests: BTreeMap::new(),
+            optimistic: HashMap::new(),
             time_model,
             block_size,
             stats: RouterStats::default(),
         }
     }
 
-    /// Absorb a freshly published digest.
+    /// Absorb a freshly published digest: retract this replica's dispatch
+    /// speculations (its own summary is the truth — anything it really
+    /// cached comes back as `Full` content or `Delta::added`), then apply
+    /// the summary.
     pub fn sync(&mut self, d: LoadDigest) {
-        self.index.update(d.replica, &d.cached_keys);
+        if let Some(spec) = self.optimistic.remove(&d.replica) {
+            self.index.retract(d.replica, &spec);
+        }
+        match &d.summary {
+            PrefixSummary::Full(keys) => self.index.update(d.replica, keys),
+            PrefixSummary::Delta { added, removed } => {
+                self.index.apply_delta(d.replica, added, removed)
+            }
+        }
         self.digests.insert(d.replica, d);
     }
 
@@ -121,6 +189,7 @@ impl Router {
     pub fn forget(&mut self, replica: usize) {
         self.index.remove(replica);
         self.digests.remove(&replica);
+        self.optimistic.remove(&replica);
     }
 
     pub fn digest(&self, replica: usize) -> Option<&LoadDigest> {
@@ -169,7 +238,10 @@ impl Router {
             d.pending_prefill_tokens += prompt_len - hit_tokens;
             d.free_blocks = d.free_blocks.saturating_sub(fresh);
         }
-        self.index.extend(replica, keys);
+        let speculated = self.index.extend_tracked(replica, keys);
+        if !speculated.is_empty() {
+            self.optimistic.entry(replica).or_default().extend(speculated);
+        }
     }
 
     /// Affinity/latency score of one replica for one arrival:
@@ -191,7 +263,7 @@ impl Router {
     /// Route one online arrival; returns `(replica, predicted_hit_tokens)`.
     /// `None` only when the router knows no replica at all.
     pub fn route_online(&mut self, prompt: &PromptSpec) -> Option<(usize, usize)> {
-        let keys = affinity_keys(prompt, self.block_size);
+        let keys = prompt.affinity_keys(self.block_size);
         let total_blocks = (prompt.total_len + 1).div_ceil(self.block_size);
 
         // (depth, hit_tokens, fresh_blocks, predicted, replica)
@@ -299,7 +371,7 @@ mod tests {
             free_blocks,
             block_size: 16,
             draining: false,
-            cached_keys: Vec::new(),
+            summary: PrefixSummary::Full(Vec::new()),
         }
     }
 
@@ -327,7 +399,7 @@ mod tests {
         let p = shared_prompt(9, 480, 320);
         let keys = affinity_keys(&p, 16);
         let mut d0 = digest(0, 10_000);
-        d0.cached_keys = keys[..8].to_vec();
+        d0.summary = PrefixSummary::Full(keys[..8].to_vec());
         r.sync(d0);
         r.sync(digest(1, 10_000));
         let (replica, hit) = r.route_online(&p).unwrap();
@@ -344,7 +416,7 @@ mod tests {
         // Warm but nearly out of memory: 480+1 tokens need 31 blocks,
         // 20 cached leaves 11 fresh > 4 free.
         let mut d0 = digest(0, 4);
-        d0.cached_keys = keys.clone();
+        d0.summary = PrefixSummary::Full(keys.clone());
         r.sync(d0);
         r.sync(digest(1, 10_000));
         let (replica, _) = r.route_online(&p).unwrap();
@@ -416,6 +488,61 @@ mod tests {
         d2.draining = true;
         r.sync(d2);
         assert_eq!(r.steal_order(), vec![1, 0]);
+    }
+
+    #[test]
+    fn delta_sync_matches_full_resync() {
+        let p = shared_prompt(5, 640, 640);
+        let keys = affinity_keys(&p, 16);
+        let mut r = router();
+        let mut d0 = digest(0, 10_000);
+        d0.summary = PrefixSummary::Full(keys[..10].to_vec());
+        r.sync(d0);
+        assert_eq!(r.index.cached_depth(0, &keys), 10);
+        // Delta: drop the deepest 4, add 2 more past the old horizon.
+        let mut d1 = digest(0, 10_000);
+        d1.summary = PrefixSummary::Delta {
+            added: keys[10..12].to_vec(),
+            removed: keys[6..10].to_vec(),
+        };
+        r.sync(d1);
+        // Walk stops at the first missing key (depth 6), like a full
+        // resync with the equivalent key set would.
+        assert_eq!(r.index.cached_depth(0, &keys), 6);
+        let mut rf = router();
+        let mut df = digest(0, 10_000);
+        let mut set: Vec<u128> = keys[..6].to_vec();
+        set.extend_from_slice(&keys[10..12]);
+        df.summary = PrefixSummary::Full(set);
+        rf.sync(df);
+        assert_eq!(rf.index.cached_depth(0, &keys), r.index.cached_depth(0, &keys));
+    }
+
+    #[test]
+    fn dispatch_speculation_retracted_on_sync() {
+        let mut r = router();
+        r.sync(digest(0, 10_000));
+        let p = shared_prompt(6, 480, 480);
+        let keys = affinity_keys(&p, 16);
+        let (replica, _) = r.route_online(&p).unwrap();
+        assert_eq!(replica, 0);
+        assert!(
+            r.index.cached_depth(0, &keys) > 0,
+            "dispatch must speculate the keys"
+        );
+        // The replica's next digest is an *empty* delta (it cached nothing):
+        // the speculation must not linger.
+        let mut d = digest(0, 10_000);
+        d.summary = PrefixSummary::Delta {
+            added: vec![],
+            removed: vec![],
+        };
+        r.sync(d);
+        assert_eq!(
+            r.index.cached_depth(0, &keys),
+            0,
+            "unconfirmed speculation must be retracted at sync"
+        );
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::collections::VecDeque;
 use anyhow::Result;
 
 use crate::config::SystemConfig;
-use crate::core::{PromptSpec, ReqState, Request, TaskClass};
+use crate::core::{PromptSpec, Request, TaskClass};
 use crate::estimator::{PrefillItem, TimeModel};
 use crate::metrics::Metrics;
 use crate::trace::Trace;
@@ -287,13 +287,12 @@ impl ClusterSim {
             .map_or(0, |r| r.engine.pool.len())
     }
 
-    // Digest publication is a full snapshot per replica per quantum (store
-    // scan + cached-key copy). That is the same O(store) the scheduler
-    // already pays every iteration, so it is not the sim's bottleneck, but
-    // delta summaries are the obvious next step if sync_dt ever shrinks
-    // (see DESIGN.md open follow-ups).
+    // Digest publication is O(churn + live requests) per replica per
+    // quantum: after each replica's first full summary only added/removed
+    // keys are shipped (see `PrefixSummary`), and the load counters scan
+    // the engine's live set rather than the whole store history.
     fn sync_router(&mut self) {
-        for rep in &self.replicas {
+        for rep in &mut self.replicas {
             self.router.sync(rep.digest(self.cfg.summary_cap));
         }
     }
@@ -321,20 +320,13 @@ impl ClusterSim {
     fn extract_jobs(&mut self, id: usize, n: usize) -> Vec<JobSpec> {
         let rep = self.replica_mut(id);
         let victims = rep.engine.pool.steal_candidates(n);
-        let block_size = rep.engine.cfg.cache.block_size;
         let mut jobs = Vec::with_capacity(victims.len());
         for rid in victims {
-            let (prompt, out, keys) = {
+            let (prompt, out) = {
                 let r = rep.engine.store.get(rid);
-                (
-                    r.prompt.clone(),
-                    r.max_new_tokens,
-                    r.prompt.content_keys(rid, r.prompt.total_len, block_size),
-                )
+                (r.prompt.clone(), r.max_new_tokens)
             };
-            rep.engine.pool.remove(rid, prompt.total_len);
-            rep.engine.kv.unregister_future(&keys);
-            rep.engine.store.get_mut(rid).state = ReqState::Queued;
+            rep.engine.withdraw_offline(rid);
             jobs.push(JobSpec {
                 prompt,
                 max_new_tokens: out,

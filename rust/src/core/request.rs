@@ -1,5 +1,7 @@
 //! Request lifecycle types shared by every Echo component.
 
+use std::cell::{Cell, OnceCell};
+
 /// Globally unique request id (monotonic per run).
 pub type RequestId = u64;
 /// Vocabulary token id (EchoLM vocab is small; u32 covers any real model).
@@ -32,6 +34,13 @@ pub struct PromptSpec {
     pub shared_prefix: Option<(GroupId, usize)>,
     /// Real token ids (PJRT backend only).
     pub tokens: Option<Vec<Token>>,
+    /// Interned owner-independent leading content keys (see
+    /// [`PromptSpec::affinity_keys`]); travels with clones, so a prompt
+    /// hashed once by the cluster router is never re-hashed by the replica
+    /// that receives it.
+    shared_keys: OnceCell<Vec<u128>>,
+    /// Block size the interned keys were computed with (consistency check).
+    shared_keys_bs: Cell<usize>,
 }
 
 impl PromptSpec {
@@ -40,6 +49,8 @@ impl PromptSpec {
             total_len,
             shared_prefix,
             tokens: None,
+            shared_keys: OnceCell::new(),
+            shared_keys_bs: Cell::new(0),
         }
     }
 
@@ -48,6 +59,8 @@ impl PromptSpec {
             total_len: tokens.len(),
             shared_prefix: None,
             tokens: Some(tokens),
+            shared_keys: OnceCell::new(),
+            shared_keys_bs: Cell::new(0),
         }
     }
 
@@ -110,6 +123,73 @@ impl PromptSpec {
         }
         keys
     }
+
+    /// Blocks whose content keys are owner-independent (shareable across
+    /// requests): full token blocks on the real-token path, or blocks fully
+    /// inside the sim shared-prefix region.
+    fn shareable_blocks(&self, block_size: usize) -> usize {
+        match (&self.tokens, self.shared_prefix) {
+            (Some(tokens), _) => tokens.len() / block_size,
+            (None, Some((_, shared_len))) => shared_len / block_size,
+            (None, None) => 0,
+        }
+    }
+
+    /// Leading owner-independent content keys (probed with owner 0): the
+    /// router's prefix-affinity probe, and the shared head of every owner's
+    /// full key path. Interned on first use — one chain-hash pass per
+    /// prompt instance, carried along by `clone()`.
+    pub fn affinity_keys(&self, block_size: usize) -> &[u128] {
+        let keys = self.shared_keys.get_or_init(|| {
+            self.shared_keys_bs.set(block_size);
+            let n = self.shareable_blocks(block_size);
+            let mut keys = Vec::with_capacity(n);
+            let mut prev = 0u128;
+            for i in 0..n {
+                let k = self.content_key(0, i, block_size, prev);
+                keys.push(k);
+                prev = k;
+            }
+            keys
+        });
+        // Hard assert (not debug-only): silently returning keys computed
+        // for a different block size would mean wrong KV content
+        // addressing and phantom prefix hits. Block size is per-process
+        // config today; heterogeneous-block-size fleets must recompute.
+        assert_eq!(
+            self.shared_keys_bs.get(),
+            block_size,
+            "affinity_keys called with two different block sizes"
+        );
+        keys
+    }
+
+    /// Content keys for the whole prompt (`total_len` tokens) of `owner` —
+    /// identical to `content_keys(owner, total_len, block_size)` but reuses
+    /// the interned shareable prefix and chain-hashes only the
+    /// owner-private tail. Within the shareable region `content_key`
+    /// ignores `owner`, so splicing the owner-0 prefix is exact.
+    pub fn full_key_path(&self, owner: RequestId, block_size: usize) -> Vec<u128> {
+        let n_blocks = self.total_len.div_ceil(block_size);
+        let shared = self.affinity_keys(block_size);
+        let take = shared.len().min(n_blocks);
+        let mut keys = Vec::with_capacity(n_blocks);
+        keys.extend_from_slice(&shared[..take]);
+        let mut prev = keys.last().copied().unwrap_or(0);
+        for i in take..n_blocks {
+            let k = self.content_key(owner, i, block_size, prev);
+            keys.push(k);
+            prev = k;
+        }
+        keys
+    }
+
+    /// Drop the interned shareable-prefix keys (terminal request states;
+    /// a later `affinity_keys` call recomputes them).
+    fn release_interned(&mut self) {
+        self.shared_keys.take();
+        self.shared_keys_bs.set(0);
+    }
 }
 
 fn chain(prev: u128, x: u128) -> u128 {
@@ -168,6 +248,14 @@ pub struct Request {
     pub token_times: Vec<f64>,
     /// Times this request was preempted (recompute punishment accounting).
     pub preemptions: usize,
+
+    // ---- interned derived state ----
+    /// Cached full-prompt content-key path (see [`Request::content_key_path`]).
+    key_path: OnceCell<Vec<u128>>,
+    key_path_bs: Cell<usize>,
+    /// How many times the key path was actually chain-hashed (regression
+    /// guard: must stay at 1 across preempt → re-add → re-admit cycles).
+    key_computes: Cell<u32>,
 }
 
 impl Request {
@@ -193,7 +281,48 @@ impl Request {
             finished_at: None,
             token_times: Vec::new(),
             preemptions: 0,
+            key_path: OnceCell::new(),
+            key_path_bs: Cell::new(0),
+            key_computes: Cell::new(0),
         }
+    }
+
+    /// Interned content-key path covering the whole prompt
+    /// (`prompt.total_len` tokens) — equal to
+    /// `prompt.content_keys(id, prompt.total_len, block_size)` but computed
+    /// at most once per request. Admission, preemption re-pooling,
+    /// re-admission, KV registration, and completion all share this one
+    /// vector instead of re-hashing the prompt.
+    pub fn content_key_path(&self, block_size: usize) -> &[u128] {
+        let keys = self.key_path.get_or_init(|| {
+            self.key_path_bs.set(block_size);
+            self.key_computes.set(self.key_computes.get() + 1);
+            self.prompt.full_key_path(self.id, block_size)
+        });
+        // Hard assert for the same reason as `affinity_keys`: stale keys
+        // under a changed block size must fail loudly, not corrupt cache
+        // addressing.
+        assert_eq!(
+            self.key_path_bs.get(),
+            block_size,
+            "content_key_path called with two different block sizes"
+        );
+        keys
+    }
+
+    /// Times the key path was chain-hashed (test/regression hook).
+    pub fn key_compute_count(&self) -> u32 {
+        self.key_computes.get()
+    }
+
+    /// Drop the interned key caches. The store keeps every request forever
+    /// for metrics, so terminal transitions (finished, withdrawn by
+    /// work-stealing) must release the ~1 KB of key vectors nothing will
+    /// read again; a later `content_key_path` call would recompute.
+    pub fn release_interned_keys(&mut self) {
+        self.key_path.take();
+        self.key_path_bs.set(0);
+        self.prompt.release_interned();
     }
 
     /// Total sequence length whose KV must exist before the next decode:
@@ -364,6 +493,42 @@ mod tests {
         let ka = a.content_keys(1, 8, 4);
         let kb = b.content_keys(2, 8, 4);
         assert_ne!(ka[1], kb[1]);
+    }
+
+    #[test]
+    fn interned_path_matches_direct_hash() {
+        // Sim + shared, sim private, real tokens, real with partial tail.
+        let specs = vec![
+            PromptSpec::sim(100, Some((7, 48))),
+            PromptSpec::sim(100, None),
+            PromptSpec::real((0..64).collect()),
+            PromptSpec::real((0..70).collect()),
+        ];
+        for (owner, spec) in specs.into_iter().enumerate() {
+            let owner = owner as RequestId + 1;
+            let direct = spec.content_keys(owner, spec.total_len, 16);
+            let interned = spec.full_key_path(owner, 16);
+            assert_eq!(direct, interned, "owner {owner}");
+            // Affinity keys are the owner-independent head of the path.
+            let aff = spec.affinity_keys(16);
+            assert_eq!(&direct[..aff.len().min(direct.len())], &aff[..aff.len().min(direct.len())]);
+        }
+    }
+
+    #[test]
+    fn key_path_computed_at_most_once() {
+        let r = Request::new(9, TaskClass::Offline, 0.0, PromptSpec::sim(200, Some((3, 96))), 8);
+        assert_eq!(r.key_compute_count(), 0);
+        let first = r.content_key_path(16).to_vec();
+        for _ in 0..5 {
+            assert_eq!(r.content_key_path(16), &first[..]);
+        }
+        assert_eq!(r.key_compute_count(), 1, "path must be interned");
+        assert_eq!(first, r.prompt.content_keys(9, 200, 16));
+        // The cache survives cloning (same id, same prompt).
+        let c = r.clone();
+        assert_eq!(c.content_key_path(16), &first[..]);
+        assert_eq!(c.key_compute_count(), 1);
     }
 
     #[test]

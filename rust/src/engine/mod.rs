@@ -12,7 +12,7 @@
 pub mod pjrt;
 pub mod sim;
 
-use std::collections::VecDeque;
+use std::collections::{BTreeSet, VecDeque};
 
 use crate::config::{SystemConfig, SchedulerKind};
 use crate::core::{ReqState, Request, RequestId, RequestStore, TaskClass, Token};
@@ -52,6 +52,10 @@ pub struct Engine<B: ExecutionBackend> {
     pub clock: f64,
     /// Future online arrivals (sorted ascending; replayed into the queue).
     arrivals: VecDeque<(f64, RequestId)>,
+    /// Unfinished requests this engine owns (submitted, neither finished
+    /// nor withdrawn). The store keeps every request ever for metrics, so
+    /// load/digest scans iterate this set instead of the full history.
+    live: BTreeSet<RequestId>,
     sample: SampleCtl,
     /// Hard stop against pathological loops; generous (24 h at 10 ms/iter).
     pub max_iterations: usize,
@@ -88,6 +92,7 @@ impl<B: ExecutionBackend> Engine<B> {
             backend,
             clock: 0.0,
             arrivals: VecDeque::new(),
+            live: BTreeSet::new(),
             sample: SampleCtl::new(0.0),
             max_iterations: 10_000_000,
             clock_cap: f64::INFINITY,
@@ -105,6 +110,7 @@ impl<B: ExecutionBackend> Engine<B> {
         debug_assert_eq!(req.class, TaskClass::Online);
         let t = req.arrival;
         let id = req.id;
+        self.live.insert(id);
         self.store.insert(req);
         // Insert keeping `arrivals` sorted (submissions are usually already
         // in order; fall back to a scan when not).
@@ -122,17 +128,46 @@ impl<B: ExecutionBackend> Engine<B> {
     pub fn submit_offline(&mut self, req: Request) {
         debug_assert_eq!(req.class, TaskClass::Offline);
         let id = req.id;
-        let keys = req
-            .prompt
-            .content_keys(id, req.prompt.total_len, self.cfg.cache.block_size);
-        self.kv.register_future(&keys);
-        self.pool.add(id, req.prompt.total_len, keys);
         self.store.insert(req);
+        self.register_offline(id);
+    }
+
+    /// Register an offline request already sitting in the store (workload
+    /// generators insert directly): intern its key path, register future
+    /// interest with the KV manager, and pool it. The single entry point
+    /// for the previously copy-pasted register-future-then-pool sequence.
+    pub fn register_offline(&mut self, id: RequestId) {
+        let block_size = self.cfg.cache.block_size;
+        let prompt_len = self.store.get(id).prompt.total_len;
+        let keys = self.store.get(id).content_key_path(block_size).to_vec();
+        self.kv.register_future(&keys);
+        self.pool.add(id, prompt_len, keys);
+        self.live.insert(id);
+    }
+
+    /// Withdraw a pooled offline request from this engine (cluster
+    /// work-stealing / drain): drop pool + future-interest registration and
+    /// demote the store entry to an inert `Queued` record. The job itself
+    /// moves elsewhere as a spec.
+    pub fn withdraw_offline(&mut self, id: RequestId) {
+        let block_size = self.cfg.cache.block_size;
+        let prompt_len = self.store.get(id).prompt.total_len;
+        self.pool.remove(id, prompt_len);
+        self.kv
+            .unregister_future(self.store.get(id).content_key_path(block_size));
+        let r = self.store.get_mut(id);
+        r.state = ReqState::Queued;
+        r.release_interned_keys();
+        self.live.remove(&id);
+    }
+
+    /// Unfinished requests owned by this engine (deterministic id order).
+    pub fn live_requests(&self) -> impl Iterator<Item = &Request> {
+        self.live.iter().map(|&id| self.store.get(id))
     }
 
     fn online_kv_tokens(&self) -> usize {
-        self.store
-            .iter()
+        self.live_requests()
             .filter(|r| r.class == TaskClass::Online && r.state == ReqState::Running)
             .map(|r| self.kv.held_blocks(r.id) * self.cfg.cache.block_size)
             .sum()
@@ -141,7 +176,7 @@ impl<B: ExecutionBackend> Engine<B> {
     fn active_counts(&self) -> (usize, usize) {
         let mut online = 0;
         let mut offline = 0;
-        for r in self.store.iter() {
+        for r in self.live_requests() {
             if r.state == ReqState::Running {
                 match r.class {
                     TaskClass::Online => online += 1,
@@ -165,15 +200,16 @@ impl<B: ExecutionBackend> Engine<B> {
         };
         self.kv.release(id, true);
         if class == TaskClass::Offline {
-            let keys = self
-                .store
-                .get(id)
-                .prompt
-                .content_keys(id, prompt_len, self.cfg.cache.block_size);
-            self.kv.unregister_future(&keys);
+            let block_size = self.cfg.cache.block_size;
+            self.kv
+                .unregister_future(self.store.get(id).content_key_path(block_size));
         }
         self.sched.on_finished(id);
         self.backend.on_release(id);
+        self.live.remove(&id);
+        // The store retains the finished request for metrics; its interned
+        // key vectors are dead weight from here on.
+        self.store.get_mut(id).release_interned_keys();
         self.metrics
             .record_completion(class, tokens_out, prompt_len, ttft, tpot);
     }

@@ -117,12 +117,7 @@ mod tests {
             .sum();
         // Requests already inserted in the store by synthesize; register them.
         for &id in &batch.ids {
-            let r = e.store.get(id).clone();
-            let keys =
-                r.prompt
-                    .content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
-            e.kv.register_future(&keys);
-            e.pool.add(id, r.prompt.total_len, keys);
+            e.register_offline(id);
         }
         e.run().unwrap();
         assert_eq!(e.metrics.offline_completed, 10);
@@ -231,14 +226,7 @@ mod tests {
             let mut ids = batch.ids.clone();
             rng.shuffle(&mut ids);
             for &id in &ids {
-                let r = e.store.get(id).clone();
-                let keys = r.prompt.content_keys(
-                    id,
-                    r.prompt.total_len,
-                    e.cfg.cache.block_size,
-                );
-                e.kv.register_future(&keys);
-                e.pool.add(id, r.prompt.total_len, keys);
+                e.register_offline(id);
             }
             // Sustained online churn that flushes an LRU cache.
             for i in 0..130 {

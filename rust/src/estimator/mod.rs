@@ -7,4 +7,4 @@ pub mod memory;
 pub mod time_model;
 
 pub use memory::MemoryPredictor;
-pub use time_model::{BatchShape, PrefillItem, TimeModel, TimeSample};
+pub use time_model::{BatchShape, PrefillItem, TimeModel, TimeSample, TrialShape, TrialUndo};

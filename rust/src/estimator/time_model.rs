@@ -32,7 +32,7 @@ impl PrefillItem {
 }
 
 /// The shape of an iteration batch — everything Eq. 6-8 need.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct BatchShape {
     pub prefills: Vec<PrefillItem>,
     /// Context length (KV read span) per decode item.
@@ -46,6 +46,103 @@ impl BatchShape {
 
     pub fn total_tokens(&self) -> usize {
         self.prefills.iter().map(|p| p.chunk).sum::<usize>() + self.decode_lens.len()
+    }
+}
+
+/// A [`BatchShape`] with incrementally maintained Eq. 6-8 aggregates, for
+/// O(1) trial scoring in the scheduler's plan search (§4.1).
+///
+/// The scheduler's candidate loop used to clone the whole shape per trial
+/// and let `batch_time` re-scan every item. `TrialShape` instead mutates a
+/// single shape in place: `push_*` appends an item and updates the
+/// aggregates (prefill seconds, decode sum/max), returning a [`TrialUndo`]
+/// that restores the *exact* previous aggregate values. Undo saves the
+/// prior floats rather than subtracting, so a push/undo pair is a perfect
+/// no-op and committed batches accumulate in append order — which makes
+/// [`TimeModel::batch_time_inc`] bit-identical to recomputing
+/// `batch_time(shape)` from scratch (left-to-right summation, exact
+/// integer decode sums). The equivalence tests pin this down.
+///
+/// Discipline: undo is LIFO — only the most recent un-undone push may be
+/// undone.
+#[derive(Clone, Debug, Default)]
+pub struct TrialShape {
+    shape: BatchShape,
+    /// Σ `prefill_item(i)` over `shape.prefills`, accumulated in push order.
+    prefill_secs: f64,
+    /// Σ `shape.decode_lens` (exact).
+    decode_sum: u64,
+    /// max(`shape.decode_lens`) (0 when empty).
+    decode_max: usize,
+}
+
+/// Saved aggregate state that reverses one `TrialShape::push_*`.
+#[derive(Clone, Copy, Debug)]
+pub enum TrialUndo {
+    Decode { prev_max: usize },
+    Prefill { prev_secs: f64 },
+}
+
+impl TrialShape {
+    /// Rebuild a trial view from an existing shape (aggregates recomputed
+    /// in item order, so `batch_time_inc` matches `batch_time(&shape)`).
+    pub fn from_shape(tm: &TimeModel, shape: BatchShape) -> Self {
+        let mut t = TrialShape::default();
+        for &item in &shape.prefills {
+            let _ = t.push_prefill(tm, item);
+        }
+        for &len in &shape.decode_lens {
+            let _ = t.push_decode(len);
+        }
+        debug_assert_eq!(t.shape, shape);
+        t
+    }
+
+    /// Append one decode item of context length `len`.
+    pub fn push_decode(&mut self, len: usize) -> TrialUndo {
+        let prev_max = self.decode_max;
+        self.shape.decode_lens.push(len);
+        self.decode_sum += len as u64;
+        self.decode_max = self.decode_max.max(len);
+        TrialUndo::Decode { prev_max }
+    }
+
+    /// Append one prefill chunk.
+    pub fn push_prefill(&mut self, tm: &TimeModel, item: PrefillItem) -> TrialUndo {
+        let prev_secs = self.prefill_secs;
+        self.shape.prefills.push(item);
+        self.prefill_secs = prev_secs + tm.prefill_item(item);
+        TrialUndo::Prefill { prev_secs }
+    }
+
+    /// Reverse the most recent un-undone push (LIFO).
+    pub fn undo(&mut self, u: TrialUndo) {
+        match u {
+            TrialUndo::Decode { prev_max } => {
+                let len = self
+                    .shape
+                    .decode_lens
+                    .pop()
+                    .expect("TrialShape::undo without a matching decode push");
+                self.decode_sum -= len as u64;
+                self.decode_max = prev_max;
+            }
+            TrialUndo::Prefill { prev_secs } => {
+                self.shape
+                    .prefills
+                    .pop()
+                    .expect("TrialShape::undo without a matching prefill push");
+                self.prefill_secs = prev_secs;
+            }
+        }
+    }
+
+    pub fn shape(&self) -> &BatchShape {
+        &self.shape
+    }
+
+    pub fn into_shape(self) -> BatchShape {
+        self.shape
     }
 }
 
@@ -92,6 +189,29 @@ impl TimeModel {
     pub fn batch_time(&self, shape: &BatchShape) -> f64 {
         let tp = self.prefill_time(&shape.prefills);
         let td = self.decode_time(&shape.decode_lens);
+        match (tp > 0.0, td > 0.0) {
+            (false, false) => 0.0,
+            (true, false) => tp,
+            (false, true) => td.max(self.cfg.c),
+            (true, true) => {
+                self.cfg.lambda * tp.max(td) + (1.0 - self.cfg.lambda) * tp.min(td)
+            }
+        }
+    }
+
+    /// Eq. 8 from a trial's O(1) aggregates. Bit-identical to
+    /// `batch_time(trial.shape())`: the prefill sum accumulates per-item
+    /// times in the same left-to-right order `prefill_time` folds them, and
+    /// the decode terms use the exact integer sum/max.
+    pub fn batch_time_inc(&self, t: &TrialShape) -> f64 {
+        let tp = t.prefill_secs;
+        let td = if t.shape.decode_lens.is_empty() {
+            0.0
+        } else {
+            let max = t.decode_max as f64;
+            let mean = t.decode_sum as f64 / t.shape.decode_lens.len() as f64;
+            self.cfg.gamma * max + self.cfg.delta * mean
+        };
         match (tp > 0.0, td > 0.0) {
             (false, false) => 0.0,
             (true, false) => tp,
@@ -359,5 +479,62 @@ mod tests {
         let fitted = TimeModel::fit(&[], cfg());
         assert_eq!(fitted.alpha, cfg().alpha);
         assert_eq!(fitted.lambda, cfg().lambda);
+    }
+
+    #[test]
+    fn trial_shape_matches_batch_time_bit_exactly() {
+        let m = TimeModel::new(cfg());
+        // Deterministic pseudo-random push/undo walk.
+        let mut state = 0x1234_5678_u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as usize
+        };
+        let mut trial = TrialShape::default();
+        for _ in 0..500 {
+            let r = next() % 10;
+            if r < 4 {
+                let _ = trial.push_decode(1 + next() % 4096);
+            } else if r < 8 {
+                let _ = trial.push_prefill(
+                    &m,
+                    PrefillItem {
+                        chunk: 1 + next() % 512,
+                        context: next() % 8192,
+                    },
+                );
+            } else {
+                // Trial that gets rejected: push, score, undo.
+                let u = if r == 8 {
+                    trial.push_decode(1 + next() % 4096)
+                } else {
+                    trial.push_prefill(
+                        &m,
+                        PrefillItem {
+                            chunk: 1 + next() % 512,
+                            context: next() % 8192,
+                        },
+                    )
+                };
+                let _ = m.batch_time_inc(&trial);
+                trial.undo(u);
+            }
+            let inc = m.batch_time_inc(&trial);
+            let full = m.batch_time(trial.shape());
+            assert_eq!(
+                inc.to_bits(),
+                full.to_bits(),
+                "incremental {} != recomputed {} after {} items",
+                inc,
+                full,
+                trial.shape().prefills.len() + trial.shape().decode_lens.len()
+            );
+        }
+        // from_shape rebuild agrees too.
+        let rebuilt = TrialShape::from_shape(&m, trial.shape().clone());
+        assert_eq!(
+            m.batch_time_inc(&rebuilt).to_bits(),
+            m.batch_time_inc(&trial).to_bits()
+        );
     }
 }

@@ -128,12 +128,7 @@ pub fn run_mixed(
     let mut batch = batch;
     rng.shuffle(&mut batch.ids);
     for &id in &batch.ids {
-        let r = e.store.get(id).clone();
-        let keys = r
-            .prompt
-            .content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
-        e.kv.register_future(&keys);
-        e.pool.add(id, r.prompt.total_len, keys);
+        e.register_offline(id);
     }
 
     e.run_until(opts.horizon)?;
@@ -489,12 +484,7 @@ pub fn ablation_cache(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
         let batch = synthesize(&spec, n_off, TaskClass::Offline, 0.0, &mut store, &mut rng);
         e.store = store;
         for &id in &batch.ids {
-            let r = e.store.get(id).clone();
-            let keys = r
-                .prompt
-                .content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
-            e.kv.register_future(&keys);
-            e.pool.add(id, r.prompt.total_len, keys);
+            e.register_offline(id);
         }
         e.run_until(opts.horizon)?;
         rows.push(vec![
@@ -547,12 +537,7 @@ pub fn ablation_budget(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
         let batch = synthesize(&spec, n_off, TaskClass::Offline, 0.0, &mut store, &mut rng);
         e.store = store;
         for &id in &batch.ids {
-            let r = e.store.get(id).clone();
-            let keys = r
-                .prompt
-                .content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
-            e.kv.register_future(&keys);
-            e.pool.add(id, r.prompt.total_len, keys);
+            e.register_offline(id);
         }
         let wall = std::time::Instant::now();
         e.run_until(o.horizon)?;

@@ -16,9 +16,11 @@
 //! (+SLO-constrained admission), BS+E+S (+KV-aware selection), Echo
 //! (+task-aware cache manager, configured at the KvManager level).
 
+pub mod oracle;
 pub mod plan;
 pub mod pool;
 
+pub use oracle::OracleScheduler;
 pub use plan::{Plan, PlanItem, WorkKind};
 pub use pool::{OfflinePool, RadixIndex};
 
@@ -26,7 +28,7 @@ use std::collections::VecDeque;
 
 use crate::config::{SchedulerConfig, SchedulerKind};
 use crate::core::{ReqState, RequestId, RequestStore, Slo, TaskClass};
-use crate::estimator::{BatchShape, PrefillItem, TimeModel};
+use crate::estimator::{PrefillItem, TimeModel, TrialShape};
 use crate::kvcache::KvManager;
 
 /// What the scheduler decided beyond the plan itself.
@@ -47,13 +49,18 @@ pub struct Scheduler {
     block_size: usize,
     /// Admission (LIFO preemption) order of running offline requests.
     running_offline: Vec<RequestId>,
+    /// All running request ids, kept sorted ascending across iterations —
+    /// the paper's "last batch" carry-over, maintained incrementally at the
+    /// admission/preemption/completion transitions instead of re-collected
+    /// and re-sorted from the store every iteration.
+    running: Vec<RequestId>,
 }
 
 /// Minimum useful SLO slack; below this the budget is treated as violated
 /// anyway and offline admission stops.
-const MIN_BUDGET: f64 = 1e-4;
+pub(crate) const MIN_BUDGET: f64 = 1e-4;
 /// Score epsilon: protects Eq. 4's division when a mutation adds ~no time.
-const EPS_TIME: f64 = 1e-6;
+pub(crate) const EPS_TIME: f64 = 1e-6;
 
 impl Scheduler {
     pub fn new(
@@ -68,6 +75,7 @@ impl Scheduler {
             time_model,
             block_size,
             running_offline: Vec::new(),
+            running: Vec::new(),
         }
     }
 
@@ -75,9 +83,32 @@ impl Scheduler {
         tokens.div_ceil(self.block_size)
     }
 
+    /// Track `id` in the sorted running set (idempotent).
+    fn note_running(&mut self, id: RequestId) {
+        let pos = self.running.partition_point(|&r| r < id);
+        if self.running.get(pos) != Some(&id) {
+            self.running.insert(pos, id);
+        }
+    }
+
+    /// Untrack `id` from the sorted running set.
+    fn drop_running(&mut self, id: RequestId) {
+        if let Ok(pos) = self.running.binary_search(&id) {
+            self.running.remove(pos);
+        }
+    }
+
+    /// Register a request that was marked `Running` outside the scheduler
+    /// (test fixtures / benches that seed the store directly). Normal
+    /// admissions are tracked automatically.
+    pub fn adopt_running(&mut self, id: RequestId) {
+        self.note_running(id);
+    }
+
     /// Forget a request that finished (engine calls this on completion).
     pub fn on_finished(&mut self, id: RequestId) {
         self.running_offline.retain(|&r| r != id);
+        self.drop_running(id);
     }
 
     /// Number of offline requests currently admitted.
@@ -86,7 +117,8 @@ impl Scheduler {
     }
 
     /// Preempt the most recently admitted offline request (recompute mode):
-    /// release KV, reset progress, push back into the pool.
+    /// release KV, reset progress, push back into the pool. The interned
+    /// key path makes the re-pooling free of prompt re-hashing.
     fn preempt_one_offline(
         &mut self,
         store: &mut RequestStore,
@@ -100,10 +132,9 @@ impl Scheduler {
         let req = store.get_mut(victim);
         req.preempt();
         kv.release(victim, false);
-        let keys = req
-            .prompt
-            .content_keys(victim, req.prompt.total_len, self.block_size);
+        let keys = req.content_key_path(self.block_size).to_vec();
         pool.add(victim, req.prompt.total_len, keys);
+        self.drop_running(victim);
         out.preempted.push(victim);
         true
     }
@@ -145,13 +176,27 @@ impl Scheduler {
         let mut out = Outcome::default();
 
         // ---- 1. partition the carried-over running set ------------------
-        let mut running: Vec<RequestId> = store.ids_in_state(ReqState::Running);
-        running.sort_unstable(); // deterministic order (admission order)
+        // `self.running` is maintained sorted across iterations (the "last
+        // batch" observation): no store scan, no re-sort. Entries that left
+        // the running state without notice (direct store mutation in tests)
+        // are scrubbed lazily here.
+        self.running
+            .retain(|&id| store.try_get(id).map_or(false, |r| r.state == ReqState::Running));
+        debug_assert_eq!(
+            self.running,
+            {
+                let mut v = store.ids_in_state(ReqState::Running);
+                v.sort_unstable();
+                v
+            },
+            "scheduler running-set index diverged from the store \
+             (use Scheduler::adopt_running after marking a request Running directly)"
+        );
         let mut online_decodes = Vec::new();
         let mut online_prefills = Vec::new(); // (id, remaining)
         let mut offline_decodes = Vec::new();
         let mut offline_prefills = Vec::new();
-        for id in running {
+        for &id in &self.running {
             let r = store.get(id);
             match (r.class, r.in_prefill()) {
                 (TaskClass::Online, false) => online_decodes.push(id),
@@ -196,11 +241,10 @@ impl Scheduler {
                 let req = store.get_mut(id);
                 req.preempt();
                 kv.release(id, false);
-                let keys = req
-                    .prompt
-                    .content_keys(id, req.prompt.total_len, self.block_size);
+                let keys = req.content_key_path(self.block_size).to_vec();
                 pool.add(id, req.prompt.total_len, keys);
                 self.running_offline.retain(|&r| r != id);
+                self.drop_running(id);
                 out.preempted.push(id);
                 false
             }
@@ -211,17 +255,16 @@ impl Scheduler {
             if online_decodes.len() + online_prefills.len() + 1 > self.cfg.max_batch {
                 break;
             }
-            let (total_blocks, keys, _prompt_len) = {
-                let r = store.get(head);
-                (
-                    self.blocks_for(r.seq_len() + 1),
-                    r.prompt.content_keys(head, r.prompt.total_len, self.block_size),
-                    r.prompt.total_len,
-                )
-            };
+            let total_blocks = self.blocks_for(store.get(head).seq_len() + 1);
             let mut admitted = false;
             loop {
-                match kv.allocate(head, TaskClass::Online, &keys, total_blocks, now) {
+                // Interned path: the borrow is scoped to the allocate call
+                // so preemption (which mutates the store) stays legal.
+                let alloc = {
+                    let keys = store.get(head).content_key_path(self.block_size);
+                    kv.allocate(head, TaskClass::Online, keys, total_blocks, now)
+                };
+                match alloc {
                     Some(ff) => {
                         let r = store.get_mut(head);
                         r.state = ReqState::Running;
@@ -232,6 +275,7 @@ impl Scheduler {
                         } else {
                             0
                         };
+                        self.note_running(head);
                         admitted = true;
                         break;
                     }
@@ -260,7 +304,12 @@ impl Scheduler {
         offline_prefills.retain(|&id| store.get(id).state == ReqState::Running);
 
         // ---- 4. mandatory online items ----------------------------------
-        let mut shape = BatchShape::default();
+        // One TrialShape is threaded through the whole search: candidate
+        // mutations are applied in place and undone on rejection (O(1) via
+        // the incremental Eq. 6-8 aggregates) instead of cloning the shape
+        // per trial. Plans come out bit-identical to the clone-trial oracle
+        // (`oracle::OracleScheduler`); the equivalence tests pin this down.
+        let mut shape = TrialShape::default();
         let mut items = Vec::new();
         let mut token_budget = self.cfg.max_batched_tokens;
 
@@ -269,7 +318,7 @@ impl Scheduler {
                 req: id,
                 kind: WorkKind::Decode,
             });
-            shape.decode_lens.push(store.get(id).seq_len());
+            let _ = shape.push_decode(store.get(id).seq_len());
             token_budget = token_budget.saturating_sub(1);
         }
         // FCFS order for online prefills (arrival order == id order here).
@@ -291,10 +340,13 @@ impl Scheduler {
                 req: id,
                 kind: WorkKind::Prefill { chunk },
             });
-            shape.prefills.push(PrefillItem {
-                chunk,
-                context: r.computed,
-            });
+            let _ = shape.push_prefill(
+                &self.time_model,
+                PrefillItem {
+                    chunk,
+                    context: r.computed,
+                },
+            );
             token_budget -= chunk;
             online_prefill_chunks.push((id, chunk));
         }
@@ -312,15 +364,14 @@ impl Scheduler {
                 break;
             }
             let len = store.get(id).seq_len();
-            let mut trial = shape.clone();
-            trial.decode_lens.push(len);
+            let undo = shape.push_decode(len);
             if self.cfg.kind.uses_estimator()
-                && self.time_model.batch_time(&trial) > budget
+                && self.time_model.batch_time_inc(&shape) > budget
             {
+                shape.undo(undo);
                 out.skipped_offline += 1;
                 continue; // stays running & resident, idles this iteration
             }
-            shape = trial;
             items.push(PlanItem {
                 req: id,
                 kind: WorkKind::Decode,
@@ -339,18 +390,20 @@ impl Scheduler {
             if chunk == 0 {
                 continue;
             }
-            let mut trial = shape.clone();
-            trial.prefills.push(PrefillItem {
-                chunk,
-                context: r.computed,
-            });
+            let undo = shape.push_prefill(
+                &self.time_model,
+                PrefillItem {
+                    chunk,
+                    context: r.computed,
+                },
+            );
             if self.cfg.kind.uses_estimator()
-                && self.time_model.batch_time(&trial) > budget
+                && self.time_model.batch_time_inc(&shape) > budget
             {
+                shape.undo(undo);
                 out.skipped_offline += 1;
                 continue;
             }
-            shape = trial;
             items.push(PlanItem {
                 req: id,
                 kind: WorkKind::Prefill { chunk },
@@ -390,13 +443,13 @@ impl Scheduler {
         }
 
         let est_time = if self.cfg.kind.uses_estimator() {
-            self.time_model.batch_time(&shape)
+            self.time_model.batch_time_inc(&shape)
         } else {
             0.0
         };
         out.plan = Plan {
             items,
-            shape,
+            shape: shape.into_shape(),
             est_time,
         };
         out
@@ -412,7 +465,7 @@ impl Scheduler {
         pool: &mut OfflinePool,
         kv: &mut KvManager,
         items: &mut Vec<PlanItem>,
-        shape: &mut BatchShape,
+        shape: &mut TrialShape,
         token_budget: &mut usize,
         slots_left: &mut usize,
         budget: f64,
@@ -420,16 +473,15 @@ impl Scheduler {
     ) {
         while *slots_left > 0 && *token_budget > 0 {
             let Some(head) = pool.fcfs_head() else { break };
-            let (prompt_len, seq_len, keys) = {
+            let (prompt_len, seq_len) = {
                 let r = store.get(head);
-                (
-                    r.prompt.total_len,
-                    r.seq_len(),
-                    r.prompt.content_keys(head, r.prompt.total_len, self.block_size),
-                )
+                (r.prompt.total_len, r.seq_len())
             };
             let total_blocks = self.blocks_for(seq_len + 1);
-            let hit_blocks = kv.peek_prefix(&keys[..keys.len().min(total_blocks)]);
+            let hit_blocks = {
+                let keys = store.get(head).content_key_path(self.block_size);
+                kv.peek_prefix(&keys[..keys.len().min(total_blocks)])
+            };
             let ff = if self.cfg.fast_forward {
                 (hit_blocks * self.block_size).min(seq_len - 1)
             } else {
@@ -437,23 +489,29 @@ impl Scheduler {
             };
             let chunk = (seq_len - ff).min(self.cfg.chunk).min(*token_budget);
             // estimator check (BS skips: budget = inf)
-            let mut trial = shape.clone();
-            if chunk > 0 {
-                trial.prefills.push(PrefillItem {
-                    chunk,
-                    context: ff,
-                });
+            let undo = if chunk > 0 {
+                shape.push_prefill(
+                    &self.time_model,
+                    PrefillItem {
+                        chunk,
+                        context: ff,
+                    },
+                )
             } else {
-                trial.decode_lens.push(seq_len);
-            }
-            if self.cfg.kind.uses_estimator() && self.time_model.batch_time(&trial) > budget
+                shape.push_decode(seq_len)
+            };
+            if self.cfg.kind.uses_estimator()
+                && self.time_model.batch_time_inc(shape) > budget
             {
+                shape.undo(undo);
                 break; // FCFS: if the head does not fit, stop
             }
-            if kv
-                .allocate(head, TaskClass::Offline, &keys, total_blocks, now)
-                .is_none()
-            {
+            let allocated = {
+                let keys = store.get(head).content_key_path(self.block_size);
+                kv.allocate(head, TaskClass::Offline, keys, total_blocks, now)
+            };
+            if allocated.is_none() {
+                shape.undo(undo);
                 break; // memory: offline never preempts anything
             }
             pool.remove(head, prompt_len);
@@ -461,8 +519,8 @@ impl Scheduler {
             r.state = ReqState::Running;
             r.computed = ff;
             self.running_offline.push(head);
+            self.note_running(head);
             out.admitted_offline.push(head);
-            *shape = trial;
             if chunk > 0 {
                 items.push(PlanItem {
                     req: head,
@@ -481,7 +539,11 @@ impl Scheduler {
     }
 
     /// BS+E+S / Echo: evaluate pool candidates (prefix-cached heads + FCFS
-    /// heads per bucket) and admit by Eq. 4 score while feasible.
+    /// heads per bucket) and admit by Eq. 4 score while feasible. Each
+    /// candidate is scored by an apply/undo delta on the shared
+    /// [`TrialShape`]; the winner's mutation is re-applied at commit (the
+    /// base shape is unchanged between evaluation and commit, so the
+    /// re-push reproduces the winning trial exactly).
     #[allow(clippy::too_many_arguments)]
     fn admit_kv_aware(
         &mut self,
@@ -490,7 +552,7 @@ impl Scheduler {
         pool: &mut OfflinePool,
         kv: &mut KvManager,
         items: &mut Vec<PlanItem>,
-        shape: &mut BatchShape,
+        shape: &mut TrialShape,
         token_budget: &mut usize,
         slots_left: &mut usize,
         budget: f64,
@@ -501,16 +563,22 @@ impl Scheduler {
             if candidates.is_empty() {
                 break;
             }
-            let base_time = self.time_model.batch_time(shape);
+            let base_time = self.time_model.batch_time_inc(shape);
             let avail = kv.availability();
-            let mut best: Option<(f64, RequestId, usize, usize, BatchShape)> = None;
+            // (score, id, ff, chunk, seq_len)
+            let mut best: Option<(f64, RequestId, usize, usize, usize)> = None;
             for id in candidates {
-                let r = store.get(id);
-                let prompt_len = r.prompt.total_len;
-                let seq_len = r.seq_len();
-                let keys = r.prompt.content_keys(id, prompt_len, self.block_size);
-                let total_blocks = self.blocks_for(seq_len + 1);
-                let hit_blocks = kv.peek_prefix(&keys[..keys.len().min(total_blocks)]);
+                let (seq_len, total_blocks, hit_blocks) = {
+                    let r = store.get(id);
+                    let seq_len = r.seq_len();
+                    let total_blocks = self.blocks_for(seq_len + 1);
+                    let keys = r.content_key_path(self.block_size);
+                    (
+                        seq_len,
+                        total_blocks,
+                        kv.peek_prefix(&keys[..keys.len().min(total_blocks)]),
+                    )
+                };
                 let ff = if self.cfg.fast_forward {
                     (hit_blocks * self.block_size).min(seq_len - 1)
                 } else {
@@ -521,16 +589,19 @@ impl Scheduler {
                     continue;
                 }
                 let chunk = (seq_len - ff).min(self.cfg.chunk).min(*token_budget);
-                let mut trial = shape.clone();
-                if chunk > 0 {
-                    trial.prefills.push(PrefillItem {
-                        chunk,
-                        context: ff,
-                    });
+                let undo = if chunk > 0 {
+                    shape.push_prefill(
+                        &self.time_model,
+                        PrefillItem {
+                            chunk,
+                            context: ff,
+                        },
+                    )
                 } else {
-                    trial.decode_lens.push(seq_len);
-                }
-                let t = self.time_model.batch_time(&trial);
+                    shape.push_decode(seq_len)
+                };
+                let t = self.time_model.batch_time_inc(shape);
+                shape.undo(undo);
                 if t > budget {
                     continue;
                 }
@@ -546,22 +617,19 @@ impl Scheduler {
                     continue;
                 }
                 if best.as_ref().map_or(true, |b| score > b.0) {
-                    best = Some((score, id, ff, chunk, trial));
+                    best = Some((score, id, ff, chunk, seq_len));
                 }
             }
-            let Some((_, id, ff, chunk, trial)) = best else { break };
-            let (prompt_len, keys, total_blocks) = {
+            let Some((_, id, ff, chunk, seq_len)) = best else { break };
+            let (prompt_len, total_blocks) = {
                 let r = store.get(id);
-                (
-                    r.prompt.total_len,
-                    r.prompt.content_keys(id, r.prompt.total_len, self.block_size),
-                    self.blocks_for(r.seq_len() + 1),
-                )
+                (r.prompt.total_len, self.blocks_for(r.seq_len() + 1))
             };
-            if kv
-                .allocate(id, TaskClass::Offline, &keys, total_blocks, now)
-                .is_none()
-            {
+            let allocated = {
+                let keys = store.get(id).content_key_path(self.block_size);
+                kv.allocate(id, TaskClass::Offline, keys, total_blocks, now)
+            };
+            if allocated.is_none() {
                 break;
             }
             pool.remove(id, prompt_len);
@@ -569,15 +637,24 @@ impl Scheduler {
             r.state = ReqState::Running;
             r.computed = ff;
             self.running_offline.push(id);
+            self.note_running(id);
             out.admitted_offline.push(id);
-            *shape = trial;
+            // Commit the winning mutation (base unchanged since scoring).
             if chunk > 0 {
+                let _ = shape.push_prefill(
+                    &self.time_model,
+                    PrefillItem {
+                        chunk,
+                        context: ff,
+                    },
+                );
                 items.push(PlanItem {
                     req: id,
                     kind: WorkKind::Prefill { chunk },
                 });
                 *token_budget -= chunk;
             } else {
+                let _ = shape.push_decode(seq_len);
                 items.push(PlanItem {
                     req: id,
                     kind: WorkKind::Decode,

@@ -1,0 +1,542 @@
+//! Non-incremental reference scheduler (the pre-trial-delta implementation,
+//! kept verbatim as an oracle).
+//!
+//! [`OracleScheduler`] re-collects and sorts the running set from the store
+//! every iteration, clones the whole [`BatchShape`] for every candidate
+//! trial, and re-hashes prompts into content keys at every use — exactly
+//! what `Scheduler` did before the hot-path overhaul. It exists so that
+//!
+//!   * the equivalence tests can assert the delta path emits bit-identical
+//!     [`Plan`]s (same items, same admissions, same `est_time` bits), and
+//!   * `benches/microbench.rs` can record the pre-PR cost in the same
+//!     `BENCH_PR2.json` it records the incremental path in (the perf gate's
+//!     before/after pair comes from one harness run).
+//!
+//! Do not optimize this module; its value is being the slow, obviously
+//! correct baseline.
+
+use std::collections::VecDeque;
+
+use crate::config::{SchedulerConfig, SchedulerKind};
+use crate::core::{ReqState, RequestId, RequestStore, Slo, TaskClass};
+use crate::estimator::{BatchShape, PrefillItem, TimeModel};
+use crate::kvcache::KvManager;
+
+use super::pool::OfflinePool;
+use super::{Outcome, PlanItem, WorkKind};
+use super::{EPS_TIME, MIN_BUDGET};
+
+/// Clone-trial reference implementation of [`super::Scheduler`].
+pub struct OracleScheduler {
+    pub cfg: SchedulerConfig,
+    pub slo: Slo,
+    pub time_model: TimeModel,
+    block_size: usize,
+    /// Admission (LIFO preemption) order of running offline requests.
+    running_offline: Vec<RequestId>,
+}
+
+impl OracleScheduler {
+    pub fn new(
+        cfg: SchedulerConfig,
+        slo: Slo,
+        time_model: TimeModel,
+        block_size: usize,
+    ) -> Self {
+        OracleScheduler {
+            cfg,
+            slo,
+            time_model,
+            block_size,
+            running_offline: Vec::new(),
+        }
+    }
+
+    fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    pub fn on_finished(&mut self, id: RequestId) {
+        self.running_offline.retain(|&r| r != id);
+    }
+
+    pub fn running_offline_count(&self) -> usize {
+        self.running_offline.len()
+    }
+
+    fn preempt_one_offline(
+        &mut self,
+        store: &mut RequestStore,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+        out: &mut Outcome,
+    ) -> bool {
+        let Some(victim) = self.running_offline.pop() else {
+            return false;
+        };
+        let req = store.get_mut(victim);
+        req.preempt();
+        kv.release(victim, false);
+        let keys = req
+            .prompt
+            .content_keys(victim, req.prompt.total_len, self.block_size);
+        pool.add(victim, req.prompt.total_len, keys);
+        out.preempted.push(victim);
+        true
+    }
+
+    fn slo_budget(
+        &self,
+        now: f64,
+        store: &RequestStore,
+        online_decodes: &[RequestId],
+        online_prefills: &[(RequestId, usize)],
+    ) -> f64 {
+        let mut budget = f64::INFINITY;
+        for &r in online_decodes {
+            budget = budget.min(store.get(r).next_token_deadline(&self.slo) - now);
+        }
+        for &(r, chunk) in online_prefills {
+            let req = store.get(r);
+            if req.remaining_prefill() <= chunk {
+                budget = budget.min(req.arrival + self.slo.ttft - now);
+            }
+        }
+        budget
+    }
+
+    /// Build this iteration's plan (clone-trial reference semantics).
+    pub fn schedule(
+        &mut self,
+        now: f64,
+        store: &mut RequestStore,
+        online_queue: &mut VecDeque<RequestId>,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+    ) -> Outcome {
+        let mut out = Outcome::default();
+
+        // ---- 1. partition the carried-over running set ------------------
+        let mut running: Vec<RequestId> = store.ids_in_state(ReqState::Running);
+        running.sort_unstable();
+        let mut online_decodes = Vec::new();
+        let mut online_prefills = Vec::new();
+        let mut offline_decodes = Vec::new();
+        let mut offline_prefills = Vec::new();
+        for id in running {
+            let r = store.get(id);
+            match (r.class, r.in_prefill()) {
+                (TaskClass::Online, false) => online_decodes.push(id),
+                (TaskClass::Online, true) => online_prefills.push(id),
+                (TaskClass::Offline, false) => offline_decodes.push(id),
+                (TaskClass::Offline, true) => offline_prefills.push(id),
+            }
+        }
+
+        // ---- 2. decode block growth -------------------------------------
+        for &id in &online_decodes {
+            let needed = self.blocks_for(store.get(id).seq_len() + 1);
+            while kv.held_blocks(id) < needed {
+                let missing = needed - kv.held_blocks(id);
+                if kv.grow(id, TaskClass::Online, missing, now) {
+                    break;
+                }
+                if !self.preempt_one_offline(store, pool, kv, &mut out) {
+                    break;
+                }
+            }
+        }
+        offline_decodes.retain(|&id| {
+            if store.get(id).state != ReqState::Running {
+                return false;
+            }
+            let needed = self.blocks_for(store.get(id).seq_len() + 1);
+            let held = kv.held_blocks(id);
+            if held >= needed {
+                return true;
+            }
+            if kv.grow(id, TaskClass::Offline, needed - held, now) {
+                true
+            } else {
+                let req = store.get_mut(id);
+                req.preempt();
+                kv.release(id, false);
+                let keys = req
+                    .prompt
+                    .content_keys(id, req.prompt.total_len, self.block_size);
+                pool.add(id, req.prompt.total_len, keys);
+                self.running_offline.retain(|&r| r != id);
+                out.preempted.push(id);
+                false
+            }
+        });
+
+        // ---- 3. online admission (FCFS) ---------------------------------
+        while let Some(&head) = online_queue.front() {
+            if online_decodes.len() + online_prefills.len() + 1 > self.cfg.max_batch {
+                break;
+            }
+            let (total_blocks, keys, _prompt_len) = {
+                let r = store.get(head);
+                (
+                    self.blocks_for(r.seq_len() + 1),
+                    r.prompt.content_keys(head, r.prompt.total_len, self.block_size),
+                    r.prompt.total_len,
+                )
+            };
+            let mut admitted = false;
+            loop {
+                match kv.allocate(head, TaskClass::Online, &keys, total_blocks, now) {
+                    Some(ff) => {
+                        let r = store.get_mut(head);
+                        r.state = ReqState::Running;
+                        r.computed = if self.cfg.fast_forward {
+                            ff.min(r.seq_len().saturating_sub(1))
+                        } else {
+                            0
+                        };
+                        admitted = true;
+                        break;
+                    }
+                    None => {
+                        if !self.preempt_one_offline(store, pool, kv, &mut out) {
+                            break;
+                        }
+                    }
+                }
+            }
+            if !admitted {
+                break;
+            }
+            online_queue.pop_front();
+            out.admitted_online.push(head);
+            if store.get(head).in_prefill() {
+                online_prefills.push(head);
+            } else {
+                online_decodes.push(head);
+            }
+        }
+
+        offline_decodes.retain(|&id| store.get(id).state == ReqState::Running);
+        offline_prefills.retain(|&id| store.get(id).state == ReqState::Running);
+
+        // ---- 4. mandatory online items ----------------------------------
+        let mut shape = BatchShape::default();
+        let mut items = Vec::new();
+        let mut token_budget = self.cfg.max_batched_tokens;
+
+        for &id in &online_decodes {
+            items.push(PlanItem {
+                req: id,
+                kind: WorkKind::Decode,
+            });
+            shape.decode_lens.push(store.get(id).seq_len());
+            token_budget = token_budget.saturating_sub(1);
+        }
+        online_prefills.sort_by_key(|&id| {
+            let r = store.get(id);
+            (r.arrival as u64, id)
+        });
+        let mut online_prefill_chunks = Vec::new();
+        for &id in &online_prefills {
+            if token_budget == 0 {
+                break;
+            }
+            let r = store.get(id);
+            let chunk = r.remaining_prefill().min(self.cfg.chunk).min(token_budget);
+            if chunk == 0 {
+                continue;
+            }
+            items.push(PlanItem {
+                req: id,
+                kind: WorkKind::Prefill { chunk },
+            });
+            shape.prefills.push(PrefillItem {
+                chunk,
+                context: r.computed,
+            });
+            token_budget -= chunk;
+            online_prefill_chunks.push((id, chunk));
+        }
+
+        let budget = if self.cfg.kind.uses_estimator() {
+            self.slo_budget(now, store, &online_decodes, &online_prefill_chunks)
+        } else {
+            f64::INFINITY
+        };
+
+        // ---- 5. offline resident decodes --------------------------------
+        let mut slots_left = self.cfg.max_batch.saturating_sub(items.len());
+        for &id in &offline_decodes {
+            if slots_left == 0 || token_budget == 0 {
+                break;
+            }
+            let len = store.get(id).seq_len();
+            let mut trial = shape.clone();
+            trial.decode_lens.push(len);
+            if self.cfg.kind.uses_estimator()
+                && self.time_model.batch_time(&trial) > budget
+            {
+                out.skipped_offline += 1;
+                continue;
+            }
+            shape = trial;
+            items.push(PlanItem {
+                req: id,
+                kind: WorkKind::Decode,
+            });
+            token_budget -= 1;
+            slots_left -= 1;
+        }
+
+        // ---- 6. continue running offline prefills -----------------------
+        for &id in &offline_prefills {
+            if slots_left == 0 || token_budget == 0 {
+                break;
+            }
+            let r = store.get(id);
+            let chunk = r.remaining_prefill().min(self.cfg.chunk).min(token_budget);
+            if chunk == 0 {
+                continue;
+            }
+            let mut trial = shape.clone();
+            trial.prefills.push(PrefillItem {
+                chunk,
+                context: r.computed,
+            });
+            if self.cfg.kind.uses_estimator()
+                && self.time_model.batch_time(&trial) > budget
+            {
+                out.skipped_offline += 1;
+                continue;
+            }
+            shape = trial;
+            items.push(PlanItem {
+                req: id,
+                kind: WorkKind::Prefill { chunk },
+            });
+            token_budget -= chunk;
+            slots_left -= 1;
+        }
+
+        // ---- 7. new offline admissions ----------------------------------
+        if budget > MIN_BUDGET {
+            match self.cfg.kind {
+                SchedulerKind::Bs | SchedulerKind::BsE => self.admit_fcfs(
+                    now,
+                    store,
+                    pool,
+                    kv,
+                    &mut items,
+                    &mut shape,
+                    &mut token_budget,
+                    &mut slots_left,
+                    budget,
+                    &mut out,
+                ),
+                SchedulerKind::BsES | SchedulerKind::Echo => self.admit_kv_aware(
+                    now,
+                    store,
+                    pool,
+                    kv,
+                    &mut items,
+                    &mut shape,
+                    &mut token_budget,
+                    &mut slots_left,
+                    budget,
+                    &mut out,
+                ),
+            }
+        }
+
+        let est_time = if self.cfg.kind.uses_estimator() {
+            self.time_model.batch_time(&shape)
+        } else {
+            0.0
+        };
+        out.plan = super::Plan {
+            items,
+            shape,
+            est_time,
+        };
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn admit_fcfs(
+        &mut self,
+        now: f64,
+        store: &mut RequestStore,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+        items: &mut Vec<PlanItem>,
+        shape: &mut BatchShape,
+        token_budget: &mut usize,
+        slots_left: &mut usize,
+        budget: f64,
+        out: &mut Outcome,
+    ) {
+        while *slots_left > 0 && *token_budget > 0 {
+            let Some(head) = pool.fcfs_head() else { break };
+            let (prompt_len, seq_len, keys) = {
+                let r = store.get(head);
+                (
+                    r.prompt.total_len,
+                    r.seq_len(),
+                    r.prompt.content_keys(head, r.prompt.total_len, self.block_size),
+                )
+            };
+            let total_blocks = self.blocks_for(seq_len + 1);
+            let hit_blocks = kv.peek_prefix(&keys[..keys.len().min(total_blocks)]);
+            let ff = if self.cfg.fast_forward {
+                (hit_blocks * self.block_size).min(seq_len - 1)
+            } else {
+                0
+            };
+            let chunk = (seq_len - ff).min(self.cfg.chunk).min(*token_budget);
+            let mut trial = shape.clone();
+            if chunk > 0 {
+                trial.prefills.push(PrefillItem {
+                    chunk,
+                    context: ff,
+                });
+            } else {
+                trial.decode_lens.push(seq_len);
+            }
+            if self.cfg.kind.uses_estimator() && self.time_model.batch_time(&trial) > budget
+            {
+                break;
+            }
+            if kv
+                .allocate(head, TaskClass::Offline, &keys, total_blocks, now)
+                .is_none()
+            {
+                break;
+            }
+            pool.remove(head, prompt_len);
+            let r = store.get_mut(head);
+            r.state = ReqState::Running;
+            r.computed = ff;
+            self.running_offline.push(head);
+            out.admitted_offline.push(head);
+            *shape = trial;
+            if chunk > 0 {
+                items.push(PlanItem {
+                    req: head,
+                    kind: WorkKind::Prefill { chunk },
+                });
+                *token_budget -= chunk;
+            } else {
+                items.push(PlanItem {
+                    req: head,
+                    kind: WorkKind::Decode,
+                });
+                *token_budget -= 1;
+            }
+            *slots_left -= 1;
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn admit_kv_aware(
+        &mut self,
+        now: f64,
+        store: &mut RequestStore,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+        items: &mut Vec<PlanItem>,
+        shape: &mut BatchShape,
+        token_budget: &mut usize,
+        slots_left: &mut usize,
+        budget: f64,
+        out: &mut Outcome,
+    ) {
+        while *slots_left > 0 && *token_budget > 0 {
+            let candidates = pool.candidates(kv, self.cfg.mutation_budget);
+            if candidates.is_empty() {
+                break;
+            }
+            let base_time = self.time_model.batch_time(shape);
+            let avail = kv.availability();
+            let mut best: Option<(f64, RequestId, usize, usize, BatchShape)> = None;
+            for id in candidates {
+                let r = store.get(id);
+                let prompt_len = r.prompt.total_len;
+                let seq_len = r.seq_len();
+                let keys = r.prompt.content_keys(id, prompt_len, self.block_size);
+                let total_blocks = self.blocks_for(seq_len + 1);
+                let hit_blocks = kv.peek_prefix(&keys[..keys.len().min(total_blocks)]);
+                let ff = if self.cfg.fast_forward {
+                    (hit_blocks * self.block_size).min(seq_len - 1)
+                } else {
+                    0
+                };
+                let fresh = total_blocks - hit_blocks;
+                if fresh > avail.for_offline() {
+                    continue;
+                }
+                let chunk = (seq_len - ff).min(self.cfg.chunk).min(*token_budget);
+                let mut trial = shape.clone();
+                if chunk > 0 {
+                    trial.prefills.push(PrefillItem {
+                        chunk,
+                        context: ff,
+                    });
+                } else {
+                    trial.decode_lens.push(seq_len);
+                }
+                let t = self.time_model.batch_time(&trial);
+                if t > budget {
+                    continue;
+                }
+                let need_evict = fresh.saturating_sub(avail.free);
+                let punish = kv.eviction_preview(need_evict) as f64;
+                let benefit = (ff + chunk.max(1)) as f64;
+                let dt = (t - base_time).max(EPS_TIME);
+                let score = (benefit - punish) / dt;
+                if score <= 0.0 {
+                    continue;
+                }
+                if best.as_ref().map_or(true, |b| score > b.0) {
+                    best = Some((score, id, ff, chunk, trial));
+                }
+            }
+            let Some((_, id, ff, chunk, trial)) = best else { break };
+            let (prompt_len, keys, total_blocks) = {
+                let r = store.get(id);
+                (
+                    r.prompt.total_len,
+                    r.prompt.content_keys(id, r.prompt.total_len, self.block_size),
+                    self.blocks_for(r.seq_len() + 1),
+                )
+            };
+            if kv
+                .allocate(id, TaskClass::Offline, &keys, total_blocks, now)
+                .is_none()
+            {
+                break;
+            }
+            pool.remove(id, prompt_len);
+            let r = store.get_mut(id);
+            r.state = ReqState::Running;
+            r.computed = ff;
+            self.running_offline.push(id);
+            out.admitted_offline.push(id);
+            *shape = trial;
+            if chunk > 0 {
+                items.push(PlanItem {
+                    req: id,
+                    kind: WorkKind::Prefill { chunk },
+                });
+                *token_budget -= chunk;
+            } else {
+                items.push(PlanItem {
+                    req: id,
+                    kind: WorkKind::Decode,
+                });
+                *token_budget -= 1;
+            }
+            *slots_left -= 1;
+        }
+    }
+}

@@ -8,36 +8,82 @@
 //! paper credits for the cache-hit gains (§7.3), with a search budget far
 //! below trying the whole pool.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::HashMap;
 
 use crate::core::RequestId;
 use crate::kvcache::KvManager;
 
+/// Arena node index (`u32`: a pool radix tree holds at most one node per
+/// registered block key, far below 4 billion).
+type NodeIdx = u32;
+
 /// Radix tree over block content-key sequences. Each node = one block key;
 /// requests register their full key path; lookup walks the cached prefix.
-#[derive(Default)]
+///
+/// Layout: nodes live in one arena `Vec` and refer to children by index —
+/// no per-node heap boxes to chase, and freed nodes are recycled through a
+/// free list. Each node's children are a `Vec<(key, child)>` kept sorted by
+/// key: binary-search lookup, and in-order iteration preserves the exact
+/// deterministic candidate order the old `BTreeMap` tree had. Removal is
+/// iterative (walk down recording the trail, prune empty nodes on the way
+/// back up) — no recursion, no stack depth proportional to prompt length.
 pub struct RadixIndex {
-    root: Node,
+    nodes: Vec<Node>,
+    /// Recycled arena slots.
+    free: Vec<NodeIdx>,
     paths: HashMap<RequestId, Vec<u128>>,
 }
 
+const ROOT: NodeIdx = 0;
+
 #[derive(Default)]
 struct Node {
-    // BTreeMap: deterministic iteration order (candidate selection must be
-    // reproducible across runs).
-    children: BTreeMap<u128, Node>,
-    /// Requests whose key path ends at or passes through this node, kept
-    /// only at the *leaf* (full path) to bound memory.
+    /// (block key, child index), sorted ascending by key.
+    children: Vec<(u128, NodeIdx)>,
+    /// Requests whose key path ends at this node (leaf registration only,
+    /// to bound memory).
     requests: Vec<RequestId>,
 }
 
-impl RadixIndex {
-    pub fn insert(&mut self, id: RequestId, keys: Vec<u128>) {
-        let mut node = &mut self.root;
-        for &k in &keys {
-            node = node.children.entry(k).or_default();
+impl Default for RadixIndex {
+    fn default() -> Self {
+        RadixIndex {
+            nodes: vec![Node::default()], // slot 0 = root, never freed
+            free: Vec::new(),
+            paths: HashMap::new(),
         }
-        node.requests.push(id);
+    }
+}
+
+impl RadixIndex {
+    fn alloc_node(&mut self) -> NodeIdx {
+        if let Some(i) = self.free.pop() {
+            i
+        } else {
+            self.nodes.push(Node::default());
+            (self.nodes.len() - 1) as NodeIdx
+        }
+    }
+
+    fn child_of(&self, node: NodeIdx, key: u128) -> Result<usize, usize> {
+        self.nodes[node as usize]
+            .children
+            .binary_search_by_key(&key, |c| c.0)
+    }
+
+    pub fn insert(&mut self, id: RequestId, keys: Vec<u128>) {
+        let mut cur = ROOT;
+        for &k in &keys {
+            cur = match self.child_of(cur, k) {
+                Ok(pos) => self.nodes[cur as usize].children[pos].1,
+                Err(pos) => {
+                    let child = self.alloc_node();
+                    self.nodes[cur as usize].children.insert(pos, (k, child));
+                    child
+                }
+            };
+        }
+        self.nodes[cur as usize].requests.push(id);
         self.paths.insert(id, keys);
     }
 
@@ -45,23 +91,32 @@ impl RadixIndex {
         let Some(keys) = self.paths.remove(&id) else {
             return;
         };
-        Self::remove_rec(&mut self.root, &keys, id);
-    }
-
-    fn remove_rec(node: &mut Node, keys: &[u128], id: RequestId) -> bool {
-        match keys.split_first() {
-            None => {
-                node.requests.retain(|&r| r != id);
-            }
-            Some((&k, rest)) => {
-                if let Some(child) = node.children.get_mut(&k) {
-                    if Self::remove_rec(child, rest, id) {
-                        node.children.remove(&k);
-                    }
+        // Walk down, recording (parent, child position) per step.
+        let mut trail: Vec<(NodeIdx, usize)> = Vec::with_capacity(keys.len());
+        let mut cur = ROOT;
+        for &k in &keys {
+            match self.child_of(cur, k) {
+                Ok(pos) => {
+                    trail.push((cur, pos));
+                    cur = self.nodes[cur as usize].children[pos].1;
                 }
+                Err(_) => return, // defensive: path not present
             }
         }
-        node.children.is_empty() && node.requests.is_empty()
+        self.nodes[cur as usize].requests.retain(|&r| r != id);
+        // Unwind: prune now-empty nodes bottom-up. Positions recorded on
+        // the way down stay valid — only deeper nodes were touched since.
+        let mut child = cur;
+        while let Some((parent, pos)) = trail.pop() {
+            let n = &self.nodes[child as usize];
+            if !n.children.is_empty() || !n.requests.is_empty() {
+                break;
+            }
+            self.nodes[parent as usize].children.remove(pos);
+            self.nodes[child as usize] = Node::default();
+            self.free.push(child);
+            child = parent;
+        }
     }
 
     pub fn is_empty(&self) -> bool {
@@ -76,13 +131,13 @@ impl RadixIndex {
     /// request reachable from the deepest cached node plus the depth
     /// (cached blocks usable by that request).
     pub fn best_cached(&self, kv: &KvManager) -> Option<(RequestId, usize)> {
-        let mut node = &self.root;
+        let mut cur = ROOT;
         let mut depth = 0usize;
         loop {
             let mut advanced = false;
-            for (&k, child) in &node.children {
+            for &(k, child) in &self.nodes[cur as usize].children {
                 if kv.peek_prefix(&[k]) == 1 {
-                    node = child;
+                    cur = child;
                     depth += 1;
                     advanced = true;
                     break;
@@ -95,14 +150,29 @@ impl RadixIndex {
         if depth == 0 {
             return None;
         }
-        Self::any_request(node).map(|id| (id, depth))
+        self.any_request(cur).map(|id| (id, depth))
     }
 
-    fn any_request(node: &Node) -> Option<RequestId> {
-        if let Some(&id) = node.requests.first() {
-            return Some(id);
+    /// First request in deterministic preorder (children in key order)
+    /// reachable from `start` — iterative DFS over the arena.
+    fn any_request(&self, start: NodeIdx) -> Option<RequestId> {
+        let mut stack = vec![start];
+        while let Some(n) = stack.pop() {
+            let node = &self.nodes[n as usize];
+            if let Some(&id) = node.requests.first() {
+                return Some(id);
+            }
+            for &(_, child) in node.children.iter().rev() {
+                stack.push(child);
+            }
         }
-        node.children.values().find_map(Self::any_request)
+        None
+    }
+
+    /// Arena occupancy `(live_nodes, capacity)` — test/bench introspection.
+    #[doc(hidden)]
+    pub fn arena_stats(&self) -> (usize, usize) {
+        (self.nodes.len() - self.free.len(), self.nodes.len())
     }
 }
 
@@ -260,7 +330,33 @@ mod tests {
         idx.remove(1);
         idx.remove(3);
         assert!(idx.is_empty());
-        assert!(idx.root.children.is_empty(), "tree must prune empty paths");
+        assert!(
+            idx.nodes[ROOT as usize].children.is_empty(),
+            "tree must prune empty paths"
+        );
+        let (live, _) = idx.arena_stats();
+        assert_eq!(live, 1, "only the root survives a full drain");
+    }
+
+    #[test]
+    fn arena_recycles_freed_nodes() {
+        let mut idx = RadixIndex::default();
+        idx.insert(1, keyseq(1, 8));
+        let (_, cap_before) = idx.arena_stats();
+        idx.remove(1);
+        // Re-inserting an equally deep path must reuse the freed slots.
+        idx.insert(2, keyseq(2, 8));
+        let (live, cap_after) = idx.arena_stats();
+        assert_eq!(cap_after, cap_before, "freed nodes must be recycled");
+        assert_eq!(live, 9); // root + 8 path nodes
+        // And lookups still walk the recycled path.
+        let mut m = kv();
+        let cached = keyseq(2, 3);
+        m.register_future(&cached);
+        m.allocate(77, TaskClass::Offline, &cached, 3, 0.0).unwrap();
+        m.release(77, false);
+        let (id, depth) = idx.best_cached(&m).unwrap();
+        assert_eq!((id, depth), (2, 3));
     }
 
     #[test]

@@ -124,12 +124,7 @@ impl DeployerSim {
         let batch = synthesize(offline_spec, n_offline, TaskClass::Offline, 0.0, &mut store, &mut rng);
         e.store = store;
         for &id in &batch.ids {
-            let r = e.store.get(id).clone();
-            let keys = r
-                .prompt
-                .content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
-            e.kv.register_future(&keys);
-            e.pool.add(id, r.prompt.total_len, keys);
+            e.register_offline(id);
         }
         e.run_until(horizon)?;
         Ok((

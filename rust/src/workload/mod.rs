@@ -316,8 +316,8 @@ mod tests {
         }
         let (_, members) = by_group.iter().next().unwrap();
         assert!(members.len() >= 2);
-        let k0 = store.get(members[0]).prompt.content_keys(members[0], 64, 16);
-        let k1 = store.get(members[1]).prompt.content_keys(members[1], 64, 16);
+        let k0 = store.get(members[0]).content_key_path(16);
+        let k1 = store.get(members[1]).content_key_path(16);
         assert_eq!(k0[..2], k1[..2], "same group must share leading keys");
     }
 

@@ -4,7 +4,8 @@
 //! (the router adds no scheduling deviation).
 
 use echo::cluster::{
-    affinity_keys, offline_jobs, ClusterConfig, ClusterSim, LoadDigest, OnlineJob, Router,
+    affinity_keys, offline_jobs, ClusterConfig, ClusterSim, LoadDigest, OnlineJob,
+    PrefixSummary, Router,
 };
 use echo::config::SystemConfig;
 use echo::core::{PromptSpec, Request, TaskClass};
@@ -101,7 +102,7 @@ fn digest(replica: usize, free_blocks: usize, pending: usize) -> LoadDigest {
         free_blocks,
         block_size: 16,
         draining: false,
-        cached_keys: Vec::new(),
+        summary: PrefixSummary::Full(Vec::new()),
     }
 }
 
@@ -119,7 +120,7 @@ fn affinity_never_routes_over_kv_capacity() {
                 let group = g.int(1, 3) as u64;
                 let warm_prompt = PromptSpec::sim(1_024, Some((group, 1_024)));
                 let keys = affinity_keys(&warm_prompt, block_size);
-                d.cached_keys = keys[..g.int(1, keys.len())].to_vec();
+                d.summary = PrefixSummary::Full(keys[..g.int(1, keys.len())].to_vec());
             }
             router.sync(d);
         }

@@ -1,0 +1,385 @@
+//! Equivalence properties for the hot-path overhaul: the incremental code
+//! paths must be *bit-exact* drop-ins for the non-incremental ones.
+//!
+//!   * trial-delta `Scheduler` vs. clone-trial `OracleScheduler`: identical
+//!     `Plan`s (items, shape, `est_time` bits), admissions, preemptions,
+//!     and skip counts over randomized mixed workloads driven in lockstep;
+//!   * delta-digest router vs. full-resync router: identical per-replica
+//!     key sets and identical dispatch decisions after arbitrary KV churn
+//!     interleaved with optimistic dispatch updates;
+//!   * interned key paths: computed at most once per request across
+//!     preempt → re-pool → re-admit cycles.
+
+use std::collections::VecDeque;
+
+use echo::cluster::{LoadDigest, PrefixSummary, Router};
+use echo::config::{SchedulerKind, SystemConfig};
+use echo::core::{
+    PromptSpec, ReqState, Request, RequestId, RequestStore, TaskClass,
+};
+use echo::estimator::TimeModel;
+use echo::kvcache::{EvictionPolicy, KvManager};
+use echo::scheduler::{OfflinePool, OracleScheduler, Outcome, Scheduler, WorkKind};
+use echo::utils::prop::{check, Gen};
+
+// ---- scheduler equivalence ------------------------------------------------
+
+enum AnySched {
+    Delta(Scheduler),
+    Oracle(OracleScheduler),
+}
+
+struct Fixture {
+    sched: AnySched,
+    store: RequestStore,
+    queue: VecDeque<RequestId>,
+    pool: OfflinePool,
+    kv: KvManager,
+    block_size: usize,
+}
+
+impl Fixture {
+    fn new(cfg: &SystemConfig, delta: bool) -> Self {
+        let block_size = cfg.cache.block_size;
+        let tm = TimeModel::new(cfg.time_model);
+        let sched = if delta {
+            AnySched::Delta(Scheduler::new(cfg.scheduler.clone(), cfg.slo, tm, block_size))
+        } else {
+            AnySched::Oracle(OracleScheduler::new(
+                cfg.scheduler.clone(),
+                cfg.slo,
+                tm,
+                block_size,
+            ))
+        };
+        Fixture {
+            sched,
+            store: RequestStore::new(),
+            queue: VecDeque::new(),
+            pool: OfflinePool::default_buckets(),
+            kv: KvManager::new(
+                cfg.cache.capacity_tokens / block_size,
+                block_size,
+                EvictionPolicy::TaskAware,
+            ),
+            block_size,
+        }
+    }
+
+    fn submit_online(&mut self, now: f64, prompt: PromptSpec, out: usize) {
+        let id = self.store.fresh_id();
+        let mut r = Request::new(id, TaskClass::Online, now, prompt, out);
+        r.arrival = now;
+        self.store.insert(r);
+        self.queue.push_back(id);
+    }
+
+    fn submit_offline(&mut self, prompt: PromptSpec, out: usize) {
+        let id = self.store.fresh_id();
+        let r = Request::new(id, TaskClass::Offline, 0.0, prompt, out);
+        let keys = r.content_key_path(self.block_size).to_vec();
+        self.kv.register_future(&keys);
+        self.pool.add(id, r.prompt.total_len, keys);
+        self.store.insert(r);
+    }
+
+    fn schedule(&mut self, now: f64) -> Outcome {
+        match &mut self.sched {
+            AnySched::Delta(s) => {
+                s.schedule(now, &mut self.store, &mut self.queue, &mut self.pool, &mut self.kv)
+            }
+            AnySched::Oracle(s) => {
+                s.schedule(now, &mut self.store, &mut self.queue, &mut self.pool, &mut self.kv)
+            }
+        }
+    }
+
+    /// Mirror the engine's per-item accounting so both fixtures evolve in
+    /// lockstep: prefill chunks advance `computed`, completions emit a
+    /// token, finished requests release KV and notify the scheduler.
+    fn apply(&mut self, out: &Outcome, now: f64) {
+        let mut finished = Vec::new();
+        for item in &out.plan.items {
+            let r = self.store.get_mut(item.req);
+            match item.kind {
+                WorkKind::Prefill { chunk } => {
+                    r.computed += chunk;
+                    if r.computed >= r.seq_len() && r.record_token(now, None) {
+                        finished.push(item.req);
+                    }
+                }
+                WorkKind::Decode => {
+                    r.computed += 1;
+                    if r.record_token(now, None) {
+                        finished.push(item.req);
+                    }
+                }
+            }
+        }
+        for id in finished {
+            self.kv.release(id, true);
+            if self.store.get(id).class == TaskClass::Offline {
+                let keys = self.store.get(id).content_key_path(self.block_size).to_vec();
+                self.kv.unregister_future(&keys);
+            }
+            match &mut self.sched {
+                AnySched::Delta(s) => s.on_finished(id),
+                AnySched::Oracle(s) => s.on_finished(id),
+            }
+        }
+    }
+}
+
+/// (plan items, admitted online, admitted offline, preempted, skipped,
+/// est_time bits)
+type Fingerprint = (
+    Vec<(RequestId, WorkKind)>,
+    Vec<RequestId>,
+    Vec<RequestId>,
+    Vec<RequestId>,
+    usize,
+    u64,
+);
+
+fn outcome_fingerprint(out: &Outcome) -> Fingerprint {
+    (
+        out.plan.items.iter().map(|i| (i.req, i.kind)).collect(),
+        out.admitted_online.clone(),
+        out.admitted_offline.clone(),
+        out.preempted.clone(),
+        out.skipped_offline,
+        out.plan.est_time.to_bits(),
+    )
+}
+
+fn random_prompt(g: &mut Gen) -> PromptSpec {
+    let len = g.int(24, 900);
+    if g.bool(0.5) {
+        let group = g.int(1, 5) as u64;
+        let shared = (len * 3 / 4).max(16);
+        PromptSpec::sim(len, Some((group, shared)))
+    } else {
+        PromptSpec::sim(len, None)
+    }
+}
+
+#[test]
+fn trial_delta_scheduler_matches_clone_oracle() {
+    check("scheduler-delta-vs-oracle", 25, |g| {
+        let mut cfg = SystemConfig::a100_llama8b();
+        cfg.scheduler.kind = *g.choose(&[
+            SchedulerKind::Bs,
+            SchedulerKind::BsE,
+            SchedulerKind::BsES,
+            SchedulerKind::Echo,
+        ]);
+        cfg.cache.capacity_tokens = g.int(1_500, 24_000);
+        cfg.scheduler.max_batch = g.int(4, 16);
+        let mut delta = Fixture::new(&cfg, true);
+        let mut oracle = Fixture::new(&cfg, false);
+
+        let mut now = 0.0;
+        for round in 0..g.int(4, 30) {
+            // Identical submissions into both fixtures (ids line up because
+            // both stores hand out the same fresh_id sequence).
+            for _ in 0..g.int(0, 2) {
+                let prompt = random_prompt(g);
+                let out_toks = g.int(1, 24);
+                delta.submit_online(now, prompt.clone(), out_toks);
+                oracle.submit_online(now, prompt, out_toks);
+            }
+            for _ in 0..g.int(0, 2) {
+                let prompt = random_prompt(g);
+                let out_toks = g.int(1, 16);
+                delta.submit_offline(prompt.clone(), out_toks);
+                oracle.submit_offline(prompt, out_toks);
+            }
+
+            let a = delta.schedule(now);
+            let b = oracle.schedule(now);
+            if outcome_fingerprint(&a) != outcome_fingerprint(&b) {
+                return Err(format!(
+                    "round {round} ({:?}): delta {:?} != oracle {:?}",
+                    cfg.scheduler.kind,
+                    outcome_fingerprint(&a),
+                    outcome_fingerprint(&b)
+                ));
+            }
+            if a.plan.shape != b.plan.shape {
+                return Err(format!("round {round}: shapes diverge"));
+            }
+            delta.kv.check_invariants()?;
+            oracle.kv.check_invariants()?;
+
+            delta.apply(&a, now + a.plan.est_time.max(1e-4));
+            oracle.apply(&b, now + b.plan.est_time.max(1e-4));
+            now += a.plan.est_time.max(1e-4);
+        }
+        Ok(())
+    });
+}
+
+// ---- delta-digest router equivalence -------------------------------------
+
+fn stats_digest(replica: usize, summary: PrefixSummary) -> LoadDigest {
+    LoadDigest {
+        replica,
+        clock: 0.0,
+        queued_online: 0,
+        running_online: 0,
+        running_offline: 0,
+        pool_backlog: 0,
+        pending_prefill_tokens: 0,
+        free_blocks: 4_000,
+        block_size: 16,
+        draining: false,
+        summary,
+    }
+}
+
+#[test]
+fn delta_digest_router_matches_full_resync() {
+    check("router-delta-vs-full", 30, |g| {
+        let cfg = SystemConfig::a100_llama8b();
+        let tm = TimeModel::new(cfg.time_model);
+        let n_rep = g.int(1, 4);
+        let mut kvs: Vec<KvManager> = (0..n_rep)
+            .map(|_| {
+                let mut kv = KvManager::new(96, 16, EvictionPolicy::TaskAware);
+                kv.enable_key_churn();
+                kv
+            })
+            .collect();
+        let mut full_router = Router::new(tm, 16);
+        let mut delta_router = Router::new(tm, 16);
+        let mut published = vec![false; n_rep];
+        let mut next_id = 0u64;
+
+        for round in 0..g.int(2, 15) {
+            // Arbitrary churn per replica: allocations (some shared-prefix,
+            // forcing reuse), releases, evictions, occasional full flush.
+            for (r, kv) in kvs.iter_mut().enumerate() {
+                for _ in 0..g.int(0, 6) {
+                    next_id += 1;
+                    let n = g.int(1, 10);
+                    let tag = g.int(1, 5) as u128;
+                    let keys: Vec<u128> = (0..n)
+                        .map(|i| (tag << 40) | ((r as u128) << 20) | i as u128)
+                        .collect();
+                    if kv
+                        .allocate(next_id, TaskClass::Offline, &keys, n, next_id as f64)
+                        .is_some()
+                    {
+                        kv.release(next_id, true);
+                    }
+                }
+                if g.bool(0.1) {
+                    kv.flush_cache();
+                }
+                kv.check_invariants()?;
+            }
+
+            // Publish: full router always gets a complete snapshot; delta
+            // router gets churn only (after its initial full summary).
+            for (r, kv) in kvs.iter_mut().enumerate() {
+                let full = PrefixSummary::Full(kv.cached_key_sample(usize::MAX));
+                let delta = if published[r] {
+                    let (added, removed) = kv.take_key_churn().expect("churn enabled");
+                    PrefixSummary::Delta { added, removed }
+                } else {
+                    let _ = kv.take_key_churn();
+                    published[r] = true;
+                    full.clone()
+                };
+                full_router.sync(stats_digest(r, full));
+                delta_router.sync(stats_digest(r, delta));
+            }
+
+            // Router views must be identical at every sync boundary.
+            for r in 0..n_rep {
+                let f = full_router.index.replica_key_set(r);
+                let d = delta_router.index.replica_key_set(r);
+                if f != d {
+                    return Err(format!(
+                        "round {round}, replica {r}: full view {} keys != delta view {} keys",
+                        f.len(),
+                        d.len()
+                    ));
+                }
+            }
+
+            // Interleaved dispatches (optimistic index extensions + digest
+            // mutation) must agree too — same inputs, same decisions.
+            for _ in 0..g.int(0, 5) {
+                let len = g.int(32, 400);
+                let prompt = if g.bool(0.7) {
+                    PromptSpec::sim(len, Some((g.int(1, 5) as u64, (len * 4 / 5).max(16))))
+                } else {
+                    PromptSpec::sim(len, None)
+                };
+                let a = full_router.route_online(&prompt);
+                let b = delta_router.route_online(&prompt);
+                if a != b {
+                    return Err(format!(
+                        "round {round}: dispatch diverged ({a:?} vs {b:?})"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---- interned key-path regression ----------------------------------------
+
+#[test]
+fn key_path_hashed_once_across_preemption_cycles() {
+    // Tight memory + Echo: the offline request is admitted, preempted by an
+    // online burst, re-pooled, and re-admitted — its key path must be chain
+    // hashed exactly once through all of it.
+    let mut cfg = SystemConfig::a100_llama8b();
+    cfg.scheduler.kind = SchedulerKind::Echo;
+    cfg.cache.capacity_tokens = 40 * cfg.cache.block_size; // 40 blocks
+    let mut f = Fixture::new(&cfg, true);
+    f.submit_offline(PromptSpec::sim(500, None), 30);
+    let off = 0u64;
+
+    let out = f.schedule(0.0);
+    assert_eq!(out.admitted_offline, vec![off]);
+    assert_eq!(
+        f.store.get(off).key_compute_count(),
+        1,
+        "admission interns the path"
+    );
+
+    // Online arrival needing most of memory: offline gets preempted.
+    f.submit_online(1.0, PromptSpec::sim(400, None), 4);
+    let out = f.schedule(1.0);
+    assert!(out.preempted.contains(&off), "preempted: {:?}", out.preempted);
+    assert_eq!(f.store.get(off).state, ReqState::Preempted);
+    assert_eq!(
+        f.store.get(off).key_compute_count(),
+        1,
+        "preemption re-pools with the interned path"
+    );
+
+    // Let the online request finish, then re-admit the offline one.
+    let mut now = 1.0;
+    for _ in 0..200 {
+        now += 0.05;
+        let out = f.schedule(now);
+        if out.plan.items.is_empty() {
+            break;
+        }
+        f.apply(&out, now);
+        if f.store.get(off).state == ReqState::Running {
+            break;
+        }
+    }
+    assert_eq!(
+        f.store.get(off).key_compute_count(),
+        1,
+        "re-admission must reuse the interned path"
+    );
+    f.kv.check_invariants().unwrap();
+}

@@ -137,10 +137,10 @@ fn scheduler_never_selects_infeasible_plans() {
                 store.insert(r);
                 queue.push_back(id);
             } else {
-                let keys = r.prompt.content_keys(id, r.prompt.total_len, block_size);
+                let keys = r.content_key_path(block_size).to_vec();
                 kv.register_future(&keys);
                 pool.add(id, r.prompt.total_len, keys);
-                store.insert(r);
+                store.insert(r); // interned key path travels with the request
             }
         }
         let mut now = 0.05;
