@@ -2,14 +2,14 @@
 //! prefix-affinity router replays the paper-shaped tidal trace while an
 //! offline backlog floods the fleet through work-stealing; a second run
 //! lets the tidal autoscaler breathe the fleet between 1 and 4 replicas.
+//! The whole scenario is driven through the `Serve` trait — submissions,
+//! streaming, and the final report all go through the one front door.
 //!
 //!     cargo run --release --example cluster_sim
 
-use echo::cluster::{
-    offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig, ClusterSim,
-    ScalePolicy,
-};
+use echo::cluster::{offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig, ScalePolicy};
 use echo::config::SystemConfig;
+use echo::serve::{ClusterServe, NullSink, Serve};
 use echo::trace::{Trace, TraceConfig};
 use echo::workload::DatasetSpec;
 
@@ -34,9 +34,11 @@ fn main() -> anyhow::Result<()> {
         base.seed = seed;
         let mut cc = ClusterConfig::new(base, replicas);
         cc.scale = scale;
-        let mut sim = ClusterSim::new(cc);
-        sim.submit_offline_backlog(offline_jobs(&spec, 2_000, seed ^ 0x0ff0));
-        let report = sim.run(&online, horizon)?;
+        let mut front = ClusterServe::new(cc);
+        front.submit_offline_jobs(offline_jobs(&spec, 2_000, seed ^ 0x0ff0))?;
+        front.submit_online_jobs(&online)?;
+        front.run_until(horizon, &mut NullSink)?;
+        let report = front.sim.report(horizon);
         println!("\n== {label} ==");
         for r in &report.replicas {
             println!(

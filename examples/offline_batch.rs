@@ -1,14 +1,18 @@
 //! Pure-offline batch inference (the paper's §2.3 setting, no online load):
 //! shows how Echo's KV-aware selection + prefix caching raise throughput on
 //! a shared-prefix corpus versus FCFS, on the cost-model backend at paper
-//! scale (A100 / LLaMA-8B coefficients).
+//! scale (A100 / LLaMA-8B coefficients). Everything goes through the
+//! `Serve` trait — the same front door the server and cluster use — so
+//! content-key interning and KV future-interest registration are never
+//! bypassed.
 //!
 //!     cargo run --release --example offline_batch
 
 use echo::config::{SchedulerKind, SystemConfig};
-use echo::core::TaskClass;
+use echo::core::{RequestStore, TaskClass};
 use echo::engine::{sim::SimBackend, Engine};
 use echo::estimator::TimeModel;
+use echo::serve::{EngineServe, NullSink, Serve, SubmitSpec};
 use echo::utils::rng::Rng;
 use echo::workload::{synthesize, DatasetSpec};
 
@@ -16,22 +20,20 @@ fn run(kind: SchedulerKind, spec: &DatasetSpec, n: usize, shuffle: bool) -> anyh
     let mut cfg = SystemConfig::a100_llama8b();
     cfg.scheduler.kind = kind;
     let backend = SimBackend::new(TimeModel::new(cfg.time_model), 9, 0.0);
-    let mut e = Engine::new(cfg, backend);
+    let mut front = EngineServe::new(Engine::new(cfg, backend));
     let mut rng = Rng::new(9);
-    let mut store = std::mem::take(&mut e.store);
-    let batch = synthesize(spec, n, TaskClass::Offline, 0.0, &mut store, &mut rng);
-    e.store = store;
+    let mut scratch = RequestStore::new();
+    let batch = synthesize(spec, n, TaskClass::Offline, 0.0, &mut scratch, &mut rng);
     let mut ids = batch.ids.clone();
     if shuffle {
         rng.shuffle(&mut ids); // destroy submission-order locality
     }
     for &id in &ids {
-        let r = e.store.get(id).clone();
-        let keys = r.prompt.content_keys(id, r.prompt.total_len, e.cfg.cache.block_size);
-        e.kv.register_future(&keys);
-        e.pool.add(id, r.prompt.total_len, keys);
+        let r = scratch.get(id);
+        front.submit(SubmitSpec::offline(r.prompt.clone(), r.max_new_tokens))?;
     }
-    e.run()?;
+    front.drain(&mut NullSink)?;
+    let e = front.into_engine();
     Ok((
         e.metrics.offline_throughput(),
         e.kv.stats.hit_ratio(),

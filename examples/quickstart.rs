@@ -1,12 +1,14 @@
 //! Quickstart: load the AOT artifacts, serve a handful of requests through
-//! the full Echo stack on the real EchoLM model, print latencies.
+//! the full Echo stack on the real EchoLM model via the `Serve` front door,
+//! print per-token events and latencies.
 //!
 //!     make artifacts && cargo run --release --example quickstart
 
 use echo::config::SystemConfig;
-use echo::core::{PromptSpec, Request, TaskClass};
+use echo::core::PromptSpec;
 use echo::engine::{pjrt::PjrtBackend, Engine};
 use echo::runtime::ModelRuntime;
+use echo::serve::{EngineServe, Serve, SubmitSpec, TokenEvent};
 use echo::utils::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
@@ -23,12 +25,12 @@ fn main() -> anyhow::Result<()> {
     );
     let vocab = rt.manifest.vocab as u32;
 
-    // 2. Build the engine: scheduler + KV cache manager + estimator around
-    //    the real backend.
+    // 2. Build the serving front door: scheduler + KV cache manager +
+    //    estimator around the real backend, behind the one `Serve` API.
     let mut cfg = SystemConfig::cpu_echolm();
     cfg.scheduler.max_batch = rt.manifest.max_batch;
     cfg.cache.capacity_tokens = rt.manifest.max_batch * rt.manifest.max_seq;
-    let mut engine = Engine::new(cfg, PjrtBackend::new(rt));
+    let mut front = EngineServe::new(Engine::new(cfg, PjrtBackend::new(rt)));
 
     // 3. Submit two online requests and three offline ones sharing a prefix.
     let mut rng = Rng::new(7);
@@ -38,47 +40,49 @@ fn main() -> anyhow::Result<()> {
     let shared = prompt(32);
     let mut online = Vec::new();
     for i in 0..2 {
-        let id = engine.store.fresh_id();
-        online.push(id);
-        engine.submit_online(Request::new(
-            id,
-            TaskClass::Online,
-            0.02 * i as f64,
-            PromptSpec::real(prompt(48)),
-            12,
-        ));
+        let t = front.submit(
+            SubmitSpec::online(PromptSpec::real(prompt(48)), 12).at(0.02 * i as f64),
+        )?;
+        online.push(t.id);
     }
     for _ in 0..3 {
-        let id = engine.store.fresh_id();
         let mut tokens = shared.clone();
         tokens.extend(prompt(16));
-        engine.submit_offline(Request::new(
-            id,
-            TaskClass::Offline,
-            0.0,
-            PromptSpec::real(tokens),
-            8,
-        ));
+        front.submit(SubmitSpec::offline(PromptSpec::real(tokens), 8))?;
     }
 
-    // 4. Run to completion and report.
-    engine.run()?;
+    // 4. Run to completion, collecting the token-event stream, and report.
+    let mut events: Vec<TokenEvent> = Vec::new();
+    front.drain(&mut events)?;
     for id in online {
-        let r = engine.store.get(id);
-        println!(
-            "online {id}: {:?}...  ttft={:.1} ms  tpot={:.1} ms",
-            &r.out_tokens[..4.min(r.out_tokens.len())],
-            r.ttft().unwrap_or(0.0) * 1e3,
-            r.mean_tpot().unwrap_or(0.0) * 1e3
-        );
+        let fin = events
+            .iter()
+            .find(|e| e.ticket() == id && matches!(e, TokenEvent::Finished { .. }))
+            .expect("online ticket finished");
+        if let TokenEvent::Finished {
+            tokens,
+            ttft,
+            mean_tpot,
+            ..
+        } = fin
+        {
+            println!(
+                "online {id}: {:?}...  ttft={:.1} ms  tpot={:.1} ms",
+                &tokens[..4.min(tokens.len())],
+                ttft.unwrap_or(0.0) * 1e3,
+                mean_tpot.unwrap_or(0.0) * 1e3
+            );
+        }
     }
+    let engine = front.into_engine();
     println!(
         "completed: {} online / {} offline;  {} engine iterations, \
-         offline throughput {:.1} tok/s",
+         offline throughput {:.1} tok/s  ({} token events streamed)",
         engine.metrics.online_completed,
         engine.metrics.offline_completed,
         engine.metrics.iterations,
-        engine.metrics.offline_throughput()
+        engine.metrics.offline_throughput(),
+        events.len()
     );
     engine.kv.check_invariants().expect("KV invariants");
     Ok(())

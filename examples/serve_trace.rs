@@ -12,6 +12,7 @@ use echo::config::{SchedulerKind, SystemConfig};
 use echo::core::PromptSpec;
 use echo::engine::{pjrt::PjrtBackend, Engine};
 use echo::runtime::ModelRuntime;
+use echo::serve::{SubmitSpec, TokenEvent};
 use echo::server;
 use echo::trace::{Trace, TraceConfig};
 use echo::utils::rng::Rng;
@@ -48,12 +49,13 @@ fn run(kind: SchedulerKind, horizon_s: f64, seed: u64) -> anyhow::Result<RunRepo
         for _ in 0..6 {
             let mut t = shared.clone();
             t.extend(prompt(12));
-            handle.submit_offline(PromptSpec::real(t), 6);
+            handle.submit_detached(SubmitSpec::offline(PromptSpec::real(t), 6));
             offline_total += 1;
         }
     }
 
-    // Online load: compressed paper-shaped trace replayed in real time.
+    // Online load: compressed paper-shaped trace replayed in real time,
+    // each request streamed per-token through its own event channel.
     let trace = Trace::generate(&TraceConfig::compressed(horizon_s, 1.5, seed));
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
@@ -62,17 +64,26 @@ fn run(kind: SchedulerKind, horizon_s: f64, seed: u64) -> anyhow::Result<RunRepo
         if wait > 0.0 {
             std::thread::sleep(std::time::Duration::from_secs_f64(wait));
         }
-        rxs.push(handle.submit_online(PromptSpec::real(prompt(24 + (rxs.len() % 3) * 8)), 6));
+        let spec = SubmitSpec::online(PromptSpec::real(prompt(24 + (rxs.len() % 3) * 8)), 6);
+        rxs.push(handle.submit_streaming(spec));
     }
     let mut ttfts = Vec::new();
     let mut tpots = Vec::new();
-    for rx in rxs {
-        let c = rx.recv_timeout(std::time::Duration::from_secs(300))?;
-        if let Some(t) = c.ttft {
-            ttfts.push(t);
-        }
-        if let Some(t) = c.mean_tpot {
-            tpots.push(t);
+    for (_ticket, rx) in rxs {
+        loop {
+            let ev = rx.recv_timeout(std::time::Duration::from_secs(300))?;
+            if let TokenEvent::Finished {
+                ttft, mean_tpot, ..
+            } = ev
+            {
+                if let Some(t) = ttft {
+                    ttfts.push(t);
+                }
+                if let Some(t) = mean_tpot {
+                    tpots.push(t);
+                }
+                break;
+            }
         }
     }
     let engine = handle.shutdown();

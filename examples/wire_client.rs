@@ -1,0 +1,92 @@
+//! Client for the `echo serve` wire front door: submits online + offline
+//! work over TCP, streams per-token events, cancels a ticket, and reads
+//! the metrics snapshot. The same script works against one engine
+//! (`echo serve`) or a fleet (`echo serve --replicas 4`).
+//!
+//!     # terminal 1
+//!     cargo run --release -- serve --listen 127.0.0.1:7878
+//!     # terminal 2
+//!     cargo run --release --example wire_client -- 127.0.0.1:7878
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+
+use echo::utils::json::Json;
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: &str) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    fn send(&mut self, req: &Json) -> anyhow::Result<()> {
+        writeln!(self.writer, "{req}")?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> anyhow::Result<Json> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        Ok(Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))?)
+    }
+
+    /// Send one request expecting exactly one reply line.
+    fn call(&mut self, req: Json) -> anyhow::Result<Json> {
+        self.send(&req)?;
+        self.recv()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let addr = std::env::args().nth(1).unwrap_or_else(|| "127.0.0.1:7878".into());
+    let mut c = Client::connect(&addr)?;
+
+    // Submit two online requests and an offline one.
+    let submit = |len: usize, class: &str, max: usize| {
+        Json::obj()
+            .set("verb", "submit")
+            .set("class", class)
+            .set("prompt_len", len)
+            .set("max_new_tokens", max)
+    };
+    let r1 = c.call(submit(200, "online", 8))?;
+    let t1 = r1.get("ticket").and_then(|v| v.as_u64()).expect("ticket");
+    println!("submitted online ticket {t1}: {r1}");
+    let r2 = c.call(submit(5000, "offline", 64))?;
+    let t2 = r2.get("ticket").and_then(|v| v.as_u64()).expect("ticket");
+    println!("submitted offline ticket {t2}: {r2}");
+
+    // Stream ticket t1 to completion: event lines, then a stream summary.
+    c.send(&Json::obj().set("verb", "stream").set("ticket", t1))?;
+    loop {
+        let line = c.recv()?;
+        if let Some(ev) = line.get("event").and_then(|v| v.as_str()) {
+            println!(
+                "  event {ev:>12}  ticket {}  at {:.3}s",
+                line.get("ticket").and_then(|v| v.as_u64()).unwrap_or(0),
+                line.get("at").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            );
+            continue;
+        }
+        println!("stream done: {line}");
+        break;
+    }
+
+    // Cancel the offline job (cheap harvest of abandoned work).
+    let r = c.call(Json::obj().set("verb", "cancel").set("ticket", t2))?;
+    println!("cancel ticket {t2}: {r}");
+
+    // Metrics snapshot.
+    let m = c.call(Json::obj().set("verb", "metrics"))?;
+    println!("metrics: {m}");
+    Ok(())
+}

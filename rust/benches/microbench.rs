@@ -18,7 +18,7 @@
 //!
 //! Flags (after `--`):
 //!   `--bench-json <path>`        write the machine-readable report
-//!                                (default name: BENCH_PR2.json) and
+//!                                (default name: BENCH_PR3.json) and
 //!                                self-validate it by re-parsing
 //!   `--quick`                    tiny iteration counts (CI smoke: proves
 //!                                the harness runs headless; timings are
@@ -37,6 +37,7 @@ use echo::engine::{sim::SimBackend, Engine};
 use echo::estimator::{BatchShape, PrefillItem, TimeModel, TrialShape};
 use echo::kvcache::{EvictionPolicy, KvManager};
 use echo::scheduler::{OfflinePool, OracleScheduler, RadixIndex, Scheduler};
+use echo::serve::{EngineServe, NullSink, Serve, SubmitSpec};
 use echo::utils::json::Json;
 use echo::utils::rng::Rng;
 use echo::workload::{synthesize, DatasetSpec};
@@ -178,7 +179,7 @@ impl Harness {
             }
         }
         Json::obj()
-            .set("bench", "BENCH_PR2")
+            .set("bench", "BENCH_PR3")
             .set(
                 "note",
                 "baseline = pre-PR code paths (clone-trial scheduler, full \
@@ -551,39 +552,38 @@ fn bench_content_keys(h: &mut Harness) {
 }
 
 fn bench_sim_iterations(quick: bool) {
+    // End-to-end through the serving API: submissions and stepping go
+    // through the same `Serve` front door every driver uses.
     let mut cfg = SystemConfig::a100_llama8b();
     cfg.scheduler.kind = SchedulerKind::Echo;
     let backend = SimBackend::new(TimeModel::new(cfg.time_model), 2, 0.0);
-    let mut e = Engine::new(cfg, backend);
+    let mut front = EngineServe::new(Engine::new(cfg, backend));
     let mut rng = Rng::new(2);
-    let mut store = std::mem::take(&mut e.store);
+    let mut scratch = RequestStore::new();
     let batch = synthesize(
         &DatasetSpec::loogle_qa_short(),
         if quick { 40 } else { 400 },
         TaskClass::Offline,
         0.0,
-        &mut store,
+        &mut scratch,
         &mut rng,
     );
-    e.store = store;
     for &id in &batch.ids {
-        e.register_offline(id);
+        let r = scratch.get(id);
+        front
+            .submit(SubmitSpec::offline(r.prompt.clone(), r.max_new_tokens))
+            .unwrap();
     }
     for i in 0..(if quick { 50 } else { 500 }) {
-        let id = e.store.fresh_id();
-        e.submit_online(Request::new(
-            id,
-            TaskClass::Online,
-            i as f64 * 0.4,
-            PromptSpec::sim(300, None),
-            32,
-        ));
+        front
+            .submit(SubmitSpec::online(PromptSpec::sim(300, None), 32).at(i as f64 * 0.4))
+            .unwrap();
     }
     let horizon = if quick { 10.0 } else { 120.0 };
     let t0 = Instant::now();
     let mut iters = 0usize;
-    while e.clock < horizon {
-        if !e.step().unwrap() {
+    while front.engine.clock < horizon {
+        if !front.pump(&mut NullSink).unwrap() {
             break;
         }
         iters += 1;
@@ -591,11 +591,11 @@ fn bench_sim_iterations(quick: bool) {
     let wall = t0.elapsed().as_secs_f64();
     println!(
         "{:<62} {:>9.0} iters/s  ({} iters, {:.2}s wall, {:.0}s simulated)",
-        "end-to-end sim engine",
+        "end-to-end sim engine (via Serve)",
         iters as f64 / wall.max(1e-9),
         iters,
         wall,
-        e.clock
+        front.engine.clock
     );
 }
 
@@ -718,7 +718,7 @@ fn main() {
     let json_path = args
         .iter()
         .position(|a| a == "--bench-json")
-        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR2.json".into()));
+        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR3.json".into()));
     let experiments_path = args
         .iter()
         .position(|a| a == "--write-experiments")
@@ -756,7 +756,7 @@ fn main() {
         std::fs::write(&path, &text).expect("write bench json");
         // Self-validate: the emitted report must round-trip through the
         // in-repo JSON parser (the CI smoke step relies on this).
-        let parsed = Json::parse(&text).expect("BENCH_PR2.json must parse");
+        let parsed = Json::parse(&text).expect("BENCH_PR3.json must parse");
         let n = parsed
             .get("entries")
             .and_then(|e| e.as_arr())

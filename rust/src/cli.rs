@@ -1,7 +1,10 @@
 //! `echo` binary command surface.
 //!
 //! Subcommands:
-//!   serve      — run the threaded server on the real PJRT model (demo load)
+//!   serve      — the serving front door: line-delimited-JSON wire protocol
+//!                (submit/cancel/stream/metrics) over the `Serve` trait, for
+//!                one engine or a co-simulated fleet
+//!   serve-demo — threaded server demo load on the real PJRT model
 //!   simulate   — mixed online/offline run on the cost-model backend
 //!   estimate   — deployer resource/throughput estimation (paper §5.4)
 //!   calibrate  — fit Eq. 6-8 coefficients against the PJRT backend
@@ -9,9 +12,9 @@
 //!   figures    — regenerate a paper table/figure (same code as `cargo bench`)
 //!   smoke      — PJRT wiring check
 
-use crate::cluster::{ClusterConfig, ClusterSim, ScalePolicy};
+use crate::cluster::{ClusterConfig, ScalePolicy};
 use crate::config::{SchedulerKind, SystemConfig};
-use crate::core::{PromptSpec, Request, TaskClass};
+use crate::core::PromptSpec;
 #[cfg(feature = "runtime")]
 use crate::engine::pjrt::PjrtBackend;
 use crate::engine::{sim::SimBackend, Engine};
@@ -19,6 +22,7 @@ use crate::estimator::TimeModel;
 use crate::figures;
 #[cfg(feature = "runtime")]
 use crate::runtime::ModelRuntime;
+use crate::serve::{wire, ClusterServe, EngineServe, NullSink, Serve, SubmitSpec};
 use crate::sim::DeployerSim;
 use crate::trace::{Trace, TraceConfig};
 use crate::utils::cli::Cli;
@@ -33,14 +37,15 @@ pub fn run_cli() -> i32 {
     let program = if argv.is_empty() { "echo".into() } else { argv.remove(0) };
     if argv.is_empty() {
         eprintln!(
-            "{ABOUT}\n\nSubcommands: serve, simulate, cluster, estimate, calibrate, \
-             trace-gen, figures, smoke\nRun `{program} <cmd> --help` for options."
+            "{ABOUT}\n\nSubcommands: serve, serve-demo, simulate, cluster, estimate, \
+             calibrate, trace-gen, figures, smoke\nRun `{program} <cmd> --help` for options."
         );
         return 2;
     }
     let cmd = argv.remove(0);
     let res = match cmd.as_str() {
         "serve" => serve(&program, argv),
+        "serve-demo" => serve_demo(&program, argv),
         "simulate" => simulate(&program, argv),
         "cluster" => cluster(&program, argv),
         "estimate" => estimate(&program, argv),
@@ -78,8 +83,55 @@ fn load_config(args: &crate::utils::cli::Args) -> anyhow::Result<SystemConfig> {
     Ok(cfg)
 }
 
+/// The serving front door: any `Serve` deployment behind the wire protocol.
+fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "serving front door: line-delimited JSON (submit/cancel/stream/\
+         metrics/shutdown verbs) over the Serve trait",
+    )
+    .opt("preset", "a100_llama8b", "config preset")
+    .opt("config", "", "config JSON file (overrides preset)")
+    .opt("strategy", "", "override scheduler strategy")
+    .opt(
+        "replicas",
+        "1",
+        "1 = threaded wall-clock server; >1 = co-simulated fleet (virtual time)",
+    )
+    .opt("listen", "127.0.0.1:7878", "TCP bind address")
+    .flag("stdio", "speak the protocol on stdin/stdout instead of TCP")
+    .opt("seed", "42", "rng seed");
+    let args = parse_or_usage(&cli, program, argv)?;
+    let mut cfg = load_config(&args)?;
+    let seed = args.u64("seed").map_err(anyhow::Error::msg)?;
+    let replicas = args.usize("replicas").map_err(anyhow::Error::msg)?.max(1);
+    let slo = cfg.slo;
+    cfg.seed = seed;
+    let listen = args.str("listen");
+    if replicas == 1 {
+        let backend = SimBackend::new(TimeModel::new(cfg.time_model), seed, 0.0);
+        let mut handle = crate::server::spawn(Engine::new(cfg, backend));
+        if args.flag("stdio") {
+            wire::serve_stdio(&mut handle)?;
+        } else {
+            wire::serve_tcp(listen.as_str(), &mut handle)?;
+        }
+        let engine = handle.shutdown();
+        println!("{}", engine.metrics.to_json(&slo).pretty());
+    } else {
+        let mut front = ClusterServe::new(ClusterConfig::new(cfg, replicas));
+        if args.flag("stdio") {
+            wire::serve_stdio(&mut front)?;
+        } else {
+            wire::serve_tcp(listen.as_str(), &mut front)?;
+        }
+        let horizon = front.clock().max(1e-9);
+        println!("{}", front.sim.report(horizon).to_json().pretty());
+    }
+    Ok(())
+}
+
 #[cfg(not(feature = "runtime"))]
-fn serve(_program: &str, _argv: Vec<String>) -> anyhow::Result<()> {
+fn serve_demo(_program: &str, _argv: Vec<String>) -> anyhow::Result<()> {
     anyhow::bail!(
         "built without the `runtime` feature: the PJRT backend is unavailable \
          (add the external `xla` dependency and rebuild with `--features runtime`)"
@@ -87,7 +139,8 @@ fn serve(_program: &str, _argv: Vec<String>) -> anyhow::Result<()> {
 }
 
 #[cfg(feature = "runtime")]
-fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+fn serve_demo(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    use crate::serve::TokenEvent;
     let cli = Cli::new("serve a demo load on the real EchoLM model via PJRT")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("strategy", "echo", "bs | bs+e | bs+e+s | echo")
@@ -119,22 +172,33 @@ fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     for _ in 0..n_off {
         let mut t = shared.clone();
         t.extend((0..16).map(|_| rng.range_u64(1, (vocab - 1) as u64) as u32));
-        handle.submit_offline(PromptSpec::real(t), 8);
+        handle.submit_detached(SubmitSpec::offline(PromptSpec::real(t), 8));
     }
     let mut rxs = Vec::new();
     for _ in 0..n_on {
         let t: Vec<u32> = (0..40).map(|_| rng.range_u64(1, (vocab - 1) as u64) as u32).collect();
-        rxs.push(handle.submit_online(PromptSpec::real(t), 8));
+        rxs.push(handle.submit_streaming(SubmitSpec::online(PromptSpec::real(t), 8)));
         std::thread::sleep(std::time::Duration::from_millis(30));
     }
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let c = rx.recv_timeout(std::time::Duration::from_secs(120))?;
-        println!(
-            "online #{i}: {} tokens, ttft={:.1}ms tpot={:.1}ms",
-            c.tokens.len(),
-            c.ttft.unwrap_or(0.0) * 1e3,
-            c.mean_tpot.unwrap_or(0.0) * 1e3
-        );
+    for (i, (_ticket, rx)) in rxs.into_iter().enumerate() {
+        loop {
+            let ev = rx.recv_timeout(std::time::Duration::from_secs(120))?;
+            if let TokenEvent::Finished {
+                tokens,
+                ttft,
+                mean_tpot,
+                ..
+            } = ev
+            {
+                println!(
+                    "online #{i}: {} tokens, ttft={:.1}ms tpot={:.1}ms",
+                    tokens.len(),
+                    ttft.unwrap_or(0.0) * 1e3,
+                    mean_tpot.unwrap_or(0.0) * 1e3
+                );
+                break;
+            }
+        }
     }
     let engine = handle.shutdown();
     println!("{}", engine.metrics.to_json(&engine.cfg.slo).pretty());
@@ -162,29 +226,38 @@ fn simulate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let backend = SimBackend::new(TimeModel::new(cfg.time_model), seed, 0.02);
     let slo = cfg.slo;
     let kind = cfg.scheduler.kind;
-    let mut e = Engine::new(cfg, backend);
-    e.set_sample_interval(horizon / 480.0);
+    let mut front = EngineServe::new(Engine::new(cfg, backend));
+    front.engine.set_sample_interval(horizon / 480.0);
     let trace = Trace::generate(&TraceConfig::compressed(horizon, rate, seed));
     let mut rng = Rng::new(seed);
     for &t in &trace.arrivals {
-        let id = e.store.fresh_id();
         let len = rng.range_usize(50, 600);
         let out = rng.range_usize(16, 256);
-        e.submit_online(Request::new(id, TaskClass::Online, t, PromptSpec::sim(len, None), out));
+        front.submit(SubmitSpec::online(PromptSpec::sim(len, None), out).at(t))?;
     }
     let mut n_off = args.usize("offline-count").map_err(anyhow::Error::msg)?;
     if n_off == 0 {
         n_off = figures::backlog_size(&spec, horizon);
     }
-    let mut store = std::mem::take(&mut e.store);
-    let mut batch = synthesize(&spec, n_off, TaskClass::Offline, 0.0, &mut store, &mut rng);
-    e.store = store;
-    // Interleave prefix groups in submission order (see figures::run_mixed).
+    // Synthesize the offline corpus in a scratch store, then feed it
+    // through the serving API; submission order interleaves prefix groups
+    // (see figures::run_mixed).
+    let mut scratch = crate::core::RequestStore::new();
+    let mut batch = synthesize(
+        &spec,
+        n_off,
+        crate::core::TaskClass::Offline,
+        0.0,
+        &mut scratch,
+        &mut rng,
+    );
     rng.shuffle(&mut batch.ids);
     for &id in &batch.ids {
-        e.register_offline(id);
+        let r = scratch.get(id);
+        front.submit(SubmitSpec::offline(r.prompt.clone(), r.max_new_tokens))?;
     }
-    e.run_until(horizon)?;
+    front.run_until(horizon, &mut NullSink)?;
+    let e = front.into_engine();
     let j = e
         .metrics
         .to_json(&slo)
@@ -264,9 +337,13 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         spec.name
     );
 
-    let mut sim = ClusterSim::new(cc);
-    sim.submit_offline_backlog(crate::cluster::offline_jobs(&spec, n_off, seed ^ 0x0ff0));
-    let report = sim.run(&online, horizon)?;
+    // Everything goes through the one serving API: offline jobs and the
+    // trace replay are ordinary submissions against the fleet front door.
+    let mut front = ClusterServe::new(cc);
+    front.submit_offline_jobs(crate::cluster::offline_jobs(&spec, n_off, seed ^ 0x0ff0))?;
+    front.submit_online_jobs(&online)?;
+    front.run_until(horizon, &mut NullSink)?;
+    let report = front.sim.report(horizon);
 
     let rows: Vec<Vec<String>> = report
         .replicas

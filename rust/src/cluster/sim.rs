@@ -9,14 +9,15 @@
 //! evaluates the scaling policy. A single-replica cluster replays exactly
 //! like a bare engine (the N=1 equivalence test pins this down).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::Result;
 
 use crate::config::SystemConfig;
-use crate::core::{PromptSpec, Request, TaskClass};
+use crate::core::{PromptSpec, Request, RequestId, TaskClass};
 use crate::estimator::{PrefillItem, TimeModel};
 use crate::metrics::Metrics;
+use crate::serve::TicketId;
 use crate::trace::Trace;
 use crate::utils::json::Json;
 use crate::utils::rng::Rng;
@@ -28,11 +29,16 @@ use super::router::{Router, RouterStats};
 /// A store-independent offline work unit: replicas materialize it into
 /// their own `RequestStore` on admission, so jobs can move between the
 /// cluster backlog and any replica's pool. Prefix-group identity lives in
-/// the `PromptSpec`, so affinity survives the moves.
+/// the `PromptSpec`, so affinity survives the moves. A serving-API ticket
+/// (if any) travels with the job across every move — backlog, pool,
+/// work-steal, drain — so streaming and cancellation keep working while
+/// the job migrates.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     pub prompt: PromptSpec,
     pub max_new_tokens: usize,
+    /// Serving-API identity (None for batch-replay drivers).
+    pub ticket: Option<TicketId>,
 }
 
 /// One online arrival to replay (sorted by `at`).
@@ -229,6 +235,14 @@ pub struct ClusterSim {
     /// autoscaler's demand window.
     rate_window: VecDeque<(f64, f64)>,
     service_model: TimeModel,
+    /// Next autoscaler evaluation time (quantum-stepping state).
+    next_eval: f64,
+    /// Serving-API ticket placements: where each live ticket's request
+    /// currently lives. Maintained by online dispatch, offline
+    /// materialization, and work-stealing extraction; empty for
+    /// batch-replay drivers (no tickets).
+    ticket_place: HashMap<TicketId, (usize, RequestId)>,
+    place_ticket: HashMap<(usize, RequestId), TicketId>,
 }
 
 impl ClusterSim {
@@ -244,12 +258,50 @@ impl ClusterSim {
             timeline: Vec::new(),
             rate_window: VecDeque::new(),
             service_model,
+            next_eval: 0.0,
+            ticket_place: HashMap::new(),
+            place_ticket: HashMap::new(),
             cfg,
         };
         for _ in 0..sim.cfg.replicas {
             sim.spawn_replica(0.0);
         }
         sim
+    }
+
+    /// Record a serving-API ticket's current placement.
+    pub(crate) fn record_ticket(&mut self, ticket: TicketId, replica: usize, req: RequestId) {
+        self.ticket_place.insert(ticket, (replica, req));
+        self.place_ticket.insert((replica, req), ticket);
+    }
+
+    /// Where a ticket's request currently lives (None: still in the
+    /// backlog, never placed, or already forgotten).
+    pub fn ticket_location(&self, ticket: TicketId) -> Option<(usize, RequestId)> {
+        self.ticket_place.get(&ticket).copied()
+    }
+
+    /// The ticket placed at `(replica, req)`, if any (reverse lookup).
+    pub fn ticket_at(&self, replica: usize, req: RequestId) -> Option<TicketId> {
+        self.place_ticket.get(&(replica, req)).copied()
+    }
+
+    /// Drop a ticket's placement (terminal event delivered / cancelled).
+    pub(crate) fn forget_ticket(&mut self, ticket: TicketId) {
+        if let Some(place) = self.ticket_place.remove(&ticket) {
+            self.place_ticket.remove(&place);
+        }
+    }
+
+    fn unplace(&mut self, replica: usize, req: RequestId) -> Option<TicketId> {
+        let t = self.place_ticket.remove(&(replica, req))?;
+        self.ticket_place.remove(&t);
+        Some(t)
+    }
+
+    /// The replica with this id, if still part of the fleet.
+    pub fn replica(&self, id: usize) -> Option<&Replica> {
+        self.replicas.iter().find(|r| r.id == id)
     }
 
     /// Queue offline jobs on the cluster backlog (work-stealing feeds them
@@ -298,16 +350,23 @@ impl ClusterSim {
     }
 
     fn submit_offline_to(&mut self, id: usize, job: JobSpec) {
-        let rep = self.replica_mut(id);
-        let arrival = rep.engine.clock;
-        let rid = rep.engine.store.fresh_id();
-        rep.engine.submit_offline(Request::new(
-            rid,
-            TaskClass::Offline,
-            arrival,
-            job.prompt,
-            job.max_new_tokens,
-        ));
+        let ticket = job.ticket;
+        let rid = {
+            let rep = self.replica_mut(id);
+            let arrival = rep.engine.clock;
+            let rid = rep.engine.store.fresh_id();
+            rep.engine.submit_offline(Request::new(
+                rid,
+                TaskClass::Offline,
+                arrival,
+                job.prompt,
+                job.max_new_tokens,
+            ));
+            rid
+        };
+        if let Some(t) = ticket {
+            self.record_ticket(t, id, rid);
+        }
     }
 
     /// Pull a request out of a replica's pool and back into a [`JobSpec`].
@@ -316,20 +375,23 @@ impl ClusterSim {
     /// Preempted victims are demoted to `Queued` too — otherwise a stolen
     /// preempted request would block `Replica::is_idle` (and retirement)
     /// forever. A stolen preempted request restarts from scratch on the
-    /// thief (recompute semantics, like preemption itself).
+    /// thief (recompute semantics, like preemption itself). The ticket, if
+    /// any, travels with the extracted job.
     fn extract_jobs(&mut self, id: usize, n: usize) -> Vec<JobSpec> {
-        let rep = self.replica_mut(id);
-        let victims = rep.engine.pool.steal_candidates(n);
+        let victims = self.replica_mut(id).engine.pool.steal_candidates(n);
         let mut jobs = Vec::with_capacity(victims.len());
         for rid in victims {
             let (prompt, out) = {
+                let rep = self.replica_mut(id);
                 let r = rep.engine.store.get(rid);
                 (r.prompt.clone(), r.max_new_tokens)
             };
-            rep.engine.withdraw_offline(rid);
+            self.replica_mut(id).engine.withdraw_offline(rid);
+            let ticket = self.unplace(id, rid);
             jobs.push(JobSpec {
                 prompt,
                 max_new_tokens: out,
+                ticket,
             });
         }
         jobs
@@ -455,82 +517,106 @@ impl ClusterSim {
         }
     }
 
+    /// t = 0 prologue: flood pools from the backlog before the first
+    /// quantum, and reset the autoscaler's evaluation schedule.
+    pub fn begin(&mut self) {
+        self.next_eval = 0.0;
+        self.sync_router();
+        self.work_steal();
+    }
+
+    /// Route one online job and place it on the chosen replica. Returns the
+    /// placement, or None when the fleet is empty (cannot happen with
+    /// min-replicas >= 1).
+    pub fn dispatch_online(&mut self, job: &OnlineJob) -> Option<(usize, RequestId)> {
+        let (rid, _hit) = self.router.route_online(&job.prompt)?;
+        if self.cfg.scale.is_some() {
+            let service = self.service_estimate(job.prompt.total_len, job.max_new_tokens);
+            self.rate_window.push_back((job.at, service));
+        }
+        let rep = self.replica_mut(rid);
+        let id = rep.engine.store.fresh_id();
+        rep.engine.submit_online(Request::new(
+            id,
+            TaskClass::Online,
+            job.at,
+            job.prompt.clone(),
+            job.max_new_tokens,
+        ));
+        Some((rid, id))
+    }
+
+    /// Advance every replica to the quantum end. A replica whose clock lags
+    /// the quantum start sat idle in cluster time (its run_until returned
+    /// early with nothing runnable): fast-forward it so work it receives
+    /// now executes at cluster time rather than burning the lag as phantom
+    /// busy-seconds. Observationally identical for a bare engine (nothing
+    /// runs while idle), so N=1 equivalence is preserved.
+    pub fn advance_replicas(&mut self, t: f64, t_end: f64) -> Result<()> {
+        for rep in &mut self.replicas {
+            if rep.engine.clock < t {
+                rep.engine.clock = t;
+            }
+            rep.engine.run_until(t_end)?;
+        }
+        Ok(())
+    }
+
+    /// Post-quantum bookkeeping: republish digests, retire drained fleet
+    /// members, rebalance offline work, evaluate scaling, record the
+    /// timeline point.
+    pub fn finish_quantum(&mut self, t_end: f64) {
+        self.sync_router();
+        self.retire_drained(t_end);
+        self.work_steal();
+        if let Some(policy) = self.cfg.scale.clone() {
+            if t_end >= self.next_eval {
+                self.evaluate_scaling(&policy, t_end);
+                self.next_eval = t_end + policy.eval_period;
+            }
+        }
+        self.timeline.push((t_end, self.active_replicas()));
+    }
+
     /// Replay `online` (sorted by arrival) against the fleet until
-    /// `horizon` (sim seconds), then report.
+    /// `horizon` (sim seconds), then report. Batch-replay convenience over
+    /// the same quantum primitives the serving front door
+    /// (`serve::ClusterServe`) drives incrementally — the N=1 equivalence
+    /// tests pin both paths to the bare engine.
     pub fn run(&mut self, online: &[OnlineJob], horizon: f64) -> Result<ClusterReport> {
         debug_assert!(
             online.windows(2).all(|w| w[0].at <= w[1].at),
             "online jobs must be sorted by arrival"
         );
-        // t = 0 sync: flood pools from the backlog before the first step.
-        self.sync_router();
-        self.work_steal();
-
+        self.begin();
         let mut idx = 0usize;
         let mut t = 0.0;
-        let mut next_eval = 0.0;
         while t < horizon {
             let t_end = (t + self.cfg.sync_dt).min(horizon);
-
-            // 1. dispatch arrivals due in (t, t_end]
+            // dispatch arrivals due in (t, t_end]
             while idx < online.len() && online[idx].at <= t_end {
-                let job = &online[idx];
+                let _ = self.dispatch_online(&online[idx]);
                 idx += 1;
-                let Some((rid, _hit)) = self.router.route_online(&job.prompt) else {
-                    continue; // no replicas at all (cannot happen with min >= 1)
-                };
-                if self.cfg.scale.is_some() {
-                    let service =
-                        self.service_estimate(job.prompt.total_len, job.max_new_tokens);
-                    self.rate_window.push_back((job.at, service));
-                }
-                let rep = self.replica_mut(rid);
-                let id = rep.engine.store.fresh_id();
-                rep.engine.submit_online(Request::new(
-                    id,
-                    TaskClass::Online,
-                    job.at,
-                    job.prompt.clone(),
-                    job.max_new_tokens,
-                ));
             }
-
-            // 2. advance every replica to the quantum end. A replica whose
-            // clock lags the quantum start sat idle in cluster time (its
-            // run_until returned early with nothing runnable): fast-forward
-            // it so work it receives now executes at cluster time rather
-            // than burning the lag as phantom busy-seconds. Observationally
-            // identical for a bare engine (nothing runs while idle), so
-            // N=1 equivalence is preserved.
-            for rep in &mut self.replicas {
-                if rep.engine.clock < t {
-                    rep.engine.clock = t;
-                }
-                rep.engine.run_until(t_end)?;
-            }
-
-            // 3. republish digests, retire drained fleet members
-            self.sync_router();
-            self.retire_drained(t_end);
-
-            // 4. offline work-stealing
-            self.work_steal();
-
-            // 5. autoscaling
-            if let Some(policy) = self.cfg.scale.clone() {
-                if t_end >= next_eval {
-                    self.evaluate_scaling(&policy, t_end);
-                    next_eval = t_end + policy.eval_period;
-                }
-            }
-
-            self.timeline.push((t_end, self.active_replicas()));
+            self.advance_replicas(t, t_end)?;
+            self.finish_quantum(t_end);
             t = t_end;
         }
         Ok(self.report(horizon))
     }
 
-    fn report(&self, horizon: f64) -> ClusterReport {
+    /// Fleet-wide metrics rollup over every replica that ever served,
+    /// including retired ones.
+    pub fn all_metrics(&self) -> Metrics {
+        Metrics::aggregate(
+            self.retired
+                .iter()
+                .map(|r| &r.metrics)
+                .chain(self.replicas.iter().map(|r| &r.engine.metrics)),
+        )
+    }
+
+    pub fn report(&self, horizon: f64) -> ClusterReport {
         let slo = self.cfg.base.slo;
         let mut reps: Vec<ReplicaReport> = self.retired.clone();
         for rep in &self.replicas {
@@ -653,6 +739,7 @@ pub fn offline_jobs(spec: &DatasetSpec, n: usize, seed: u64) -> Vec<JobSpec> {
             JobSpec {
                 prompt: r.prompt.clone(),
                 max_new_tokens: r.max_new_tokens,
+                ticket: None,
             }
         })
         .collect();

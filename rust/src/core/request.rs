@@ -190,6 +190,12 @@ impl PromptSpec {
         self.shared_keys.take();
         self.shared_keys_bs.set(0);
     }
+
+    /// Whether the shareable-prefix keys are currently interned
+    /// (cancellation tests assert terminal transitions drop them).
+    pub(crate) fn has_interned(&self) -> bool {
+        self.shared_keys.get().is_some()
+    }
 }
 
 fn chain(prev: u128, x: u128) -> u128 {
@@ -203,12 +209,17 @@ fn chain(prev: u128, x: u128) -> u128 {
 
 /// Request lifecycle. Preempted = recompute-mode preemption (paper §6):
 /// KV released; prompt + generated-so-far re-prefill when rescheduled.
+/// Cancelled = client-side withdrawal through the serving API: terminal
+/// like `Finished`, but the request produced no completion — its KV
+/// interest, pool entry, and interned content keys are released at the
+/// transition (see `Engine::cancel`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReqState {
     Queued,
     Running,
     Preempted,
     Finished,
+    Cancelled,
 }
 
 /// Inference phase (paper §2.1). `Prefill` covers first-time prompt
@@ -313,6 +324,13 @@ impl Request {
     /// Times the key path was chain-hashed (test/regression hook).
     pub fn key_compute_count(&self) -> u32 {
         self.key_computes.get()
+    }
+
+    /// Whether any interned key vector (full path or shareable prefix) is
+    /// still cached on this request — must be false after a terminal
+    /// transition (finished / withdrawn / cancelled).
+    pub fn has_interned_keys(&self) -> bool {
+        self.key_path.get().is_some() || self.prompt.has_interned()
     }
 
     /// Drop the interned key caches. The store keeps every request forever

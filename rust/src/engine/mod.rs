@@ -161,6 +161,61 @@ impl<B: ExecutionBackend> Engine<B> {
         self.live.remove(&id);
     }
 
+    /// Cancel a live request (client withdrawal through the serving API).
+    /// Terminal like completion, but nothing is delivered: the request's
+    /// KV blocks and future-key interest, pool/queue entries, scheduler
+    /// tracking, and interned content keys are all released, and the store
+    /// keeps an inert `Cancelled` record for metrics. Returns false when
+    /// the id is unknown or already terminal (finished, withdrawn).
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if self.store.try_get(id).is_none() || !self.live.contains(&id) {
+            return false;
+        }
+        let block_size = self.cfg.cache.block_size;
+        let (class, state, prompt_len) = {
+            let r = self.store.get(id);
+            (r.class, r.state, r.prompt.total_len)
+        };
+        match state {
+            ReqState::Finished | ReqState::Cancelled => return false,
+            ReqState::Queued => match class {
+                TaskClass::Online => {
+                    // Not yet arrived, or sitting in the admission queue.
+                    self.arrivals.retain(|&(_, rid)| rid != id);
+                    self.online_queue.retain(|&rid| rid != id);
+                }
+                TaskClass::Offline => {
+                    let keys = self.store.get(id).content_key_path(block_size).to_vec();
+                    self.pool.remove(id, prompt_len);
+                    self.kv.unregister_future(&keys);
+                }
+            },
+            // Preempted requests live in the offline pool (recompute mode).
+            ReqState::Preempted => {
+                let keys = self.store.get(id).content_key_path(block_size).to_vec();
+                self.pool.remove(id, prompt_len);
+                if class == TaskClass::Offline {
+                    self.kv.unregister_future(&keys);
+                }
+            }
+            ReqState::Running => {
+                self.kv.release(id, false);
+                if class == TaskClass::Offline {
+                    let keys = self.store.get(id).content_key_path(block_size).to_vec();
+                    self.kv.unregister_future(&keys);
+                }
+                self.sched.on_finished(id);
+                self.backend.on_release(id);
+            }
+        }
+        let r = self.store.get_mut(id);
+        r.state = ReqState::Cancelled;
+        r.release_interned_keys();
+        self.live.remove(&id);
+        self.metrics.record_cancellation(class);
+        true
+    }
+
     /// Unfinished requests owned by this engine (deterministic id order).
     pub fn live_requests(&self) -> impl Iterator<Item = &Request> {
         self.live.iter().map(|&id| self.store.get(id))

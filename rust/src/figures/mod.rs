@@ -14,11 +14,12 @@
 //!   Fig. 11 — predicted vs actual online demand       -> `fig11`
 
 use crate::config::{SchedulerKind, SystemConfig};
-use crate::core::{PromptSpec, Request, TaskClass};
+use crate::core::{PromptSpec, RequestStore, TaskClass};
 use crate::engine::{sim::SimBackend, Engine};
 use crate::estimator::TimeModel;
 use crate::kvcache::CacheStats;
 use crate::metrics::{windowed_ratio, Metrics};
+use crate::serve::{EngineServe, NullSink, Serve, SubmitSpec};
 use crate::trace::{Trace, TraceConfig};
 use crate::utils::ascii;
 use crate::utils::json::Json;
@@ -92,8 +93,8 @@ pub fn run_mixed(
     cfg.predictor.update_period = opts.horizon / 24.0 / 6.0;
 
     let backend = SimBackend::new(TimeModel::new(cfg.time_model), opts.seed ^ 0x5a5a, 0.02);
-    let mut e = Engine::new(cfg, backend);
-    e.set_sample_interval(opts.horizon / 480.0);
+    let mut front = EngineServe::new(Engine::new(cfg, backend));
+    front.engine.set_sample_interval(opts.horizon / 480.0);
 
     // Online load: compressed paper-shaped trace + ShareGPT-like prompts
     // (§7.1: online tasks simulated with the real-world trace + ShareGPT).
@@ -105,9 +106,8 @@ pub fn run_mixed(
     let online_spec = DatasetSpec::sharegpt();
     let mut rng = Rng::new(opts.seed ^ 0x00ff);
     for &t in &trace.arrivals {
-        let id = e.store.fresh_id();
         let (prompt, out) = draw_request(&online_spec, &mut rng);
-        e.submit_online(Request::new(id, TaskClass::Online, t, prompt, out));
+        front.submit(SubmitSpec::online(prompt, out).at(t))?;
     }
 
     // Offline backlog, submitted all at once at t = 0 (§7.2). Submission
@@ -115,23 +115,23 @@ pub fn run_mixed(
     // paper's §4.1 R2/R5 example shows exactly this: same-prefix requests
     // are NOT adjacent in FCFS order; locality must be *recovered*).
     let n_off = backlog_size(offline_spec, opts.horizon);
-    let mut store = std::mem::take(&mut e.store);
-    let batch = synthesize(
+    let mut scratch = RequestStore::new();
+    let mut batch = synthesize(
         offline_spec,
         n_off,
         TaskClass::Offline,
         0.0,
-        &mut store,
+        &mut scratch,
         &mut rng,
     );
-    e.store = store;
-    let mut batch = batch;
     rng.shuffle(&mut batch.ids);
     for &id in &batch.ids {
-        e.register_offline(id);
+        let r = scratch.get(id);
+        front.submit(SubmitSpec::offline(r.prompt.clone(), r.max_new_tokens))?;
     }
 
-    e.run_until(opts.horizon)?;
+    front.run_until(opts.horizon, &mut NullSink)?;
+    let e = front.into_engine();
     Ok(RunResult {
         kind,
         cache: e.kv.stats.clone(),
@@ -467,7 +467,7 @@ pub fn ablation_cache(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
         cfg.predictor.history_horizon = opts.horizon / 24.0;
         cfg.predictor.update_period = opts.horizon / 144.0;
         let backend = SimBackend::new(TimeModel::new(cfg.time_model), opts.seed, 0.02);
-        let mut e = Engine::new(cfg, backend);
+        let mut front = EngineServe::new(Engine::new(cfg, backend));
         let trace = Trace::generate(&TraceConfig::compressed(
             opts.horizon,
             opts.mean_rate,
@@ -475,18 +475,18 @@ pub fn ablation_cache(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
         ));
         let mut rng = Rng::new(opts.seed);
         for &t in &trace.arrivals {
-            let id = e.store.fresh_id();
             let (prompt, out) = draw_request(&DatasetSpec::sharegpt(), &mut rng);
-            e.submit_online(Request::new(id, TaskClass::Online, t, prompt, out));
+            front.submit(SubmitSpec::online(prompt, out).at(t))?;
         }
         let n_off = backlog_size(&spec, opts.horizon);
-        let mut store = std::mem::take(&mut e.store);
-        let batch = synthesize(&spec, n_off, TaskClass::Offline, 0.0, &mut store, &mut rng);
-        e.store = store;
+        let mut scratch = RequestStore::new();
+        let batch = synthesize(&spec, n_off, TaskClass::Offline, 0.0, &mut scratch, &mut rng);
         for &id in &batch.ids {
-            e.register_offline(id);
+            let r = scratch.get(id);
+            front.submit(SubmitSpec::offline(r.prompt.clone(), r.max_new_tokens))?;
         }
-        e.run_until(opts.horizon)?;
+        front.run_until(opts.horizon, &mut NullSink)?;
+        let e = front.into_engine();
         rows.push(vec![
             name.to_string(),
             format!("{:.1}", e.metrics.offline_throughput()),
@@ -524,24 +524,24 @@ pub fn ablation_budget(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
         cfg.scheduler.kind = SchedulerKind::Echo;
         cfg.scheduler.mutation_budget = budget;
         let backend = SimBackend::new(TimeModel::new(cfg.time_model), o.seed, 0.02);
-        let mut e = Engine::new(cfg, backend);
+        let mut front = EngineServe::new(Engine::new(cfg, backend));
         let trace = Trace::generate(&TraceConfig::compressed(o.horizon, o.mean_rate, o.seed));
         let mut rng = Rng::new(o.seed);
         for &t in &trace.arrivals {
-            let id = e.store.fresh_id();
             let (prompt, out) = draw_request(&DatasetSpec::sharegpt(), &mut rng);
-            e.submit_online(Request::new(id, TaskClass::Online, t, prompt, out));
+            front.submit(SubmitSpec::online(prompt, out).at(t))?;
         }
         let n_off = backlog_size(&spec, o.horizon);
-        let mut store = std::mem::take(&mut e.store);
-        let batch = synthesize(&spec, n_off, TaskClass::Offline, 0.0, &mut store, &mut rng);
-        e.store = store;
+        let mut scratch = RequestStore::new();
+        let batch = synthesize(&spec, n_off, TaskClass::Offline, 0.0, &mut scratch, &mut rng);
         for &id in &batch.ids {
-            e.register_offline(id);
+            let r = scratch.get(id);
+            front.submit(SubmitSpec::offline(r.prompt.clone(), r.max_new_tokens))?;
         }
         let wall = std::time::Instant::now();
-        e.run_until(o.horizon)?;
+        front.run_until(o.horizon, &mut NullSink)?;
         let wall = wall.elapsed().as_secs_f64();
+        let e = front.into_engine();
         rows.push(vec![
             budget.to_string(),
             format!("{:.1}", e.metrics.offline_throughput()),
@@ -573,9 +573,9 @@ pub fn ablation_budget(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
 /// the autoscaler's replica-count timeline against the arrival tide.
 pub fn fig_cluster(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
     use crate::cluster::{
-        offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig, ClusterSim,
-        ScalePolicy,
+        offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig, ScalePolicy,
     };
+    use crate::serve::ClusterServe;
     let spec = DatasetSpec::loogle_qa_short();
     let trace = Trace::generate(&TraceConfig::compressed(
         opts.horizon,
@@ -588,15 +588,22 @@ pub fn fig_cluster(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
     // `fleet_cap` = the largest replica count the run can reach; the
     // backlog must outlast the horizon even at that size, or throughput is
     // capped by starvation instead of capacity.
-    let run = |n: usize, fleet_cap: usize, scale: Option<ScalePolicy>| {
+    // Fleets are driven through the serving front door: offline jobs and
+    // the trace replay are ordinary `Serve` submissions.
+    let run = |n: usize,
+               fleet_cap: usize,
+               scale: Option<ScalePolicy>|
+     -> anyhow::Result<crate::cluster::ClusterReport> {
         let mut base = SystemConfig::a100_llama8b();
         base.seed = opts.seed;
         let mut cc = ClusterConfig::new(base, n);
         cc.scale = scale;
-        let mut sim = ClusterSim::new(cc);
+        let mut front = ClusterServe::new(cc);
         let n_jobs = backlog_size(&spec, opts.horizon) * fleet_cap;
-        sim.submit_offline_backlog(offline_jobs(&spec, n_jobs, opts.seed ^ 0x0ff0));
-        sim.run(&online, opts.horizon)
+        front.submit_offline_jobs(offline_jobs(&spec, n_jobs, opts.seed ^ 0x0ff0))?;
+        front.submit_online_jobs(&online)?;
+        front.run_until(opts.horizon, &mut NullSink)?;
+        Ok(front.sim.report(opts.horizon))
     };
 
     let mut rows = Vec::new();

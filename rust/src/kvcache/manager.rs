@@ -199,6 +199,13 @@ impl KvManager {
         }
     }
 
+    /// Outstanding future interest registered on a content key (test hook:
+    /// cancellation must drop a withdrawn request's contribution).
+    #[doc(hidden)]
+    pub fn future_ref_count(&self, key: u128) -> u32 {
+        self.future_refs.get(&key).copied().unwrap_or(0)
+    }
+
     /// How many leading blocks of `keys` are resident right now (without
     /// pinning them). Free for planning; does not touch stats.
     pub fn peek_prefix(&self, keys: &[u128]) -> usize {

@@ -17,6 +17,7 @@ pub mod metrics;
 #[cfg(feature = "runtime")]
 pub mod runtime;
 pub mod scheduler;
+pub mod serve;
 pub mod server;
 pub mod sim;
 pub mod trace;

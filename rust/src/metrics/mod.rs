@@ -59,6 +59,10 @@ pub struct Metrics {
     pub busy_time: f64,
     pub preemptions: usize,
     pub skipped_offline: usize,
+    /// Requests withdrawn through the serving API before completion
+    /// (dropped clients, explicit `cancel` verbs, harvested offline work).
+    pub cancelled_online: usize,
+    pub cancelled_offline: usize,
     // ---- time series (Figures 8-10) ----
     pub active_online: TimeSeries,
     pub active_offline: TimeSeries,
@@ -115,6 +119,8 @@ impl Metrics {
         self.busy_time += other.busy_time;
         self.preemptions += other.preemptions;
         self.skipped_offline += other.skipped_offline;
+        self.cancelled_online += other.cancelled_online;
+        self.cancelled_offline += other.cancelled_offline;
     }
 
     /// Aggregate rollup over per-replica metrics (cluster reporting).
@@ -150,6 +156,14 @@ impl Metrics {
                 self.offline_tokens_out += tokens_out as u64;
                 self.offline_billed_tokens += (prompt_len + tokens_out) as u64;
             }
+        }
+    }
+
+    /// Count a client-side cancellation (terminal, no completion).
+    pub fn record_cancellation(&mut self, class: TaskClass) {
+        match class {
+            TaskClass::Online => self.cancelled_online += 1,
+            TaskClass::Offline => self.cancelled_offline += 1,
         }
     }
 
@@ -222,6 +236,8 @@ impl Metrics {
             .set("prefill_tokens_saved", self.prefill_tokens_saved)
             .set("preemptions", self.preemptions)
             .set("skipped_offline", self.skipped_offline)
+            .set("cancelled_online", self.cancelled_online)
+            .set("cancelled_offline", self.cancelled_offline)
             .set(
                 "ttft",
                 Json::obj()

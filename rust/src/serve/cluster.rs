@@ -1,0 +1,457 @@
+//! [`Serve`] over a replica fleet: router dispatch, offline work-stealing,
+//! and tidal autoscaling behind the same trait as a bare engine. One
+//! `pump` = one router/digest sync quantum; tickets follow their jobs
+//! across work-steal migrations (see `cluster::JobSpec::ticket`), so
+//! streaming and cancellation keep working while work moves.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::cluster::{ClusterConfig, ClusterSim, JobSpec, OnlineJob};
+use crate::core::{ReqState, TaskClass};
+use crate::metrics::Metrics;
+
+use super::{Cursor, EventSink, MetricsView, Serve, SubmitSpec, Ticket, TicketId, TokenEvent};
+
+pub struct ClusterServe {
+    pub sim: ClusterSim,
+    clock: f64,
+    begun: bool,
+    next_ticket: TicketId,
+    /// Online submissions not yet due, sorted ascending by arrival
+    /// (stable: equal arrivals keep submission order, like the batch
+    /// replay's sorted slice).
+    pending_online: VecDeque<(TicketId, OnlineJob)>,
+    cursors: BTreeMap<TicketId, Cursor>,
+    /// Placement each tracked ticket last streamed from. A move
+    /// (work-steal migration) RESTARTS that ticket's stream: recompute
+    /// semantics regenerate the output from scratch on the thief, so
+    /// splicing the two incarnations at the old cursor position would mix
+    /// token values/timestamps from different generations.
+    last_place: BTreeMap<TicketId, (usize, crate::core::RequestId)>,
+    /// Cancellation events queued for the next pump.
+    pending_events: Vec<TokenEvent>,
+    cancelled: usize,
+}
+
+impl ClusterServe {
+    pub fn new(cfg: ClusterConfig) -> Self {
+        ClusterServe {
+            sim: ClusterSim::new(cfg),
+            clock: 0.0,
+            begun: false,
+            next_ticket: 0,
+            pending_online: VecDeque::new(),
+            cursors: BTreeMap::new(),
+            last_place: BTreeMap::new(),
+            pending_events: Vec::new(),
+            cancelled: 0,
+        }
+    }
+
+    /// Cluster clock (quantum-aligned virtual seconds).
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Submit a batch of offline job specs through the trait (backlog
+    /// order preserved); returns the tickets. The one copy of the loop
+    /// every batch driver (CLI, figures, examples) repeats.
+    pub fn submit_offline_jobs(
+        &mut self,
+        jobs: impl IntoIterator<Item = JobSpec>,
+    ) -> anyhow::Result<Vec<Ticket>> {
+        let mut out = Vec::new();
+        for job in jobs {
+            out.push(self.submit(SubmitSpec::offline(job.prompt, job.max_new_tokens))?);
+        }
+        Ok(out)
+    }
+
+    /// Submit online jobs (trace replay) with their pinned arrivals.
+    pub fn submit_online_jobs<'a>(
+        &mut self,
+        jobs: impl IntoIterator<Item = &'a OnlineJob>,
+    ) -> anyhow::Result<Vec<Ticket>> {
+        let mut out = Vec::new();
+        for job in jobs {
+            let spec = SubmitSpec::online(job.prompt.clone(), job.max_new_tokens);
+            out.push(self.submit(spec.at(job.at))?);
+        }
+        Ok(out)
+    }
+
+    /// Any work left anywhere in the fleet?
+    fn busy(&self) -> bool {
+        !self.pending_online.is_empty()
+            || !self.sim.backlog.is_empty()
+            || self.sim.replicas.iter().any(|r| !r.is_idle())
+    }
+
+    /// Advance exactly one quantum ending at `t_end`.
+    fn pump_to(&mut self, t_end: f64, sink: &mut dyn EventSink) -> anyhow::Result<bool> {
+        if !self.begun {
+            self.sim.begin();
+            self.begun = true;
+        }
+        let t = self.clock;
+        // 1. dispatch online submissions due in (t, t_end]
+        while matches!(self.pending_online.front(), Some((_, job)) if job.at <= t_end) {
+            let (ticket, job) = self.pending_online.pop_front().expect("checked non-empty");
+            if let Some((rep, rid)) = self.sim.dispatch_online(&job) {
+                self.sim.record_ticket(ticket, rep, rid);
+            }
+        }
+        // 2. advance the fleet
+        self.sim.advance_replicas(t, t_end)?;
+        // 2b. reject unschedulable work (fleet edition of the threaded
+        // server's rejection): a replica whose clock stalled short of the
+        // quantum end while holding live queued/preempted work hit
+        // `Engine::step`'s "nothing can ever be scheduled" exit — the
+        // fleet is homogeneous, so no other replica could take it either.
+        // Only ticketed requests are rejected; batch replays keep the
+        // engine's warn-and-idle behavior.
+        let mut stuck: Vec<TicketId> = Vec::new();
+        for rep in &self.sim.replicas {
+            if rep.engine.clock >= t_end {
+                continue;
+            }
+            for r in rep.engine.live_requests() {
+                if matches!(r.state, ReqState::Queued | ReqState::Preempted) {
+                    if let Some(ticket) = self.sim.ticket_at(rep.id, r.id) {
+                        stuck.push(ticket);
+                    }
+                }
+            }
+        }
+        for ticket in stuck {
+            let _ = self.cancel(ticket);
+        }
+        // 3. deliver events (before post-quantum bookkeeping: a drained
+        // replica may retire there, dropping its store)
+        let wants = sink.wants_events();
+        let mut evs = std::mem::take(&mut self.pending_events);
+        if !wants {
+            evs.clear();
+        }
+        let mut done: Vec<TicketId> = Vec::new();
+        for (&ticket, cur) in self.cursors.iter_mut() {
+            let Some((rep_id, rid)) = self.sim.ticket_location(ticket) else {
+                continue; // still in the backlog
+            };
+            let Some(rep) = self.sim.replica(rep_id) else {
+                continue;
+            };
+            let Some(r) = rep.engine.store.try_get(rid) else {
+                continue;
+            };
+            // A work-steal moved the job since the last drain: the new
+            // incarnation regenerates from scratch, so restart the stream
+            // (fresh cursor) with a Preempted marker rather than splicing
+            // token indices across incarnations.
+            let place = (rep_id, rid);
+            match self.last_place.get(&ticket) {
+                Some(&p) if p == place => {}
+                Some(_) => {
+                    *cur = Cursor::default();
+                    if wants {
+                        evs.push(TokenEvent::Preempted { ticket, at: t_end });
+                    }
+                    self.last_place.insert(ticket, place);
+                }
+                None => {
+                    self.last_place.insert(ticket, place);
+                }
+            }
+            let terminal = if wants {
+                cur.drain(ticket, r, t_end, &mut evs)
+            } else {
+                cur.fast_forward(r)
+            };
+            if terminal {
+                done.push(ticket);
+            }
+        }
+        for ticket in done {
+            self.cursors.remove(&ticket);
+            self.last_place.remove(&ticket);
+            self.sim.forget_ticket(ticket);
+        }
+        // 4. post-quantum bookkeeping (digests, retirement, stealing,
+        // scaling)
+        self.sim.finish_quantum(t_end);
+        self.clock = t_end;
+        for ev in &evs {
+            sink.on_event(ev);
+        }
+        Ok(self.busy())
+    }
+
+    /// Queue the Cancelled event. `pre_placement` cancels (pending online /
+    /// shared backlog) are counted here; replica-placed cancels are already
+    /// counted by that engine's metrics (`Engine::cancel`), so counting
+    /// them again would double-book the snapshot.
+    fn emit_cancel(&mut self, ticket: TicketId, pre_placement: bool) {
+        self.cursors.remove(&ticket);
+        self.last_place.remove(&ticket);
+        self.pending_events.push(TokenEvent::Cancelled {
+            ticket,
+            at: self.clock,
+        });
+        if pre_placement {
+            self.cancelled += 1;
+        }
+    }
+}
+
+impl Serve for ClusterServe {
+    fn submit(&mut self, spec: SubmitSpec) -> anyhow::Result<Ticket> {
+        let ticket = self.next_ticket;
+        self.next_ticket += 1;
+        let class = spec.slo.task_class();
+        let arrival = spec.arrival.unwrap_or(self.clock);
+        match class {
+            TaskClass::Online => {
+                let job = OnlineJob {
+                    at: arrival,
+                    prompt: spec.prompt,
+                    max_new_tokens: spec.max_new_tokens,
+                };
+                let pos = self
+                    .pending_online
+                    .iter()
+                    .take_while(|(_, j)| j.at <= job.at)
+                    .count();
+                self.pending_online.insert(pos, (ticket, job));
+            }
+            TaskClass::Offline => {
+                self.sim.backlog.push_back(JobSpec {
+                    prompt: spec.prompt,
+                    max_new_tokens: spec.max_new_tokens,
+                    ticket: Some(ticket),
+                });
+            }
+        }
+        self.cursors.insert(ticket, Cursor::default());
+        Ok(Ticket {
+            id: ticket,
+            class,
+            submitted_at: arrival,
+        })
+    }
+
+    fn cancel(&mut self, ticket: TicketId) -> bool {
+        // Not yet dispatched online?
+        if let Some(pos) = self.pending_online.iter().position(|&(t, _)| t == ticket) {
+            let _ = self.pending_online.remove(pos);
+            self.emit_cancel(ticket, true);
+            return true;
+        }
+        // Still in the shared offline backlog?
+        if let Some(pos) = self.sim.backlog.iter().position(|j| j.ticket == Some(ticket)) {
+            let _ = self.sim.backlog.remove(pos);
+            self.emit_cancel(ticket, true);
+            return true;
+        }
+        // Placed on a replica (pooled, running, or preempted there).
+        let Some((rep_id, rid)) = self.sim.ticket_location(ticket) else {
+            return false;
+        };
+        let Some(pos) = self.sim.replicas.iter().position(|r| r.id == rep_id) else {
+            return false; // replica retired; ticket already terminal
+        };
+        if self.sim.replicas[pos].engine.cancel(rid) {
+            self.sim.forget_ticket(ticket);
+            self.emit_cancel(ticket, false);
+            true
+        } else {
+            false
+        }
+    }
+
+    fn pump(&mut self, sink: &mut dyn EventSink) -> anyhow::Result<bool> {
+        let t_end = self.clock + self.sim.cfg.sync_dt;
+        self.pump_to(t_end, sink)
+    }
+
+    fn drain(&mut self, sink: &mut dyn EventSink) -> anyhow::Result<()> {
+        // Generous backstop mirroring Engine::max_iterations.
+        for _ in 0..10_000_000usize {
+            if !self.pump(sink)? {
+                return Ok(());
+            }
+            // Idle fast-forward (the engine's idle-jump, fleet edition):
+            // when every replica is drained and the backlog is empty, only
+            // future pinned arrivals remain — jump to the next one on the
+            // quantum grid instead of grinding empty sync quanta.
+            if self.sim.backlog.is_empty() && self.sim.replicas.iter().all(|r| r.is_idle()) {
+                if let Some((_, job)) = self.pending_online.front() {
+                    let dt = self.sim.cfg.sync_dt;
+                    if job.at > self.clock + dt {
+                        let quanta = ((job.at - self.clock) / dt).floor();
+                        self.clock += (quanta - 1.0).max(0.0) * dt;
+                    }
+                }
+            }
+        }
+        anyhow::bail!("cluster drain exceeded the quantum backstop")
+    }
+
+    fn run_until(&mut self, deadline: f64, sink: &mut dyn EventSink) -> anyhow::Result<()> {
+        while self.clock < deadline {
+            let t_end = (self.clock + self.sim.cfg.sync_dt).min(deadline);
+            self.pump_to(t_end, sink)?;
+        }
+        Ok(())
+    }
+
+    fn snapshot(&self) -> MetricsView {
+        let m: Metrics = self.sim.all_metrics();
+        let queued: usize = self
+            .sim
+            .replicas
+            .iter()
+            .map(|r| r.engine.backlog_online())
+            .sum::<usize>()
+            + self.pending_online.len();
+        let pooled: usize = self
+            .sim
+            .replicas
+            .iter()
+            .map(|r| r.engine.pool.len())
+            .sum::<usize>()
+            + self.sim.backlog.len();
+        let running: usize = self
+            .sim
+            .replicas
+            .iter()
+            .map(|r| {
+                r.engine
+                    .live_requests()
+                    .filter(|q| q.state == crate::core::ReqState::Running)
+                    .count()
+            })
+            .sum();
+        let lookups: u64 = self
+            .sim
+            .replicas
+            .iter()
+            .map(|r| r.engine.kv.stats.lookup_blocks)
+            .sum();
+        let hits: u64 = self
+            .sim
+            .replicas
+            .iter()
+            .map(|r| r.engine.kv.stats.hit_blocks)
+            .sum();
+        MetricsView {
+            deployment: "cluster",
+            clock: self.clock,
+            queued_online: queued,
+            pooled_offline: pooled,
+            running,
+            online_completed: m.online_completed,
+            offline_completed: m.offline_completed,
+            cancelled: self.cancelled + m.cancelled_online + m.cancelled_offline,
+            preemptions: m.preemptions,
+            busy_time: m.busy_time,
+            online_throughput: m.online_throughput(),
+            offline_throughput: m.offline_throughput(),
+            hit_ratio: if lookups == 0 {
+                0.0
+            } else {
+                hits as f64 / lookups as f64
+            },
+            replicas: self.sim.active_replicas(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::core::PromptSpec;
+
+    fn small() -> ClusterServe {
+        let mut base = SystemConfig::a100_llama8b();
+        base.cache.capacity_tokens = 30_000;
+        base.scheduler.max_batch = 16;
+        let mut cc = ClusterConfig::new(base, 2);
+        cc.jitter = 0.0;
+        ClusterServe::new(cc)
+    }
+
+    #[test]
+    fn fleet_serves_and_streams_through_the_trait() {
+        let mut s = small();
+        let mut tickets = Vec::new();
+        for i in 0..6 {
+            let spec = SubmitSpec::online(PromptSpec::sim(200 + i * 20, None), 4);
+            let t = s.submit(spec.at(0.5 + i as f64)).unwrap();
+            tickets.push(t.id);
+        }
+        for _ in 0..8 {
+            s.submit(SubmitSpec::offline(PromptSpec::sim(400, None), 8)).unwrap();
+        }
+        let mut evs: Vec<TokenEvent> = Vec::new();
+        s.drain(&mut evs).unwrap();
+        let finished: Vec<TicketId> = evs
+            .iter()
+            .filter(|e| matches!(e, TokenEvent::Finished { .. }))
+            .map(|e| e.ticket())
+            .collect();
+        assert_eq!(finished.len(), 14, "every ticket finishes: {evs:?}");
+        for t in tickets {
+            assert!(finished.contains(&t));
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.online_completed, 6);
+        assert_eq!(snap.offline_completed, 8);
+        for rep in &s.sim.replicas {
+            rep.engine.kv.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn unschedulable_ticket_is_rejected() {
+        // A job larger than a replica's whole KV capacity can never be
+        // scheduled anywhere in a homogeneous fleet; the front door must
+        // reject it with a terminal event instead of grinding quanta.
+        let mut s = small(); // 30k-token caches
+        let t = s.submit(SubmitSpec::offline(PromptSpec::sim(40_000, None), 8)).unwrap();
+        let mut evs: Vec<TokenEvent> = Vec::new();
+        s.drain(&mut evs).unwrap();
+        assert!(
+            evs.iter()
+                .any(|e| matches!(e, TokenEvent::Cancelled { ticket, .. } if *ticket == t.id)),
+            "unschedulable job must be rejected: {evs:?}"
+        );
+        assert_eq!(s.snapshot().offline_completed, 0);
+        assert_eq!(s.snapshot().cancelled, 1);
+    }
+
+    #[test]
+    fn cancel_works_in_backlog_and_on_replicas() {
+        let mut s = small();
+        // Backlog cancel: second offline job withdrawn before placement.
+        let a = s.submit(SubmitSpec::offline(PromptSpec::sim(300, None), 8)).unwrap();
+        let b = s.submit(SubmitSpec::offline(PromptSpec::sim(300, None), 8)).unwrap();
+        assert!(s.cancel(b.id), "backlog cancel");
+        // Pending-online cancel.
+        let c = s.submit(SubmitSpec::online(PromptSpec::sim(100, None), 4).at(50.0)).unwrap();
+        assert!(s.cancel(c.id), "pending-online cancel");
+        let mut evs: Vec<TokenEvent> = Vec::new();
+        s.run_until(60.0, &mut evs).unwrap();
+        let cancelled: Vec<TicketId> = evs
+            .iter()
+            .filter(|e| matches!(e, TokenEvent::Cancelled { .. }))
+            .map(|e| e.ticket())
+            .collect();
+        assert_eq!(cancelled, vec![b.id, c.id]);
+        assert!(evs
+            .iter()
+            .any(|e| matches!(e, TokenEvent::Finished { ticket, .. } if *ticket == a.id)));
+        assert_eq!(s.snapshot().offline_completed, 1);
+        assert_eq!(s.snapshot().cancelled, 2);
+    }
+}

@@ -1,0 +1,151 @@
+//! [`Serve`] over a bare [`Engine`]: the inline, virtual-clock deployment
+//! every sim driver (CLI `simulate`, figures, deployer sim, benches) runs
+//! through. One `pump` = one engine iteration; events are derived from the
+//! requests' recorded token times, so `run_until`/`drain` (which advance
+//! many iterations at once) still deliver every token with its true
+//! virtual-time stamp.
+
+use std::collections::BTreeMap;
+
+use crate::core::{Request, RequestId, TaskClass};
+use crate::engine::{Engine, ExecutionBackend};
+
+use super::{
+    collect_store_events, Cursor, EventSink, MetricsView, Serve, SubmitSpec, Ticket, TicketId,
+    TokenEvent,
+};
+
+pub struct EngineServe<B: ExecutionBackend> {
+    pub engine: Engine<B>,
+    cursors: BTreeMap<RequestId, Cursor>,
+    /// Cancellation events queued for the next pump (cancel has no sink).
+    pending: Vec<TokenEvent>,
+}
+
+impl<B: ExecutionBackend> EngineServe<B> {
+    pub fn new(engine: Engine<B>) -> Self {
+        EngineServe {
+            engine,
+            cursors: BTreeMap::new(),
+            pending: Vec::new(),
+        }
+    }
+
+    /// Consume the front door and recover the engine (final reporting).
+    pub fn into_engine(self) -> Engine<B> {
+        self.engine
+    }
+
+    fn flush(&mut self, sink: &mut dyn EventSink) {
+        if !sink.wants_events() {
+            // Batch path (NullSink): advance/prune the cursors without
+            // materializing one event per generated token.
+            self.pending.clear();
+            super::skip_store_events(&self.engine.store, &mut self.cursors);
+            return;
+        }
+        let mut evs = std::mem::take(&mut self.pending);
+        collect_store_events(&self.engine.store, &mut self.cursors, self.engine.clock, &mut evs);
+        for ev in &evs {
+            sink.on_event(ev);
+        }
+    }
+}
+
+impl<B: ExecutionBackend> Serve for EngineServe<B> {
+    fn submit(&mut self, spec: SubmitSpec) -> anyhow::Result<Ticket> {
+        let id = self.engine.store.fresh_id();
+        let class = spec.slo.task_class();
+        let arrival = spec.arrival.unwrap_or(self.engine.clock);
+        let req = Request::new(id, class, arrival, spec.prompt, spec.max_new_tokens);
+        match class {
+            TaskClass::Online => self.engine.submit_online(req),
+            TaskClass::Offline => self.engine.submit_offline(req),
+        }
+        self.cursors.insert(id, Cursor::default());
+        Ok(Ticket {
+            id,
+            class,
+            submitted_at: arrival,
+        })
+    }
+
+    fn cancel(&mut self, ticket: TicketId) -> bool {
+        if !self.engine.cancel(ticket) {
+            return false;
+        }
+        self.cursors.remove(&ticket);
+        self.pending.push(TokenEvent::Cancelled {
+            ticket,
+            at: self.engine.clock,
+        });
+        true
+    }
+
+    fn pump(&mut self, sink: &mut dyn EventSink) -> anyhow::Result<bool> {
+        let progressed = self.engine.step()?;
+        self.flush(sink);
+        Ok(progressed)
+    }
+
+    fn drain(&mut self, sink: &mut dyn EventSink) -> anyhow::Result<()> {
+        let result = self.engine.run();
+        self.flush(sink);
+        result
+    }
+
+    fn run_until(&mut self, deadline: f64, sink: &mut dyn EventSink) -> anyhow::Result<()> {
+        let result = self.engine.run_until(deadline);
+        self.flush(sink);
+        result
+    }
+
+    fn snapshot(&self) -> MetricsView {
+        MetricsView::of_engine(&self.engine, "engine")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::core::PromptSpec;
+    use crate::engine::sim::SimBackend;
+    use crate::estimator::TimeModel;
+
+    fn front() -> EngineServe<SimBackend> {
+        let cfg = SystemConfig::a100_llama8b();
+        let backend = SimBackend::new(TimeModel::new(cfg.time_model), 1, 0.0);
+        EngineServe::new(Engine::new(cfg, backend))
+    }
+
+    #[test]
+    fn streams_tokens_then_finishes() {
+        let mut s = front();
+        let t = s.submit(SubmitSpec::online(PromptSpec::sim(200, None), 4).at(0.0)).unwrap();
+        let mut evs: Vec<TokenEvent> = Vec::new();
+        s.drain(&mut evs).unwrap();
+        let mine: Vec<&TokenEvent> = evs.iter().filter(|e| e.ticket() == t.id).collect();
+        assert!(matches!(mine.first(), Some(TokenEvent::FirstToken { .. })));
+        assert!(matches!(mine.last(), Some(TokenEvent::Finished { .. })));
+        // first + 3 decode tokens + finished
+        assert_eq!(mine.len(), 5);
+        // Event times are the engine's recorded token times, ascending.
+        assert!(mine.windows(2).all(|w| w[0].at() <= w[1].at()));
+        assert_eq!(s.snapshot().online_completed, 1);
+    }
+
+    #[test]
+    fn cancel_before_run_emits_cancelled_only() {
+        let mut s = front();
+        let t = s.submit(SubmitSpec::offline(PromptSpec::sim(500, None), 64)).unwrap();
+        assert!(s.cancel(t.id));
+        assert!(!s.cancel(t.id), "second cancel is a no-op");
+        let mut evs: Vec<TokenEvent> = Vec::new();
+        s.drain(&mut evs).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert!(matches!(evs[0], TokenEvent::Cancelled { .. }));
+        assert_eq!(s.snapshot().cancelled, 1);
+        assert_eq!(s.snapshot().offline_completed, 0);
+    }
+}

@@ -1,0 +1,474 @@
+//! The system-wide serving API (this repo's single front door).
+//!
+//! Echo's value proposition is *one* system co-serving latency-bound online
+//! and throughput-bound offline work — but historically this reproduction
+//! grew three unrelated submission surfaces (direct `Engine::submit_*`, the
+//! mpsc `ServerHandle`, and `ClusterSim::run`'s batch replay). The [`Serve`]
+//! trait unifies them:
+//!
+//!   * [`Serve::submit`] takes a [`SubmitSpec`] — prompt + typed
+//!     [`SloClass`] (online TTFT/TPOT targets vs. offline best-effort) —
+//!     and returns a client-held [`Ticket`];
+//!   * [`Serve::pump`] advances the deployment by one unit of progress
+//!     (engine step, cluster sync quantum, server event drain) and delivers
+//!     [`TokenEvent`]s through an [`EventSink`], so per-token streaming and
+//!     metrics share one path;
+//!   * [`Serve::cancel`] withdraws a ticket: its KV interest, pool entry,
+//!     and interned content keys are released (HyGen/ConServe-style cheap
+//!     harvest of abandoned work);
+//!   * [`Serve::snapshot`] returns a deployment-shape-independent
+//!     [`MetricsView`].
+//!
+//! Three deployments implement it: [`engine::EngineServe`] (an `Engine`
+//! driven inline on its virtual clock), `server::ServerHandle` (the
+//! threaded wall-clock coordinator), and [`cluster::ClusterServe`] (router
+//! dispatch + work-stealing over a replica fleet). [`wire`] exposes any of
+//! them over a line-delimited-JSON protocol (`echo serve`).
+
+pub mod cluster;
+pub mod engine;
+pub mod wire;
+
+pub use cluster::ClusterServe;
+pub use engine::EngineServe;
+
+use std::collections::BTreeMap;
+
+use crate::core::{Request, RequestId, RequestStore, Slo, TaskClass, Token};
+use crate::utils::json::Json;
+
+/// Client-visible handle id. For the bare-engine deployment this equals the
+/// underlying `RequestId`; fleets assign their own (requests move between
+/// replica stores, tickets do not).
+pub type TicketId = u64;
+
+/// Typed service class, replacing the scattered `TaskClass` + implicit
+/// config-SLO coupling at submission sites.
+#[derive(Clone, Copy, Debug)]
+pub enum SloClass {
+    /// Latency-sensitive: optional per-request TTFT/TPOT targets; `None`
+    /// inherits the deployment-wide SLO. Scheduling currently enforces the
+    /// deployment-wide SLO only — the per-ticket targets are carried for
+    /// clients (the wire submit ack echoes them back) and for future
+    /// per-ticket enforcement; no deployment applies them yet (see
+    /// DESIGN.md "Serving API").
+    Online(Option<Slo>),
+    /// Throughput-oriented, best-effort, preemptible.
+    Offline,
+}
+
+impl SloClass {
+    pub fn task_class(self) -> TaskClass {
+        match self {
+            SloClass::Online(_) => TaskClass::Online,
+            SloClass::Offline => TaskClass::Offline,
+        }
+    }
+
+    /// The per-ticket SLO targets, if any.
+    pub fn targets(self) -> Option<Slo> {
+        match self {
+            SloClass::Online(slo) => slo,
+            SloClass::Offline => None,
+        }
+    }
+}
+
+/// Everything a deployment needs to admit one request.
+#[derive(Clone, Debug)]
+pub struct SubmitSpec {
+    pub prompt: crate::core::PromptSpec,
+    pub max_new_tokens: usize,
+    pub slo: SloClass,
+    /// Arrival on the deployment clock; `None` = "now" (the deployment's
+    /// current virtual or wall clock).
+    pub arrival: Option<f64>,
+}
+
+impl SubmitSpec {
+    pub fn online(prompt: crate::core::PromptSpec, max_new_tokens: usize) -> Self {
+        SubmitSpec {
+            prompt,
+            max_new_tokens,
+            slo: SloClass::Online(None),
+            arrival: None,
+        }
+    }
+
+    pub fn offline(prompt: crate::core::PromptSpec, max_new_tokens: usize) -> Self {
+        SubmitSpec {
+            prompt,
+            max_new_tokens,
+            slo: SloClass::Offline,
+            arrival: None,
+        }
+    }
+
+    /// Pin the arrival time (trace replay).
+    pub fn at(mut self, arrival: f64) -> Self {
+        self.arrival = Some(arrival);
+        self
+    }
+
+    /// Attach per-ticket TTFT/TPOT targets (online only; no-op otherwise).
+    pub fn with_targets(mut self, slo: Slo) -> Self {
+        if let SloClass::Online(_) = self.slo {
+            self.slo = SloClass::Online(Some(slo));
+        }
+        self
+    }
+}
+
+/// The client-held handle a submission returns.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ticket {
+    pub id: TicketId,
+    pub class: TaskClass,
+    /// Deployment-clock time the submission was accepted.
+    pub submitted_at: f64,
+}
+
+/// One step of a ticket's observable lifecycle, delivered through
+/// [`EventSink`]s. Timestamps are deployment-clock seconds. `Preempted` is
+/// informational: the ticket stays live and re-admits later (recompute
+/// mode), so a same-engine stream sees `…Token, Preempted, Token…` with no
+/// token loss. A cross-replica migration (cluster work-steal) regenerates
+/// the output from scratch on the thief, so the fleet deployment emits
+/// `Preempted` and *restarts* the stream from token 0 instead.
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// Prefill completed; the first output token landed.
+    FirstToken {
+        ticket: TicketId,
+        at: f64,
+        token: Option<Token>,
+    },
+    /// A decode-step token (index counts from 0 = the first token).
+    Token {
+        ticket: TicketId,
+        at: f64,
+        token: Option<Token>,
+        index: usize,
+    },
+    /// Recompute-mode preemption observed; the ticket will re-admit.
+    Preempted { ticket: TicketId, at: f64 },
+    /// Terminal: all tokens generated.
+    Finished {
+        ticket: TicketId,
+        at: f64,
+        tokens: Vec<Token>,
+        ttft: Option<f64>,
+        mean_tpot: Option<f64>,
+    },
+    /// Terminal: withdrawn before completion.
+    Cancelled { ticket: TicketId, at: f64 },
+}
+
+impl TokenEvent {
+    pub fn ticket(&self) -> TicketId {
+        match *self {
+            TokenEvent::FirstToken { ticket, .. }
+            | TokenEvent::Token { ticket, .. }
+            | TokenEvent::Preempted { ticket, .. }
+            | TokenEvent::Finished { ticket, .. }
+            | TokenEvent::Cancelled { ticket, .. } => ticket,
+        }
+    }
+
+    pub fn at(&self) -> f64 {
+        match *self {
+            TokenEvent::FirstToken { at, .. }
+            | TokenEvent::Token { at, .. }
+            | TokenEvent::Preempted { at, .. }
+            | TokenEvent::Finished { at, .. }
+            | TokenEvent::Cancelled { at, .. } => at,
+        }
+    }
+
+    /// Terminal events end a ticket's stream.
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, TokenEvent::Finished { .. } | TokenEvent::Cancelled { .. })
+    }
+
+    /// Short event-kind tag (wire protocol / logs).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TokenEvent::FirstToken { .. } => "first_token",
+            TokenEvent::Token { .. } => "token",
+            TokenEvent::Preempted { .. } => "preempted",
+            TokenEvent::Finished { .. } => "finished",
+            TokenEvent::Cancelled { .. } => "cancelled",
+        }
+    }
+}
+
+/// Where deployments deliver [`TokenEvent`]s. One path serves both
+/// streaming clients and metrics collectors.
+pub trait EventSink {
+    fn on_event(&mut self, ev: &TokenEvent);
+
+    /// Event-discarding sinks return false so deployments can skip
+    /// materializing per-token events entirely on batch paths (the cursor
+    /// bookkeeping still advances; only the event construction is saved).
+    fn wants_events(&self) -> bool {
+        true
+    }
+}
+
+/// Collect every event (tests, batch drivers).
+impl EventSink for Vec<TokenEvent> {
+    fn on_event(&mut self, ev: &TokenEvent) {
+        self.push(ev.clone());
+    }
+}
+
+/// Discard events (metrics-only callers).
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn on_event(&mut self, _ev: &TokenEvent) {}
+
+    fn wants_events(&self) -> bool {
+        false
+    }
+}
+
+/// Adapt a closure into a sink.
+pub struct FnSink<F: FnMut(&TokenEvent)>(pub F);
+
+impl<F: FnMut(&TokenEvent)> EventSink for FnSink<F> {
+    fn on_event(&mut self, ev: &TokenEvent) {
+        (self.0)(ev)
+    }
+}
+
+/// Deployment-shape-independent load/outcome snapshot.
+#[derive(Clone, Debug)]
+pub struct MetricsView {
+    /// Deployment kind tag ("engine", "server", "cluster").
+    pub deployment: &'static str,
+    /// Deployment clock (virtual seconds; wall seconds for the server).
+    pub clock: f64,
+    /// Online requests accepted but not yet running.
+    pub queued_online: usize,
+    /// Offline requests pooled (per-engine pools + any fleet backlog).
+    pub pooled_offline: usize,
+    /// Requests currently in the running batch.
+    pub running: usize,
+    pub online_completed: usize,
+    pub offline_completed: usize,
+    pub cancelled: usize,
+    pub preemptions: usize,
+    pub busy_time: f64,
+    pub online_throughput: f64,
+    pub offline_throughput: f64,
+    pub hit_ratio: f64,
+    /// Live serving engines behind this front door.
+    pub replicas: usize,
+}
+
+impl Default for MetricsView {
+    fn default() -> Self {
+        MetricsView {
+            deployment: "idle",
+            clock: 0.0,
+            queued_online: 0,
+            pooled_offline: 0,
+            running: 0,
+            online_completed: 0,
+            offline_completed: 0,
+            cancelled: 0,
+            preemptions: 0,
+            busy_time: 0.0,
+            online_throughput: 0.0,
+            offline_throughput: 0.0,
+            hit_ratio: 0.0,
+            replicas: 0,
+        }
+    }
+}
+
+impl MetricsView {
+    /// Snapshot of a single engine — shared by the inline (`EngineServe`)
+    /// and threaded (`server`) deployments, which differ only in the tag.
+    pub fn of_engine<B: crate::engine::ExecutionBackend>(
+        e: &crate::engine::Engine<B>,
+        deployment: &'static str,
+    ) -> MetricsView {
+        let running = e
+            .live_requests()
+            .filter(|r| r.state == crate::core::ReqState::Running)
+            .count();
+        let m = &e.metrics;
+        MetricsView {
+            deployment,
+            clock: e.clock,
+            queued_online: e.backlog_online(),
+            pooled_offline: e.pool.len(),
+            running,
+            online_completed: m.online_completed,
+            offline_completed: m.offline_completed,
+            cancelled: m.cancelled_online + m.cancelled_offline,
+            preemptions: m.preemptions,
+            busy_time: m.busy_time,
+            online_throughput: m.online_throughput(),
+            offline_throughput: m.offline_throughput(),
+            hit_ratio: e.kv.stats.hit_ratio(),
+            replicas: 1,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("deployment", self.deployment)
+            .set("clock", self.clock)
+            .set("queued_online", self.queued_online)
+            .set("pooled_offline", self.pooled_offline)
+            .set("running", self.running)
+            .set("online_completed", self.online_completed)
+            .set("offline_completed", self.offline_completed)
+            .set("cancelled", self.cancelled)
+            .set("preemptions", self.preemptions)
+            .set("busy_time", self.busy_time)
+            .set("online_throughput_tok_s", self.online_throughput)
+            .set("offline_throughput_tok_s", self.offline_throughput)
+            .set("hit_ratio", self.hit_ratio)
+            .set("replicas", self.replicas)
+    }
+}
+
+/// The one serving API. Object-safe: call sites hold `&mut dyn Serve`, so
+/// the same driver script runs against a bare engine, the threaded server,
+/// or a fleet.
+pub trait Serve {
+    /// Accept a request; returns the client-held ticket.
+    fn submit(&mut self, spec: SubmitSpec) -> anyhow::Result<Ticket>;
+
+    /// Withdraw a ticket. Terminal: releases the request's KV interest,
+    /// pool/queue entry, and interned content keys; a `Cancelled` event is
+    /// delivered on the next pump. Returns false if the ticket is unknown
+    /// or already terminal (for the threaded server: false if the server is
+    /// gone — the cancel itself is asynchronous).
+    fn cancel(&mut self, ticket: TicketId) -> bool;
+
+    /// One unit of progress (engine iteration / cluster sync quantum /
+    /// server event drain); delivers pending events. Returns false when no
+    /// work remains to drive.
+    fn pump(&mut self, sink: &mut dyn EventSink) -> anyhow::Result<bool>;
+
+    /// Run until all submitted work completes (or is cancelled).
+    fn drain(&mut self, sink: &mut dyn EventSink) -> anyhow::Result<()>;
+
+    /// Run until the deployment clock reaches `deadline` (virtual seconds;
+    /// wall seconds since start for the threaded server).
+    fn run_until(&mut self, deadline: f64, sink: &mut dyn EventSink) -> anyhow::Result<()>;
+
+    /// Deployment-shape-independent load/outcome snapshot.
+    fn snapshot(&self) -> MetricsView;
+}
+
+// ---- shared event-extraction machinery -----------------------------------
+
+/// Per-ticket progress cursor: how much of a request's observable lifecycle
+/// has been delivered as events. Works on *observed state* (the request's
+/// recorded token times / preemption count), so deployments that advance
+/// many iterations per pump still emit every token with its true timestamp.
+#[derive(Clone, Copy, Debug, Default)]
+pub(crate) struct Cursor {
+    sent_tokens: usize,
+    sent_preemptions: usize,
+    terminal: bool,
+}
+
+impl Cursor {
+    /// Emit everything newly observable on `r` since the last drain.
+    /// `now` stamps events with no recorded time (preemption observations).
+    /// Returns true when a terminal event was emitted.
+    pub(crate) fn drain(
+        &mut self,
+        ticket: TicketId,
+        r: &Request,
+        now: f64,
+        out: &mut Vec<TokenEvent>,
+    ) -> bool {
+        if self.terminal {
+            return true;
+        }
+        while self.sent_preemptions < r.preemptions {
+            self.sent_preemptions += 1;
+            out.push(TokenEvent::Preempted { ticket, at: now });
+        }
+        while self.sent_tokens < r.token_times.len() {
+            let i = self.sent_tokens;
+            let at = r.token_times[i];
+            let token = r.out_tokens.get(i).copied();
+            out.push(if i == 0 {
+                TokenEvent::FirstToken { ticket, at, token }
+            } else {
+                TokenEvent::Token {
+                    ticket,
+                    at,
+                    token,
+                    index: i,
+                }
+            });
+            self.sent_tokens += 1;
+        }
+        if r.is_finished() {
+            self.terminal = true;
+            out.push(TokenEvent::Finished {
+                ticket,
+                at: r.finished_at.unwrap_or(now),
+                tokens: r.out_tokens.clone(),
+                ttft: r.ttft(),
+                mean_tpot: r.mean_tpot(),
+            });
+        }
+        self.terminal
+    }
+
+    /// Advance the cursor past everything currently observable without
+    /// materializing events (event-discarding sinks); returns true when
+    /// the request is terminal.
+    pub(crate) fn fast_forward(&mut self, r: &Request) -> bool {
+        self.sent_preemptions = r.preemptions;
+        self.sent_tokens = r.token_times.len();
+        self.terminal = self.terminal || r.is_finished();
+        self.terminal
+    }
+}
+
+/// Drain events for every tracked ticket of a single-store deployment
+/// (ticket id == request id); terminal cursors are dropped.
+pub(crate) fn collect_store_events(
+    store: &RequestStore,
+    cursors: &mut BTreeMap<RequestId, Cursor>,
+    now: f64,
+    out: &mut Vec<TokenEvent>,
+) {
+    let mut done: Vec<RequestId> = Vec::new();
+    for (&id, cur) in cursors.iter_mut() {
+        let Some(r) = store.try_get(id) else { continue };
+        if cur.drain(id, r, now, out) {
+            done.push(id);
+        }
+    }
+    for id in done {
+        cursors.remove(&id);
+    }
+}
+
+/// `collect_store_events` for event-discarding sinks: advance and prune
+/// cursors without building a single event.
+pub(crate) fn skip_store_events(store: &RequestStore, cursors: &mut BTreeMap<RequestId, Cursor>) {
+    let mut done: Vec<RequestId> = Vec::new();
+    for (&id, cur) in cursors.iter_mut() {
+        let Some(r) = store.try_get(id) else { continue };
+        if cur.fast_forward(r) {
+            done.push(id);
+        }
+    }
+    for id in done {
+        cursors.remove(&id);
+    }
+}

@@ -1,0 +1,466 @@
+//! `echo serve`'s wire protocol: line-delimited JSON over std::net (or
+//! stdin/stdout), speaking the [`Serve`] trait — so the same client script
+//! exercises one engine, the threaded server, or a whole fleet.
+//!
+//! Grammar (one JSON object per line, one or more reply lines per request;
+//! see DESIGN.md "Serving API" for the full table):
+//!
+//!   {"verb":"submit","class":"online","prompt_len":200,"max_new_tokens":8}
+//!       -> {"ok":true,"verb":"submit","ticket":0,"class":"online",...}
+//!   {"verb":"cancel","ticket":0}
+//!       -> {"ok":true,"verb":"cancel","ticket":0,"cancelled":true}
+//!   {"verb":"stream","ticket":0}
+//!       -> {"ok":true,"event":"first_token","ticket":0,"at":...}
+//!          ... one line per event, then
+//!          {"ok":true,"verb":"stream","done":true,"events":5}
+//!   {"verb":"metrics"}
+//!       -> {"ok":true,"verb":"metrics","metrics":{...}}
+//!   {"verb":"shutdown"}
+//!       -> {"ok":true,"verb":"shutdown"}   (and the server exits)
+//!
+//! Submit options: `group` + `shared_len` declare a sim shared-prefix
+//! group, `tokens` carries real token ids instead of `prompt_len`,
+//! `arrival` pins the deployment-clock arrival, and `ttft`/`tpot` attach
+//! per-ticket online targets. `stream` without a ticket drains everything.
+//!
+//! Malformed lines and unknown verbs get `{"ok":false,"error":...}` replies
+//! and never kill the connection.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, ToSocketAddrs};
+
+use crate::core::{PromptSpec, Slo, TaskClass, Token};
+use crate::utils::json::Json;
+
+use super::{Serve, SloClass, SubmitSpec, TicketId, TokenEvent};
+
+// ---- frames --------------------------------------------------------------
+
+/// A parsed client request.
+#[derive(Clone, Debug)]
+pub enum WireRequest {
+    Submit(SubmitSpec),
+    Cancel { ticket: TicketId },
+    Stream { ticket: Option<TicketId> },
+    Metrics,
+    Shutdown,
+}
+
+/// Parse one request line. Errors are protocol-level strings destined for
+/// an `{"ok":false,...}` reply.
+pub fn parse_request(line: &str) -> Result<WireRequest, String> {
+    let j = Json::parse(line).map_err(|e| format!("parse: {e}"))?;
+    let verb = j
+        .get("verb")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| "missing \"verb\"".to_string())?;
+    match verb {
+        "submit" => {
+            let class = j
+                .get("class")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| "submit: missing \"class\"".to_string())?;
+            let prompt = if let Some(arr) = j.get("tokens").and_then(|v| v.as_arr()) {
+                let tokens: Option<Vec<Token>> =
+                    arr.iter().map(|t| t.as_u64().map(|x| x as Token)).collect();
+                PromptSpec::real(tokens.ok_or_else(|| "submit: non-integer token id".to_string())?)
+            } else {
+                let len = j
+                    .get("prompt_len")
+                    .and_then(|v| v.as_usize())
+                    .ok_or_else(|| "submit: missing \"prompt_len\" or \"tokens\"".to_string())?;
+                let shared = match (
+                    j.get("group").and_then(|v| v.as_u64()),
+                    j.get("shared_len").and_then(|v| v.as_usize()),
+                ) {
+                    (Some(g), Some(s)) => Some((g, s)),
+                    (None, None) => None,
+                    _ => return Err("submit: \"group\" and \"shared_len\" go together".to_string()),
+                };
+                PromptSpec::sim(len, shared)
+            };
+            let max_new_tokens = j
+                .get("max_new_tokens")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(16);
+            let slo = match class {
+                "online" => {
+                    let targets = match (
+                        j.get("ttft").and_then(|v| v.as_f64()),
+                        j.get("tpot").and_then(|v| v.as_f64()),
+                    ) {
+                        (Some(ttft), Some(tpot)) => Some(Slo::new(ttft, tpot)),
+                        (None, None) => None,
+                        _ => return Err("submit: \"ttft\" and \"tpot\" go together".to_string()),
+                    };
+                    SloClass::Online(targets)
+                }
+                "offline" => SloClass::Offline,
+                other => return Err(format!("submit: unknown class {other:?}")),
+            };
+            Ok(WireRequest::Submit(SubmitSpec {
+                prompt,
+                max_new_tokens,
+                slo,
+                arrival: j.get("arrival").and_then(|v| v.as_f64()),
+            }))
+        }
+        "cancel" => {
+            let ticket = j
+                .get("ticket")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| "cancel: missing \"ticket\"".to_string())?;
+            Ok(WireRequest::Cancel { ticket })
+        }
+        "stream" => Ok(WireRequest::Stream {
+            ticket: j.get("ticket").and_then(|v| v.as_u64()),
+        }),
+        "metrics" => Ok(WireRequest::Metrics),
+        "shutdown" => Ok(WireRequest::Shutdown),
+        other => Err(format!("unknown verb {other:?}")),
+    }
+}
+
+/// Re-encode a request (round-trip property tests and client helpers).
+pub fn encode_request(req: &WireRequest) -> Json {
+    match req {
+        WireRequest::Submit(spec) => {
+            let mut j = Json::obj()
+                .set("verb", "submit")
+                .set(
+                    "class",
+                    match spec.slo {
+                        SloClass::Online(_) => "online",
+                        SloClass::Offline => "offline",
+                    },
+                )
+                .set("max_new_tokens", spec.max_new_tokens);
+            if let Some(tokens) = &spec.prompt.tokens {
+                j = j.set(
+                    "tokens",
+                    Json::Arr(tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+                );
+            } else {
+                j = j.set("prompt_len", spec.prompt.total_len);
+                if let Some((g, s)) = spec.prompt.shared_prefix {
+                    j = j.set("group", g).set("shared_len", s);
+                }
+            }
+            if let Some(t) = spec.arrival {
+                j = j.set("arrival", t);
+            }
+            if let Some(slo) = spec.slo.targets() {
+                j = j.set("ttft", slo.ttft).set("tpot", slo.tpot);
+            }
+            j
+        }
+        WireRequest::Cancel { ticket } => {
+            Json::obj().set("verb", "cancel").set("ticket", *ticket)
+        }
+        WireRequest::Stream { ticket } => {
+            let j = Json::obj().set("verb", "stream");
+            match ticket {
+                Some(t) => j.set("ticket", *t),
+                None => j,
+            }
+        }
+        WireRequest::Metrics => Json::obj().set("verb", "metrics"),
+        WireRequest::Shutdown => Json::obj().set("verb", "shutdown"),
+    }
+}
+
+/// Encode an event as a reply line.
+pub fn encode_event(ev: &TokenEvent) -> Json {
+    let base = Json::obj()
+        .set("ok", true)
+        .set("event", ev.kind())
+        .set("ticket", ev.ticket())
+        .set("at", ev.at());
+    match ev {
+        TokenEvent::FirstToken { token, .. } => match token {
+            Some(t) => base.set("token", *t as u64),
+            None => base,
+        },
+        TokenEvent::Token { token, index, .. } => {
+            let b = base.set("index", *index);
+            match token {
+                Some(t) => b.set("token", *t as u64),
+                None => b,
+            }
+        }
+        TokenEvent::Preempted { .. } | TokenEvent::Cancelled { .. } => base,
+        TokenEvent::Finished {
+            tokens,
+            ttft,
+            mean_tpot,
+            ..
+        } => {
+            let mut b = base.set("n_tokens", tokens.len());
+            if let Some(t) = ttft {
+                b = b.set("ttft", *t);
+            }
+            if let Some(t) = mean_tpot {
+                b = b.set("mean_tpot", *t);
+            }
+            b
+        }
+    }
+}
+
+/// Decode an event reply line (client side).
+pub fn parse_event(j: &Json) -> Option<(String, TicketId, f64)> {
+    let kind = j.get("event")?.as_str()?.to_string();
+    let ticket = j.get("ticket")?.as_u64()?;
+    let at = j.get("at")?.as_f64()?;
+    Some((kind, ticket, at))
+}
+
+fn err_line(msg: &str) -> String {
+    Json::obj().set("ok", false).set("error", msg).to_string()
+}
+
+// ---- session -------------------------------------------------------------
+
+/// One client conversation over a [`Serve`] deployment. Pure
+/// line-in/lines-out state machine — the TCP/stdio loops below and the
+/// golden tests drive it identically.
+pub struct WireSession<'a> {
+    serve: &'a mut dyn Serve,
+    /// Events observed while streaming some other ticket; replayed when
+    /// their ticket is streamed (dropped when the session ends).
+    buffered: VecDeque<TokenEvent>,
+}
+
+/// Consecutive event-less pumps before the session starts sleeping between
+/// pumps (covers the threaded server's non-blocking pump); engines in
+/// prefill emit nothing for a few pumps and must not pay the sleep.
+const IDLE_PUMPS_BEFORE_SLEEP: usize = 64;
+/// Hard cap on sleepy pumps per stream verb (~30 s at 1 ms) — a stream on a
+/// ticket that never progresses ends with `done:false` instead of hanging
+/// the connection forever.
+const MAX_SLEEPY_PUMPS: usize = 30_000;
+
+impl<'a> WireSession<'a> {
+    pub fn new(serve: &'a mut dyn Serve) -> Self {
+        WireSession {
+            serve,
+            buffered: VecDeque::new(),
+        }
+    }
+
+    /// Handle one request line; returns the reply lines and whether the
+    /// server should shut down.
+    pub fn handle_line(&mut self, line: &str) -> (Vec<String>, bool) {
+        if line.trim().is_empty() {
+            return (Vec::new(), false);
+        }
+        let req = match parse_request(line) {
+            Ok(r) => r,
+            Err(e) => return (vec![err_line(&e)], false),
+        };
+        match req {
+            WireRequest::Submit(spec) => {
+                let targets = spec.slo.targets();
+                match self.serve.submit(spec) {
+                    Ok(t) => {
+                        let mut ack = Json::obj()
+                            .set("ok", true)
+                            .set("verb", "submit")
+                            .set("ticket", t.id)
+                            .set(
+                                "class",
+                                match t.class {
+                                    TaskClass::Online => "online",
+                                    TaskClass::Offline => "offline",
+                                },
+                            )
+                            .set("submitted_at", t.submitted_at);
+                        // Echo accepted per-ticket targets back (they are
+                        // carried, not yet enforced — see SloClass docs).
+                        if let Some(slo) = targets {
+                            ack = ack.set("ttft", slo.ttft).set("tpot", slo.tpot);
+                        }
+                        (vec![ack.to_string()], false)
+                    }
+                    Err(e) => (vec![err_line(&format!("submit: {e:#}"))], false),
+                }
+            }
+            WireRequest::Cancel { ticket } => {
+                let cancelled = self.serve.cancel(ticket);
+                (
+                    vec![Json::obj()
+                        .set("ok", true)
+                        .set("verb", "cancel")
+                        .set("ticket", ticket)
+                        .set("cancelled", cancelled)
+                        .to_string()],
+                    false,
+                )
+            }
+            WireRequest::Stream { ticket } => (self.stream(ticket), false),
+            WireRequest::Metrics => (
+                vec![Json::obj()
+                    .set("ok", true)
+                    .set("verb", "metrics")
+                    .set("metrics", self.serve.snapshot().to_json())
+                    .to_string()],
+                false,
+            ),
+            WireRequest::Shutdown => (
+                vec![Json::obj()
+                    .set("ok", true)
+                    .set("verb", "shutdown")
+                    .to_string()],
+                true,
+            ),
+        }
+    }
+
+    /// Stream events. With a ticket: pump until that ticket's terminal
+    /// event (events for other tickets are buffered for their own stream
+    /// verbs). Without: drain the whole deployment, emitting everything.
+    fn stream(&mut self, ticket: Option<TicketId>) -> Vec<String> {
+        let mut lines = Vec::new();
+        let mut emitted = 0usize;
+        let mut done = false;
+        match ticket {
+            Some(t) => {
+                // Replay buffered events for this ticket first.
+                let mut rest = VecDeque::with_capacity(self.buffered.len());
+                for ev in self.buffered.drain(..) {
+                    if ev.ticket() == t {
+                        done |= ev.is_terminal();
+                        lines.push(encode_event(&ev).to_string());
+                        emitted += 1;
+                    } else {
+                        rest.push_back(ev);
+                    }
+                }
+                self.buffered = rest;
+                let mut idle = 0usize;
+                let mut sleepy = 0usize;
+                while !done {
+                    let mut sink: Vec<TokenEvent> = Vec::new();
+                    let progressed = match self.serve.pump(&mut sink) {
+                        Ok(p) => p,
+                        Err(e) => {
+                            lines.push(err_line(&format!("pump: {e:#}")));
+                            break;
+                        }
+                    };
+                    let got = !sink.is_empty();
+                    for ev in sink {
+                        if ev.ticket() == t {
+                            done |= ev.is_terminal();
+                            lines.push(encode_event(&ev).to_string());
+                            emitted += 1;
+                        } else {
+                            self.buffered.push_back(ev);
+                        }
+                    }
+                    if !progressed && !got {
+                        break; // nothing left anywhere; ticket is stuck/gone
+                    }
+                    if got {
+                        idle = 0;
+                    } else {
+                        idle += 1;
+                        if idle >= IDLE_PUMPS_BEFORE_SLEEP {
+                            sleepy += 1;
+                            if sleepy > MAX_SLEEPY_PUMPS {
+                                break;
+                            }
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                    }
+                }
+            }
+            None => {
+                for ev in self.buffered.drain(..) {
+                    lines.push(encode_event(&ev).to_string());
+                    emitted += 1;
+                }
+                let mut sink: Vec<TokenEvent> = Vec::new();
+                match self.serve.drain(&mut sink) {
+                    Ok(()) => done = true,
+                    Err(e) => lines.push(err_line(&format!("drain: {e:#}"))),
+                }
+                for ev in sink {
+                    lines.push(encode_event(&ev).to_string());
+                    emitted += 1;
+                }
+            }
+        }
+        lines.push(
+            Json::obj()
+                .set("ok", true)
+                .set("verb", "stream")
+                .set("done", done)
+                .set("events", emitted)
+                .to_string(),
+        );
+        lines
+    }
+}
+
+// ---- transports ----------------------------------------------------------
+
+/// Serve the protocol over TCP, one connection at a time (the coordinator
+/// is single-threaded by design; a fleet front door is still one process).
+/// Returns after a `shutdown` verb.
+pub fn serve_tcp<A: ToSocketAddrs>(addr: A, serve: &mut dyn Serve) -> anyhow::Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("echo serve: listening on {}", listener.local_addr()?);
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(e) => {
+                log::warn!("accept failed: {e}");
+                continue;
+            }
+        };
+        let reader = BufReader::new(stream.try_clone()?);
+        let mut writer = BufWriter::new(stream);
+        let mut session = WireSession::new(&mut *serve);
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            let (replies, shutdown) = session.handle_line(&line);
+            let mut io_dead = false;
+            for r in &replies {
+                if writeln!(writer, "{r}").is_err() {
+                    io_dead = true;
+                    break;
+                }
+            }
+            if writer.flush().is_err() || io_dead {
+                break;
+            }
+            if shutdown {
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Serve the protocol on stdin/stdout (scripting and tests without
+/// sockets). Returns at EOF or after a `shutdown` verb.
+pub fn serve_stdio(serve: &mut dyn Serve) -> anyhow::Result<()> {
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    let mut out = stdout.lock();
+    let mut session = WireSession::new(serve);
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let (replies, shutdown) = session.handle_line(&line);
+        for r in replies {
+            writeln!(out, "{r}")?;
+        }
+        out.flush()?;
+        if shutdown {
+            break;
+        }
+    }
+    Ok(())
+}

@@ -3,72 +3,96 @@
 //! a single-instance serving leader needs).
 //!
 //! Architecture:
-//!   * client threads submit [`ServerRequest`]s through a channel (online
-//!     requests carry a completion channel for the response);
+//!   * clients submit [`SubmitSpec`]s through a channel and hold
+//!     [`Ticket`]s; per-token [`TokenEvent`]s stream back — both to the
+//!     handle's shared event queue (the [`Serve::pump`] path) and, for
+//!     subscribed tickets, to a per-ticket channel;
 //!   * the coordinator thread owns the [`Engine`] and alternates between
 //!     draining the submission channel and running engine steps;
+//!   * a dropped per-ticket receiver is detected at the next event send and
+//!     triggers `Engine::cancel`: the abandoned request's KV blocks, future
+//!     interest, and pool/queue entries are released instead of burning
+//!     decode slots to completion into a dead channel;
 //!   * `shutdown()` drains remaining work, then joins and returns the
 //!     engine (metrics intact).
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
-use crate::core::{PromptSpec, Request, RequestId, TaskClass, Token};
+use crate::core::{ReqState, Request, RequestId, TaskClass};
 use crate::engine::{Engine, ExecutionBackend};
+use crate::serve::{
+    collect_store_events, Cursor, EventSink, MetricsView, Serve, SubmitSpec, Ticket, TicketId,
+    TokenEvent,
+};
 
-/// A completed request's client-visible result.
-#[derive(Clone, Debug)]
-pub struct Completion {
-    pub id: RequestId,
-    pub tokens: Vec<Token>,
-    pub ttft: Option<f64>,
-    pub mean_tpot: Option<f64>,
-}
+/// Bound on the shared (pump-consumed) event queue. Callers that only use
+/// per-ticket streaming receivers never pump, so an unbounded queue would
+/// grow with every token served; beyond this bound events are dropped from
+/// the shared tee only (per-ticket subscribers and the outstanding-ticket
+/// accounting are unaffected). An active pump consumer keeps the queue
+/// near-empty.
+const EVENT_QUEUE_BOUND: usize = 65_536;
 
-pub enum ServerRequest {
-    Online {
-        prompt: PromptSpec,
-        max_new_tokens: usize,
-        reply: Sender<Completion>,
+/// Coordinator-side protocol. Construction stays inside this module: every
+/// external caller goes through the [`Serve`] trait (or the streaming
+/// helpers below), never through raw channel frames.
+pub(crate) enum ServerRequest {
+    Submit {
+        id: RequestId,
+        spec: SubmitSpec,
+        stream: Option<Sender<TokenEvent>>,
     },
-    Offline {
-        prompt: PromptSpec,
-        max_new_tokens: usize,
-    },
+    Cancel(RequestId),
     Shutdown,
 }
 
 pub struct ServerHandle<B: ExecutionBackend + Send + 'static> {
-    pub tx: Sender<ServerRequest>,
+    tx: Sender<ServerRequest>,
+    events: Receiver<TokenEvent>,
+    snap: Arc<Mutex<MetricsView>>,
+    next_id: AtomicU64,
+    /// Tickets submitted whose terminal event the coordinator has not yet
+    /// published (incremented at submit, decremented by the coordinator —
+    /// drives `drain` termination independently of who consumes events).
+    outstanding: Arc<AtomicUsize>,
+    t0: Instant,
     join: JoinHandle<Engine<B>>,
 }
 
 impl<B: ExecutionBackend + Send + 'static> ServerHandle<B> {
-    /// Submit an online request; returns the channel the completion will
-    /// arrive on.
-    pub fn submit_online(
-        &self,
-        prompt: PromptSpec,
-        max_new_tokens: usize,
-    ) -> Receiver<Completion> {
-        let (reply, rx) = channel();
-        self.tx
-            .send(ServerRequest::Online {
-                prompt,
-                max_new_tokens,
-                reply,
-            })
-            .expect("server gone");
-        rx
+    /// Submit and stream: returns the ticket plus a dedicated per-ticket
+    /// event channel. Dropping the receiver cancels the request (the
+    /// coordinator notices at its next event for this ticket).
+    pub fn submit_streaming(&self, spec: SubmitSpec) -> (Ticket, Receiver<TokenEvent>) {
+        let (ev_tx, ev_rx) = channel();
+        let ticket = self.submit_inner(spec, Some(ev_tx));
+        (ticket, ev_rx)
     }
 
-    pub fn submit_offline(&self, prompt: PromptSpec, max_new_tokens: usize) {
+    /// Submit without a dedicated stream; events still flow through
+    /// [`Serve::pump`].
+    pub fn submit_detached(&self, spec: SubmitSpec) -> Ticket {
+        self.submit_inner(spec, None)
+    }
+
+    fn submit_inner(&self, spec: SubmitSpec, stream: Option<Sender<TokenEvent>>) -> Ticket {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let class = spec.slo.task_class();
+        let submitted_at = self.t0.elapsed().as_secs_f64();
+        self.outstanding.fetch_add(1, Ordering::Relaxed);
         self.tx
-            .send(ServerRequest::Offline {
-                prompt,
-                max_new_tokens,
-            })
+            .send(ServerRequest::Submit { id, spec, stream })
             .expect("server gone");
+        Ticket {
+            id,
+            class,
+            submitted_at,
+        }
     }
 
     /// Drain outstanding work and return the engine.
@@ -78,53 +102,152 @@ impl<B: ExecutionBackend + Send + 'static> ServerHandle<B> {
     }
 }
 
+impl<B: ExecutionBackend + Send + 'static> Serve for ServerHandle<B> {
+    fn submit(&mut self, spec: SubmitSpec) -> anyhow::Result<Ticket> {
+        Ok(self.submit_detached(spec))
+    }
+
+    /// Asynchronous: the request is withdrawn at the coordinator's next
+    /// loop turn; the `Cancelled` event arrives through `pump`. Returns
+    /// false only if the server is gone.
+    fn cancel(&mut self, ticket: TicketId) -> bool {
+        self.tx.send(ServerRequest::Cancel(ticket)).is_ok()
+    }
+
+    fn pump(&mut self, sink: &mut dyn EventSink) -> anyhow::Result<bool> {
+        let mut any = false;
+        loop {
+            match self.events.try_recv() {
+                Ok(ev) => {
+                    sink.on_event(&ev);
+                    any = true;
+                }
+                Err(TryRecvError::Empty) => break,
+                // Coordinator gone: no further events can ever arrive, so
+                // never report busy (a drain would otherwise spin forever).
+                Err(TryRecvError::Disconnected) => return Ok(any),
+            }
+        }
+        Ok(any || self.outstanding.load(Ordering::Relaxed) > 0)
+    }
+
+    fn drain(&mut self, sink: &mut dyn EventSink) -> anyhow::Result<()> {
+        loop {
+            let busy = self.pump(sink)?;
+            if self.outstanding.load(Ordering::Relaxed) == 0 {
+                // Terminal events are published before the counter drops;
+                // one more pump sweeps anything enqueued since.
+                self.pump(sink)?;
+                return Ok(());
+            }
+            if !busy {
+                return Ok(());
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Wall-clock deadline, measured in seconds since the server started.
+    fn run_until(&mut self, deadline: f64, sink: &mut dyn EventSink) -> anyhow::Result<()> {
+        while self.t0.elapsed().as_secs_f64() < deadline {
+            self.pump(sink)?;
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        self.pump(sink)?;
+        Ok(())
+    }
+
+    fn snapshot(&self) -> MetricsView {
+        self.snap.lock().expect("snapshot poisoned").clone()
+    }
+}
+
+fn view_of<B: ExecutionBackend>(e: &Engine<B>) -> MetricsView {
+    MetricsView::of_engine(e, "server")
+}
+
+/// Coordinator-side event delivery: tee to the ticket's subscriber
+/// (reporting a dead client on non-terminal sends), publish into the
+/// bounded shared queue, and settle the outstanding-ticket count on
+/// terminal events (after the publish, so a drain that observes the count
+/// at zero finds the event already enqueued). Returns the ticket id when
+/// the subscriber turned out to be dead (abandoned request).
+fn publish_event(
+    ev: TokenEvent,
+    streams: &mut HashMap<RequestId, Sender<TokenEvent>>,
+    ev_tx: &SyncSender<TokenEvent>,
+    outstanding: &AtomicUsize,
+) -> Option<RequestId> {
+    let id = ev.ticket();
+    let mut abandoned = None;
+    if let Some(s) = streams.get(&id) {
+        if s.send(ev.clone()).is_err() && !ev.is_terminal() {
+            abandoned = Some(id);
+        }
+    }
+    let terminal = ev.is_terminal();
+    let _ = ev_tx.try_send(ev); // full queue: shared tee drops, see bound doc
+    if terminal {
+        streams.remove(&id);
+        // Saturating: defensive against double-terminal delivery.
+        let _ = outstanding.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+            Some(n.saturating_sub(1))
+        });
+    }
+    abandoned
+}
+
 /// Spawn the coordinator thread around an engine. The engine's virtual
 /// clock is advanced by execution only; arrival timestamps use a wall
 /// clock anchored at server start so TTFT measurements are real.
 pub fn spawn<B: ExecutionBackend + Send + 'static>(mut engine: Engine<B>) -> ServerHandle<B> {
     let (tx, rx) = channel::<ServerRequest>();
+    let (ev_tx, ev_rx) = sync_channel::<TokenEvent>(EVENT_QUEUE_BOUND);
+    let snap = Arc::new(Mutex::new(MetricsView::default()));
+    let snap_w = snap.clone();
+    let outstanding = Arc::new(AtomicUsize::new(0));
+    let outstanding_w = outstanding.clone();
     let join = std::thread::spawn(move || {
-        let t0 = std::time::Instant::now();
-        let mut replies: std::collections::HashMap<RequestId, Sender<Completion>> =
-            Default::default();
+        let t0 = Instant::now();
+        let mut streams: HashMap<RequestId, Sender<TokenEvent>> = HashMap::new();
+        let mut cursors: BTreeMap<RequestId, Cursor> = BTreeMap::new();
         let mut shutting_down = false;
         loop {
-            // 1. drain submissions
+            // 1. drain submissions / cancels
             loop {
                 match rx.try_recv() {
-                    Ok(ServerRequest::Online {
-                        prompt,
-                        max_new_tokens,
-                        reply,
-                    }) => {
-                        let now = t0.elapsed().as_secs_f64();
+                    Ok(ServerRequest::Submit { id, spec, stream }) => {
+                        let class = spec.slo.task_class();
                         // Engine clock lags wall clock when idle; anchor
                         // arrivals to whichever is ahead so deadlines are
-                        // consistent.
-                        let arrival = now.max(engine.clock);
-                        let id = engine.store.fresh_id();
-                        replies.insert(id, reply);
-                        engine.submit_online(Request::new(
-                            id,
-                            TaskClass::Online,
-                            arrival,
-                            prompt,
-                            max_new_tokens,
-                        ));
+                        // consistent. Offline work is best-effort: its
+                        // arrival is bookkeeping only.
+                        let now = t0.elapsed().as_secs_f64();
+                        let arrival = spec.arrival.unwrap_or(now).max(engine.clock);
+                        let req =
+                            Request::new(id, class, arrival, spec.prompt, spec.max_new_tokens);
+                        match class {
+                            TaskClass::Online => engine.submit_online(req),
+                            TaskClass::Offline => engine.submit_offline(req),
+                        }
+                        if let Some(s) = stream {
+                            streams.insert(id, s);
+                        }
+                        cursors.insert(id, Cursor::default());
                     }
-                    Ok(ServerRequest::Offline {
-                        prompt,
-                        max_new_tokens,
-                    }) => {
-                        let id = engine.store.fresh_id();
-                        let arrival = engine.clock;
-                        engine.submit_offline(Request::new(
-                            id,
-                            TaskClass::Offline,
-                            arrival,
-                            prompt,
-                            max_new_tokens,
-                        ));
+                    Ok(ServerRequest::Cancel(id)) => {
+                        if engine.cancel(id) {
+                            cursors.remove(&id);
+                            let _ = publish_event(
+                                TokenEvent::Cancelled {
+                                    ticket: id,
+                                    at: engine.clock,
+                                },
+                                &mut streams,
+                                &ev_tx,
+                                &outstanding_w,
+                            );
+                        }
                     }
                     Ok(ServerRequest::Shutdown) => shutting_down = true,
                     Err(TryRecvError::Empty) => break,
@@ -139,26 +262,80 @@ pub fn spawn<B: ExecutionBackend + Send + 'static>(mut engine: Engine<B>) -> Ser
             // live traffic (otherwise deadlines are meaningless).
             engine.clock = engine.clock.max(t0.elapsed().as_secs_f64());
 
-            // 2. one engine step
-            let progressed = engine.step().unwrap_or(false);
-
-            // 3. deliver completions
-            let done: Vec<RequestId> = replies
-                .keys()
-                .copied()
-                .filter(|&id| engine.store.get(id).is_finished())
-                .collect();
-            for id in done {
-                let r = engine.store.get(id);
-                let completion = Completion {
-                    id,
-                    tokens: r.out_tokens.clone(),
-                    ttft: r.ttft(),
-                    mean_tpot: r.mean_tpot(),
-                };
-                if let Some(reply) = replies.remove(&id) {
-                    let _ = reply.send(completion);
+            // 2. one engine step. An execution error is NOT "no work left":
+            // rejecting queued requests on a transient backend hiccup would
+            // destroy schedulable work, so errors skip step 4.
+            let (progressed, step_err) = match engine.step() {
+                Ok(p) => (p, false),
+                Err(e) => {
+                    log::error!("engine step failed: {e:#}");
+                    (false, true)
                 }
+            };
+
+            // 3. event delivery: bounded shared queue + per-ticket tees.
+            // A dead subscriber means the client abandoned the request —
+            // withdraw it.
+            let mut evs: Vec<TokenEvent> = Vec::new();
+            collect_store_events(&engine.store, &mut cursors, engine.clock, &mut evs);
+            let mut abandoned: Vec<RequestId> = Vec::new();
+            for ev in evs {
+                if let Some(id) = publish_event(ev, &mut streams, &ev_tx, &outstanding_w) {
+                    abandoned.push(id);
+                }
+            }
+            for id in abandoned {
+                streams.remove(&id);
+                if engine.cancel(id) {
+                    cursors.remove(&id);
+                    let _ = publish_event(
+                        TokenEvent::Cancelled {
+                            ticket: id,
+                            at: engine.clock,
+                        },
+                        &mut streams,
+                        &ev_tx,
+                        &outstanding_w,
+                    );
+                }
+            }
+
+            // 4. reject unschedulable work. `step` returning Ok(false)
+            // means no future arrivals and nothing runnable, so any
+            // request still queued or pooled can NEVER be scheduled (e.g.
+            // larger than KV memory) — withdraw it so its client sees a
+            // terminal event instead of a stream that hangs forever.
+            if !progressed && !step_err {
+                let stuck: Vec<RequestId> = cursors
+                    .keys()
+                    .copied()
+                    .filter(|&id| {
+                        matches!(
+                            engine.store.get(id).state,
+                            ReqState::Queued | ReqState::Preempted
+                        )
+                    })
+                    .collect();
+                for id in stuck {
+                    if engine.cancel(id) {
+                        log::warn!("rejecting unschedulable request {id}");
+                        cursors.remove(&id);
+                        let _ = publish_event(
+                            TokenEvent::Cancelled {
+                                ticket: id,
+                                at: engine.clock,
+                            },
+                            &mut streams,
+                            &ev_tx,
+                            &outstanding_w,
+                        );
+                    }
+                }
+            }
+
+            // 5. publish a load snapshot for Serve::snapshot
+            if let Ok(mut s) = snap_w.lock() {
+                *s = view_of(&engine);
             }
 
             if !progressed {
@@ -169,38 +346,180 @@ pub fn spawn<B: ExecutionBackend + Send + 'static>(mut engine: Engine<B>) -> Ser
                 std::thread::sleep(std::time::Duration::from_millis(1));
             }
         }
+        if let Ok(mut s) = snap_w.lock() {
+            *s = view_of(&engine);
+        }
         engine
     });
-    ServerHandle { tx, join }
+    ServerHandle {
+        tx,
+        events: ev_rx,
+        snap,
+        next_id: AtomicU64::new(0),
+        outstanding,
+        t0: Instant::now(),
+        join,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::SystemConfig;
+    use crate::core::PromptSpec;
     use crate::engine::sim::SimBackend;
     use crate::estimator::TimeModel;
+    use std::time::Duration;
+
+    fn handle() -> ServerHandle<SimBackend> {
+        let cfg = SystemConfig::a100_llama8b();
+        let backend = SimBackend::new(TimeModel::new(cfg.time_model), 3, 0.0);
+        spawn(Engine::new(cfg, backend))
+    }
+
+    fn finish_of(rx: &Receiver<TokenEvent>) -> TokenEvent {
+        loop {
+            let ev = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            if ev.is_terminal() {
+                return ev;
+            }
+        }
+    }
 
     #[test]
     fn serve_roundtrip_online_and_offline() {
-        let cfg = SystemConfig::a100_llama8b();
-        let backend = SimBackend::new(TimeModel::new(cfg.time_model), 3, 0.0);
-        let engine = Engine::new(cfg, backend);
-        let h = spawn(engine);
+        let h = handle();
+        let (t1, rx1) = h.submit_streaming(SubmitSpec::online(PromptSpec::sim(200, None), 8));
+        let (t2, rx2) = h.submit_streaming(SubmitSpec::online(PromptSpec::sim(400, None), 4));
+        h.submit_detached(SubmitSpec::offline(PromptSpec::sim(1000, None), 16));
 
-        let rx1 = h.submit_online(PromptSpec::sim(200, None), 8);
-        let rx2 = h.submit_online(PromptSpec::sim(400, None), 4);
-        h.submit_offline(PromptSpec::sim(1000, None), 16);
-
-        let c1 = rx1.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
-        let c2 = rx2.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
-        assert_eq!(c1.tokens.len(), 8);
-        assert_eq!(c2.tokens.len(), 4);
-        assert!(c1.ttft.is_some());
+        match finish_of(&rx1) {
+            TokenEvent::Finished {
+                ticket,
+                tokens,
+                ttft,
+                ..
+            } => {
+                assert_eq!(ticket, t1.id);
+                assert_eq!(tokens.len(), 8);
+                assert!(ttft.is_some());
+            }
+            other => panic!("expected Finished, got {other:?}"),
+        }
+        match finish_of(&rx2) {
+            TokenEvent::Finished { ticket, tokens, .. } => {
+                assert_eq!(ticket, t2.id);
+                assert_eq!(tokens.len(), 4);
+            }
+            other => panic!("expected Finished, got {other:?}"),
+        }
 
         let engine = h.shutdown();
         assert_eq!(engine.metrics.online_completed, 2);
         assert_eq!(engine.metrics.offline_completed, 1);
+        engine.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn streaming_delivers_every_token_in_order() {
+        let h = handle();
+        let (t, rx) = h.submit_streaming(SubmitSpec::online(PromptSpec::sim(100, None), 6));
+        let mut seen = Vec::new();
+        loop {
+            let ev = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            let terminal = ev.is_terminal();
+            seen.push(ev);
+            if terminal {
+                break;
+            }
+        }
+        assert!(matches!(seen.first(), Some(TokenEvent::FirstToken { .. })));
+        assert!(matches!(seen.last(), Some(TokenEvent::Finished { .. })));
+        assert_eq!(seen.len(), 7, "first + 5 tokens + finished: {seen:?}");
+        assert!(seen.iter().all(|e| e.ticket() == t.id));
+        let _ = h.shutdown();
+    }
+
+    #[test]
+    fn dropped_receiver_cancels_the_request() {
+        // Regression for the pre-serve bug: an online completion whose
+        // client receiver was dropped used to be sent into a dead channel
+        // while the request kept consuming KV/decode slots to completion.
+        let h = handle();
+        // Effectively unbounded generation: can only end via cancel.
+        let (victim, rx) =
+            h.submit_streaming(SubmitSpec::online(PromptSpec::sim(64, None), 1_000_000));
+        // Wait until it is actually streaming, then abandon it.
+        let first = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert!(matches!(first, TokenEvent::FirstToken { .. }));
+        drop(rx);
+
+        // A second request proves the engine keeps serving others.
+        let (t2, rx2) = h.submit_streaming(SubmitSpec::online(PromptSpec::sim(128, None), 4));
+        match finish_of(&rx2) {
+            TokenEvent::Finished { ticket, tokens, .. } => {
+                assert_eq!(ticket, t2.id);
+                assert_eq!(tokens.len(), 4);
+            }
+            other => panic!("expected Finished, got {other:?}"),
+        }
+
+        // Give the coordinator a few turns to notice the dead channel.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if h.snapshot().cancelled >= 1 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "victim was never cancelled");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let engine = h.shutdown();
+        let r = engine.store.get(victim.id);
+        assert_eq!(r.state, ReqState::Cancelled);
+        assert!(r.generated < 1_000_000, "victim must not run to completion");
+        assert!(!r.has_interned_keys(), "interned keys released on cancel");
+        assert_eq!(engine.kv.held_blocks(victim.id), 0, "KV released");
+        assert_eq!(engine.metrics.cancelled_online, 1);
+        assert_eq!(engine.metrics.online_completed, 1);
+        engine.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unschedulable_request_is_rejected_with_cancelled() {
+        // A request larger than the whole KV capacity can never be
+        // scheduled; the coordinator must reject it with a terminal event
+        // instead of leaving its stream (and any drain) hanging forever.
+        let mut cfg = SystemConfig::a100_llama8b();
+        cfg.cache.capacity_tokens = 2_000;
+        let backend = SimBackend::new(TimeModel::new(cfg.time_model), 4, 0.0);
+        let h = spawn(Engine::new(cfg, backend));
+        let (t, rx) = h.submit_streaming(SubmitSpec::online(PromptSpec::sim(5_000, None), 4));
+        match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
+            TokenEvent::Cancelled { ticket, .. } => assert_eq!(ticket, t.id),
+            other => panic!("expected Cancelled, got {other:?}"),
+        }
+        let engine = h.shutdown();
+        assert_eq!(engine.metrics.cancelled_online, 1);
+        assert_eq!(engine.metrics.online_completed, 0);
+        engine.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn serve_trait_pump_and_drain() {
+        let mut h = handle();
+        let t = Serve::submit(&mut h, SubmitSpec::online(PromptSpec::sim(150, None), 3)).unwrap();
+        h.submit_detached(SubmitSpec::offline(PromptSpec::sim(600, None), 8));
+        let mut evs: Vec<TokenEvent> = Vec::new();
+        h.drain(&mut evs).unwrap();
+        let finishes = evs
+            .iter()
+            .filter(|e| matches!(e, TokenEvent::Finished { .. }))
+            .count();
+        assert_eq!(finishes, 2, "both tickets finish through pump: {evs:?}");
+        assert!(evs.iter().any(|e| e.ticket() == t.id));
+        let snap = h.snapshot();
+        assert_eq!(snap.online_completed + snap.offline_completed, 2);
+        let engine = h.shutdown();
         engine.kv.check_invariants().unwrap();
     }
 }

@@ -11,9 +11,10 @@
 use anyhow::Result;
 
 use crate::config::SystemConfig;
-use crate::core::{PromptSpec, Request, TaskClass};
+use crate::core::{PromptSpec, RequestStore, TaskClass};
 use crate::engine::{sim::SimBackend, Engine};
 use crate::estimator::TimeModel;
+use crate::serve::{EngineServe, NullSink, Serve, SubmitSpec};
 use crate::trace::Trace;
 use crate::utils::rng::Rng;
 use crate::workload::{synthesize, DatasetSpec};
@@ -58,21 +59,15 @@ impl DeployerSim {
     pub fn min_resources_at_peak(&self, peak_arrivals: &[f64]) -> Result<(usize, Vec<(usize, f64, f64)>)> {
         let mut probes = Vec::new();
         let run = |capacity: usize| -> Result<(f64, f64)> {
-            let mut e = self.build_engine(capacity, 7);
+            let mut front = EngineServe::new(self.build_engine(capacity, 7));
             let mut rng = Rng::new(13);
             // Submit online requests along the window.
             for &t in peak_arrivals {
-                let id = e.store.fresh_id();
-                let prompt = rng_prompt(&self.online_spec, &mut rng);
-                e.submit_online(Request::new(
-                    id,
-                    TaskClass::Online,
-                    t,
-                    prompt.0,
-                    prompt.1,
-                ));
+                let (prompt, out) = rng_prompt(&self.online_spec, &mut rng);
+                front.submit(SubmitSpec::online(prompt, out).at(t))?;
             }
-            e.run()?;
+            front.drain(&mut NullSink)?;
+            let e = front.into_engine();
             Ok(e.metrics.slo_attainment(&e.cfg.slo))
         };
         // Doubling search.
@@ -113,20 +108,27 @@ impl DeployerSim {
         n_offline: usize,
         horizon: f64,
     ) -> Result<(f64, (f64, f64))> {
-        let mut e = self.build_engine(capacity, 11);
+        let mut front = EngineServe::new(self.build_engine(capacity, 11));
         let mut rng = Rng::new(17);
         for &t in arrivals {
-            let id = e.store.fresh_id();
             let (prompt, out) = rng_prompt(&self.online_spec, &mut rng);
-            e.submit_online(Request::new(id, TaskClass::Online, t, prompt, out));
+            front.submit(SubmitSpec::online(prompt, out).at(t))?;
         }
-        let mut store = std::mem::take(&mut e.store);
-        let batch = synthesize(offline_spec, n_offline, TaskClass::Offline, 0.0, &mut store, &mut rng);
-        e.store = store;
+        let mut scratch = RequestStore::new();
+        let batch = synthesize(
+            offline_spec,
+            n_offline,
+            TaskClass::Offline,
+            0.0,
+            &mut scratch,
+            &mut rng,
+        );
         for &id in &batch.ids {
-            e.register_offline(id);
+            let r = scratch.get(id);
+            front.submit(SubmitSpec::offline(r.prompt.clone(), r.max_new_tokens))?;
         }
-        e.run_until(horizon)?;
+        front.run_until(horizon, &mut NullSink)?;
+        let e = front.into_engine();
         Ok((
             e.metrics.offline_tokens_out as f64 / e.clock.max(1e-9),
             e.metrics.slo_attainment(&e.cfg.slo),

@@ -4,13 +4,14 @@
 //! (the router adds no scheduling deviation).
 
 use echo::cluster::{
-    affinity_keys, offline_jobs, ClusterConfig, ClusterSim, LoadDigest, OnlineJob,
+    affinity_keys, offline_jobs, ClusterConfig, ClusterSim, JobSpec, LoadDigest, OnlineJob,
     PrefixSummary, Router,
 };
 use echo::config::SystemConfig;
 use echo::core::{PromptSpec, Request, TaskClass};
 use echo::engine::{sim::SimBackend, Engine};
 use echo::estimator::TimeModel;
+use echo::serve::{ClusterServe, EngineServe, Serve, SubmitSpec, TokenEvent};
 use echo::trace::{Trace, TraceConfig};
 use echo::utils::prop::{check, Gen};
 use echo::workload::DatasetSpec;
@@ -249,4 +250,101 @@ fn n1_cluster_matches_bare_engine() {
     assert_eq!(e.metrics.online_ttft, cluster_engine.metrics.online_ttft);
     e.kv.check_invariants().unwrap();
     cluster_engine.kv.check_invariants().unwrap();
+}
+
+/// The same N=1 equivalence, but both sides are driven as `&mut dyn Serve`
+/// trait objects through the one serving API — identical submissions,
+/// identical ticket numbering, and per-ticket token streams whose recorded
+/// virtual timestamps match bit-exactly.
+#[test]
+fn n1_cluster_matches_bare_engine_via_serve() {
+    let horizon = 90.0; // 360 sync quanta of 0.25 s, exactly
+    let cfg = base_cfg();
+    let trace = Trace::generate(&TraceConfig::compressed(horizon, 1.5, 21));
+    let mut rng = echo::utils::rng::Rng::new(33);
+    let online: Vec<OnlineJob> = trace
+        .arrivals
+        .iter()
+        .map(|&at| OnlineJob {
+            at,
+            prompt: PromptSpec::sim(rng.range_usize(50, 500), None),
+            max_new_tokens: rng.range_usize(4, 48),
+        })
+        .collect();
+    let offline = offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 30, 17);
+
+    fn drive(
+        front: &mut dyn Serve,
+        offline: &[JobSpec],
+        online: &[OnlineJob],
+        horizon: f64,
+    ) -> Vec<TokenEvent> {
+        for job in offline {
+            front
+                .submit(SubmitSpec::offline(job.prompt.clone(), job.max_new_tokens))
+                .unwrap();
+        }
+        for job in online {
+            front
+                .submit(SubmitSpec::online(job.prompt.clone(), job.max_new_tokens).at(job.at))
+                .unwrap();
+        }
+        let mut evs: Vec<TokenEvent> = Vec::new();
+        front.run_until(horizon, &mut evs).unwrap();
+        evs
+    }
+
+    // --- single-replica cluster front door -------------------------------
+    let mut cc = ClusterConfig::new(cfg.clone(), 1);
+    cc.steal_low_water = usize::MAX; // flood the backlog at t=0
+    cc.steal_batch = usize::MAX;
+    let jitter = cc.jitter;
+    let mut cluster = ClusterServe::new(cc);
+    let evs_cluster = drive(&mut cluster, &offline, &online, horizon);
+
+    // --- bare engine front door ------------------------------------------
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), cfg.seed, jitter);
+    let mut bare = EngineServe::new(Engine::new(cfg, backend));
+    let evs_bare = drive(&mut bare, &offline, &online, horizon);
+
+    let ce = &cluster.sim.replicas[0].engine;
+    let be = &bare.engine;
+    assert_eq!(cluster.sim.router.stats.dispatched_online, online.len());
+    assert_eq!(be.metrics.iterations, ce.metrics.iterations);
+    assert_eq!(be.metrics.online_completed, ce.metrics.online_completed);
+    assert_eq!(be.metrics.offline_completed, ce.metrics.offline_completed);
+    assert_eq!(be.metrics.online_tokens_out, ce.metrics.online_tokens_out);
+    assert_eq!(be.metrics.offline_tokens_out, ce.metrics.offline_tokens_out);
+    assert_eq!(
+        be.metrics.busy_time.to_bits(),
+        ce.metrics.busy_time.to_bits(),
+        "virtual time must match bit-exactly through the trait objects"
+    );
+    assert_eq!(be.metrics.online_ttft, ce.metrics.online_ttft);
+
+    // Per-ticket token streams match: same ticket numbering (submission
+    // order), same event kinds, same recorded virtual-time stamps.
+    // Preemption observations are excluded — their stamps are observation
+    // times, which legitimately differ between a per-step and a per-quantum
+    // pump cadence.
+    fn stream_of(evs: &[TokenEvent]) -> std::collections::BTreeMap<u64, Vec<(&'static str, u64)>> {
+        let mut map: std::collections::BTreeMap<u64, Vec<(&'static str, u64)>> =
+            Default::default();
+        for ev in evs {
+            if matches!(ev, TokenEvent::Preempted { .. }) {
+                continue;
+            }
+            map.entry(ev.ticket())
+                .or_default()
+                .push((ev.kind(), ev.at().to_bits()));
+        }
+        map
+    }
+    assert_eq!(
+        stream_of(&evs_cluster),
+        stream_of(&evs_bare),
+        "per-ticket event streams must be identical"
+    );
+    ce.kv.check_invariants().unwrap();
+    be.kv.check_invariants().unwrap();
 }

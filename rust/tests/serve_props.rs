@@ -1,0 +1,166 @@
+//! Serving-API cancellation properties: a cancelled ticket's KV future
+//! interest, pool entry, and interned content keys are all released, and
+//! the surviving requests' execution stays bit-exact against an oracle run
+//! that never saw the cancelled request at all.
+
+use echo::config::{SchedulerKind, SystemConfig};
+use echo::core::{PromptSpec, ReqState};
+use echo::engine::{sim::SimBackend, Engine};
+use echo::estimator::TimeModel;
+use echo::serve::{EngineServe, NullSink, Serve, SubmitSpec, TicketId, TokenEvent};
+
+fn front(seed: u64) -> EngineServe<SimBackend> {
+    let mut cfg = SystemConfig::a100_llama8b();
+    cfg.scheduler.kind = SchedulerKind::Echo;
+    cfg.cache.capacity_tokens = 30_000;
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), seed, 0.0);
+    EngineServe::new(Engine::new(cfg, backend))
+}
+
+/// The shared survivor workload: 12 shared-prefix offline jobs + 10 online
+/// arrivals, submitted in a fixed order so both runs assign identical ids.
+fn submit_survivors(f: &mut EngineServe<SimBackend>) {
+    for g in 0..3u64 {
+        for m in 0..4usize {
+            f.submit(SubmitSpec::offline(
+                PromptSpec::sim(400 + m * 16, Some((g + 1, 300))),
+                16,
+            ))
+            .unwrap();
+        }
+    }
+    for i in 0..10usize {
+        let spec = SubmitSpec::online(PromptSpec::sim(200 + 20 * i, None), 8);
+        f.submit(spec.at(0.5 + i as f64 * 0.8)).unwrap();
+    }
+}
+
+#[test]
+fn cancelled_pooled_ticket_releases_everything_and_survivors_stay_bit_exact() {
+    let n_survivors = 22u64; // ids 0..21
+
+    // Run A: survivors + a victim submitted last, cancelled before any step.
+    let mut a = front(1);
+    submit_survivors(&mut a);
+    let victim = a
+        .submit(SubmitSpec::offline(PromptSpec::sim(3000, Some((99, 2000))), 32))
+        .unwrap();
+    let block_size = a.engine.cfg.cache.block_size;
+    let victim_keys = a
+        .engine
+        .store
+        .get(victim.id)
+        .content_key_path(block_size)
+        .to_vec();
+    // Pool entry + future interest exist before the cancel...
+    assert_eq!(a.engine.pool.len(), 13);
+    assert!(a.engine.kv.future_ref_count(victim_keys[0]) > 0);
+    assert!(a.cancel(victim.id));
+    // ...and are gone right after it.
+    assert_eq!(a.engine.pool.len(), 12, "pool entry released");
+    for &k in &victim_keys {
+        assert_eq!(a.engine.kv.future_ref_count(k), 0, "future interest released");
+    }
+    {
+        let r = a.engine.store.get(victim.id);
+        assert_eq!(r.state, ReqState::Cancelled);
+        assert!(!r.has_interned_keys(), "interned content keys released");
+    }
+    let mut evs_a: Vec<TokenEvent> = Vec::new();
+    a.drain(&mut evs_a).unwrap();
+    let a = a.into_engine();
+
+    // Run B: the oracle — identical survivors, no victim ever submitted.
+    let mut b = front(1);
+    submit_survivors(&mut b);
+    b.drain(&mut NullSink).unwrap();
+    let b = b.into_engine();
+
+    // Survivors' execution is bit-exact: the cancelled ticket left no
+    // trace in scheduling, caching, or timing.
+    assert_eq!(
+        a.metrics.busy_time.to_bits(),
+        b.metrics.busy_time.to_bits(),
+        "virtual time must match bit-exactly"
+    );
+    assert_eq!(a.metrics.iterations, b.metrics.iterations);
+    assert_eq!(a.metrics.online_completed, b.metrics.online_completed);
+    assert_eq!(a.metrics.offline_completed, b.metrics.offline_completed);
+    assert_eq!(a.metrics.online_ttft, b.metrics.online_ttft);
+    assert_eq!(a.metrics.prefill_tokens_computed, b.metrics.prefill_tokens_computed);
+    assert_eq!(a.metrics.preemptions, b.metrics.preemptions);
+    assert_eq!(a.kv.stats.evictions, b.kv.stats.evictions);
+    assert_eq!(a.kv.stats.hit_blocks, b.kv.stats.hit_blocks);
+    for id in 0..n_survivors {
+        let (ra, rb) = (a.store.get(id), b.store.get(id));
+        assert_eq!(ra.token_times, rb.token_times, "request {id} timing");
+        assert_eq!(ra.generated, rb.generated, "request {id} output length");
+    }
+    // The cancelled request itself never ran and is fully terminal.
+    assert_eq!(a.store.get(victim.id).generated, 0);
+    assert_eq!(a.kv.held_blocks(victim.id), 0);
+    assert_eq!(a.metrics.cancelled_offline, 1);
+    let cancelled: Vec<TicketId> = evs_a
+        .iter()
+        .filter(|e| matches!(e, TokenEvent::Cancelled { .. }))
+        .map(|e| e.ticket())
+        .collect();
+    assert_eq!(cancelled, vec![victim.id]);
+    a.kv.check_invariants().unwrap();
+    b.kv.check_invariants().unwrap();
+}
+
+#[test]
+fn cancel_running_request_releases_kv_and_serving_continues() {
+    let mut f = front(2);
+    let victim = f
+        .submit(SubmitSpec::online(PromptSpec::sim(300, None), 100_000).at(0.0))
+        .unwrap();
+    let other = f
+        .submit(SubmitSpec::online(PromptSpec::sim(300, None), 8).at(0.0))
+        .unwrap();
+    let mut evs: Vec<TokenEvent> = Vec::new();
+    for _ in 0..50 {
+        f.pump(&mut evs).unwrap();
+        if f.engine.store.get(victim.id).state == ReqState::Running {
+            break;
+        }
+    }
+    assert_eq!(f.engine.store.get(victim.id).state, ReqState::Running);
+    assert!(f.engine.kv.held_blocks(victim.id) > 0);
+
+    assert!(f.cancel(victim.id));
+    assert_eq!(f.engine.kv.held_blocks(victim.id), 0, "KV released mid-run");
+    f.engine.kv.check_invariants().unwrap();
+
+    f.drain(&mut evs).unwrap();
+    assert!(evs.iter().any(
+        |e| matches!(e, TokenEvent::Cancelled { ticket, .. } if *ticket == victim.id)
+    ));
+    assert!(evs.iter().any(
+        |e| matches!(e, TokenEvent::Finished { ticket, .. } if *ticket == other.id)
+    ));
+    let e = f.into_engine();
+    assert_eq!(e.metrics.cancelled_online, 1);
+    assert_eq!(e.metrics.online_completed, 1);
+    assert!(e.store.get(victim.id).generated < 100_000);
+    e.kv.check_invariants().unwrap();
+}
+
+#[test]
+fn cancel_before_arrival_leaves_an_idle_engine() {
+    let mut f = front(3);
+    let t = f
+        .submit(SubmitSpec::online(PromptSpec::sim(100, None), 4).at(5.0))
+        .unwrap();
+    assert_eq!(f.engine.backlog_online(), 1);
+    assert!(f.cancel(t.id));
+    assert_eq!(f.engine.backlog_online(), 0, "future arrival withdrawn");
+    let mut evs: Vec<TokenEvent> = Vec::new();
+    f.drain(&mut evs).unwrap();
+    assert_eq!(evs.len(), 1);
+    assert!(matches!(evs[0], TokenEvent::Cancelled { .. }));
+    let e = f.into_engine();
+    assert_eq!(e.metrics.cancelled_online, 1);
+    assert_eq!(e.metrics.iterations, 0, "nothing ever ran");
+}

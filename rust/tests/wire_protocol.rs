@@ -1,0 +1,209 @@
+//! Wire-protocol golden tests: frame round-trips for every verb,
+//! malformed-line and unknown-verb error replies, and a deterministic
+//! submit → stream → cancel session transcript over a sim-backed engine.
+
+use echo::config::SystemConfig;
+use echo::core::{PromptSpec, Slo};
+use echo::engine::{sim::SimBackend, Engine};
+use echo::estimator::TimeModel;
+use echo::serve::wire::{encode_request, parse_request, WireRequest, WireSession};
+use echo::serve::{EngineServe, SubmitSpec};
+use echo::utils::json::Json;
+
+fn front() -> EngineServe<SimBackend> {
+    let cfg = SystemConfig::a100_llama8b();
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), 7, 0.0);
+    EngineServe::new(Engine::new(cfg, backend))
+}
+
+// ---- frame round-trips ---------------------------------------------------
+
+fn roundtrip(line: &str) {
+    let req = parse_request(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+    let encoded = encode_request(&req).to_string();
+    let req2 = parse_request(&encoded).unwrap_or_else(|e| panic!("re-parse {encoded}: {e}"));
+    assert_eq!(
+        encode_request(&req).to_string(),
+        encode_request(&req2).to_string(),
+        "round-trip must be a fixed point: {line}"
+    );
+}
+
+#[test]
+fn every_verb_round_trips() {
+    roundtrip(r#"{"verb":"submit","class":"online","prompt_len":200,"max_new_tokens":8}"#);
+    roundtrip(
+        r#"{"verb":"submit","class":"online","prompt_len":300,"group":7,"shared_len":160,"max_new_tokens":4,"arrival":1.5,"ttft":0.8,"tpot":0.05}"#,
+    );
+    roundtrip(r#"{"verb":"submit","class":"offline","prompt_len":5000,"max_new_tokens":64}"#);
+    roundtrip(r#"{"verb":"submit","class":"offline","tokens":[1,2,3,4,5],"max_new_tokens":2}"#);
+    roundtrip(r#"{"verb":"cancel","ticket":3}"#);
+    roundtrip(r#"{"verb":"stream"}"#);
+    roundtrip(r#"{"verb":"stream","ticket":0}"#);
+    roundtrip(r#"{"verb":"metrics"}"#);
+    roundtrip(r#"{"verb":"shutdown"}"#);
+}
+
+#[test]
+fn submit_spec_fields_survive_the_wire() {
+    let spec = SubmitSpec::online(PromptSpec::sim(300, Some((7, 160))), 4)
+        .at(1.5)
+        .with_targets(Slo::new(0.8, 0.05));
+    let line = encode_request(&WireRequest::Submit(spec)).to_string();
+    match parse_request(&line).unwrap() {
+        WireRequest::Submit(s) => {
+            assert_eq!(s.prompt.total_len, 300);
+            assert_eq!(s.prompt.shared_prefix, Some((7, 160)));
+            assert_eq!(s.max_new_tokens, 4);
+            assert_eq!(s.arrival, Some(1.5));
+            let t = s.slo.targets().expect("targets survive");
+            assert_eq!(t.ttft, 0.8);
+            assert_eq!(t.tpot, 0.05);
+        }
+        other => panic!("expected Submit, got {other:?}"),
+    }
+}
+
+// ---- error replies -------------------------------------------------------
+
+fn error_of(line: &str) -> String {
+    let mut f = front();
+    let mut session = WireSession::new(&mut f);
+    let (replies, shutdown) = session.handle_line(line);
+    assert!(!shutdown, "errors must not kill the server: {line}");
+    assert_eq!(replies.len(), 1, "one error line per bad request: {line}");
+    let j = Json::parse(&replies[0]).expect("error replies are valid JSON");
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+    j.get("error")
+        .and_then(|v| v.as_str())
+        .expect("error field")
+        .to_string()
+}
+
+#[test]
+fn malformed_and_unknown_get_error_replies() {
+    assert!(error_of("{nope").contains("parse"), "malformed JSON");
+    assert!(error_of(r#"{"verb":"fly"}"#).contains("unknown verb"));
+    assert!(error_of(r#"{"no_verb":1}"#).contains("verb"));
+    assert!(error_of(r#"{"verb":"submit","class":"online"}"#).contains("prompt_len"));
+    assert!(error_of(r#"{"verb":"submit","prompt_len":10}"#).contains("class"));
+    assert!(error_of(r#"{"verb":"submit","class":"batch","prompt_len":10}"#)
+        .contains("unknown class"));
+    assert!(
+        error_of(r#"{"verb":"submit","class":"online","prompt_len":10,"group":1}"#)
+            .contains("shared_len"),
+        "group without shared_len"
+    );
+    assert!(error_of(r#"{"verb":"cancel"}"#).contains("ticket"));
+    assert!(
+        error_of(r#"{"verb":"submit","class":"online","prompt_len":10,"ttft":0.5}"#)
+            .contains("tpot"),
+        "ttft without tpot"
+    );
+}
+
+#[test]
+fn blank_lines_are_ignored() {
+    let mut f = front();
+    let mut session = WireSession::new(&mut f);
+    let (replies, shutdown) = session.handle_line("   ");
+    assert!(replies.is_empty());
+    assert!(!shutdown);
+}
+
+// ---- deterministic session transcript ------------------------------------
+
+/// The golden script: submit an online request and a long offline one,
+/// stream the online ticket to completion, cancel the offline one while it
+/// is still far from done, read metrics, drain, shut down.
+const SCRIPT: &[&str] = &[
+    r#"{"verb":"submit","class":"online","prompt_len":64,"max_new_tokens":4,"arrival":0}"#,
+    r#"{"verb":"submit","class":"offline","prompt_len":8000,"max_new_tokens":64}"#,
+    r#"{"verb":"stream","ticket":0}"#,
+    r#"{"verb":"cancel","ticket":1}"#,
+    r#"{"verb":"metrics"}"#,
+    r#"{"verb":"stream"}"#,
+    r#"{"verb":"shutdown"}"#,
+];
+
+fn run_script() -> Vec<Vec<String>> {
+    let mut f = front();
+    let mut session = WireSession::new(&mut f);
+    let mut transcript = Vec::new();
+    for (i, line) in SCRIPT.iter().enumerate() {
+        let (replies, shutdown) = session.handle_line(line);
+        assert_eq!(
+            shutdown,
+            i == SCRIPT.len() - 1,
+            "only the shutdown verb shuts down"
+        );
+        transcript.push(replies);
+    }
+    transcript
+}
+
+#[test]
+fn session_transcript_is_deterministic() {
+    assert_eq!(run_script(), run_script(), "virtual-time sessions replay bit-identically");
+}
+
+#[test]
+fn session_transcript_shape() {
+    let transcript = run_script();
+
+    // Submits: tickets 0 and 1.
+    let sub0 = Json::parse(&transcript[0][0]).unwrap();
+    assert_eq!(sub0.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(sub0.get("ticket").and_then(|v| v.as_u64()), Some(0));
+    assert_eq!(sub0.get("class").and_then(|v| v.as_str()), Some("online"));
+    let sub1 = Json::parse(&transcript[1][0]).unwrap();
+    assert_eq!(sub1.get("ticket").and_then(|v| v.as_u64()), Some(1));
+    assert_eq!(sub1.get("class").and_then(|v| v.as_str()), Some("offline"));
+
+    // Stream of ticket 0: first_token + 3 tokens + finished, then summary.
+    let stream = &transcript[2];
+    assert_eq!(stream.len(), 6, "5 events + summary: {stream:?}");
+    let kinds: Vec<String> = stream[..5]
+        .iter()
+        .map(|l| {
+            let j = Json::parse(l).unwrap();
+            assert_eq!(j.get("ticket").and_then(|v| v.as_u64()), Some(0));
+            j.get("event").unwrap().as_str().unwrap().to_string()
+        })
+        .collect();
+    assert_eq!(kinds, ["first_token", "token", "token", "token", "finished"]);
+    let fin = Json::parse(&stream[4]).unwrap();
+    assert!(fin.get("ttft").and_then(|v| v.as_f64()).is_some());
+    let summary = Json::parse(&stream[5]).unwrap();
+    assert_eq!(summary.get("verb").and_then(|v| v.as_str()), Some("stream"));
+    assert_eq!(summary.get("done").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(summary.get("events").and_then(|v| v.as_u64()), Some(5));
+
+    // Cancel of the long offline job succeeds (it cannot have finished: an
+    // 8000-token prefill takes ~63 chunked iterations, the online stream
+    // needed ~4).
+    let cancel = Json::parse(&transcript[3][0]).unwrap();
+    assert_eq!(cancel.get("cancelled").and_then(|v| v.as_bool()), Some(true));
+
+    // Metrics snapshot reflects one completion and one cancellation.
+    let metrics = Json::parse(&transcript[4][0]).unwrap();
+    assert_eq!(
+        metrics.at("metrics.online_completed").and_then(|v| v.as_u64()),
+        Some(1)
+    );
+    assert_eq!(
+        metrics.at("metrics.cancelled").and_then(|v| v.as_u64()),
+        Some(1)
+    );
+
+    // Final drain: exactly the buffered Cancelled event for ticket 1.
+    let drain = &transcript[5];
+    assert_eq!(drain.len(), 2, "cancelled event + summary: {drain:?}");
+    let ev = Json::parse(&drain[0]).unwrap();
+    assert_eq!(ev.get("event").and_then(|v| v.as_str()), Some("cancelled"));
+    assert_eq!(ev.get("ticket").and_then(|v| v.as_u64()), Some(1));
+
+    // Shutdown ack.
+    let bye = Json::parse(&transcript[6][0]).unwrap();
+    assert_eq!(bye.get("verb").and_then(|v| v.as_str()), Some("shutdown"));
+}
