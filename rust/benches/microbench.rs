@@ -9,6 +9,11 @@
 //!     clone-trial `OracleScheduler` vs. apply/undo `Scheduler`
 //!   * router digest sync at replica counts 1/4/16 over a 5000-key cache —
 //!     full prefix-summary resync vs. delta (churn-only) protocol
+//!   * fleet stepping at 4/16/64 replicas — serial replica advance vs. the
+//!     scoped worker pool at 2/4/8 threads (macro pairs: fixed iteration
+//!     counts, meaningful even under `--quick`)
+//!   * engine step allocation count — a counting global allocator proves
+//!     the steady-state step loop is allocation-free (release builds)
 //!   * radix index (arena): insert/remove churn and `best_cached`
 //!   * KV manager: allocate/release cycle, prefix lookup, eviction churn
 //!   * content keys: direct chain hash vs. interned accessor
@@ -18,19 +23,26 @@
 //!
 //! Flags (after `--`):
 //!   `--bench-json <path>`        write the machine-readable report
-//!                                (default name: BENCH_PR3.json) and
+//!                                (default name: BENCH_PR4.json) and
 //!                                self-validate it by re-parsing
 //!   `--quick`                    tiny iteration counts (CI smoke: proves
-//!                                the harness runs headless; timings are
-//!                                meaningless)
+//!                                the harness runs headless; micro timings
+//!                                are meaningless, fleet pairs stay real)
+//!   `--gate-fleet`               fail unless the parallel fleet advance at
+//!                                16 replicas / 4 threads is at least as
+//!                                fast as serial (the CI perf gate)
 //!   `--write-experiments <path>` rewrite the `<!-- perf:begin/end -->`
 //!                                block of EXPERIMENTS.md with the
 //!                                before/after table
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
-use echo::cluster::{LoadDigest, PrefixSummary, Router};
+use echo::cluster::{
+    offline_jobs, ClusterConfig, ClusterSim, LoadDigest, OnlineJob, PrefixSummary, Router,
+};
 use echo::config::{SchedulerKind, SystemConfig};
 use echo::core::{PromptSpec, Request, RequestStore, TaskClass};
 use echo::engine::{sim::SimBackend, Engine};
@@ -41,6 +53,40 @@ use echo::serve::{EngineServe, NullSink, Serve, SubmitSpec};
 use echo::utils::json::Json;
 use echo::utils::rng::Rng;
 use echo::workload::{synthesize, DatasetSpec};
+
+// ---- counting allocator ---------------------------------------------------
+
+/// Counting wrapper around the system allocator: every alloc/realloc bumps
+/// a relaxed counter, so the bench can measure allocations per engine step
+/// and prove the steady-state loop is allocation-free (release builds;
+/// debug builds allocate in `debug_assert!` scaffolding by design).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 // ---- harness -------------------------------------------------------------
 
@@ -149,7 +195,7 @@ impl Harness {
         }
     }
 
-    fn to_json(&self, quick: bool) -> Json {
+    fn to_json(&self, quick: bool, alloc: &AllocReport) -> Json {
         let rows: Vec<Json> = self
             .entries
             .iter()
@@ -178,16 +224,38 @@ impl Harness {
                 speedups = speedups.set(&format!("{path}@{size}"), s);
             }
         }
+        for &replicas in &[4usize, 16, 64] {
+            for &threads in &[2usize, 4, 8] {
+                if let Some(s) = fleet_speedup(self, replicas, threads) {
+                    speedups = speedups.set(&format!("fleet-step@{replicas}x{threads}"), s);
+                }
+            }
+        }
         Json::obj()
-            .set("bench", "BENCH_PR3")
+            .set("bench", "BENCH_PR4")
             .set(
                 "note",
                 "baseline = pre-PR code paths (clone-trial scheduler, full \
-                 digest resync) recorded by the same harness run",
+                 digest resync, serial fleet advance) recorded by the same \
+                 harness run",
             )
             .set("quick_mode", quick)
+            .set("engine_step_allocs_steady", alloc.steady)
+            .set("engine_step_allocs_mean", alloc.mean)
             .set("entries", Json::Arr(rows))
             .set("speedups", speedups)
+    }
+}
+
+/// serial (`t1`) / parallel (`t<threads>`) speedup of the fleet advance at
+/// one replica count.
+fn fleet_speedup(h: &Harness, replicas: usize, threads: usize) -> Option<f64> {
+    let base = h.median_of("fleet-step", "t1", replicas)?;
+    let par = h.median_of("fleet-step", &format!("t{threads}"), replicas)?;
+    if par > 0.0 {
+        Some(base / par)
+    } else {
+        None
     }
 }
 
@@ -599,6 +667,115 @@ fn bench_sim_iterations(quick: bool) {
     );
 }
 
+// ---- fleet stepping: serial advance vs scoped worker pool -----------------
+
+fn fleet_online(replicas: usize, horizon: f64, seed: u64) -> Vec<OnlineJob> {
+    let n = replicas * 8;
+    (0..n)
+        .map(|i| OnlineJob {
+            at: (i as f64 + 0.5) * horizon / (n as f64 + 1.0),
+            prompt: PromptSpec::sim(160 + (i % 5) * 40, Some((seed ^ (i % 8) as u64, 96))),
+            max_new_tokens: 16 + (i % 4) * 8,
+        })
+        .collect()
+}
+
+/// One op = build a fleet, flood its backlog, and replay a short online
+/// trace to the horizon. Serial (`t1`) vs worker-pool (`tN`) pairs share
+/// identical inputs; construction cost is included on both sides. Macro
+/// bench: the iteration count is fixed (not `--quick`-scaled), so the CI
+/// fleet gate sees real timings. The per-replica load (12 offline jobs +
+/// 8 decode-heavy online requests) keeps every quantum busy enough that
+/// the advance phase dominates fleet construction and the per-quantum
+/// worker spawns — the gate below compares medians, so it needs real
+/// margin, not a coin flip, on loaded shared runners.
+fn bench_fleet_step(h: &mut Harness, replicas: usize, threads: usize) {
+    let variant = format!("t{threads}");
+    let horizon = 2.0;
+    let online = fleet_online(replicas, horizon, 0xF1EE7);
+    let offline = offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), replicas * 12, 23);
+    h.bench(
+        &format!("fleet step [{variant}] ({replicas} replicas, {horizon}s horizon)"),
+        "fleet-step",
+        &variant,
+        replicas,
+        2, // fixed macro-op count (the harness `.max(2)` floor keeps it 2 in both modes)
+        || {
+            let mut base = SystemConfig::a100_llama8b();
+            base.cache.capacity_tokens = 30_000;
+            base.scheduler.max_batch = 16;
+            let mut cc = ClusterConfig::new(base, replicas);
+            cc.threads = threads;
+            let mut sim = ClusterSim::new(cc);
+            sim.submit_offline_backlog(offline.iter().cloned());
+            let report = sim.run(&online, horizon).unwrap();
+            std::hint::black_box(report.aggregate.iterations);
+        },
+    );
+}
+
+// ---- engine step allocation count (zero-alloc steady state) ---------------
+
+struct AllocReport {
+    /// Allocations on a transition-free (steady-state) step: must be 0 in
+    /// release builds.
+    steady: u64,
+    /// Mean allocations per step over the window (KV block growth at block
+    /// boundaries and periodic predictor samples land here).
+    mean: f64,
+}
+
+fn bench_step_allocs() -> AllocReport {
+    let mut cfg = SystemConfig::a100_llama8b();
+    cfg.scheduler.kind = SchedulerKind::Echo;
+    cfg.cache.capacity_tokens = 50_000;
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), 7, 0.0);
+    let mut e = Engine::new(cfg, backend);
+    e.set_sample_interval(f64::INFINITY);
+    for _ in 0..8 {
+        let id = e.store.fresh_id();
+        e.submit_offline(Request::new(
+            id,
+            TaskClass::Offline,
+            0.0,
+            PromptSpec::sim(200, None),
+            600,
+        ));
+    }
+    // Warm up: admissions + prefill; scratch capacities peak here.
+    for _ in 0..64 {
+        e.step().unwrap();
+    }
+    let growth = e.step_alloc_growth();
+    let n = 256u64;
+    let mut steady = u64::MAX;
+    let mut total = 0u64;
+    for _ in 0..n {
+        let before = ALLOCS.load(Ordering::Relaxed);
+        e.step().unwrap();
+        let d = ALLOCS.load(Ordering::Relaxed) - before;
+        steady = steady.min(d);
+        total += d;
+    }
+    assert_eq!(
+        e.step_alloc_growth(),
+        growth,
+        "steady-state steps must not grow the recycled step buffers"
+    );
+    let mean = total as f64 / n as f64;
+    println!(
+        "{:<62} {steady:>6} allocs/steady step (mean {mean:.2} incl. block growth)",
+        "engine step allocations (8 offline decodes)"
+    );
+    if cfg!(not(debug_assertions)) {
+        assert_eq!(
+            steady, 0,
+            "the engine step loop must be allocation-free in steady state"
+        );
+    }
+    AllocReport { steady, mean }
+}
+
 #[cfg(not(feature = "runtime"))]
 fn bench_pjrt() {
     println!("pjrt step: skipped (built without the `runtime` feature)");
@@ -665,6 +842,20 @@ fn perf_table(h: &Harness) -> String {
             b / i.max(1e-9)
         ));
     }
+    for &replicas in &[4usize, 16, 64] {
+        let (Some(b), Some(i)) = (
+            h.median_of("fleet-step", "t1", replicas),
+            h.median_of("fleet-step", "t4", replicas),
+        ) else {
+            continue;
+        };
+        out.push_str(&format!(
+            "| fleet-step (serial vs 4 threads) | {replicas} | {} | {} | {:.1}x |\n",
+            fmt_ns(b),
+            fmt_ns(i),
+            b / i.max(1e-9)
+        ));
+    }
     for (path, size, label) in [
         ("radix", 1000usize, "radix best_cached"),
         ("radix-churn", 64, "radix insert+remove"),
@@ -715,10 +906,11 @@ fn write_experiments(path: &str, table: &str) {
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let quick = args.iter().any(|a| a == "--quick");
+    let gate_fleet = args.iter().any(|a| a == "--gate-fleet");
     let json_path = args
         .iter()
         .position(|a| a == "--bench-json")
-        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR3.json".into()));
+        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR4.json".into()));
     let experiments_path = args
         .iter()
         .position(|a| a == "--write-experiments")
@@ -736,6 +928,12 @@ fn main() {
             bench_digest_sync(&mut h, replicas, variant);
         }
     }
+    for replicas in [4usize, 16, 64] {
+        for threads in [1usize, 2, 4, 8] {
+            bench_fleet_step(&mut h, replicas, threads);
+        }
+    }
+    let alloc = bench_step_allocs();
     bench_kv_ops(&mut h);
     bench_radix(&mut h);
     bench_estimator(&mut h);
@@ -749,14 +947,33 @@ fn main() {
             println!("speedup {path}@{size}: {s:.1}x (gate: >= 2x)");
         }
     }
+    for replicas in [4usize, 16, 64] {
+        for threads in [2usize, 4, 8] {
+            if let Some(s) = fleet_speedup(&h, replicas, threads) {
+                println!("speedup fleet-step@{replicas}x{threads}: {s:.2}x");
+            }
+        }
+    }
+    if gate_fleet {
+        let s = fleet_speedup(&h, 16, 4).expect("fleet-step@16x4 must be measured");
+        println!("fleet gate: parallel (4 threads) vs serial at 16 replicas = {s:.2}x");
+        // 5% noise band for shared CI runners: a genuinely serialized
+        // parallel path (lock contention, lost parallelism) lands far
+        // below this; healthy runs land well above 1.0x.
+        assert!(
+            s >= 0.95,
+            "parallel fleet stepping must not be slower than serial at \
+             16 replicas / 4 threads (measured {s:.2}x, gate 0.95x)"
+        );
+    }
 
     if let Some(path) = json_path {
-        let j = h.to_json(quick);
+        let j = h.to_json(quick, &alloc);
         let text = j.pretty();
         std::fs::write(&path, &text).expect("write bench json");
         // Self-validate: the emitted report must round-trip through the
         // in-repo JSON parser (the CI smoke step relies on this).
-        let parsed = Json::parse(&text).expect("BENCH_PR3.json must parse");
+        let parsed = Json::parse(&text).expect("BENCH_PR4.json must parse");
         let n = parsed
             .get("entries")
             .and_then(|e| e.as_arr())
@@ -772,6 +989,20 @@ fn main() {
                 "gate speedup {p}@{s} missing from report"
             );
         }
+        assert!(
+            parsed
+                .at("speedups.fleet-step@16x4")
+                .and_then(|v| v.as_f64())
+                .is_some(),
+            "fleet-step@16x4 speedup missing from report"
+        );
+        assert!(
+            parsed
+                .at("engine_step_allocs_steady")
+                .and_then(|v| v.as_f64())
+                .is_some(),
+            "engine-step allocation metric missing from report"
+        );
         println!("wrote {path} ({n} entries, validated)");
     }
     if let Some(path) = experiments_path {

@@ -97,6 +97,11 @@ fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         "1",
         "1 = threaded wall-clock server; >1 = co-simulated fleet (virtual time)",
     )
+    .opt(
+        "threads",
+        "1",
+        "fleet worker threads per sync quantum (>1 replicas only; 1 = serial)",
+    )
     .opt("listen", "127.0.0.1:7878", "TCP bind address")
     .flag("stdio", "speak the protocol on stdin/stdout instead of TCP")
     .opt("seed", "42", "rng seed");
@@ -118,7 +123,9 @@ fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         let engine = handle.shutdown();
         println!("{}", engine.metrics.to_json(&slo).pretty());
     } else {
-        let mut front = ClusterServe::new(ClusterConfig::new(cfg, replicas));
+        let mut cc = ClusterConfig::new(cfg, replicas);
+        cc.threads = args.usize("threads").map_err(anyhow::Error::msg)?.max(1);
+        let mut front = ClusterServe::new(cc);
         if args.flag("stdio") {
             wire::serve_stdio(&mut front)?;
         } else {
@@ -286,6 +293,12 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     .opt("offline-dataset", "loogle_qa_short", "sharegpt | loogle_qa_short | loogle_qa_long | toolbench | nextqa")
     .opt("offline-count", "0", "offline backlog size (0 = auto from horizon x replicas)")
     .opt("sync-dt", "0.25", "router/digest sync quantum, seconds")
+    .opt(
+        "threads",
+        "1",
+        "worker threads for the per-quantum replica advance (1 = serial; \
+         the parallel path is bit-exact with serial)",
+    )
     .flag("autoscale", "scale the fleet with the tide (deployer-estimator driven)")
     .opt("min-replicas", "1", "autoscale floor")
     .opt("max-replicas", "0", "autoscale ceiling (0 = 2x --replicas)")
@@ -301,6 +314,7 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
 
     let mut cc = ClusterConfig::new(base, replicas);
     cc.sync_dt = args.f64("sync-dt").map_err(anyhow::Error::msg)?.max(1e-3);
+    cc.threads = args.usize("threads").map_err(anyhow::Error::msg)?.max(1);
     // Largest fleet the run can reach — backlog auto-sizing must cover it.
     let mut fleet_cap = replicas;
     if args.flag("autoscale") {
@@ -329,10 +343,11 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         seed ^ 0x00ff,
     );
     println!(
-        "cluster: {} replicas{} | {} online arrivals over {horizon:.0}s \
-         (tidal, mean {rate}/s) | {n_off} offline jobs ({})",
+        "cluster: {} replicas{} x {} advance thread(s) | {} online arrivals \
+         over {horizon:.0}s (tidal, mean {rate}/s) | {n_off} offline jobs ({})",
         replicas,
         if cc.scale.is_some() { " (autoscaled)" } else { "" },
+        cc.threads,
         online.len(),
         spec.name
     );

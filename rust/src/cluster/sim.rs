@@ -26,6 +26,16 @@ use crate::workload::DatasetSpec;
 use super::replica::Replica;
 use super::router::{Router, RouterStats};
 
+// Compile-time guarantee behind the scoped-thread fan-out in
+// `ClusterSim::advance_replicas`: a replica's entire state (engine, KV
+// cache, jitter RNG, interned key cells) must be transferable to a worker
+// thread. If a non-`Send` member ever lands in `Replica`, this fails to
+// compile instead of failing at the spawn site.
+const _: () = {
+    const fn assert_send<T: Send>() {}
+    assert_send::<Replica>()
+};
+
 /// A store-independent offline work unit: replicas materialize it into
 /// their own `RequestStore` on admission, so jobs can move between the
 /// cluster backlog and any replica's pool. Prefix-group identity lives in
@@ -114,6 +124,12 @@ pub struct ClusterConfig {
     /// Backend execution-time jitter (0 = deterministic).
     pub jitter: f64,
     pub scale: Option<ScalePolicy>,
+    /// Worker threads for the per-quantum replica advance (1 = serial).
+    /// Replicas are partitioned over a scoped worker pool inside each
+    /// quantum; coordinator work (routing, digests, stealing, scaling)
+    /// stays single-threaded at quantum boundaries, and the parallel
+    /// path is bit-exact with the serial one (see `advance_replicas`).
+    pub threads: usize,
 }
 
 impl ClusterConfig {
@@ -132,6 +148,7 @@ impl ClusterConfig {
             summary_cap,
             jitter: 0.02,
             scale: None,
+            threads: 1,
         }
     }
 }
@@ -552,14 +569,83 @@ impl ClusterSim {
     /// now executes at cluster time rather than burning the lag as phantom
     /// busy-seconds. Observationally identical for a bare engine (nothing
     /// runs while idle), so N=1 equivalence is preserved.
+    ///
+    /// With `cfg.threads > 1` the replicas are partitioned over a scoped
+    /// worker pool (`std::thread::scope`; no extra crates). This is safe
+    /// and **bit-exact** with the serial path because the ownership split
+    /// is total: during the advance each worker exclusively owns its
+    /// replicas' whole state (engine, KV cache, per-replica jitter RNG)
+    /// and touches nothing else — router, backlog, ticket maps, and the
+    /// autoscaler are only read/written by the coordinator at quantum
+    /// boundaries. Per-replica outcomes (plans executed, finished sets,
+    /// metrics deltas, key churn) accumulate inside each replica and are
+    /// merged by the coordinator in replica-id order when `finish_quantum`
+    /// walks `self.replicas` — exactly the order the serial loop produces.
+    /// The serial path is kept verbatim below as the equivalence oracle
+    /// (same pattern as `scheduler::OracleScheduler`);
+    /// `rust/tests/fleet_parallel.rs` pins the two together.
+    ///
+    /// Error contract: an `Err` aborts the run, and the failing quantum's
+    /// partial fleet state is unspecified — serial stops at the first
+    /// failing replica while workers may have advanced later chunks —
+    /// exactly like a serial failure leaves a half-advanced quantum.
+    /// Bit-exactness is guaranteed for every successfully completed
+    /// quantum; the reported error is the same lowest-replica-id failure
+    /// either way (replica advancement is deterministic and independent,
+    /// so the failing set is schedule-independent).
     pub fn advance_replicas(&mut self, t: f64, t_end: f64) -> Result<()> {
         for rep in &mut self.replicas {
             if rep.engine.clock < t {
                 rep.engine.clock = t;
             }
-            rep.engine.run_until(t_end)?;
         }
-        Ok(())
+        let workers = self.cfg.threads.min(self.replicas.len()).max(1);
+        if workers <= 1 {
+            // Serial oracle path: advance in replica order on this thread.
+            for rep in &mut self.replicas {
+                rep.engine.run_until(t_end)?;
+            }
+            return Ok(());
+        }
+        // Contiguous partition keeps the chunk list in replica-id order,
+        // so the error merge below reports the same (lowest-id) failure
+        // the serial loop would have hit first (see the error contract in
+        // the doc comment: post-error partial state is unspecified).
+        let chunk = self.replicas.len().div_ceil(workers);
+        let mut first_err: Option<anyhow::Error> = None;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .replicas
+                .chunks_mut(chunk)
+                .map(|reps| {
+                    s.spawn(move || -> Result<()> {
+                        for rep in reps {
+                            rep.engine.run_until(t_end)?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                    Err(_) => {
+                        if first_err.is_none() {
+                            first_err = Some(anyhow::anyhow!("fleet worker thread panicked"));
+                        }
+                    }
+                }
+            }
+        });
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     /// Post-quantum bookkeeping: republish digests, retire drained fleet
@@ -830,6 +916,26 @@ mod tests {
             )
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn parallel_advance_matches_serial() {
+        let run = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.threads = threads;
+            let mut sim = ClusterSim::new(cfg);
+            sim.submit_offline_backlog(offline_jobs(
+                &DatasetSpec::toolbench().scaled(0.1),
+                30,
+                11,
+            ));
+            let online = tiny_online(40, 0.7);
+            let r = sim.run(&online, 90.0).unwrap();
+            format!("{:?}", r.aggregate)
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(2));
+        assert_eq!(serial, run(4), "threads > replicas clamps safely");
     }
 
     #[test]

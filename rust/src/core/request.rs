@@ -373,6 +373,18 @@ impl Request {
         self.arrival + slo.ttft + self.generated as f64 * slo.tpot
     }
 
+    /// Reserve the output-token buffers for the whole output budget.
+    /// Called at *admission* (not construction, so queued backlogs and the
+    /// store's retained history never pay the footprint): from then on the
+    /// engine's steady-state decode loop never reallocates a per-request
+    /// buffer mid-step (the zero-alloc step invariant). Idempotent across
+    /// preemption and re-admission.
+    pub fn reserve_output(&mut self) {
+        let want = self.max_new_tokens;
+        self.token_times.reserve(want.saturating_sub(self.token_times.len()));
+        self.out_tokens.reserve(want.saturating_sub(self.out_tokens.len()));
+    }
+
     /// Record one emitted token at time `t` (prefill completion or a
     /// decode step); returns true if that completed the request. Does NOT
     /// advance `computed`: the emitted token's KV becomes resident only

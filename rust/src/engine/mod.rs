@@ -12,31 +12,64 @@
 pub mod pjrt;
 pub mod sim;
 
-use std::collections::{BTreeSet, VecDeque};
+use std::collections::{BTreeSet, HashSet, VecDeque};
 
 use crate::config::{SystemConfig, SchedulerKind};
 use crate::core::{ReqState, Request, RequestId, RequestStore, TaskClass, Token};
 use crate::estimator::{MemoryPredictor, TimeModel};
 use crate::kvcache::{EvictionPolicy, KvManager};
 use crate::metrics::{Metrics, SampleCtl};
-use crate::scheduler::{OfflinePool, Plan, Scheduler, WorkKind};
-
-/// Result of executing one plan on a backend.
-#[derive(Clone, Debug)]
-pub struct StepResult {
-    /// Execution time in seconds (virtual for sim, wall for PJRT).
-    pub elapsed: f64,
-    /// Per plan-item emitted token: decodes always emit; prefill chunks
-    /// emit iff they complete the request's prefill this iteration.
-    pub tokens: Vec<Option<Token>>,
-}
+use crate::scheduler::{OfflinePool, Outcome, Plan, Scheduler, WorkKind};
 
 pub trait ExecutionBackend {
-    fn execute(&mut self, plan: &Plan, store: &RequestStore) -> anyhow::Result<StepResult>;
+    /// Execute `plan`, appending exactly one entry per plan item to
+    /// `tokens` (passed cleared; the caller recycles the buffer so the
+    /// step loop stays allocation-free) and returning the execution time
+    /// in seconds (virtual for sim, wall for PJRT). Decodes always emit a
+    /// token; prefill chunks emit iff they complete the request's prefill
+    /// this iteration.
+    fn execute(
+        &mut self,
+        plan: &Plan,
+        store: &RequestStore,
+        tokens: &mut Vec<Option<Token>>,
+    ) -> anyhow::Result<f64>;
     /// A request left the running set (finished or preempted) — free any
     /// backend slot state.
     fn on_release(&mut self, _req: RequestId) {}
     fn name(&self) -> &'static str;
+}
+
+/// Reusable per-iteration buffers owned by the engine. Every vector is
+/// cleared and refilled in place each step, so a steady-state iteration
+/// (carried-over batch, no admissions or completions) performs no heap
+/// allocation — the hot loop touches only recycled capacity.
+#[derive(Default)]
+struct StepScratch {
+    /// Scheduler outcome (plan items + batch shape + admission lists),
+    /// recycled through `Scheduler::schedule_into`.
+    outcome: Outcome,
+    /// Backend token output, one slot per plan item.
+    tokens: Vec<Option<Token>>,
+    /// Requests completed this iteration.
+    finished: Vec<RequestId>,
+    /// Capacity-growth events on the engine-side scratch buffers
+    /// (regression hook; see [`Engine::step_alloc_growth`]).
+    grows: u64,
+}
+
+/// Capacity snapshot of the recycled outcome's vectors — the single
+/// source of truth for the growth regression hook (a buffer missing here
+/// would silently escape [`Engine::step_alloc_growth`]).
+fn outcome_caps(out: &Outcome) -> [usize; 6] {
+    [
+        out.plan.items.capacity(),
+        out.plan.shape.prefills.capacity(),
+        out.plan.shape.decode_lens.capacity(),
+        out.admitted_online.capacity(),
+        out.admitted_offline.capacity(),
+        out.preempted.capacity(),
+    ]
 }
 
 pub struct Engine<B: ExecutionBackend> {
@@ -52,6 +85,13 @@ pub struct Engine<B: ExecutionBackend> {
     pub clock: f64,
     /// Future online arrivals (sorted ascending; replayed into the queue).
     arrivals: VecDeque<(f64, RequestId)>,
+    /// Ids currently sitting in `online_queue` (admission pending). The
+    /// id-indexed membership check lets `cancel` decide in O(1) whether a
+    /// queued online request is in the admission queue or still a future
+    /// arrival, instead of scanning both structures.
+    in_queue: HashSet<RequestId>,
+    /// Reusable step-loop buffers (see [`StepScratch`]).
+    scratch: StepScratch,
     /// Unfinished requests this engine owns (submitted, neither finished
     /// nor withdrawn). The store keeps every request ever for metrics, so
     /// load/digest scans iterate this set instead of the full history.
@@ -92,6 +132,8 @@ impl<B: ExecutionBackend> Engine<B> {
             backend,
             clock: 0.0,
             arrivals: VecDeque::new(),
+            in_queue: HashSet::new(),
+            scratch: StepScratch::default(),
             live: BTreeSet::new(),
             sample: SampleCtl::new(0.0),
             max_iterations: 10_000_000,
@@ -172,17 +214,34 @@ impl<B: ExecutionBackend> Engine<B> {
             return false;
         }
         let block_size = self.cfg.cache.block_size;
-        let (class, state, prompt_len) = {
+        let (class, state, prompt_len, arrival) = {
             let r = self.store.get(id);
-            (r.class, r.state, r.prompt.total_len)
+            (r.class, r.state, r.prompt.total_len, r.arrival)
         };
         match state {
             ReqState::Finished | ReqState::Cancelled => return false,
             ReqState::Queued => match class {
                 TaskClass::Online => {
-                    // Not yet arrived, or sitting in the admission queue.
-                    self.arrivals.retain(|&(_, rid)| rid != id);
-                    self.online_queue.retain(|&rid| rid != id);
+                    // Sitting in the admission queue (id-indexed membership
+                    // check), or not yet arrived (binary search on the
+                    // time-sorted arrivals vec) — never a full scan of both.
+                    if self.in_queue.remove(&id) {
+                        if let Some(pos) = self.online_queue.iter().position(|&rid| rid == id) {
+                            let _ = self.online_queue.remove(pos);
+                        }
+                    } else {
+                        let start = self.arrivals.partition_point(|&(t, _)| t < arrival);
+                        for i in start..self.arrivals.len() {
+                            let (t, rid) = self.arrivals[i];
+                            if t > arrival {
+                                break;
+                            }
+                            if rid == id {
+                                let _ = self.arrivals.remove(i);
+                                break;
+                            }
+                        }
+                    }
                 }
                 TaskClass::Offline => {
                     let keys = self.store.get(id).content_key_path(block_size).to_vec();
@@ -270,22 +329,35 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     /// One engine iteration. Returns false when no work remains (or the
-    /// remaining work can never be scheduled).
+    /// remaining work can never be scheduled). In steady state (carried
+    /// batch, no admissions/completions) the loop allocates nothing: plan,
+    /// token, and finished buffers are recycled through [`StepScratch`].
     pub fn step(&mut self) -> anyhow::Result<bool> {
         // 1. replay due arrivals
         while matches!(self.arrivals.front(), Some(&(t, _)) if t <= self.clock) {
             let (_, id) = self.arrivals.pop_front().unwrap();
             self.online_queue.push_back(id);
+            self.in_queue.insert(id);
         }
 
-        // 2. schedule
-        let outcome = self.sched.schedule(
+        // 2. schedule (into the recycled outcome)
+        let mut outcome = std::mem::take(&mut self.scratch.outcome);
+        let out_caps = outcome_caps(&outcome);
+        self.sched.schedule_into(
             self.clock,
             &mut self.store,
             &mut self.online_queue,
             &mut self.pool,
             &mut self.kv,
+            &mut outcome,
         );
+        // Capacities never shrink, so any change means a buffer grew.
+        if outcome_caps(&outcome) != out_caps {
+            self.scratch.grows += 1;
+        }
+        for &id in &outcome.admitted_online {
+            self.in_queue.remove(&id);
+        }
         self.metrics.preemptions += outcome.preempted.len();
         self.metrics.skipped_offline += outcome.skipped_offline;
         for &victim in &outcome.preempted {
@@ -293,6 +365,7 @@ impl<B: ExecutionBackend> Engine<B> {
         }
 
         if outcome.plan.is_empty() {
+            self.scratch.outcome = outcome;
             // Idle: jump to the next arrival if any (never past the cap).
             if let Some(&(t, _)) = self.arrivals.front() {
                 self.clock = self.clock.max(t.min(self.clock_cap));
@@ -310,17 +383,29 @@ impl<B: ExecutionBackend> Engine<B> {
             return Ok(false);
         }
 
-        // 3. execute
-        let result = self.backend.execute(&outcome.plan, &self.store)?;
-        self.clock += result.elapsed;
-        self.metrics.busy_time += result.elapsed;
+        // 3. execute (into the recycled token buffer)
+        let mut tokens = std::mem::take(&mut self.scratch.tokens);
+        tokens.clear();
+        let tok_cap = tokens.capacity();
+        let elapsed = match self.backend.execute(&outcome.plan, &self.store, &mut tokens) {
+            Ok(elapsed) => elapsed,
+            Err(e) => {
+                self.scratch.outcome = outcome;
+                self.scratch.tokens = tokens;
+                return Err(e);
+            }
+        };
+        self.clock += elapsed;
+        self.metrics.busy_time += elapsed;
         self.metrics.iterations += 1;
 
         // 4. token/completion accounting
-        debug_assert_eq!(result.tokens.len(), outcome.plan.items.len());
-        let mut finished = Vec::new();
+        debug_assert_eq!(tokens.len(), outcome.plan.items.len());
+        let mut finished = std::mem::take(&mut self.scratch.finished);
+        finished.clear();
+        let fin_cap = finished.capacity();
         let slo = self.cfg.slo;
-        for (item, token) in outcome.plan.items.iter().zip(&result.tokens) {
+        for (item, token) in outcome.plan.items.iter().zip(&tokens) {
             let r = self.store.get_mut(item.req);
             let deadline = r.next_token_deadline(&slo);
             let mut emitted = false;
@@ -357,9 +442,16 @@ impl<B: ExecutionBackend> Engine<B> {
                 }
             }
         }
-        for id in finished {
+        for &id in &finished {
             self.finish_request(id);
         }
+        if tokens.capacity() > tok_cap || finished.capacity() > fin_cap {
+            self.scratch.grows += 1;
+        }
+        finished.clear();
+        self.scratch.outcome = outcome;
+        self.scratch.tokens = tokens;
+        self.scratch.finished = finished;
 
         // 5. predictor + threshold (Echo's cache manager input)
         self.predictor.observe(self.clock, self.online_kv_tokens() as f64);
@@ -403,6 +495,16 @@ impl<B: ExecutionBackend> Engine<B> {
     /// the admission queue) — part of the cluster load digest.
     pub fn backlog_online(&self) -> usize {
         self.arrivals.len() + self.online_queue.len()
+    }
+
+    /// Capacity-growth events on the step loop's recycled buffers since
+    /// construction (engine scratch + the scheduler's partition scratch) —
+    /// the allocation regression hook alongside
+    /// `Request::key_compute_count`: steady-state iterations must leave it
+    /// flat (the bench additionally pins allocator-level zero via a
+    /// counting global allocator).
+    pub fn step_alloc_growth(&self) -> u64 {
+        self.scratch.grows + self.sched.scratch_grows()
     }
 
     /// Run until idle or `deadline` (sim clock), whichever first. Idle

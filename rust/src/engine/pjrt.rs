@@ -15,7 +15,7 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use super::{ExecutionBackend, StepResult};
+use super::ExecutionBackend;
 use crate::core::{RequestId, RequestStore, Token};
 use crate::runtime::ModelRuntime;
 use crate::scheduler::{Plan, WorkKind};
@@ -73,7 +73,12 @@ impl PjrtBackend {
 }
 
 impl ExecutionBackend for PjrtBackend {
-    fn execute(&mut self, plan: &Plan, store: &RequestStore) -> Result<StepResult> {
+    fn execute(
+        &mut self,
+        plan: &Plan,
+        store: &RequestStore,
+        result_tokens: &mut Vec<Option<Token>>,
+    ) -> Result<f64> {
         let b = self.rt.manifest.max_batch;
         if plan.items.len() > b {
             bail!("plan has {} items but device has {b} slots", plan.items.len());
@@ -120,24 +125,14 @@ impl ExecutionBackend for PjrtBackend {
         let out = self.rt.step(bucket, &tokens, &cache_lens, &q_lens)?;
         let elapsed = t0.elapsed().as_secs_f64();
 
-        let result_tokens = plan
-            .items
-            .iter()
-            .zip(&slot_of_item)
-            .map(|(item, &slot)| {
-                let emitting = match item.kind {
-                    WorkKind::Decode => true,
-                    WorkKind::Prefill { chunk } => {
-                        store.get(item.req).remaining_prefill() <= chunk
-                    }
-                };
-                emitting.then(|| out.next_tokens[slot] as Token)
-            })
-            .collect();
-        Ok(StepResult {
-            elapsed,
-            tokens: result_tokens,
-        })
+        result_tokens.extend(plan.items.iter().zip(&slot_of_item).map(|(item, &slot)| {
+            let emitting = match item.kind {
+                WorkKind::Decode => true,
+                WorkKind::Prefill { chunk } => store.get(item.req).remaining_prefill() <= chunk,
+            };
+            emitting.then(|| out.next_tokens[slot] as Token)
+        }));
+        Ok(elapsed)
     }
 
     fn on_release(&mut self, req: RequestId) {

@@ -4,8 +4,8 @@
 //! LLaMA-8B coefficients) — the scheduler/KV-manager code above it is
 //! exactly the code the real PJRT backend runs.
 
-use super::{ExecutionBackend, StepResult};
-use crate::core::RequestStore;
+use super::ExecutionBackend;
+use crate::core::{RequestStore, Token};
 use crate::estimator::TimeModel;
 use crate::scheduler::{Plan, WorkKind};
 use crate::utils::rng::Rng;
@@ -31,7 +31,12 @@ impl SimBackend {
 }
 
 impl ExecutionBackend for SimBackend {
-    fn execute(&mut self, plan: &Plan, store: &RequestStore) -> anyhow::Result<StepResult> {
+    fn execute(
+        &mut self,
+        plan: &Plan,
+        store: &RequestStore,
+        tokens: &mut Vec<Option<Token>>,
+    ) -> anyhow::Result<f64> {
         let base = self.time_model.batch_time(&plan.shape);
         let noise = if self.jitter > 0.0 {
             (1.0 + self.jitter * self.rng.normal()).max(0.5)
@@ -39,22 +44,18 @@ impl ExecutionBackend for SimBackend {
             1.0
         };
         let elapsed = (base * noise).max(self.floor);
-        let tokens = plan
-            .items
-            .iter()
-            .map(|item| match item.kind {
-                WorkKind::Decode => Some(0),
-                WorkKind::Prefill { chunk } => {
-                    // Completing chunk emits the first token.
-                    if store.get(item.req).remaining_prefill() <= chunk {
-                        Some(0)
-                    } else {
-                        None
-                    }
+        tokens.extend(plan.items.iter().map(|item| match item.kind {
+            WorkKind::Decode => Some(0),
+            WorkKind::Prefill { chunk } => {
+                // Completing chunk emits the first token.
+                if store.get(item.req).remaining_prefill() <= chunk {
+                    Some(0)
+                } else {
+                    None
                 }
-            })
-            .collect();
-        Ok(StepResult { elapsed, tokens })
+            }
+        }));
+        Ok(elapsed)
     }
 
     fn name(&self) -> &'static str {
@@ -202,6 +203,95 @@ mod tests {
         assert_eq!(e.metrics.online_completed, 10);
         assert_eq!(e.metrics.offline_completed, 4);
         e.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn steady_state_step_reuses_scratch() {
+        let mut e = engine(SchedulerKind::Echo);
+        for _ in 0..6 {
+            let id = e.store.fresh_id();
+            e.submit_offline(Request::new(
+                id,
+                TaskClass::Offline,
+                0.0,
+                PromptSpec::sim(200, None),
+                256,
+            ));
+        }
+        // Warm up: admissions + prefill; scratch capacities peak here.
+        for _ in 0..40 {
+            assert!(e.step().unwrap());
+        }
+        let grows = e.step_alloc_growth();
+        for _ in 0..100 {
+            assert!(e.step().unwrap());
+        }
+        assert_eq!(
+            e.step_alloc_growth(),
+            grows,
+            "steady-state steps must not grow the recycled step buffers"
+        );
+    }
+
+    #[test]
+    fn cancel_future_arrival_uses_sorted_lookup() {
+        let mut e = engine(SchedulerKind::Echo);
+        let ids: Vec<_> = (0..3)
+            .map(|i| {
+                let id = e.store.fresh_id();
+                e.submit_online(Request::new(
+                    id,
+                    TaskClass::Online,
+                    5.0 + i as f64,
+                    PromptSpec::sim(100, None),
+                    4,
+                ));
+                id
+            })
+            .collect();
+        assert!(e.cancel(ids[1]));
+        assert!(!e.cancel(ids[1]), "already terminal");
+        assert_eq!(e.backlog_online(), 2);
+        e.run().unwrap();
+        assert_eq!(e.metrics.online_completed, 2);
+        assert_eq!(e.metrics.cancelled_online, 1);
+    }
+
+    #[test]
+    fn cancel_in_admission_queue_uses_membership_check() {
+        let mut cfg = SystemConfig::a100_llama8b();
+        cfg.scheduler.kind = SchedulerKind::Echo;
+        cfg.scheduler.max_batch = 1;
+        let backend = SimBackend::new(
+            crate::estimator::TimeModel::new(cfg.time_model),
+            1,
+            0.0,
+        );
+        let mut e = Engine::new(cfg, backend);
+        let first = e.store.fresh_id();
+        e.submit_online(Request::new(
+            first,
+            TaskClass::Online,
+            0.0,
+            PromptSpec::sim(100, None),
+            4,
+        ));
+        let second = e.store.fresh_id();
+        e.submit_online(Request::new(
+            second,
+            TaskClass::Online,
+            0.0,
+            PromptSpec::sim(100, None),
+            4,
+        ));
+        // One step: `first` admitted (max_batch 1), `second` stays queued.
+        e.step().unwrap();
+        assert_eq!(e.store.get(second).state, crate::core::ReqState::Queued);
+        assert!(e.cancel(second));
+        assert_eq!(e.backlog_online(), 0);
+        e.run().unwrap();
+        assert_eq!(e.metrics.online_completed, 1);
+        assert_eq!(e.metrics.cancelled_online, 1);
     }
 
     #[test]

@@ -98,6 +98,20 @@ impl TrialShape {
         t
     }
 
+    /// Rebuild an *empty* trial reusing `shape`'s heap allocations. The
+    /// engine's step loop recycles the previous plan's vectors through
+    /// here, so a steady-state iteration never reallocates the shape.
+    pub fn recycled(mut shape: BatchShape) -> Self {
+        shape.prefills.clear();
+        shape.decode_lens.clear();
+        TrialShape {
+            shape,
+            prefill_secs: 0.0,
+            decode_sum: 0,
+            decode_max: 0,
+        }
+    }
+
     /// Append one decode item of context length `len`.
     pub fn push_decode(&mut self, len: usize) -> TrialUndo {
         let prev_max = self.decode_max;
@@ -479,6 +493,21 @@ mod tests {
         let fitted = TimeModel::fit(&[], cfg());
         assert_eq!(fitted.alpha, cfg().alpha);
         assert_eq!(fitted.lambda, cfg().lambda);
+    }
+
+    #[test]
+    fn recycled_trial_reuses_capacity_and_resets_aggregates() {
+        let m = TimeModel::new(cfg());
+        let mut t = TrialShape::default();
+        let _ = t.push_decode(100);
+        let _ = t.push_prefill(&m, PrefillItem { chunk: 64, context: 0 });
+        let shape = t.into_shape();
+        let cap = (shape.prefills.capacity(), shape.decode_lens.capacity());
+        let t2 = TrialShape::recycled(shape);
+        assert!(t2.shape().is_empty());
+        assert_eq!(m.batch_time_inc(&t2), 0.0);
+        let s2 = t2.into_shape();
+        assert_eq!((s2.prefills.capacity(), s2.decode_lens.capacity()), cap);
     }
 
     #[test]

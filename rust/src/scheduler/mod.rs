@@ -54,6 +54,46 @@ pub struct Scheduler {
     /// admission/preemption/completion transitions instead of re-collected
     /// and re-sorted from the store every iteration.
     running: Vec<RequestId>,
+    /// Reusable partition buffers for [`Scheduler::schedule_into`]: cleared
+    /// and refilled in place each iteration, so the steady-state decision
+    /// makes no heap allocation (see `Engine::step_alloc_growth`).
+    scratch: SchedScratch,
+}
+
+/// Per-iteration partition scratch (taken out of `self` during a schedule
+/// call so the borrow checker allows `&mut self` helper calls, then put
+/// back with its capacity).
+#[derive(Default)]
+struct SchedScratch {
+    online_decodes: Vec<RequestId>,
+    online_prefills: Vec<RequestId>,
+    offline_decodes: Vec<RequestId>,
+    offline_prefills: Vec<RequestId>,
+    online_prefill_chunks: Vec<(RequestId, usize)>,
+    /// Capacity-growth events on the scratch buffers (regression hook:
+    /// flat across steady-state iterations).
+    grows: u64,
+}
+
+/// Capacity snapshot of the partition scratch — the single source of
+/// truth for the growth regression hook (a buffer missing here would
+/// silently escape `Engine::step_alloc_growth`). `&Vec` on purpose:
+/// slices have no `capacity()`.
+#[allow(clippy::ptr_arg)]
+fn partition_caps(
+    online_decodes: &Vec<RequestId>,
+    online_prefills: &Vec<RequestId>,
+    offline_decodes: &Vec<RequestId>,
+    offline_prefills: &Vec<RequestId>,
+    online_prefill_chunks: &Vec<(RequestId, usize)>,
+) -> [usize; 5] {
+    [
+        online_decodes.capacity(),
+        online_prefills.capacity(),
+        offline_decodes.capacity(),
+        offline_prefills.capacity(),
+        online_prefill_chunks.capacity(),
+    ]
 }
 
 /// Minimum useful SLO slack; below this the budget is treated as violated
@@ -76,7 +116,15 @@ impl Scheduler {
             block_size,
             running_offline: Vec::new(),
             running: Vec::new(),
+            scratch: SchedScratch::default(),
         }
+    }
+
+    /// Times the partition scratch had to grow a buffer (regression hook,
+    /// like `Request::key_compute_count`): constant across steady-state
+    /// iterations once the batch shape has peaked.
+    pub fn scratch_grows(&self) -> u64 {
+        self.scratch.grows
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {
@@ -165,6 +213,8 @@ impl Scheduler {
 
     /// Build this iteration's plan. Mutates request states, the pool, and
     /// the KV manager (admissions allocate, preemptions release).
+    /// Convenience wrapper over [`Scheduler::schedule_into`] for callers
+    /// that do not recycle an [`Outcome`] (tests, benches, fixtures).
     pub fn schedule(
         &mut self,
         now: f64,
@@ -174,6 +224,49 @@ impl Scheduler {
         kv: &mut KvManager,
     ) -> Outcome {
         let mut out = Outcome::default();
+        self.schedule_into(now, store, online_queue, pool, kv, &mut out);
+        out
+    }
+
+    /// [`Scheduler::schedule`] into a caller-owned [`Outcome`]: every
+    /// vector in `out` (plan items, batch shape, admission/preemption
+    /// lists) is cleared and refilled in place, and the partition lists
+    /// come from the scheduler's own scratch — an engine that passes the
+    /// same `Outcome` every iteration allocates nothing in steady state.
+    pub fn schedule_into(
+        &mut self,
+        now: f64,
+        store: &mut RequestStore,
+        online_queue: &mut VecDeque<RequestId>,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+        out: &mut Outcome,
+    ) {
+        out.admitted_online.clear();
+        out.admitted_offline.clear();
+        out.preempted.clear();
+        out.skipped_offline = 0;
+        out.plan.est_time = 0.0;
+        let mut items = std::mem::take(&mut out.plan.items);
+        items.clear();
+        let mut shape = TrialShape::recycled(std::mem::take(&mut out.plan.shape));
+        let mut online_decodes = std::mem::take(&mut self.scratch.online_decodes);
+        let mut online_prefills = std::mem::take(&mut self.scratch.online_prefills);
+        let mut offline_decodes = std::mem::take(&mut self.scratch.offline_decodes);
+        let mut offline_prefills = std::mem::take(&mut self.scratch.offline_prefills);
+        let mut online_prefill_chunks = std::mem::take(&mut self.scratch.online_prefill_chunks);
+        online_decodes.clear();
+        online_prefills.clear();
+        offline_decodes.clear();
+        offline_prefills.clear();
+        online_prefill_chunks.clear();
+        let caps = partition_caps(
+            &online_decodes,
+            &online_prefills,
+            &offline_decodes,
+            &offline_prefills,
+            &online_prefill_chunks,
+        );
 
         // ---- 1. partition the carried-over running set ------------------
         // `self.running` is maintained sorted across iterations (the "last
@@ -192,10 +285,6 @@ impl Scheduler {
             "scheduler running-set index diverged from the store \
              (use Scheduler::adopt_running after marking a request Running directly)"
         );
-        let mut online_decodes = Vec::new();
-        let mut online_prefills = Vec::new(); // (id, remaining)
-        let mut offline_decodes = Vec::new();
-        let mut offline_prefills = Vec::new();
         for &id in &self.running {
             let r = store.get(id);
             match (r.class, r.in_prefill()) {
@@ -217,7 +306,7 @@ impl Scheduler {
                 if kv.grow(id, TaskClass::Online, missing, now) {
                     break;
                 }
-                if !self.preempt_one_offline(store, pool, kv, &mut out) {
+                if !self.preempt_one_offline(store, pool, kv, out) {
                     break; // genuinely out of memory: decode stalls
                 }
             }
@@ -275,12 +364,13 @@ impl Scheduler {
                         } else {
                             0
                         };
+                        r.reserve_output();
                         self.note_running(head);
                         admitted = true;
                         break;
                     }
                     None => {
-                        if !self.preempt_one_offline(store, pool, kv, &mut out) {
+                        if !self.preempt_one_offline(store, pool, kv, out) {
                             break;
                         }
                     }
@@ -309,8 +399,6 @@ impl Scheduler {
         // the incremental Eq. 6-8 aggregates) instead of cloning the shape
         // per trial. Plans come out bit-identical to the clone-trial oracle
         // (`oracle::OracleScheduler`); the equivalence tests pin this down.
-        let mut shape = TrialShape::default();
-        let mut items = Vec::new();
         let mut token_budget = self.cfg.max_batched_tokens;
 
         for &id in &online_decodes {
@@ -326,7 +414,6 @@ impl Scheduler {
             let r = store.get(id);
             (r.arrival as u64, id)
         });
-        let mut online_prefill_chunks = Vec::new();
         for &id in &online_prefills {
             if token_budget == 0 {
                 break;
@@ -425,7 +512,7 @@ impl Scheduler {
                     &mut token_budget,
                     &mut slots_left,
                     budget,
-                    &mut out,
+                    out,
                 ),
                 SchedulerKind::BsES | SchedulerKind::Echo => self.admit_kv_aware(
                     now,
@@ -437,22 +524,34 @@ impl Scheduler {
                     &mut token_budget,
                     &mut slots_left,
                     budget,
-                    &mut out,
+                    out,
                 ),
             }
         }
 
-        let est_time = if self.cfg.kind.uses_estimator() {
+        out.plan.est_time = if self.cfg.kind.uses_estimator() {
             self.time_model.batch_time_inc(&shape)
         } else {
             0.0
         };
-        out.plan = Plan {
-            items,
-            shape: shape.into_shape(),
-            est_time,
-        };
-        out
+        out.plan.items = items;
+        out.plan.shape = shape.into_shape();
+        // Capacities never shrink, so any change means a buffer grew.
+        let after = partition_caps(
+            &online_decodes,
+            &online_prefills,
+            &offline_decodes,
+            &offline_prefills,
+            &online_prefill_chunks,
+        );
+        if after != caps {
+            self.scratch.grows += 1;
+        }
+        self.scratch.online_decodes = online_decodes;
+        self.scratch.online_prefills = online_prefills;
+        self.scratch.offline_decodes = offline_decodes;
+        self.scratch.offline_prefills = offline_prefills;
+        self.scratch.online_prefill_chunks = online_prefill_chunks;
     }
 
     /// BS / BS+E: admit pool head FCFS while memory (and, for BS+E, the
@@ -518,6 +617,7 @@ impl Scheduler {
             let r = store.get_mut(head);
             r.state = ReqState::Running;
             r.computed = ff;
+            r.reserve_output();
             self.running_offline.push(head);
             self.note_running(head);
             out.admitted_offline.push(head);
@@ -636,6 +736,7 @@ impl Scheduler {
             let r = store.get_mut(id);
             r.state = ReqState::Running;
             r.computed = ff;
+            r.reserve_output();
             self.running_offline.push(id);
             self.note_running(id);
             out.admitted_offline.push(id);

@@ -1,0 +1,139 @@
+//! Parallel fleet stepping is bit-exact with the serial oracle.
+//!
+//! `ClusterSim::advance_replicas` runs each replica's engine on a scoped
+//! worker pool when `ClusterConfig::threads > 1`; the serial loop is kept
+//! as the equivalence oracle (same pattern as `scheduler::OracleScheduler`).
+//! These properties pin the two paths together across seeds x replica
+//! counts x thread counts, with offline work-stealing and delta load
+//! digests active (replicas always publish churn-based summaries), on both
+//! the serving front door (per-ticket event streams) and the batch replay
+//! (full reports, including autoscaling and backend jitter):
+//!
+//!   * identical per-ticket `TokenEvent` streams (order, timestamps, token
+//!     indices — compared on exact Debug formatting, so every f64 bit
+//!     matters);
+//!   * identical fleet metrics rollups;
+//!   * identical final per-replica KV content-key sets.
+
+use echo::cluster::{
+    offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig, ClusterSim,
+    OnlineJob, ScalePolicy,
+};
+use echo::config::SystemConfig;
+use echo::core::PromptSpec;
+use echo::serve::{ClusterServe, Serve, TokenEvent};
+use echo::trace::{Trace, TraceConfig};
+use echo::workload::DatasetSpec;
+
+fn fleet_cfg(seed: u64, replicas: usize, threads: usize) -> ClusterConfig {
+    let mut base = SystemConfig::a100_llama8b();
+    base.seed = seed;
+    base.cache.capacity_tokens = 30_000;
+    base.scheduler.max_batch = 16;
+    let mut cc = ClusterConfig::new(base, replicas);
+    cc.threads = threads;
+    cc
+}
+
+/// One full serve-path run: offline + online tickets (one offline ticket
+/// cancelled mid-backlog), streamed events, fleet metrics, and the final
+/// per-replica KV key sets.
+fn serve_run(
+    seed: u64,
+    replicas: usize,
+    threads: usize,
+) -> (String, String, Vec<(usize, Vec<u128>)>) {
+    let mut front = ClusterServe::new(fleet_cfg(seed, replicas, threads));
+    let tickets = front
+        .submit_offline_jobs(offline_jobs(
+            &DatasetSpec::loogle_qa_short().scaled(0.05),
+            8 + 4 * replicas,
+            seed,
+        ))
+        .unwrap();
+    assert!(front.cancel(tickets[1].id), "backlog cancel");
+    let online: Vec<OnlineJob> = (0..24)
+        .map(|i| OnlineJob {
+            at: 0.3 + i as f64 * 1.1,
+            prompt: PromptSpec::sim(
+                180 + (i % 6) * 40,
+                Some((seed * 100 + (i % 4) as u64, 96)),
+            ),
+            max_new_tokens: 6 + (i % 3) * 4,
+        })
+        .collect();
+    front.submit_online_jobs(&online).unwrap();
+    let mut evs: Vec<TokenEvent> = Vec::new();
+    front.drain(&mut evs).unwrap();
+    let keys = front
+        .sim
+        .replicas
+        .iter()
+        .map(|r| (r.id, r.engine.kv.cached_key_sample(usize::MAX)))
+        .collect();
+    (
+        format!("{evs:?}"),
+        format!("{:?}", front.sim.all_metrics()),
+        keys,
+    )
+}
+
+#[test]
+fn parallel_fleet_bit_exact_with_serial_on_serve_path() {
+    for &seed in &[3u64, 11] {
+        for &replicas in &[2usize, 4] {
+            let serial = serve_run(seed, replicas, 1);
+            for &threads in &[2usize, 8] {
+                let par = serve_run(seed, replicas, threads);
+                assert_eq!(
+                    serial.0, par.0,
+                    "event streams diverged (seed {seed}, {replicas}r x {threads}t)"
+                );
+                assert_eq!(
+                    serial.1, par.1,
+                    "metrics diverged (seed {seed}, {replicas}r x {threads}t)"
+                );
+                assert_eq!(
+                    serial.2, par.2,
+                    "kv key sets diverged (seed {seed}, {replicas}r x {threads}t)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_fleet_bit_exact_under_autoscale_and_stealing() {
+    // Batch replay with the hard modes on: backend jitter (per-replica RNG
+    // streams), tidal autoscaling (spawn/drain/retire mid-run), and
+    // backlog-dry pool rebalancing. The whole report — per-replica metrics
+    // with their time series, router stats, timeline — must match bit for
+    // bit across thread counts.
+    let run = |threads: usize| {
+        let mut cc = fleet_cfg(42, 1, threads);
+        cc.scale = Some(ScalePolicy {
+            eval_period: 5.0,
+            rate_window: 20.0,
+            ..ScalePolicy::tidal(1, 4)
+        });
+        let mut sim = ClusterSim::new(cc);
+        sim.submit_offline_backlog(offline_jobs(
+            &DatasetSpec::toolbench().scaled(0.1),
+            40,
+            17,
+        ));
+        let trace = Trace::generate(&TraceConfig::compressed(150.0, 5.0, 9));
+        let online = online_jobs_from_trace(&trace, &online_session_spec(), 9);
+        let report = sim.run(&online, 150.0).unwrap();
+        assert!(
+            report.peak_replicas > 1,
+            "scale-up must engage so the parallel path sees a growing fleet \
+             (peak {})",
+            report.peak_replicas
+        );
+        format!("{report:?}")
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(2), "2-thread fleet diverged from serial");
+    assert_eq!(serial, run(4), "4-thread fleet diverged from serial");
+}
