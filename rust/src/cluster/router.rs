@@ -16,10 +16,11 @@
 //!   3. if no replica has headroom, the least-predicted-latency replica
 //!      takes the overflow (its scheduler will preempt offline work).
 
-use std::collections::{BTreeMap, HashMap, HashSet};
+use std::collections::BTreeMap;
 
 use crate::core::PromptSpec;
 use crate::estimator::{PrefillItem, TimeModel};
+use crate::utils::hash::{FxHashMap, FxHashSet};
 
 use super::replica::LoadDigest;
 
@@ -51,10 +52,12 @@ pub enum PrefixSummary {
 
 /// Cluster-level radix index over replica prefix summaries. Chain-hashed
 /// keys make the per-replica key set an implicit radix tree (see module
-/// docs); `cached_depth` is the descent.
+/// docs); `cached_depth` is the descent. Leaf sets use the deterministic
+/// fast hasher (`utils::hash`): the descent probes one u128 per level, so
+/// per-key hashing cost is the index's whole lookup cost.
 #[derive(Default)]
 pub struct ClusterRadixIndex {
-    sets: HashMap<usize, HashSet<u128>>,
+    sets: FxHashMap<usize, FxHashSet<u128>>,
 }
 
 impl ClusterRadixIndex {
@@ -150,7 +153,7 @@ pub struct Router {
     /// last sync; retracted when the replica's own summary arrives (under
     /// the delta protocol nothing else would ever clean up a speculation
     /// the replica did not actually cache).
-    optimistic: HashMap<usize, Vec<u128>>,
+    optimistic: FxHashMap<usize, Vec<u128>>,
     time_model: TimeModel,
     block_size: usize,
     pub stats: RouterStats,
@@ -161,7 +164,7 @@ impl Router {
         Router {
             index: ClusterRadixIndex::default(),
             digests: BTreeMap::new(),
-            optimistic: HashMap::new(),
+            optimistic: FxHashMap::default(),
             time_model,
             block_size,
             stats: RouterStats::default(),

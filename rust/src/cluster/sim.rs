@@ -9,7 +9,7 @@
 //! evaluates the scaling policy. A single-replica cluster replays exactly
 //! like a bare engine (the N=1 equivalence test pins this down).
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::VecDeque;
 
 use anyhow::Result;
 
@@ -19,6 +19,7 @@ use crate::estimator::{PrefillItem, TimeModel};
 use crate::metrics::Metrics;
 use crate::serve::TicketId;
 use crate::trace::Trace;
+use crate::utils::hash::FxHashMap;
 use crate::utils::json::Json;
 use crate::utils::rng::Rng;
 use crate::workload::DatasetSpec;
@@ -119,7 +120,13 @@ pub struct ClusterConfig {
     pub steal_low_water: usize,
     /// Jobs moved per steal.
     pub steal_batch: usize,
-    /// Prefix-summary size cap per digest.
+    /// Prefix-summary size cap per digest. Defaults to
+    /// `base.capacity_blocks()` (never truncates: one resident block = one
+    /// key). Setting it lower bounds digest memory but truncates the
+    /// sample to the smallest `cap` keys — deterministic, yet numeric key
+    /// order is unrelated to chain-prefix order, so leading chains can
+    /// break and router affinity depth silently degrade.
+    /// `ClusterSim::new` logs a warning when a config opts in.
     pub summary_cap: usize,
     /// Backend execution-time jitter (0 = deterministic).
     pub jitter: f64,
@@ -258,12 +265,25 @@ pub struct ClusterSim {
     /// currently lives. Maintained by online dispatch, offline
     /// materialization, and work-stealing extraction; empty for
     /// batch-replay drivers (no tickets).
-    ticket_place: HashMap<TicketId, (usize, RequestId)>,
-    place_ticket: HashMap<(usize, RequestId), TicketId>,
+    ticket_place: FxHashMap<TicketId, (usize, RequestId)>,
+    place_ticket: FxHashMap<(usize, RequestId), TicketId>,
 }
 
 impl ClusterSim {
     pub fn new(cfg: ClusterConfig) -> Self {
+        if cfg.summary_cap < cfg.base.capacity_blocks() {
+            // Digest-cap footgun: the sample is the smallest `cap` keys
+            // (deterministic), but numeric key order is unrelated to
+            // chain-prefix order, so truncation can break leading chains
+            // and silently degrade the router's affinity depth. See
+            // `KvManager::cached_key_sample`.
+            log::warn!(
+                "summary_cap {} < capacity_blocks {}: prefix summaries will \
+                 truncate and router affinity depth may degrade",
+                cfg.summary_cap,
+                cfg.base.capacity_blocks()
+            );
+        }
         let service_model = TimeModel::new(cfg.base.time_model);
         let router = Router::new(service_model, cfg.base.cache.block_size);
         let mut sim = ClusterSim {
@@ -276,8 +296,8 @@ impl ClusterSim {
             rate_window: VecDeque::new(),
             service_model,
             next_eval: 0.0,
-            ticket_place: HashMap::new(),
-            place_ticket: HashMap::new(),
+            ticket_place: FxHashMap::default(),
+            place_ticket: FxHashMap::default(),
             cfg,
         };
         for _ in 0..sim.cfg.replicas {

@@ -1,12 +1,11 @@
 //! Request store: owns every request in the system by id.
 
-use std::collections::HashMap;
-
 use super::{ReqState, Request, RequestId};
+use crate::utils::hash::FxHashMap;
 
 #[derive(Default)]
 pub struct RequestStore {
-    map: HashMap<RequestId, Request>,
+    map: FxHashMap<RequestId, Request>,
     next_id: RequestId,
 }
 

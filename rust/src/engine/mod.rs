@@ -12,7 +12,7 @@
 pub mod pjrt;
 pub mod sim;
 
-use std::collections::{BTreeSet, HashSet, VecDeque};
+use std::collections::{BTreeSet, VecDeque};
 
 use crate::config::{SystemConfig, SchedulerKind};
 use crate::core::{ReqState, Request, RequestId, RequestStore, TaskClass, Token};
@@ -20,6 +20,7 @@ use crate::estimator::{MemoryPredictor, TimeModel};
 use crate::kvcache::{EvictionPolicy, KvManager};
 use crate::metrics::{Metrics, SampleCtl};
 use crate::scheduler::{OfflinePool, Outcome, Plan, Scheduler, WorkKind};
+use crate::utils::hash::FxHashSet;
 
 pub trait ExecutionBackend {
     /// Execute `plan`, appending exactly one entry per plan item to
@@ -88,8 +89,9 @@ pub struct Engine<B: ExecutionBackend> {
     /// Ids currently sitting in `online_queue` (admission pending). The
     /// id-indexed membership check lets `cancel` decide in O(1) whether a
     /// queued online request is in the admission queue or still a future
-    /// arrival, instead of scanning both structures.
-    in_queue: HashSet<RequestId>,
+    /// arrival, instead of scanning both structures. Deterministic fast
+    /// hashing (ids are system-generated, never attacker-chosen).
+    in_queue: FxHashSet<RequestId>,
     /// Reusable step-loop buffers (see [`StepScratch`]).
     scratch: StepScratch,
     /// Unfinished requests this engine owns (submitted, neither finished
@@ -132,7 +134,7 @@ impl<B: ExecutionBackend> Engine<B> {
             backend,
             clock: 0.0,
             arrivals: VecDeque::new(),
-            in_queue: HashSet::new(),
+            in_queue: FxHashSet::default(),
             scratch: StepScratch::default(),
             live: BTreeSet::new(),
             sample: SampleCtl::new(0.0),
@@ -505,6 +507,16 @@ impl<B: ExecutionBackend> Engine<B> {
     /// counting global allocator).
     pub fn step_alloc_growth(&self) -> u64 {
         self.scratch.grows + self.sched.scratch_grows()
+    }
+
+    /// `KvManager::availability` invocations since construction — the
+    /// companion regression hook: availability is O(1) now, but the
+    /// scheduler must still take **one snapshot per admission round** (not
+    /// one per candidate trial), so this counter stays flat in candidate
+    /// count. Steady-state decode steps (no admissions, no block-boundary
+    /// growth) make zero calls.
+    pub fn kv_availability_calls(&self) -> u64 {
+        self.kv.availability_calls()
     }
 
     /// Run until idle or `deadline` (sim clock), whichever first. Idle

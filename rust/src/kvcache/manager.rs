@@ -1,9 +1,24 @@
 //! The KV cache manager implementation. See module docs in `mod.rs`.
+//!
+//! Hot-path data structures (PR 5): the eviction order lives in a
+//! **bucketed victim index** — one bucket per discrete priority value
+//! (0, 0.5, future-RC 1, 2, ...), each an intrusive doubly-linked list of
+//! blocks ordered by (last-access, id). Steady-state operations are O(1)
+//! amortized: releases append at the tail (time is monotonic), eviction
+//! pops the head of the lowest non-empty bucket, and RC-driven requeues
+//! splice between buckets. `availability()` reads incrementally maintained
+//! counters instead of scanning the table, and `eviction_preview` sums
+//! per-bucket punished counters. The eviction order is bit-exact with the
+//! pre-PR global `BTreeSet<(prio, lat, id)>` — [`super::OracleKvManager`]
+//! keeps that implementation verbatim and `rust/tests/kv_equivalence.rs`
+//! pins the equivalence.
 
-use std::collections::{BTreeSet, HashMap, HashSet};
+use std::cell::Cell;
+use std::collections::BTreeSet;
 
 use super::BlockId;
 use crate::core::{RequestId, TaskClass};
+use crate::utils::hash::{FxHashMap, FxHashSet};
 
 /// LRU (vLLM default) or the paper's task-aware priority scheme.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -12,7 +27,7 @@ pub enum EvictionPolicy {
     TaskAware,
 }
 
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CacheStats {
     /// Prefix-lookup block counts (Fig. 9's hit-ratio numerator/denominator).
     pub lookup_blocks: u64,
@@ -38,6 +53,33 @@ impl CacheStats {
     }
 }
 
+/// One public KV-manager mutation, recorded when the op log is enabled
+/// (`enable_op_log`). The equivalence tests replay a real engine run's log
+/// into both [`KvManager`] and [`super::OracleKvManager`] and compare every
+/// observable along the way.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KvOp {
+    Allocate {
+        req: RequestId,
+        class: TaskClass,
+        keys: Vec<u128>,
+        total_blocks: usize,
+        now: f64,
+    },
+    Grow {
+        req: RequestId,
+        class: TaskClass,
+        n: usize,
+        now: f64,
+    },
+    Touch { req: RequestId, now: f64 },
+    Release { req: RequestId, finished: bool },
+    RegisterFuture { keys: Vec<u128> },
+    UnregisterFuture { keys: Vec<u128> },
+    SetReserveTokens { tokens: usize },
+    FlushCache,
+}
+
 #[derive(Clone, Debug)]
 struct BlockMeta {
     /// Content key (chain hash); present while the block is reusable.
@@ -50,7 +92,8 @@ struct BlockMeta {
     class: TaskClass,
     /// True once no unfinished request owns the content.
     finished: bool,
-    /// Sort key currently registered in the free table.
+    /// Sort key currently registered in the victim index
+    /// (priority bits, LAT bits); `None` when not evictable.
     table_key: Option<(u64, u64)>,
 }
 
@@ -68,11 +111,11 @@ impl BlockMeta {
 }
 
 /// Allocation headroom snapshot used by the scheduler's feasibility checks.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Availability {
     /// Never-used or fully-released blocks.
     pub free: usize,
-    /// Cached blocks that can be evicted (free-table size).
+    /// Cached blocks that can be evicted (victim-index size).
     pub evictable: usize,
     /// Evictable blocks that are useless (priority 0: finished offline,
     /// RC = 0) — evicting them costs nothing.
@@ -93,6 +136,233 @@ impl Availability {
     }
 }
 
+pub(crate) fn prio_bits(p: f64) -> u64 {
+    debug_assert!(p >= 0.0);
+    p.to_bits()
+}
+
+pub(crate) fn lat_bits(t: f64) -> u64 {
+    debug_assert!(t >= 0.0);
+    t.to_bits()
+}
+
+/// Bucket index of the hyper-shared overflow: RC values past the clamp
+/// collapse into one bucket (ordered internally by the full sort key), so
+/// the dense bucket vector stays bounded instead of growing O(max RC ever
+/// observed) when thousands of pooled requests share one prefix.
+const OVERFLOW_BUCKET: usize = 130;
+
+/// Bucket slot for one discrete priority value. Priorities are 0.0
+/// (bucket 0), 0.5 (bucket 1), and future-RC `n >= 1` (bucket `n + 1`,
+/// clamped to [`OVERFLOW_BUCKET`]) — the mapping is monotone in the
+/// priority, so ascending bucket order is ascending `(prio_bits, ...)`
+/// order; within a bucket the insert walk orders by the full
+/// (prio, LAT, id) key, which is what makes the overflow bucket (the only
+/// one holding mixed priorities) exact.
+fn bucket_of_bits(p_bits: u64) -> usize {
+    let p = f64::from_bits(p_bits);
+    let raw = if p == 0.0 {
+        0
+    } else if p == 0.5 {
+        1
+    } else {
+        p as usize + 1
+    };
+    raw.min(OVERFLOW_BUCKET)
+}
+
+const NIL: BlockId = BlockId::MAX;
+
+/// Intrusive list node, one per physical block (dense, id-indexed).
+#[derive(Clone, Copy, Debug)]
+struct VictimNode {
+    prev: BlockId,
+    next: BlockId,
+    /// Bucket index while linked.
+    bucket: u32,
+    /// Priority bits while linked (uniform per bucket except in the
+    /// overflow bucket, where it carries the within-bucket sort).
+    prio: u64,
+    /// LAT bits while linked (the within-bucket sort key, ties on id).
+    lat: u64,
+    /// Whether this block counted into its bucket's punished counter.
+    punished: bool,
+}
+
+impl VictimNode {
+    fn fresh() -> Self {
+        VictimNode {
+            prev: NIL,
+            next: NIL,
+            bucket: u32::MAX,
+            prio: 0,
+            lat: 0,
+            punished: false,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct VictimBucket {
+    head: BlockId,
+    tail: BlockId,
+    len: usize,
+    /// Blocks in this bucket whose content has future interest (RC > 0):
+    /// evicting one incurs the paper's punishment.
+    punished: usize,
+}
+
+impl VictimBucket {
+    fn empty() -> Self {
+        VictimBucket {
+            head: NIL,
+            tail: NIL,
+            len: 0,
+            punished: 0,
+        }
+    }
+}
+
+/// The bucketed victim index. Replaces the global
+/// `BTreeSet<(prio, lat, id)>` free table: same iteration order
+/// (ascending priority bucket, then ascending (LAT, id) within a bucket),
+/// O(1) amortized maintenance.
+struct VictimIndex {
+    nodes: Vec<VictimNode>,
+    buckets: Vec<VictimBucket>,
+    /// Indices of non-empty buckets, ascending. The bucket vector is
+    /// sized by the largest RC ever observed and never shrinks, so
+    /// `front`/`eviction_preview` walk this set instead of scanning empty
+    /// slots; it only changes on empty<->non-empty transitions
+    /// (O(log distinct-priorities), and the low buckets transition
+    /// rarely in steady state).
+    occupied: BTreeSet<u32>,
+    len: usize,
+}
+
+impl VictimIndex {
+    fn new(capacity: usize) -> Self {
+        VictimIndex {
+            nodes: vec![VictimNode::fresh(); capacity],
+            buckets: Vec::new(),
+            occupied: BTreeSet::new(),
+            len: 0,
+        }
+    }
+
+    /// Insert `b` into bucket `bi` keeping (prio, lat, id) ascending — the
+    /// prio component is uniform everywhere but the overflow bucket. Walks
+    /// from *both ends* in lockstep and takes whichever resolves first, so
+    /// both realistic access patterns are O(1): releases (monotonic time)
+    /// append at the tail, and RC churn on the coldest cached content
+    /// prepends at the head. Only a mid-bucket insert pays
+    /// O(distance-to-nearer-end).
+    fn link(&mut self, b: BlockId, bi: usize, prio: u64, lat: u64, punished: bool) {
+        if self.buckets.len() <= bi {
+            self.buckets.resize(bi + 1, VictimBucket::empty());
+        }
+        // `after` = the last node ordered before `b` (NIL: insert at head).
+        let mut back = self.buckets[bi].tail;
+        let mut fwd = self.buckets[bi].head;
+        let after = loop {
+            if back == NIL {
+                break NIL; // walked past the head: b precedes everything
+            }
+            let nb = &self.nodes[back as usize];
+            if (nb.prio, nb.lat, back) <= (prio, lat, b) {
+                break back;
+            }
+            back = nb.prev;
+            // `fwd` is always valid here: it only advances past nodes
+            // ordered before `b`, and if every node were, the tail check
+            // above would already have resolved.
+            let nf = &self.nodes[fwd as usize];
+            if (nf.prio, nf.lat, fwd) > (prio, lat, b) {
+                break nf.prev;
+            }
+            fwd = nf.next;
+        };
+        let next = if after == NIL {
+            self.buckets[bi].head
+        } else {
+            self.nodes[after as usize].next
+        };
+        {
+            let node = &mut self.nodes[b as usize];
+            node.prev = after;
+            node.next = next;
+            node.bucket = bi as u32;
+            node.prio = prio;
+            node.lat = lat;
+            node.punished = punished;
+        }
+        if after == NIL {
+            self.buckets[bi].head = b;
+        } else {
+            self.nodes[after as usize].next = b;
+        }
+        if next == NIL {
+            self.buckets[bi].tail = b;
+        } else {
+            self.nodes[next as usize].prev = b;
+        }
+        if self.buckets[bi].len == 0 {
+            self.occupied.insert(bi as u32);
+        }
+        self.buckets[bi].len += 1;
+        self.buckets[bi].punished += punished as usize;
+        self.len += 1;
+    }
+
+    fn unlink(&mut self, b: BlockId) {
+        let (prev, next, bi, punished) = {
+            let n = &self.nodes[b as usize];
+            (n.prev, n.next, n.bucket as usize, n.punished)
+        };
+        if prev == NIL {
+            self.buckets[bi].head = next;
+        } else {
+            self.nodes[prev as usize].next = next;
+        }
+        if next == NIL {
+            self.buckets[bi].tail = prev;
+        } else {
+            self.nodes[next as usize].prev = prev;
+        }
+        self.buckets[bi].len -= 1;
+        if self.buckets[bi].len == 0 {
+            self.occupied.remove(&(bi as u32));
+        }
+        self.buckets[bi].punished -= punished as usize;
+        self.len -= 1;
+        self.nodes[b as usize] = VictimNode::fresh();
+    }
+
+    /// Flip a linked block's punished flag in place (an RC edge that does
+    /// not change the block's priority value, e.g. future interest landing
+    /// on an online-finished block, or any RC edge under LRU).
+    fn set_punished(&mut self, b: BlockId, punished: bool) {
+        let node = &mut self.nodes[b as usize];
+        if node.punished == punished {
+            return;
+        }
+        let bi = node.bucket as usize;
+        node.punished = punished;
+        if punished {
+            self.buckets[bi].punished += 1;
+        } else {
+            self.buckets[bi].punished -= 1;
+        }
+    }
+
+    /// Global eviction head: head of the lowest non-empty bucket — one
+    /// ordered-set lookup, regardless of how many (possibly empty)
+    /// priority slots the bucket vector has accumulated.
+    fn front(&self) -> Option<BlockId> {
+        self.occupied.first().map(|&bi| self.buckets[bi as usize].head)
+    }
+}
+
 pub struct KvManager {
     block_size: usize,
     capacity: usize,
@@ -101,7 +371,7 @@ pub struct KvManager {
     /// Blocks never allocated or whose content was dropped.
     free_list: Vec<BlockId>,
     /// Content key -> resident block (the APC prefix index).
-    cached: HashMap<u128, BlockId>,
+    cached: FxHashMap<u128, BlockId>,
     /// Sorted mirror of `cached`'s key set, maintained incrementally so
     /// prefix-summary publication never rebuilds-and-sorts the whole set.
     cached_sorted: BTreeSet<u128>,
@@ -109,29 +379,39 @@ pub struct KvManager {
     /// protocol; only tracked once `enable_key_churn` was called, so
     /// standalone engines pay nothing and leak nothing).
     track_churn: bool,
-    churn_added: HashSet<u128>,
-    churn_removed: HashSet<u128>,
-    /// Eviction order: (priority_bits, lat_bits, id). Only ref_count == 0
-    /// blocks live here.
-    free_table: BTreeSet<(u64, u64, BlockId)>,
+    churn_added: FxHashSet<u128>,
+    churn_removed: FxHashSet<u128>,
+    /// Eviction order (see [`VictimIndex`]). Only ref_count == 0 blocks
+    /// live here.
+    victims: VictimIndex,
     /// Future reference counts per content key (offline requests that are
     /// registered and unfinished, including currently running ones).
-    future_refs: HashMap<u128, u32>,
+    future_refs: FxHashMap<u128, u32>,
+    /// Zombie holders: blocks whose `key` is `Some(k)` while `cached[k]`
+    /// points elsewhere (or nowhere). The pre-PR code leaves such blocks
+    /// in the free table untouched — they arise when a fresh block
+    /// supersedes a resident key after a partial-prefix eviction, or when
+    /// evicting a zombie drops the current holder's mapping. They matter
+    /// only because `eviction_preview`'s punished counters must keep
+    /// seeing their **live** RC: every RC edge on `k` refreshes the
+    /// linked holders listed here (the oracle reads live RC per victim,
+    /// so a stale flag would break bit-exactness).
+    stale_holders: FxHashMap<u128, Vec<BlockId>>,
     /// Blocks held per request.
-    owned: HashMap<RequestId, Vec<BlockId>>,
+    owned: FxHashMap<RequestId, Vec<BlockId>>,
     /// Threshold headroom in blocks (set from the memory predictor).
     reserve_blocks: usize,
+    /// Reusable hit-resolution buffer for `allocate`'s single pass.
+    hit_scratch: Vec<BlockId>,
+    /// `availability()` invocations since construction (regression hook
+    /// alongside `Request::key_compute_count` / `Engine::step_alloc_growth`:
+    /// the scheduler's trial path must take one snapshot per admission
+    /// round, not one per candidate).
+    availability_calls: Cell<u64>,
+    /// Mutation log for oracle replay (`enable_op_log`); `None` costs
+    /// nothing.
+    op_log: Option<Vec<KvOp>>,
     pub stats: CacheStats,
-}
-
-fn prio_bits(p: f64) -> u64 {
-    debug_assert!(p >= 0.0);
-    p.to_bits()
-}
-
-fn lat_bits(t: f64) -> u64 {
-    debug_assert!(t >= 0.0);
-    t.to_bits()
 }
 
 impl KvManager {
@@ -142,15 +422,19 @@ impl KvManager {
             policy,
             blocks: vec![BlockMeta::fresh(); capacity_blocks],
             free_list: (0..capacity_blocks as BlockId).rev().collect(),
-            cached: HashMap::new(),
+            cached: FxHashMap::default(),
             cached_sorted: BTreeSet::new(),
             track_churn: false,
-            churn_added: HashSet::new(),
-            churn_removed: HashSet::new(),
-            free_table: BTreeSet::new(),
-            future_refs: HashMap::new(),
-            owned: HashMap::new(),
+            churn_added: FxHashSet::default(),
+            churn_removed: FxHashSet::default(),
+            victims: VictimIndex::new(capacity_blocks),
+            future_refs: FxHashMap::default(),
+            stale_holders: FxHashMap::default(),
+            owned: FxHashMap::default(),
             reserve_blocks: 0,
+            hit_scratch: Vec::new(),
+            availability_calls: Cell::new(0),
+            op_log: None,
             stats: CacheStats::default(),
         }
     }
@@ -166,6 +450,9 @@ impl KvManager {
     /// Set the burst-headroom threshold (tokens). Called by the engine each
     /// predictor period; ignored under policies without thresholds.
     pub fn set_reserve_tokens(&mut self, tokens: usize) {
+        if let Some(log) = &mut self.op_log {
+            log.push(KvOp::SetReserveTokens { tokens });
+        }
         self.reserve_blocks = tokens.div_ceil(self.block_size).min(self.capacity);
     }
 
@@ -173,19 +460,45 @@ impl KvManager {
         self.reserve_blocks
     }
 
+    /// Start recording every public mutation (oracle-replay equivalence
+    /// tests). Not for production: the log grows without bound until
+    /// drained.
+    #[doc(hidden)]
+    pub fn enable_op_log(&mut self) {
+        self.op_log = Some(Vec::new());
+    }
+
+    /// Drain the recorded mutation log.
+    #[doc(hidden)]
+    pub fn take_op_log(&mut self) -> Vec<KvOp> {
+        self.op_log.as_mut().map(std::mem::take).unwrap_or_default()
+    }
+
+    /// `availability()` call count since construction (regression hook).
+    pub fn availability_calls(&self) -> u64 {
+        self.availability_calls.get()
+    }
+
     /// Register future interest of an offline request in its content keys
     /// (entering the pool / being admitted). RC drives eviction priority.
     pub fn register_future(&mut self, keys: &[u128]) {
+        if self.op_log.is_some() {
+            self.log_op(KvOp::RegisterFuture { keys: keys.to_vec() });
+        }
         for &k in keys {
             *self.future_refs.entry(k).or_insert(0) += 1;
             if let Some(&b) = self.cached.get(&k) {
                 self.requeue_free(b);
             }
+            self.refresh_stale_punished(k);
         }
     }
 
     /// Remove future interest (request finished or cancelled).
     pub fn unregister_future(&mut self, keys: &[u128]) {
+        if self.op_log.is_some() {
+            self.log_op(KvOp::UnregisterFuture { keys: keys.to_vec() });
+        }
         for &k in keys {
             if let Some(rc) = self.future_refs.get_mut(&k) {
                 *rc -= 1;
@@ -196,6 +509,30 @@ impl KvManager {
             if let Some(&b) = self.cached.get(&k) {
                 self.requeue_free(b);
             }
+            self.refresh_stale_punished(k);
+        }
+    }
+
+    /// Propagate an RC edge on `k` to linked zombie holders (see
+    /// `stale_holders`): their frozen table position matches the pre-PR
+    /// order (which never requeued them either), but their punished flags
+    /// must track the live RC. No-op (one hash miss) when `k` has none.
+    fn refresh_stale_punished(&mut self, k: u128) {
+        let Some(holders) = self.stale_holders.remove(&k) else {
+            return;
+        };
+        let punished = self.future_refs.get(&k).copied().unwrap_or(0) > 0;
+        for &h in &holders {
+            if self.blocks[h as usize].table_key.is_some() {
+                self.victims.set_punished(h, punished);
+            }
+        }
+        self.stale_holders.insert(k, holders);
+    }
+
+    fn log_op(&mut self, op: KvOp) {
+        if let Some(log) = &mut self.op_log {
+            log.push(op);
         }
     }
 
@@ -217,10 +554,15 @@ impl KvManager {
     /// Register a key as resident. Mirrors `cached` into the sorted set and
     /// the churn log; a duplicate insert (stale block superseded by a fresh
     /// one for the same content) overwrites the mapping like the plain
-    /// `HashMap` insert always did, without touching mirror or churn — the
-    /// key was resident before and stays resident.
+    /// map insert always did, without touching mirror or churn — the
+    /// key was resident before and stays resident. The superseded block
+    /// becomes a zombie holder (see `stale_holders`) so later RC edges
+    /// still reach its punished flag.
     fn cache_insert(&mut self, k: u128, b: BlockId) {
-        if self.cached.insert(k, b).is_some() {
+        if let Some(old_b) = self.cached.insert(k, b) {
+            if old_b != b {
+                self.stale_holders.entry(k).or_default().push(old_b);
+            }
             return;
         }
         self.cached_sorted.insert(k);
@@ -281,17 +623,18 @@ impl KvManager {
     /// truncation can break leading chains and degrade remote
     /// affinity-depth walks — size `cap` to the cache (`capacity_blocks`,
     /// the `ClusterConfig::new` default) unless digest memory genuinely
-    /// needs bounding below that.
+    /// needs bounding below that. `ClusterSim::new` logs a warning when a
+    /// config opts into truncation.
     pub fn cached_key_sample(&self, cap: usize) -> Vec<u128> {
         self.cached_sorted.iter().copied().take(cap).collect()
     }
 
-    /// Pre-PR reference implementation of [`Self::cached_key_sample`]
+    /// Pre-PR-2 reference implementation of [`Self::cached_key_sample`]
     /// (rebuild from the hash index, sort only when truncating) — kept, like
-    /// `scheduler::OracleScheduler`, so the microbench baseline records the
+    /// [`super::OracleKvManager`], so the microbench baseline records the
     /// genuine before-cost in the same run as the after-cost. Not for
     /// production use: the result set is identical but the order of the
-    /// untruncated sample is nondeterministic.
+    /// untruncated sample follows hash-map iteration order.
     #[doc(hidden)]
     pub fn cached_key_sample_rebuild(&self, cap: usize) -> Vec<u128> {
         if self.cached.len() <= cap {
@@ -304,36 +647,56 @@ impl KvManager {
         }
     }
 
-    /// Current allocation headroom.
+    /// Current allocation headroom. O(1): every field is a maintained
+    /// counter — the scheduler may call this on every trial for free
+    /// (`availability_calls` counts invocations for regression tests).
     pub fn availability(&self) -> Availability {
-        let evictable = self.free_table.len();
-        // Priority-0 prefix of the table: entries with prio bits == 0.
-        let useless = self
-            .free_table
-            .iter()
-            .take_while(|&&(p, _, _)| p == 0)
-            .count();
+        self.availability_calls.set(self.availability_calls.get() + 1);
         Availability {
             free: self.free_list.len(),
-            evictable,
-            evictable_useless: useless,
+            evictable: self.victims.len,
+            // Priority-0 blocks are exactly bucket 0.
+            evictable_useless: self.victims.buckets.first().map_or(0, |bk| bk.len),
             reserve: self.reserve_blocks,
         }
     }
 
     /// Preview the punishment (tokens needing future recomputation) of
-    /// evicting the next `n` victims, without mutating anything.
+    /// evicting the next `n` victims, without mutating anything. Whole
+    /// buckets are answered from their punished counters; only a bucket cut
+    /// mid-way by `n` — and only when it holds a mix of punished and
+    /// unpunished blocks (possible for the online-finished bucket and under
+    /// LRU) — walks its head prefix.
     pub fn eviction_preview(&self, n: usize) -> u64 {
-        let mut punished = 0u64;
-        for (i, &(_, _, b)) in self.free_table.iter().enumerate() {
-            if i >= n {
+        let mut punished = 0usize;
+        let mut left = n;
+        for &bi in &self.victims.occupied {
+            let bk = &self.victims.buckets[bi as usize];
+            if left == 0 {
                 break;
             }
-            if self.block_rc(b) > 0 {
-                punished += self.block_size as u64;
+            if bk.len <= left {
+                punished += bk.punished;
+                left -= bk.len;
+            } else {
+                punished += if bk.punished == 0 {
+                    0
+                } else if bk.punished == bk.len {
+                    left
+                } else {
+                    let mut cnt = 0usize;
+                    let mut cur = bk.head;
+                    for _ in 0..left {
+                        let node = &self.victims.nodes[cur as usize];
+                        cnt += node.punished as usize;
+                        cur = node.next;
+                    }
+                    cnt
+                };
+                left = 0;
             }
         }
-        punished
+        punished as u64 * self.block_size as u64
     }
 
     fn block_rc(&self, b: BlockId) -> u32 {
@@ -359,32 +722,50 @@ impl KvManager {
     }
 
     fn requeue_free(&mut self, b: BlockId) {
-        let old = self.blocks[b as usize].table_key.take();
-        if let Some((p, t)) = old {
-            self.free_table.remove(&(p, t, b));
-        }
-        if self.blocks[b as usize].ref_count == 0 && self.blocks[b as usize].key.is_some() {
-            let key = (
+        let meta = &self.blocks[b as usize];
+        let eligible = meta.ref_count == 0 && meta.key.is_some();
+        let new_key = if eligible {
+            Some((
                 prio_bits(self.priority(b)),
                 lat_bits(self.blocks[b as usize].last_access),
-                b,
-            );
-            self.free_table.insert(key);
-            self.blocks[b as usize].table_key = Some((key.0, key.1));
+            ))
+        } else {
+            None
+        };
+        let old_key = self.blocks[b as usize].table_key;
+        if old_key == new_key {
+            // Identical sort key: a BTreeSet remove+reinsert would land in
+            // the same position, so the node stays put — but the punished
+            // flag may still have flipped (an RC edge that does not move
+            // the priority: online-finished blocks, or any block under
+            // LRU).
+            if new_key.is_some() {
+                let p = self.block_rc(b) > 0;
+                self.victims.set_punished(b, p);
+            }
+            return;
         }
+        if old_key.is_some() {
+            self.victims.unlink(b);
+        }
+        if let Some((pb, lb)) = new_key {
+            let punished = self.block_rc(b) > 0;
+            self.victims.link(b, bucket_of_bits(pb), pb, lb, punished);
+        }
+        self.blocks[b as usize].table_key = new_key;
     }
 
     fn remove_from_free_table(&mut self, b: BlockId) {
-        if let Some((p, t)) = self.blocks[b as usize].table_key.take() {
-            self.free_table.remove(&(p, t, b));
+        if self.blocks[b as usize].table_key.take().is_some() {
+            self.victims.unlink(b);
         }
     }
 
     /// Evict the lowest-priority free block; returns its id. Records
     /// punishment if the block was still wanted.
     fn evict_one(&mut self) -> Option<BlockId> {
-        let &(p, t, b) = self.free_table.iter().next()?;
-        self.free_table.remove(&(p, t, b));
+        let b = self.victims.front()?;
+        self.victims.unlink(b);
         let key = {
             let meta = &mut self.blocks[b as usize];
             meta.table_key = None;
@@ -392,12 +773,40 @@ impl KvManager {
         };
         self.stats.evictions += 1;
         if let Some(k) = key {
+            // If the victim was a zombie holder, retire its entry.
+            if let Some(holders) = self.stale_holders.get_mut(&k) {
+                if let Some(pos) = holders.iter().position(|&h| h == b) {
+                    holders.swap_remove(pos);
+                }
+                if holders.is_empty() {
+                    self.stale_holders.remove(&k);
+                }
+            }
+            // The pre-PR code drops the mapping unconditionally, so
+            // evicting a zombie un-caches the *current* holder — which
+            // thereby becomes a zombie itself (kept verbatim for
+            // bit-exactness; the equivalence tests cover the cascade).
+            let displaced = self.cached.get(&k).copied();
             self.cache_remove(k);
+            if let Some(f) = displaced {
+                if f != b {
+                    self.stale_holders.entry(k).or_default().push(f);
+                }
+            }
             if self.future_refs.get(&k).copied().unwrap_or(0) > 0 {
                 self.stats.useful_evictions += 1;
                 self.stats.punished_tokens += self.block_size as u64;
             }
         }
+        Some(b)
+    }
+
+    /// Evict the next victim and return its block to the free list — the
+    /// observable victim-order hook the equivalence tests compare.
+    #[doc(hidden)]
+    pub fn pop_victim(&mut self) -> Option<BlockId> {
+        let b = self.evict_one()?;
+        self.free_list.push(b);
         Some(b)
     }
 
@@ -418,6 +827,11 @@ impl KvManager {
     /// `class` drives both the reserve rule and the metadata of the fresh
     /// blocks; `keys` may be shorter than `total_blocks` for generated
     /// (decode) blocks, which are unshareable and get no content key.
+    ///
+    /// Hit resolution is a **single pass**: one `cached` lookup per hit key
+    /// yields the hit count, the free-table membership tally (reserve
+    /// accounting), and the block ids to pin — the pre-PR code resolved
+    /// each hit three times (peek, free-table filter, pin re-get).
     pub fn allocate(
         &mut self,
         req: RequestId,
@@ -427,23 +841,36 @@ impl KvManager {
         now: f64,
     ) -> Option<usize> {
         debug_assert!(!self.owned.contains_key(&req), "request already holds blocks");
-        // 1. Count prefix hits (pin later, after feasibility is known).
-        let hit_blocks = self.peek_prefix(&keys[..keys.len().min(total_blocks)]);
-        self.stats.lookup_blocks += keys.len().min(total_blocks) as u64;
+        if self.op_log.is_some() {
+            self.log_op(KvOp::Allocate {
+                req,
+                class,
+                keys: keys.to_vec(),
+                total_blocks,
+                now,
+            });
+        }
+        let lookup = keys.len().min(total_blocks);
+        // 1. Resolve the cached prefix once (pin later, after feasibility
+        // is known). Hit blocks sitting in the free table leave it when
+        // pinned, so they consume allocatable headroom exactly like fresh
+        // blocks (this also makes the reserve threshold apply to
+        // reactivations).
+        let mut hit_scratch = std::mem::take(&mut self.hit_scratch);
+        hit_scratch.clear();
+        let mut hits_from_free = 0usize;
+        for k in &keys[..lookup] {
+            let Some(&b) = self.cached.get(k) else { break };
+            if self.blocks[b as usize].ref_count == 0 {
+                hits_from_free += 1;
+            }
+            hit_scratch.push(b);
+        }
+        let hit_blocks = hit_scratch.len();
+        self.stats.lookup_blocks += lookup as u64;
         self.stats.hit_blocks += hit_blocks as u64;
 
         let fresh_needed = total_blocks - hit_blocks;
-        // Hit blocks sitting in the free table leave it when pinned, so
-        // they consume allocatable headroom exactly like fresh blocks
-        // (this also makes the reserve threshold apply to reactivations).
-        let hits_from_free = keys
-            .iter()
-            .take(hit_blocks)
-            .filter(|k| {
-                let b = self.cached[k];
-                self.blocks[b as usize].ref_count == 0
-            })
-            .count();
         let avail = self.availability();
         let allowed = match class {
             TaskClass::Online => avail.for_online(),
@@ -451,13 +878,13 @@ impl KvManager {
         };
         if fresh_needed + hits_from_free > allowed {
             // Keep lookups counted; hits unused.
+            self.hit_scratch = hit_scratch;
             return None;
         }
 
         let mut held = Vec::with_capacity(total_blocks);
-        // 2. Pin hits.
-        for &k in keys.iter().take(hit_blocks) {
-            let b = *self.cached.get(&k).expect("peeked block vanished");
+        // 2. Pin hits (ids already resolved).
+        for &b in &hit_scratch {
             let meta = &mut self.blocks[b as usize];
             meta.ref_count += 1;
             meta.last_access = now;
@@ -465,6 +892,7 @@ impl KvManager {
             self.remove_from_free_table(b);
             held.push(b);
         }
+        self.hit_scratch = hit_scratch;
         self.stats.saved_tokens += (hit_blocks * self.block_size) as u64;
 
         // 3. Fresh blocks (keyed for prompt region, unkeyed past `keys`).
@@ -492,6 +920,9 @@ impl KvManager {
     /// Append `n` fresh unshareable blocks to a running request (decode
     /// growth). Returns false if memory does not permit.
     pub fn grow(&mut self, req: RequestId, class: TaskClass, n: usize, now: f64) -> bool {
+        if self.op_log.is_some() {
+            self.log_op(KvOp::Grow { req, class, n, now });
+        }
         let avail = self.availability();
         let allowed = match class {
             TaskClass::Online => avail.for_online(),
@@ -514,8 +945,12 @@ impl KvManager {
         true
     }
 
-    /// Touch all blocks of `req` (scheduled this iteration).
+    /// Touch all blocks of `req` (scheduled this iteration). Held blocks
+    /// are pinned (never in the victim index), so no requeue is needed.
     pub fn touch(&mut self, req: RequestId, now: f64) {
+        if self.op_log.is_some() {
+            self.log_op(KvOp::Touch { req, now });
+        }
         if let Some(blocks) = self.owned.get(&req).cloned() {
             for b in blocks {
                 self.blocks[b as usize].last_access = now;
@@ -530,13 +965,16 @@ impl KvManager {
 
     /// Total blocks held by running requests.
     pub fn occupied_blocks(&self) -> usize {
-        self.capacity - self.free_list.len() - self.free_table.len()
+        self.capacity - self.free_list.len() - self.victims.len
     }
 
     /// Release a request's blocks (preemption or completion). Content-keyed
-    /// blocks go to the free table (still reusable); unkeyed blocks return
-    /// to the free list.
+    /// blocks go to the victim index (still reusable); unkeyed blocks
+    /// return to the free list.
     pub fn release(&mut self, req: RequestId, finished: bool) {
+        if self.op_log.is_some() {
+            self.log_op(KvOp::Release { req, finished });
+        }
         let Some(blocks) = self.owned.remove(&req) else {
             return;
         };
@@ -556,10 +994,13 @@ impl KvManager {
         }
     }
 
-    /// Drop every cached (free-table) block — test/bench helper for
+    /// Drop every cached (victim-index) block — test/bench helper for
     /// measuring cold-cache behaviour.
     pub fn flush_cache(&mut self) {
-        while self.evict_one().map(|b| self.free_list.push(b)).is_some() {}
+        if self.op_log.is_some() {
+            self.log_op(KvOp::FlushCache);
+        }
+        while self.pop_victim().is_some() {}
     }
 
     /// Tokens of KV currently resident (running + reusable cache).
@@ -573,19 +1014,26 @@ impl KvManager {
         let running = self.occupied_blocks();
         let mut cached_online = 0;
         let mut cached_offline = 0;
-        for &(_, _, b) in &self.free_table {
-            match self.blocks[b as usize].class {
-                TaskClass::Online => cached_online += 1,
-                TaskClass::Offline => cached_offline += 1,
+        for &bi in &self.victims.occupied {
+            let bk = &self.victims.buckets[bi as usize];
+            let mut cur = bk.head;
+            while cur != NIL {
+                match self.blocks[cur as usize].class {
+                    TaskClass::Online => cached_online += 1,
+                    TaskClass::Offline => cached_offline += 1,
+                }
+                cur = self.victims.nodes[cur as usize].next;
             }
         }
         (running, cached_online, cached_offline, self.free_list.len())
     }
 
-    /// Invariant checker used by property tests.
+    /// Invariant checker used by property tests. Covers the classic block
+    /// accounting plus the victim index: list structure, per-bucket
+    /// (LAT, id) ordering, bucket/priority agreement, and punished-counter
+    /// consistency with the live future-RC state.
     #[doc(hidden)]
     pub fn check_invariants(&self) -> Result<(), String> {
-        let owned_total: usize = self.owned.values().map(|v| v.len()).sum();
         let mut refs = vec![0u32; self.capacity];
         for v in self.owned.values() {
             for &b in v {
@@ -603,10 +1051,10 @@ impl KvManager {
                 return Err(format!("block {i}: pinned but in free table"));
             }
         }
-        let in_table = self.free_table.len();
+        let in_table = self.victims.len;
         let in_free = self.free_list.len();
         // Every block is free, in the table, or pinned (shared pins may
-        // make pinned-block count < owned_total).
+        // make pinned-block count < total owned entries).
         let pinned = self.blocks.iter().filter(|m| m.ref_count > 0).count();
         if in_table + in_free + pinned != self.capacity {
             return Err(format!(
@@ -624,12 +1072,123 @@ impl KvManager {
         {
             return Err("sorted key mirror diverged from the cached index".to_string());
         }
-        for &(p, t, b) in &self.free_table {
-            if self.blocks[b as usize].table_key != Some((p, t)) {
-                return Err(format!("free table stale for block {b}"));
+        // Zombie-holder index: every entry bears its key and is not the
+        // current mapping; every keyed block is current or listed (else an
+        // RC edge could miss it and stale a punished flag).
+        for (&k, holders) in &self.stale_holders {
+            if holders.is_empty() {
+                return Err(format!("stale holders for key {k:x}: empty entry"));
+            }
+            for &h in holders {
+                if self.blocks[h as usize].key != Some(k) {
+                    return Err(format!("stale holder {h} no longer bears key {k:x}"));
+                }
+                if self.cached.get(&k) == Some(&h) {
+                    return Err(format!("stale holder {h} is the current holder of {k:x}"));
+                }
             }
         }
-        let _ = owned_total;
+        for (i, meta) in self.blocks.iter().enumerate() {
+            let Some(k) = meta.key else { continue };
+            let current = self.cached.get(&k) == Some(&(i as BlockId));
+            let listed = self
+                .stale_holders
+                .get(&k)
+                .is_some_and(|hs| hs.contains(&(i as BlockId)));
+            if !current && !listed {
+                return Err(format!("block {i} bears key {k:x} but is untracked"));
+            }
+            if current && listed {
+                return Err(format!("block {i} is both current and stale for {k:x}"));
+            }
+        }
+        // Victim-index structure.
+        let keyed = self.blocks.iter().filter(|m| m.table_key.is_some()).count();
+        if keyed != self.victims.len {
+            return Err(format!(
+                "victim index len {} != blocks with table keys {keyed}",
+                self.victims.len
+            ));
+        }
+        let mut visited = 0usize;
+        let mut bucket_lens = 0usize;
+        for (bi, bk) in self.victims.buckets.iter().enumerate() {
+            if (bk.len > 0) != self.victims.occupied.contains(&(bi as u32)) {
+                return Err(format!(
+                    "bucket {bi}: occupancy set out of sync (len {})",
+                    bk.len
+                ));
+            }
+            bucket_lens += bk.len;
+            let mut cur = bk.head;
+            let mut prev = NIL;
+            let mut last: Option<(u64, u64, BlockId)> = None;
+            let mut punished = 0usize;
+            let mut count = 0usize;
+            while cur != NIL {
+                let node = &self.victims.nodes[cur as usize];
+                if node.prev != prev {
+                    return Err(format!("bucket {bi}: broken prev link at block {cur}"));
+                }
+                if node.bucket as usize != bi {
+                    return Err(format!("block {cur}: bucket tag {} != {bi}", node.bucket));
+                }
+                let Some((pb, lb)) = self.blocks[cur as usize].table_key else {
+                    return Err(format!("block {cur}: linked without a table key"));
+                };
+                if bucket_of_bits(pb) != bi {
+                    return Err(format!(
+                        "block {cur}: priority {} maps to bucket {}, linked in {bi}",
+                        f64::from_bits(pb),
+                        bucket_of_bits(pb)
+                    ));
+                }
+                if node.lat != lb || node.prio != pb {
+                    return Err(format!("block {cur}: node sort key != table key"));
+                }
+                if let Some(l) = last {
+                    if l >= (node.prio, node.lat, cur) {
+                        return Err(format!(
+                            "bucket {bi}: (prio, LAT, id) order broken at {cur}"
+                        ));
+                    }
+                }
+                let want_punished = self.block_rc(cur) > 0;
+                if node.punished != want_punished {
+                    return Err(format!(
+                        "block {cur}: punished flag {} != live RC state {}",
+                        node.punished, want_punished
+                    ));
+                }
+                punished += node.punished as usize;
+                last = Some((node.prio, node.lat, cur));
+                prev = cur;
+                cur = node.next;
+                count += 1;
+                if count > self.capacity {
+                    return Err(format!("bucket {bi}: list cycle"));
+                }
+            }
+            if prev != bk.tail {
+                return Err(format!("bucket {bi}: tail {} != last node {prev}", bk.tail));
+            }
+            if count != bk.len {
+                return Err(format!("bucket {bi}: len {} != walked {count}", bk.len));
+            }
+            if punished != bk.punished {
+                return Err(format!(
+                    "bucket {bi}: punished counter {} != walked {punished}",
+                    bk.punished
+                ));
+            }
+            visited += count;
+        }
+        if visited != self.victims.len || bucket_lens != self.victims.len {
+            return Err(format!(
+                "victim index len {} != visited {visited} / bucket sum {bucket_lens}",
+                self.victims.len
+            ));
+        }
         Ok(())
     }
 }
@@ -808,6 +1367,27 @@ mod tests {
     }
 
     #[test]
+    fn eviction_preview_partial_mixed_bucket() {
+        // LRU keeps everything in bucket 0, so a punished/unpunished mix
+        // can be cut mid-bucket — the walkless counter shortcuts must not
+        // misreport it.
+        let mut m = KvManager::new(6, BS, EvictionPolicy::Lru);
+        let wanted = keys(1, 2);
+        m.register_future(&wanted); // punished, oldest
+        m.allocate(1, TaskClass::Offline, &wanted, 2, 0.0).unwrap();
+        m.release(1, true);
+        let dead = keys(2, 2);
+        m.allocate(2, TaskClass::Offline, &dead, 2, 1.0).unwrap();
+        m.release(2, true);
+        // Victim order (pure LAT): wanted[0], wanted[1], dead[0], dead[1].
+        assert_eq!(m.eviction_preview(1), BS as u64);
+        assert_eq!(m.eviction_preview(2), 2 * BS as u64);
+        assert_eq!(m.eviction_preview(3), 2 * BS as u64);
+        assert_eq!(m.eviction_preview(4), 2 * BS as u64);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
     fn flush_cache_empties_table() {
         let mut m = KvManager::new(8, BS, EvictionPolicy::TaskAware);
         m.allocate(1, TaskClass::Offline, &keys(1, 3), 3, 0.0).unwrap();
@@ -876,6 +1456,33 @@ mod tests {
     }
 
     #[test]
+    fn truncated_sample_is_deterministic_under_churn() {
+        // The digest-cap footgun (`ClusterConfig::summary_cap` below the
+        // cache size): a truncating sample must stay deterministic — the
+        // smallest `cap` keys, regardless of insertion/eviction history.
+        let cap = 4usize;
+        let run = |order: &[u64]| {
+            let mut m = KvManager::new(16, BS, EvictionPolicy::TaskAware);
+            for (i, &owner) in order.iter().enumerate() {
+                let ks = keys(owner, 3);
+                m.allocate(owner, TaskClass::Offline, &ks, 3, i as f64).unwrap();
+                m.release(owner, true);
+            }
+            // Evict one owner's keys and re-add them, churning history.
+            m.allocate(99, TaskClass::Offline, &keys(99, 3), 3, 10.0).unwrap();
+            m.release(99, true);
+            m.cached_key_sample(cap)
+        };
+        let a = run(&[1, 2, 3]);
+        let b = run(&[3, 1, 2]);
+        assert_eq!(a, b, "cap sample must not depend on history");
+        assert_eq!(a.len(), cap);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        assert_eq!(a, sorted, "cap sample is the smallest keys, ascending");
+    }
+
+    #[test]
     fn rc_change_requeues_priority() {
         let mut m = KvManager::new(2, BS, EvictionPolicy::TaskAware);
         let a = keys(1, 1);
@@ -890,5 +1497,135 @@ mod tests {
         m.allocate(3, TaskClass::Online, &keys(3, 1), 1, 2.0).unwrap();
         assert_eq!(m.peek_prefix(&b), 1, "b must survive");
         assert_eq!(m.peek_prefix(&a), 0, "a (rc=0) must be the victim");
+    }
+
+    #[test]
+    fn availability_is_counter_reads_only() {
+        // O(1) availability: the call count is tracked, and repeated calls
+        // on a warm cache must agree with first-principles accounting
+        // without any mutation.
+        let mut m = KvManager::new(64, BS, EvictionPolicy::TaskAware);
+        let wanted = keys(1, 8);
+        m.register_future(&wanted);
+        m.allocate(1, TaskClass::Offline, &wanted, 8, 0.0).unwrap();
+        m.release(1, false);
+        m.allocate(2, TaskClass::Offline, &keys(2, 4), 4, 1.0).unwrap();
+        m.release(2, true);
+        let before = m.availability_calls();
+        let a = m.availability();
+        assert_eq!(m.availability_calls(), before + 1);
+        assert_eq!(a.free, 64 - 12);
+        assert_eq!(a.evictable, 12);
+        assert_eq!(a.evictable_useless, 4, "only the rc=0 blocks are free to evict");
+        assert_eq!(m.availability(), a, "read-only: repeated calls agree");
+    }
+
+    #[test]
+    fn op_log_records_and_replays() {
+        let mut m = KvManager::new(8, BS, EvictionPolicy::TaskAware);
+        m.enable_op_log();
+        let ks = keys(1, 2);
+        m.register_future(&ks);
+        m.allocate(1, TaskClass::Offline, &ks, 3, 0.5).unwrap();
+        m.touch(1, 0.7);
+        m.release(1, true);
+        m.unregister_future(&ks);
+        m.flush_cache();
+        let log = m.take_op_log();
+        assert_eq!(log.len(), 6);
+        assert!(matches!(log[0], KvOp::RegisterFuture { .. }));
+        assert!(matches!(log[5], KvOp::FlushCache));
+        // Replaying into a fresh oracle reproduces the stats.
+        let mut oracle = super::super::OracleKvManager::new(8, BS, EvictionPolicy::TaskAware);
+        for op in &log {
+            oracle.apply_op(op);
+        }
+        assert_eq!(oracle.stats.evictions, m.stats.evictions);
+        assert_eq!(oracle.stats.lookup_blocks, m.stats.lookup_blocks);
+        assert_eq!(oracle.availability(), m.availability());
+    }
+
+    #[test]
+    fn overflow_bucket_keeps_priority_order() {
+        // RC values past the clamp share one overflow bucket; inside it
+        // the insert walk orders by the full (prio, LAT, id) key, so the
+        // global eviction order stays exact while the bucket vector stays
+        // bounded (no O(max-RC) dense growth on hyper-shared prefixes).
+        let mut m = KvManager::new(3, BS, EvictionPolicy::TaskAware);
+        let a = keys(1, 1);
+        let b = keys(2, 1);
+        for _ in 0..200 {
+            m.register_future(&b);
+        }
+        for _ in 0..150 {
+            m.register_future(&a);
+        }
+        m.allocate(1, TaskClass::Offline, &a, 1, 0.0).unwrap();
+        m.release(1, false);
+        m.allocate(2, TaskClass::Offline, &b, 1, 1.0).unwrap();
+        m.release(2, false);
+        m.check_invariants().unwrap();
+        assert_eq!(m.eviction_preview(2), 2 * BS as u64, "both are wanted");
+        // rc(a) = 150 < rc(b) = 200: a evicts first despite b's newer LAT
+        // and identical (overflow) bucket.
+        assert_eq!(m.pop_victim(), Some(0));
+        assert_eq!(m.peek_prefix(&b), 1, "higher-RC block survives");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn superseded_zombie_blocks_track_live_rc() {
+        // Partial-prefix eviction leaves the chain [k1, k2] with only k2
+        // resident; re-allocating the chain misses at k1 and creates fresh
+        // blocks for *both* keys, superseding k2's old block — a zombie
+        // that stays in the victim index bearing k2. Later RC edges must
+        // still reach its punished flag (the oracle reads live RC per
+        // victim, so preview counts diverge otherwise).
+        let mut m = KvManager::new(8, BS, EvictionPolicy::TaskAware);
+        let ks = shared_keys(3, 2);
+        m.allocate(1, TaskClass::Offline, &ks, 2, 0.0).unwrap();
+        m.release(1, true);
+        assert_eq!(m.pop_victim(), Some(0), "k1's block is the oldest victim");
+        m.allocate(2, TaskClass::Offline, &ks, 2, 1.0).unwrap();
+        m.release(2, true);
+        m.check_invariants().unwrap();
+        assert_eq!(m.availability().evictable, 3, "zombie stays evictable");
+        // Future interest lands on both keys: the zombie (bearing k2) must
+        // count as punished alongside the two fresh blocks.
+        m.register_future(&ks);
+        m.check_invariants().unwrap();
+        assert_eq!(m.eviction_preview(3), 3 * BS as u64);
+        m.unregister_future(&ks);
+        m.check_invariants().unwrap();
+        assert_eq!(m.eviction_preview(3), 0);
+        // Evicting the zombie un-caches the current holder (pre-PR
+        // semantics, kept verbatim): k2 stops being a visible prefix hit.
+        m.register_future(&ks);
+        assert_eq!(m.pop_victim(), Some(1), "zombie (frozen LAT) evicts first");
+        assert_eq!(m.peek_prefix(&ks), 1, "k2's mapping was dropped with the zombie");
+        m.check_invariants().unwrap();
+        // ...and the displaced fresh block is now the zombie: RC edges
+        // must keep reaching it through the cascade.
+        m.unregister_future(&ks);
+        m.check_invariants().unwrap();
+        assert_eq!(m.eviction_preview(2), 0);
+    }
+
+    #[test]
+    fn punished_flag_follows_rc_without_priority_move() {
+        // Online-finished blocks stay in the 0.5 bucket whatever their RC;
+        // the punished accounting must still track the RC edges (this is
+        // the case eviction_preview's counters depend on).
+        let mut m = KvManager::new(4, BS, EvictionPolicy::TaskAware);
+        let on = keys(1, 1);
+        m.allocate(1, TaskClass::Online, &on, 1, 0.0).unwrap();
+        m.release(1, true); // bucket 0.5, rc = 0
+        assert_eq!(m.eviction_preview(1), 0);
+        m.register_future(&on); // rc = 1, still bucket 0.5
+        assert_eq!(m.eviction_preview(1), BS as u64);
+        m.check_invariants().unwrap();
+        m.unregister_future(&on);
+        assert_eq!(m.eviction_preview(1), 0);
+        m.check_invariants().unwrap();
     }
 }

@@ -5,11 +5,11 @@
 //! [`crate::core::PromptSpec::content_key`]); a prefix index maps keys to
 //! resident blocks so a new request reuses any cached prefix.
 //!
-//! Eviction is the paper's contribution: the free table is ordered by
+//! Eviction is the paper's contribution: the victim order is
 //! (priority, last-access-time) where priority encodes the *source task
 //! class* and the *future reference count* (RC):
 //!
-//!   running online blocks     — never in the free table (priority = ∞)
+//!   running online blocks     — never evictable (priority = ∞)
 //!   offline blocks, RC > 0    — priority = RC
 //!   finished online blocks    — priority = 0.5
 //!   finished offline, RC = 0  — priority = 0 (evicted first)
@@ -17,10 +17,17 @@
 //! A **threshold** reserves headroom for bursty online arrivals: offline
 //! allocations must leave `reserve_tokens` allocatable; online allocations
 //! may dip into the reserve (that is what it is for).
+//!
+//! [`KvManager`] keeps that order in a bucketed victim index with O(1)
+//! steady-state maintenance and O(1) `availability()`;
+//! [`OracleKvManager`] is the pre-PR implementation kept verbatim as the
+//! bit-exactness oracle and microbench baseline.
 
 pub mod manager;
+pub mod oracle;
 
-pub use manager::{Availability, CacheStats, EvictionPolicy, KvManager};
+pub use manager::{Availability, CacheStats, EvictionPolicy, KvManager, KvOp};
+pub use oracle::OracleKvManager;
 
 /// Physical block handle (index into the manager's metadata table).
 pub type BlockId = u32;

@@ -1,0 +1,507 @@
+//! Non-incremental reference KV manager (the pre-PR implementation, kept
+//! verbatim as an oracle — same pattern as `scheduler::OracleScheduler`).
+//!
+//! [`OracleKvManager`] keeps the eviction order in one global
+//! `BTreeSet<(prio, lat, id)>`, re-scans the priority-0 prefix on **every**
+//! `availability()` call, walks the free table for `eviction_preview`, and
+//! resolves prefix hits three times per `allocate` (peek, free-table pass,
+//! pin) — exactly what `KvManager` did before the bucketed victim index.
+//! It exists so that
+//!
+//!   * `rust/tests/kv_equivalence.rs` can assert the bucketed manager is a
+//!     bit-exact drop-in (victim sequence, availability tuples, key
+//!     samples, churn deltas, stats), and
+//!   * `benches/microbench.rs` can record the pre-PR cost in the same
+//!     `BENCH_PR5.json` it records the bucketed path in (the `--gate-kv`
+//!     before/after pair comes from one harness run).
+//!
+//! Do not optimize this module; its value is being the slow, obviously
+//! correct baseline.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+use super::manager::{lat_bits, prio_bits, Availability, CacheStats, EvictionPolicy, KvOp};
+use super::BlockId;
+use crate::core::{RequestId, TaskClass};
+
+#[derive(Clone, Debug)]
+struct BlockMeta {
+    key: Option<u128>,
+    ref_count: u32,
+    last_access: f64,
+    class: TaskClass,
+    finished: bool,
+    /// Sort key currently registered in the free table.
+    table_key: Option<(u64, u64)>,
+}
+
+impl BlockMeta {
+    fn fresh() -> Self {
+        BlockMeta {
+            key: None,
+            ref_count: 0,
+            last_access: 0.0,
+            class: TaskClass::Offline,
+            finished: true,
+            table_key: None,
+        }
+    }
+}
+
+/// Clone of the pre-PR [`super::KvManager`] (global `BTreeSet` free table,
+/// scan-per-call availability, triple-lookup allocate, SipHash key maps).
+pub struct OracleKvManager {
+    block_size: usize,
+    capacity: usize,
+    policy: EvictionPolicy,
+    blocks: Vec<BlockMeta>,
+    free_list: Vec<BlockId>,
+    cached: HashMap<u128, BlockId>,
+    cached_sorted: BTreeSet<u128>,
+    track_churn: bool,
+    churn_added: HashSet<u128>,
+    churn_removed: HashSet<u128>,
+    /// Eviction order: (priority_bits, lat_bits, id). Only ref_count == 0
+    /// blocks live here.
+    free_table: BTreeSet<(u64, u64, BlockId)>,
+    future_refs: HashMap<u128, u32>,
+    owned: HashMap<RequestId, Vec<BlockId>>,
+    reserve_blocks: usize,
+    pub stats: CacheStats,
+}
+
+impl OracleKvManager {
+    pub fn new(capacity_blocks: usize, block_size: usize, policy: EvictionPolicy) -> Self {
+        OracleKvManager {
+            block_size,
+            capacity: capacity_blocks,
+            policy,
+            blocks: vec![BlockMeta::fresh(); capacity_blocks],
+            free_list: (0..capacity_blocks as BlockId).rev().collect(),
+            cached: HashMap::new(),
+            cached_sorted: BTreeSet::new(),
+            track_churn: false,
+            churn_added: HashSet::new(),
+            churn_removed: HashSet::new(),
+            free_table: BTreeSet::new(),
+            future_refs: HashMap::new(),
+            owned: HashMap::new(),
+            reserve_blocks: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn capacity_blocks(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn set_reserve_tokens(&mut self, tokens: usize) {
+        self.reserve_blocks = tokens.div_ceil(self.block_size).min(self.capacity);
+    }
+
+    pub fn reserve_blocks(&self) -> usize {
+        self.reserve_blocks
+    }
+
+    pub fn register_future(&mut self, keys: &[u128]) {
+        for &k in keys {
+            *self.future_refs.entry(k).or_insert(0) += 1;
+            if let Some(&b) = self.cached.get(&k) {
+                self.requeue_free(b);
+            }
+        }
+    }
+
+    pub fn unregister_future(&mut self, keys: &[u128]) {
+        for &k in keys {
+            if let Some(rc) = self.future_refs.get_mut(&k) {
+                *rc -= 1;
+                if *rc == 0 {
+                    self.future_refs.remove(&k);
+                }
+            }
+            if let Some(&b) = self.cached.get(&k) {
+                self.requeue_free(b);
+            }
+        }
+    }
+
+    #[doc(hidden)]
+    pub fn future_ref_count(&self, key: u128) -> u32 {
+        self.future_refs.get(&key).copied().unwrap_or(0)
+    }
+
+    pub fn peek_prefix(&self, keys: &[u128]) -> usize {
+        keys.iter()
+            .take_while(|k| self.cached.contains_key(k))
+            .count()
+    }
+
+    fn cache_insert(&mut self, k: u128, b: BlockId) {
+        if self.cached.insert(k, b).is_some() {
+            return;
+        }
+        self.cached_sorted.insert(k);
+        if self.track_churn && !self.churn_removed.remove(&k) {
+            self.churn_added.insert(k);
+        }
+    }
+
+    fn cache_remove(&mut self, k: u128) {
+        if self.cached.remove(&k).is_none() {
+            return;
+        }
+        self.cached_sorted.remove(&k);
+        if self.track_churn && !self.churn_added.remove(&k) {
+            self.churn_removed.insert(k);
+        }
+    }
+
+    pub fn cached_key_count(&self) -> usize {
+        self.cached.len()
+    }
+
+    pub fn enable_key_churn(&mut self) {
+        self.track_churn = true;
+    }
+
+    pub fn take_key_churn(&mut self) -> Option<(Vec<u128>, Vec<u128>)> {
+        if !self.track_churn {
+            return None;
+        }
+        let mut added: Vec<u128> = self.churn_added.drain().collect();
+        let mut removed: Vec<u128> = self.churn_removed.drain().collect();
+        added.sort_unstable();
+        removed.sort_unstable();
+        Some((added, removed))
+    }
+
+    pub fn cached_key_sample(&self, cap: usize) -> Vec<u128> {
+        self.cached_sorted.iter().copied().take(cap).collect()
+    }
+
+    /// Pre-PR `availability`: the priority-0 prefix of the free table is
+    /// re-scanned on every call — the cost the bucketed manager's
+    /// incremental counters remove.
+    pub fn availability(&self) -> Availability {
+        let evictable = self.free_table.len();
+        let useless = self
+            .free_table
+            .iter()
+            .take_while(|&&(p, _, _)| p == 0)
+            .count();
+        Availability {
+            free: self.free_list.len(),
+            evictable,
+            evictable_useless: useless,
+            reserve: self.reserve_blocks,
+        }
+    }
+
+    pub fn eviction_preview(&self, n: usize) -> u64 {
+        let mut punished = 0u64;
+        for (i, &(_, _, b)) in self.free_table.iter().enumerate() {
+            if i >= n {
+                break;
+            }
+            if self.block_rc(b) > 0 {
+                punished += self.block_size as u64;
+            }
+        }
+        punished
+    }
+
+    fn block_rc(&self, b: BlockId) -> u32 {
+        self.blocks[b as usize]
+            .key
+            .and_then(|k| self.future_refs.get(&k).copied())
+            .unwrap_or(0)
+    }
+
+    fn priority(&self, b: BlockId) -> f64 {
+        if self.policy == EvictionPolicy::Lru {
+            return 0.0;
+        }
+        let meta = &self.blocks[b as usize];
+        let rc = self.block_rc(b);
+        match (meta.class, rc) {
+            (TaskClass::Offline, rc) if rc > 0 => rc as f64,
+            (TaskClass::Online, _) if meta.finished => 0.5,
+            (TaskClass::Online, rc) if rc > 0 => rc as f64,
+            _ => 0.0,
+        }
+    }
+
+    fn requeue_free(&mut self, b: BlockId) {
+        let old = self.blocks[b as usize].table_key.take();
+        if let Some((p, t)) = old {
+            self.free_table.remove(&(p, t, b));
+        }
+        if self.blocks[b as usize].ref_count == 0 && self.blocks[b as usize].key.is_some() {
+            let key = (
+                prio_bits(self.priority(b)),
+                lat_bits(self.blocks[b as usize].last_access),
+                b,
+            );
+            self.free_table.insert(key);
+            self.blocks[b as usize].table_key = Some((key.0, key.1));
+        }
+    }
+
+    fn remove_from_free_table(&mut self, b: BlockId) {
+        if let Some((p, t)) = self.blocks[b as usize].table_key.take() {
+            self.free_table.remove(&(p, t, b));
+        }
+    }
+
+    fn evict_one(&mut self) -> Option<BlockId> {
+        let &(p, t, b) = self.free_table.iter().next()?;
+        self.free_table.remove(&(p, t, b));
+        let key = {
+            let meta = &mut self.blocks[b as usize];
+            meta.table_key = None;
+            meta.key.take()
+        };
+        self.stats.evictions += 1;
+        if let Some(k) = key {
+            self.cache_remove(k);
+            if self.future_refs.get(&k).copied().unwrap_or(0) > 0 {
+                self.stats.useful_evictions += 1;
+                self.stats.punished_tokens += self.block_size as u64;
+            }
+        }
+        Some(b)
+    }
+
+    /// Evict the next victim and return its block to the free list — the
+    /// observable victim-order hook the equivalence tests compare.
+    #[doc(hidden)]
+    pub fn pop_victim(&mut self) -> Option<BlockId> {
+        let b = self.evict_one()?;
+        self.free_list.push(b);
+        Some(b)
+    }
+
+    fn take_block(&mut self) -> Option<BlockId> {
+        if let Some(b) = self.free_list.pop() {
+            return Some(b);
+        }
+        self.evict_one()
+    }
+
+    /// Pre-PR `allocate`: resolves prefix hits three times (peek, the
+    /// hits-from-free pass, the pin re-get) — the cost the bucketed
+    /// manager's single resolve pass removes.
+    pub fn allocate(
+        &mut self,
+        req: RequestId,
+        class: TaskClass,
+        keys: &[u128],
+        total_blocks: usize,
+        now: f64,
+    ) -> Option<usize> {
+        debug_assert!(!self.owned.contains_key(&req), "request already holds blocks");
+        let hit_blocks = self.peek_prefix(&keys[..keys.len().min(total_blocks)]);
+        self.stats.lookup_blocks += keys.len().min(total_blocks) as u64;
+        self.stats.hit_blocks += hit_blocks as u64;
+
+        let fresh_needed = total_blocks - hit_blocks;
+        let hits_from_free = keys
+            .iter()
+            .take(hit_blocks)
+            .filter(|k| {
+                let b = self.cached[k];
+                self.blocks[b as usize].ref_count == 0
+            })
+            .count();
+        let avail = self.availability();
+        let allowed = match class {
+            TaskClass::Online => avail.for_online(),
+            TaskClass::Offline => avail.for_offline(),
+        };
+        if fresh_needed + hits_from_free > allowed {
+            return None;
+        }
+
+        let mut held = Vec::with_capacity(total_blocks);
+        for &k in keys.iter().take(hit_blocks) {
+            let b = *self.cached.get(&k).expect("peeked block vanished");
+            let meta = &mut self.blocks[b as usize];
+            meta.ref_count += 1;
+            meta.last_access = now;
+            meta.finished = false;
+            self.remove_from_free_table(b);
+            held.push(b);
+        }
+        self.stats.saved_tokens += (hit_blocks * self.block_size) as u64;
+
+        for i in hit_blocks..total_blocks {
+            let b = self.take_block().expect("availability check lied");
+            let key = keys.get(i).copied();
+            {
+                let meta = &mut self.blocks[b as usize];
+                meta.ref_count = 1;
+                meta.last_access = now;
+                meta.class = class;
+                meta.finished = false;
+                meta.key = key;
+                meta.table_key = None;
+            }
+            if let Some(k) = key {
+                self.cache_insert(k, b);
+            }
+            held.push(b);
+        }
+        self.owned.insert(req, held);
+        Some(hit_blocks * self.block_size)
+    }
+
+    pub fn grow(&mut self, req: RequestId, class: TaskClass, n: usize, now: f64) -> bool {
+        let avail = self.availability();
+        let allowed = match class {
+            TaskClass::Online => avail.for_online(),
+            TaskClass::Offline => avail.for_offline(),
+        };
+        if n > allowed {
+            return false;
+        }
+        for _ in 0..n {
+            let b = self.take_block().expect("availability check lied");
+            let meta = &mut self.blocks[b as usize];
+            meta.ref_count = 1;
+            meta.last_access = now;
+            meta.class = class;
+            meta.finished = false;
+            meta.key = None;
+            meta.table_key = None;
+            self.owned.entry(req).or_default().push(b);
+        }
+        true
+    }
+
+    pub fn touch(&mut self, req: RequestId, now: f64) {
+        if let Some(blocks) = self.owned.get(&req).cloned() {
+            for b in blocks {
+                self.blocks[b as usize].last_access = now;
+            }
+        }
+    }
+
+    pub fn held_blocks(&self, req: RequestId) -> usize {
+        self.owned.get(&req).map_or(0, |v| v.len())
+    }
+
+    pub fn occupied_blocks(&self) -> usize {
+        self.capacity - self.free_list.len() - self.free_table.len()
+    }
+
+    pub fn release(&mut self, req: RequestId, finished: bool) {
+        let Some(blocks) = self.owned.remove(&req) else {
+            return;
+        };
+        for b in blocks {
+            let meta = &mut self.blocks[b as usize];
+            debug_assert!(meta.ref_count > 0);
+            meta.ref_count -= 1;
+            if meta.ref_count > 0 {
+                continue;
+            }
+            meta.finished = finished;
+            if meta.key.is_some() {
+                self.requeue_free(b);
+            } else {
+                self.free_list.push(b);
+            }
+        }
+    }
+
+    pub fn flush_cache(&mut self) {
+        while self.pop_victim().is_some() {}
+    }
+
+    pub fn resident_tokens(&self) -> usize {
+        (self.capacity - self.free_list.len()) * self.block_size
+    }
+
+    pub fn occupancy_breakdown(&self) -> (usize, usize, usize, usize) {
+        let running = self.occupied_blocks();
+        let mut cached_online = 0;
+        let mut cached_offline = 0;
+        for &(_, _, b) in &self.free_table {
+            match self.blocks[b as usize].class {
+                TaskClass::Online => cached_online += 1,
+                TaskClass::Offline => cached_offline += 1,
+            }
+        }
+        (running, cached_online, cached_offline, self.free_list.len())
+    }
+
+    /// Replay one recorded [`KvOp`] (see `KvManager::enable_op_log`).
+    #[doc(hidden)]
+    pub fn apply_op(&mut self, op: &KvOp) {
+        match op {
+            KvOp::Allocate { req, class, keys, total_blocks, now } => {
+                let _ = self.allocate(*req, *class, keys, *total_blocks, *now);
+            }
+            KvOp::Grow { req, class, n, now } => {
+                let _ = self.grow(*req, *class, *n, *now);
+            }
+            KvOp::Touch { req, now } => self.touch(*req, *now),
+            KvOp::Release { req, finished } => self.release(*req, *finished),
+            KvOp::RegisterFuture { keys } => self.register_future(keys),
+            KvOp::UnregisterFuture { keys } => self.unregister_future(keys),
+            KvOp::SetReserveTokens { tokens } => self.set_reserve_tokens(*tokens),
+            KvOp::FlushCache => self.flush_cache(),
+        }
+    }
+
+    #[doc(hidden)]
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut refs = vec![0u32; self.capacity];
+        for v in self.owned.values() {
+            for &b in v {
+                refs[b as usize] += 1;
+            }
+        }
+        for (i, meta) in self.blocks.iter().enumerate() {
+            if meta.ref_count != refs[i] {
+                return Err(format!(
+                    "block {i}: ref_count {} != owners {}",
+                    meta.ref_count, refs[i]
+                ));
+            }
+            if meta.ref_count > 0 && meta.table_key.is_some() {
+                return Err(format!("block {i}: pinned but in free table"));
+            }
+        }
+        let in_table = self.free_table.len();
+        let in_free = self.free_list.len();
+        let pinned = self.blocks.iter().filter(|m| m.ref_count > 0).count();
+        if in_table + in_free + pinned != self.capacity {
+            return Err(format!(
+                "partition broken: table {in_table} + free {in_free} + pinned {pinned} != {}",
+                self.capacity
+            ));
+        }
+        for (&k, &b) in &self.cached {
+            if self.blocks[b as usize].key != Some(k) {
+                return Err(format!("cached index stale for key {k:x}"));
+            }
+        }
+        if self.cached_sorted.len() != self.cached.len()
+            || self.cached.keys().any(|k| !self.cached_sorted.contains(k))
+        {
+            return Err("sorted key mirror diverged from the cached index".to_string());
+        }
+        for &(p, t, b) in &self.free_table {
+            if self.blocks[b as usize].table_key != Some((p, t)) {
+                return Err(format!("free table stale for block {b}"));
+            }
+        }
+        Ok(())
+    }
+}

@@ -664,6 +664,11 @@ impl Scheduler {
                 break;
             }
             let base_time = self.time_model.batch_time_inc(shape);
+            // One availability snapshot per admission round, shared by
+            // every candidate trial below (the candidate loop is read-only
+            // w.r.t. the KV manager, so the snapshot stays valid through
+            // the winning `allocate`). `KvManager::availability_calls`
+            // pins this: the count must not scale with candidate count.
             let avail = kv.availability();
             // (score, id, ff, chunk, seq_len)
             let mut best: Option<(f64, RequestId, usize, usize, usize)> = None;
@@ -995,6 +1000,35 @@ mod tests {
         assert_eq!(f.kv.held_blocks(a), held_once);
         assert_eq!(held_once, 3); // blocks_for(33)
         f.kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn availability_snapshot_per_round_not_per_candidate() {
+        // Same capacity, same admission budget: pools of very different
+        // sizes must cost the same number of availability() snapshots —
+        // the KV-aware trial path takes one per admission round and reuses
+        // it across every candidate, never one per candidate.
+        let count_for = |pool_size: usize| {
+            let mut f = fixture(SchedulerKind::Echo, 10_000);
+            f.sched.cfg.max_batch = 2; // two admissions, then slots run out
+            for _ in 0..pool_size {
+                add_offline(&mut f, 100, 4);
+            }
+            let before = f.kv.availability_calls();
+            let out = f
+                .sched
+                .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+            assert_eq!(out.admitted_offline.len(), 2);
+            f.kv.availability_calls() - before
+        };
+        let small = count_for(4);
+        assert_eq!(
+            small,
+            count_for(40),
+            "availability call count must not scale with the candidate pool"
+        );
+        // One snapshot per round + one inside each successful allocate.
+        assert_eq!(small, 4);
     }
 
     #[test]

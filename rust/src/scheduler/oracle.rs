@@ -457,6 +457,8 @@ impl OracleScheduler {
                 break;
             }
             let base_time = self.time_model.batch_time(shape);
+            // One availability snapshot per admission round (shared by all
+            // candidate trials), mirroring the incremental scheduler.
             let avail = kv.availability();
             let mut best: Option<(f64, RequestId, usize, usize, BatchShape)> = None;
             for id in candidates {

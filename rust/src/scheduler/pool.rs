@@ -8,10 +8,9 @@
 //! paper credits for the cache-hit gains (§7.3), with a search budget far
 //! below trying the whole pool.
 
-use std::collections::HashMap;
-
 use crate::core::RequestId;
 use crate::kvcache::KvManager;
+use crate::utils::hash::FxHashMap;
 
 /// Arena node index (`u32`: a pool radix tree holds at most one node per
 /// registered block key, far below 4 billion).
@@ -31,7 +30,7 @@ pub struct RadixIndex {
     nodes: Vec<Node>,
     /// Recycled arena slots.
     free: Vec<NodeIdx>,
-    paths: HashMap<RequestId, Vec<u128>>,
+    paths: FxHashMap<RequestId, Vec<u128>>,
 }
 
 const ROOT: NodeIdx = 0;
@@ -50,7 +49,7 @@ impl Default for RadixIndex {
         RadixIndex {
             nodes: vec![Node::default()], // slot 0 = root, never freed
             free: Vec::new(),
-            paths: HashMap::new(),
+            paths: FxHashMap::default(),
         }
     }
 }

@@ -2,6 +2,7 @@
 //! PRNG + distributions, JSON, statistics, CLI parsing, property testing.
 pub mod ascii;
 pub mod cli;
+pub mod hash;
 pub mod json;
 pub mod prop;
 pub mod rng;

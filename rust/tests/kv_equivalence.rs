@@ -1,0 +1,396 @@
+//! Bit-exactness of the bucketed KV manager (PR 5): [`KvManager`] must be
+//! a drop-in for the pre-PR [`OracleKvManager`] on **every** observable —
+//! eviction victim sequence, `availability()` tuples, cached key samples,
+//! churn deltas, hit/eviction/punishment stats, and per-call return values
+//! — across randomized allocate/grow/touch/release/register/unregister/
+//! flush workloads (seeds x policies x reserve settings), and across the
+//! mutation log of a full `EngineServe` run replayed into both managers.
+
+use echo::config::{SchedulerKind, SystemConfig};
+use echo::core::{PromptSpec, TaskClass};
+use echo::engine::{sim::SimBackend, Engine};
+use echo::estimator::TimeModel;
+use echo::kvcache::{EvictionPolicy, KvManager, KvOp, OracleKvManager};
+use echo::serve::{EngineServe, NullSink, Serve, SubmitSpec};
+use echo::utils::prop::{check, Gen};
+
+/// Drives the bucketed manager and the oracle in lockstep; every method
+/// asserts return-value equality and, via [`Pair::assert_observables`],
+/// full observable-state equality.
+struct Pair {
+    new_m: KvManager,
+    oracle: OracleKvManager,
+}
+
+impl Pair {
+    fn new(capacity: usize, block_size: usize, policy: EvictionPolicy) -> Self {
+        let mut new_m = KvManager::new(capacity, block_size, policy);
+        let mut oracle = OracleKvManager::new(capacity, block_size, policy);
+        new_m.enable_key_churn();
+        oracle.enable_key_churn();
+        Pair { new_m, oracle }
+    }
+
+    fn assert_observables(&self, ctx: &str) -> Result<(), String> {
+        let a = self.new_m.availability();
+        let b = self.oracle.availability();
+        if a != b {
+            return Err(format!("{ctx}: availability {a:?} != oracle {b:?}"));
+        }
+        if self.new_m.stats != self.oracle.stats {
+            return Err(format!(
+                "{ctx}: stats {:?} != oracle {:?}",
+                self.new_m.stats, self.oracle.stats
+            ));
+        }
+        if self.new_m.cached_key_count() != self.oracle.cached_key_count() {
+            return Err(format!("{ctx}: cached key counts diverge"));
+        }
+        if self.new_m.occupied_blocks() != self.oracle.occupied_blocks() {
+            return Err(format!("{ctx}: occupied blocks diverge"));
+        }
+        if self.new_m.cached_key_sample(usize::MAX) != self.oracle.cached_key_sample(usize::MAX) {
+            return Err(format!("{ctx}: cached key samples diverge"));
+        }
+        if self.new_m.occupancy_breakdown() != self.oracle.occupancy_breakdown() {
+            return Err(format!("{ctx}: occupancy breakdowns diverge"));
+        }
+        self.new_m
+            .check_invariants()
+            .map_err(|e| format!("{ctx}: new manager invariants: {e}"))?;
+        self.oracle
+            .check_invariants()
+            .map_err(|e| format!("{ctx}: oracle invariants: {e}"))?;
+        Ok(())
+    }
+
+    fn allocate(
+        &mut self,
+        req: u64,
+        class: TaskClass,
+        keys: &[u128],
+        total: usize,
+        now: f64,
+    ) -> Result<Option<usize>, String> {
+        let a = self.new_m.allocate(req, class, keys, total, now);
+        let b = self.oracle.allocate(req, class, keys, total, now);
+        if a != b {
+            return Err(format!("allocate({req}): {a:?} != oracle {b:?}"));
+        }
+        if self.new_m.held_blocks(req) != self.oracle.held_blocks(req) {
+            return Err(format!("allocate({req}): held blocks diverge"));
+        }
+        self.assert_observables("allocate")?;
+        Ok(a)
+    }
+
+    fn grow(&mut self, req: u64, class: TaskClass, n: usize, now: f64) -> Result<bool, String> {
+        let a = self.new_m.grow(req, class, n, now);
+        let b = self.oracle.grow(req, class, n, now);
+        if a != b {
+            return Err(format!("grow({req}): {a} != oracle {b}"));
+        }
+        self.assert_observables("grow")?;
+        Ok(a)
+    }
+
+    fn touch(&mut self, req: u64, now: f64) -> Result<(), String> {
+        self.new_m.touch(req, now);
+        self.oracle.touch(req, now);
+        self.assert_observables("touch")
+    }
+
+    fn release(&mut self, req: u64, finished: bool) -> Result<(), String> {
+        self.new_m.release(req, finished);
+        self.oracle.release(req, finished);
+        self.assert_observables("release")
+    }
+
+    fn register_future(&mut self, keys: &[u128]) -> Result<(), String> {
+        self.new_m.register_future(keys);
+        self.oracle.register_future(keys);
+        self.assert_observables("register_future")
+    }
+
+    fn unregister_future(&mut self, keys: &[u128]) -> Result<(), String> {
+        self.new_m.unregister_future(keys);
+        self.oracle.unregister_future(keys);
+        self.assert_observables("unregister_future")
+    }
+
+    fn set_reserve_tokens(&mut self, tokens: usize) -> Result<(), String> {
+        self.new_m.set_reserve_tokens(tokens);
+        self.oracle.set_reserve_tokens(tokens);
+        self.assert_observables("set_reserve")
+    }
+
+    fn compare_previews(&self, upto: usize) -> Result<(), String> {
+        for n in 0..=upto {
+            let a = self.new_m.eviction_preview(n);
+            let b = self.oracle.eviction_preview(n);
+            if a != b {
+                return Err(format!("eviction_preview({n}): {a} != oracle {b}"));
+            }
+        }
+        Ok(())
+    }
+
+    fn compare_churn(&mut self) -> Result<(), String> {
+        let a = self.new_m.take_key_churn();
+        let b = self.oracle.take_key_churn();
+        if a != b {
+            return Err(format!("key churn diverges: {a:?} != {b:?}"));
+        }
+        Ok(())
+    }
+
+    /// Pop `n` victims from both and compare the exact block-id sequence —
+    /// the strongest form of the bit-exact-eviction-order claim.
+    fn compare_victims(&mut self, n: usize) -> Result<(), String> {
+        for i in 0..n {
+            let a = self.new_m.pop_victim();
+            let b = self.oracle.pop_victim();
+            if a != b {
+                return Err(format!("victim {i}: {a:?} != oracle {b:?}"));
+            }
+            if a.is_none() {
+                break;
+            }
+        }
+        self.assert_observables("pop_victim")
+    }
+}
+
+/// Chain-prefix-like key path from a small tag universe (forces sharing,
+/// rc churn, and partial prefix hits across requests).
+fn key_path(g: &mut Gen, tag_universe: usize) -> Vec<u128> {
+    let tag = g.int(1, tag_universe) as u128;
+    let n = g.int(1, 12);
+    (0..n as u128).map(|i| (tag << 32) | i).collect()
+}
+
+#[test]
+fn bucketed_manager_matches_oracle_under_random_workloads() {
+    check("kv-bucketed-vs-oracle", 40, |g| {
+        let capacity = g.int(8, 160);
+        let block_size = *g.choose(&[4usize, 16]);
+        let policy = *g.choose(&[EvictionPolicy::TaskAware, EvictionPolicy::Lru]);
+        let mut pair = Pair::new(capacity, block_size, policy);
+        if g.bool(0.5) {
+            pair.set_reserve_tokens(g.int(0, capacity / 2) * block_size)?;
+        }
+
+        let mut next_id = 0u64;
+        let mut owned: Vec<u64> = Vec::new();
+        let mut registered: Vec<Vec<u128>> = Vec::new();
+        let mut now = 0.0f64;
+
+        for _round in 0..g.int(4, 40) {
+            // Time is mostly monotonic, with occasional repeats (equal-LAT
+            // ties are where the within-bucket id ordering matters).
+            if g.bool(0.8) {
+                now += 0.1;
+            }
+            match g.int(0, 9) {
+                0 | 1 | 2 => {
+                    // Allocate a keyed request (sometimes with an unkeyed
+                    // decode tail, sometimes registered as future interest
+                    // first).
+                    next_id += 1;
+                    let keys = key_path(g, 5);
+                    if g.bool(0.5) {
+                        pair.register_future(&keys)?;
+                        registered.push(keys.clone());
+                    }
+                    let total = keys.len() + g.int(0, 3);
+                    let class = *g.choose(&[TaskClass::Online, TaskClass::Offline]);
+                    if pair.allocate(next_id, class, &keys, total, now)?.is_some() {
+                        owned.push(next_id);
+                    }
+                }
+                3 => {
+                    if !owned.is_empty() {
+                        let i = g.int(0, owned.len() - 1);
+                        let req = owned[i];
+                        let class = *g.choose(&[TaskClass::Online, TaskClass::Offline]);
+                        pair.grow(req, class, g.int(1, 4), now)?;
+                    }
+                }
+                4 => {
+                    if !owned.is_empty() {
+                        let i = g.int(0, owned.len() - 1);
+                        pair.touch(owned[i], now)?;
+                    }
+                }
+                5 | 6 => {
+                    if !owned.is_empty() {
+                        let i = g.int(0, owned.len() - 1);
+                        let req = owned.swap_remove(i);
+                        pair.release(req, g.bool(0.7))?;
+                    }
+                }
+                7 => {
+                    // Requeue storm: register/unregister whole paths (RC
+                    // churn moves cached blocks between priority buckets).
+                    if g.bool(0.6) || registered.is_empty() {
+                        let keys = key_path(g, 5);
+                        pair.register_future(&keys)?;
+                        registered.push(keys);
+                    } else {
+                        let i = g.int(0, registered.len() - 1);
+                        let keys = registered.swap_remove(i);
+                        pair.unregister_future(&keys)?;
+                    }
+                }
+                8 => {
+                    pair.compare_previews(g.int(0, capacity))?;
+                    pair.compare_churn()?;
+                }
+                _ => {
+                    // Drain some (or all) victims and compare the exact
+                    // eviction sequence.
+                    pair.compare_victims(g.int(1, capacity))?;
+                }
+            }
+            // Cheap cross-checks on every round.
+            let probe = key_path(g, 5);
+            if pair.new_m.peek_prefix(&probe) != pair.oracle.peek_prefix(&probe) {
+                return Err("peek_prefix diverges".into());
+            }
+            pair.compare_previews(4)?;
+        }
+        // Final full drain: the complete remaining victim order must match.
+        for req in owned {
+            pair.release(req, g.bool(0.5))?;
+        }
+        pair.compare_victims(capacity + 1)?;
+        pair.compare_churn()?;
+        Ok(())
+    });
+}
+
+// ---- op-log replay through a real serving run -----------------------------
+
+/// Apply a non-allocate/grow op to the fresh bucketed manager through its
+/// public API (the counterpart of `OracleKvManager::apply_op`).
+fn fresh_apply(m: &mut KvManager, op: &KvOp) {
+    match op {
+        KvOp::Touch { req, now } => m.touch(*req, *now),
+        KvOp::Release { req, finished } => m.release(*req, *finished),
+        KvOp::RegisterFuture { keys } => m.register_future(keys),
+        KvOp::UnregisterFuture { keys } => m.unregister_future(keys),
+        KvOp::SetReserveTokens { tokens } => m.set_reserve_tokens(*tokens),
+        KvOp::FlushCache => m.flush_cache(),
+        KvOp::Allocate { .. } | KvOp::Grow { .. } => unreachable!("handled inline"),
+    }
+}
+
+#[test]
+fn engine_serve_run_replays_bit_exact_into_both_managers() {
+    // Record every KV mutation a full EngineServe run performs (admissions,
+    // decode growth, preemptions, cancellations, completions), then replay
+    // the log into a fresh bucketed manager and a fresh oracle and compare
+    // every observable after every op. This is the "the engine cannot tell
+    // the difference" end of the equivalence argument: the op stream comes
+    // from real scheduling, not from a synthetic generator.
+    let mut cfg = SystemConfig::a100_llama8b();
+    cfg.scheduler.kind = SchedulerKind::Echo;
+    cfg.cache.capacity_tokens = 60 * cfg.cache.block_size; // tight: preemptions
+    let block_size = cfg.cache.block_size;
+    let capacity_blocks = cfg.capacity_blocks();
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), 11, 0.0);
+    let mut front = EngineServe::new(Engine::new(cfg, backend));
+    front.engine.kv.enable_op_log();
+
+    let mut tickets = Vec::new();
+    for i in 0..10u64 {
+        let shared = if i % 2 == 0 { Some((7u64, 96usize)) } else { None };
+        let t = front
+            .submit(SubmitSpec::offline(PromptSpec::sim(120 + (i as usize % 4) * 40, shared), 32))
+            .unwrap();
+        tickets.push(t.id);
+    }
+    for i in 0..6u64 {
+        let t = front
+            .submit(
+                SubmitSpec::online(PromptSpec::sim(200, Some((3, 64))), 6).at(0.2 * i as f64),
+            )
+            .unwrap();
+        tickets.push(t.id);
+    }
+    // Cancel a pooled offline request and a not-yet-arrived online one
+    // before anything runs (both guaranteed live), so the log contains the
+    // cancellation paths' unregister/pool-removal ops too.
+    assert!(front.cancel(tickets[1]), "pooled offline cancel must succeed");
+    assert!(front.cancel(tickets[15]), "future online cancel must succeed");
+    front.drain(&mut NullSink).unwrap();
+
+    let log = front.engine.kv.take_op_log();
+    assert!(
+        log.len() > 40,
+        "expected a substantial op stream, got {} ops",
+        log.len()
+    );
+    assert!(
+        log.iter().any(|op| matches!(op, KvOp::Grow { .. })),
+        "run must exercise decode growth"
+    );
+
+    let mut fresh = KvManager::new(capacity_blocks, block_size, EvictionPolicy::TaskAware);
+    let mut oracle = OracleKvManager::new(capacity_blocks, block_size, EvictionPolicy::TaskAware);
+    fresh.enable_key_churn();
+    oracle.enable_key_churn();
+    for (i, op) in log.iter().enumerate() {
+        // Replay through both public APIs, comparing per-call results where
+        // the op has one.
+        match op {
+            KvOp::Allocate { req, class, keys, total_blocks, now } => {
+                let a = fresh.allocate(*req, *class, keys, *total_blocks, *now);
+                let b = oracle.allocate(*req, *class, keys, *total_blocks, *now);
+                assert_eq!(a, b, "op {i}: allocate fast-forward diverged");
+                assert_eq!(fresh.held_blocks(*req), oracle.held_blocks(*req));
+            }
+            KvOp::Grow { req, class, n, now } => {
+                assert_eq!(
+                    fresh.grow(*req, *class, *n, *now),
+                    oracle.grow(*req, *class, *n, *now),
+                    "op {i}: grow admission diverged"
+                );
+            }
+            op => {
+                fresh_apply(&mut fresh, op);
+                oracle.apply_op(op);
+            }
+        }
+        assert_eq!(
+            fresh.availability(),
+            oracle.availability(),
+            "op {i} ({op:?}): availability diverged"
+        );
+        assert_eq!(fresh.stats, oracle.stats, "op {i}: stats diverged");
+        assert_eq!(
+            fresh.cached_key_sample(usize::MAX),
+            oracle.cached_key_sample(usize::MAX),
+            "op {i}: resident key sets diverged"
+        );
+    }
+    assert_eq!(fresh.take_key_churn(), oracle.take_key_churn());
+    // The replayed end-state matches the live engine's manager too.
+    assert_eq!(
+        fresh.cached_key_sample(usize::MAX),
+        front.engine.kv.cached_key_sample(usize::MAX),
+        "replay must land on the live manager's resident set"
+    );
+    assert_eq!(fresh.stats, front.engine.kv.stats);
+    // And the remaining victim order is identical block for block.
+    loop {
+        let a = fresh.pop_victim();
+        let b = oracle.pop_victim();
+        assert_eq!(a, b, "post-run victim order diverged");
+        if a.is_none() {
+            break;
+        }
+    }
+    fresh.check_invariants().unwrap();
+    oracle.check_invariants().unwrap();
+}
