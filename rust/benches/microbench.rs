@@ -14,6 +14,10 @@
 //!     counts, meaningful even under `--quick`)
 //!   * engine step allocation count — a counting global allocator proves
 //!     the steady-state step loop is allocation-free (release builds)
+//!   * obs-step pair — the engine step loop with tracing disabled (the
+//!     `Option<TraceRing>` branch is a no-op) vs enabled (every step
+//!     records an iteration span into the ring); fixed iteration counts,
+//!     so `--gate-obs` sees real timings even under `--quick`
 //!   * KV manager hot paths at 1k/16k/64k blocks — pre-PR `OracleKvManager`
 //!     (global BTreeSet free table, scan-per-call availability) vs. the
 //!     bucketed victim index: allocate+release cycle, `availability()`,
@@ -28,7 +32,7 @@
 //!
 //! Flags (after `--`):
 //!   `--bench-json <path>`        write the machine-readable report
-//!                                (default name: BENCH_PR5.json) and
+//!                                (default name: BENCH_PR6.json) and
 //!                                self-validate it by re-parsing
 //!   `--quick`                    tiny iteration counts (CI smoke: proves
 //!                                the harness runs headless; micro timings
@@ -41,6 +45,10 @@
 //!                                1.0x vs. the oracle baseline and the
 //!                                steady-state engine step allocation
 //!                                count is 0 (release builds)
+//!   `--gate-obs`                 fail unless the traced engine step stays
+//!                                within the noise band of the untraced
+//!                                one and the steady-state step loop stays
+//!                                allocation-free with tracing off
 //!   `--write-experiments <path>` rewrite the `<!-- perf:begin/end -->`
 //!                                block of EXPERIMENTS.md with the
 //!                                before/after table
@@ -273,8 +281,11 @@ impl Harness {
                 speedups = speedups.set(&format!("kv-requeue-scatter@{size}"), s);
             }
         }
+        if let Some(s) = self.speedup("obs-step", 8) {
+            speedups = speedups.set("obs-step@8", s);
+        }
         Json::obj()
-            .set("bench", "BENCH_PR5")
+            .set("bench", "BENCH_PR6")
             .set(
                 "note",
                 "baseline = pre-PR code paths (clone-trial scheduler, full \
@@ -652,7 +663,7 @@ fn bench_kv_pairs(h: &mut Harness, size: usize, variant: &str) {
     // churn on middle-aged cached keys re-inserts at mid-bucket positions,
     // where the ordered intrusive list pays O(distance-to-nearer-end) per
     // link vs the oracle's O(log n) BTreeSet — the one pattern the bucket
-    // design trades away. Kept visible in BENCH_PR5.json so the perf
+    // design trades away. Kept visible in BENCH_PR6.json so the perf
     // trajectory tracks it; a skip-hint can reclaim it if real workloads
     // ever look like this.
     let mid = warm.len() / 2;
@@ -982,6 +993,63 @@ fn bench_step_allocs() -> AllocReport {
     AllocReport { steady, mean }
 }
 
+// ---- obs: trace-hook overhead on the engine step loop ----------------------
+
+/// Shared engine setup for the obs-step pair: 8 long offline decodes past
+/// their admission transient, so every measured step is the steady decode
+/// loop where the trace hooks sit. `max_new_tokens` is sized so the engine
+/// never goes idle inside the measured window (warmup + 7 runs x 500 steps
+/// < 5000 decode tokens per request).
+fn obs_step_engine(traced: bool) -> Engine<SimBackend> {
+    let mut cfg = SystemConfig::a100_llama8b();
+    cfg.scheduler.kind = SchedulerKind::Echo;
+    cfg.cache.capacity_tokens = 50_000;
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), 7, 0.0);
+    let mut e = Engine::new(cfg, backend);
+    e.set_sample_interval(f64::INFINITY);
+    if traced {
+        e.enable_trace(echo::obs::DEFAULT_TRACE_EVENTS);
+    }
+    for _ in 0..8 {
+        let id = e.store.fresh_id();
+        e.submit_offline(Request::new(
+            id,
+            TaskClass::Offline,
+            0.0,
+            PromptSpec::sim(200, None),
+            5000,
+        ));
+    }
+    // Warm up: admissions + prefill transients, lazy histogram buckets, and
+    // the recycled step buffers all settle here.
+    for _ in 0..64 {
+        e.step().unwrap();
+    }
+    e
+}
+
+/// The PR 6 pair: engine step with tracing disabled (`baseline` — the
+/// `Option<TraceRing>` branch folds to a skipped block) vs enabled
+/// (`incremental` — every step records an iteration span plus lifecycle and
+/// KV-delta events into the pre-sized ring). The hooks are designed to cost
+/// nothing measurable either way; `--gate-obs` holds the enabled side to
+/// the shared 5% noise band, which transitively bounds the disabled side.
+fn bench_obs_step(h: &mut Harness, variant: &str) {
+    let traced = variant == "incremental";
+    let mode = if traced { "tracing on" } else { "tracing off" };
+    let mut e = obs_step_engine(traced);
+    h.bench_fixed(
+        &format!("engine step [{mode}] (8 offline decodes)"),
+        "obs-step",
+        variant,
+        8,
+        500,
+        || {
+            e.step().unwrap();
+        },
+    );
+}
+
 #[cfg(not(feature = "runtime"))]
 fn bench_pjrt() {
     println!("pjrt step: skipped (built without the `runtime` feature)");
@@ -1043,6 +1111,9 @@ fn perf_table(h: &Harness) -> String {
     }
     pairs.push(("estimator", 64));
     pairs.push(("content-keys", 2048));
+    // obs-step "before" is tracing off and "after" is tracing on, so the
+    // interesting number is the speedup staying at ~1.0x.
+    pairs.push(("obs-step", 8));
     for (path, size) in pairs {
         let (Some(b), Some(i)) = (
             h.median_of(path, "baseline", size),
@@ -1123,10 +1194,11 @@ fn main() {
     let quick = args.iter().any(|a| a == "--quick");
     let gate_fleet = args.iter().any(|a| a == "--gate-fleet");
     let gate_kv = args.iter().any(|a| a == "--gate-kv");
+    let gate_obs = args.iter().any(|a| a == "--gate-obs");
     let json_path = args
         .iter()
         .position(|a| a == "--bench-json")
-        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR5.json".into()));
+        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR6.json".into()));
     let experiments_path = args
         .iter()
         .position(|a| a == "--write-experiments")
@@ -1155,6 +1227,9 @@ fn main() {
         }
     }
     let alloc = bench_step_allocs();
+    for variant in ["baseline", "incremental"] {
+        bench_obs_step(&mut h, variant);
+    }
     bench_kv_ops(&mut h);
     bench_radix(&mut h);
     bench_estimator(&mut h);
@@ -1181,6 +1256,9 @@ fn main() {
                 println!("speedup fleet-step@{replicas}x{threads}: {s:.2}x");
             }
         }
+    }
+    if let Some(s) = h.speedup("obs-step", 8) {
+        println!("speedup obs-step@8 (untraced vs traced): {s:.2}x");
     }
     if gate_fleet {
         let s = fleet_speedup(&h, 16, 4).expect("fleet-step@16x4 must be measured");
@@ -1224,13 +1302,37 @@ fn main() {
         }
     }
 
+    if gate_obs {
+        let s = h
+            .speedup("obs-step", 8)
+            .expect("obs-step pair must be measured");
+        println!("obs gate: traced vs untraced engine step = {s:.2}x");
+        // Same 5% noise band as the fleet/kv gates: the per-step trace cost
+        // is a handful of field writes into a pre-sized ring, orders of
+        // magnitude below the scheduler/estimator work in a step, so a
+        // below-band reading means a hook started doing real work (or
+        // allocating) on the hot path.
+        assert!(
+            s >= 0.95,
+            "enabling tracing must not slow the engine step loop beyond \
+             the noise band (measured {s:.2}x, gate 0.95x)"
+        );
+        if cfg!(not(debug_assertions)) {
+            assert_eq!(
+                alloc.steady, 0,
+                "obs gate: with tracing off the steady-state engine step \
+                 must stay allocation-free"
+            );
+        }
+    }
+
     if let Some(path) = json_path {
         let j = h.to_json(quick, &alloc);
         let text = j.pretty();
         std::fs::write(&path, &text).expect("write bench json");
         // Self-validate: the emitted report must round-trip through the
         // in-repo JSON parser (the CI smoke step relies on this).
-        let parsed = Json::parse(&text).expect("BENCH_PR5.json must parse");
+        let parsed = Json::parse(&text).expect("BENCH_PR6.json must parse");
         let n = parsed
             .get("entries")
             .and_then(|e| e.as_arr())
@@ -1263,6 +1365,13 @@ fn main() {
                 .and_then(|v| v.as_f64())
                 .is_some(),
             "fleet-step@16x4 speedup missing from report"
+        );
+        assert!(
+            parsed
+                .at("speedups.obs-step@8")
+                .and_then(|v| v.as_f64())
+                .is_some(),
+            "obs gate speedup obs-step@8 missing from report"
         );
         assert!(
             parsed

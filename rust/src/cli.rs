@@ -2,10 +2,12 @@
 //!
 //! Subcommands:
 //!   serve      — the serving front door: line-delimited-JSON wire protocol
-//!                (submit/cancel/stream/metrics) over the `Serve` trait, for
-//!                one engine or a co-simulated fleet
+//!                (submit/cancel/stream/metrics/obs) over the `Serve` trait,
+//!                for one engine or a co-simulated fleet
 //!   serve-demo — threaded server demo load on the real PJRT model
 //!   simulate   — mixed online/offline run on the cost-model backend
+//!   obs        — traced simulation + observability summary (histogram
+//!                table, estimator-accuracy audit, top recompute costs)
 //!   estimate   — deployer resource/throughput estimation (paper §5.4)
 //!   calibrate  — fit Eq. 6-8 coefficients against the PJRT backend
 //!   trace-gen  — generate a paper-shaped arrival trace to a JSON file
@@ -37,7 +39,7 @@ pub fn run_cli() -> i32 {
     let program = if argv.is_empty() { "echo".into() } else { argv.remove(0) };
     if argv.is_empty() {
         eprintln!(
-            "{ABOUT}\n\nSubcommands: serve, serve-demo, simulate, cluster, estimate, \
+            "{ABOUT}\n\nSubcommands: serve, serve-demo, simulate, cluster, obs, estimate, \
              calibrate, trace-gen, figures, smoke\nRun `{program} <cmd> --help` for options."
         );
         return 2;
@@ -48,6 +50,7 @@ pub fn run_cli() -> i32 {
         "serve-demo" => serve_demo(&program, argv),
         "simulate" => simulate(&program, argv),
         "cluster" => cluster(&program, argv),
+        "obs" => obs_cmd(&program, argv),
         "estimate" => estimate(&program, argv),
         "calibrate" => calibrate(&program, argv),
         "trace-gen" => trace_gen(&program, argv),
@@ -87,7 +90,7 @@ fn load_config(args: &crate::utils::cli::Args) -> anyhow::Result<SystemConfig> {
 fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let cli = Cli::new(
         "serving front door: line-delimited JSON (submit/cancel/stream/\
-         metrics/shutdown verbs) over the Serve trait",
+         metrics/obs/shutdown verbs) over the Serve trait",
     )
     .opt("preset", "a100_llama8b", "config preset")
     .opt("config", "", "config JSON file (overrides preset)")
@@ -104,6 +107,11 @@ fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     )
     .opt("listen", "127.0.0.1:7878", "TCP bind address")
     .flag("stdio", "speak the protocol on stdin/stdout instead of TCP")
+    .opt(
+        "trace-out",
+        "",
+        "write a Chrome-trace/Perfetto JSON of the session when it ends",
+    )
     .opt("seed", "42", "rng seed");
     let args = parse_or_usage(&cli, program, argv)?;
     let mut cfg = load_config(&args)?;
@@ -112,24 +120,40 @@ fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let slo = cfg.slo;
     cfg.seed = seed;
     let listen = args.str("listen");
+    let trace_out = args.str("trace-out");
     if replicas == 1 {
         let backend = SimBackend::new(TimeModel::new(cfg.time_model), seed, 0.0);
-        let mut handle = crate::server::spawn(Engine::new(cfg, backend));
+        let mut engine = Engine::new(cfg, backend);
+        if !trace_out.is_empty() {
+            engine.enable_trace(crate::obs::DEFAULT_TRACE_EVENTS);
+        }
+        let mut handle = crate::server::spawn(engine);
         if args.flag("stdio") {
             wire::serve_stdio(&mut handle)?;
         } else {
             wire::serve_tcp(listen.as_str(), &mut handle)?;
         }
         let engine = handle.shutdown();
+        if let (false, Some(ring)) = (trace_out.is_empty(), engine.trace()) {
+            std::fs::write(&trace_out, crate::obs::chrome_trace(&[(0, ring)]).to_string())?;
+            eprintln!("echo serve: wrote {trace_out}");
+        }
         println!("{}", engine.metrics.to_json(&slo).pretty());
     } else {
         let mut cc = ClusterConfig::new(cfg, replicas);
         cc.threads = args.usize("threads").map_err(anyhow::Error::msg)?.max(1);
+        if !trace_out.is_empty() {
+            cc.trace_events = crate::obs::DEFAULT_TRACE_EVENTS;
+        }
         let mut front = ClusterServe::new(cc);
         if args.flag("stdio") {
             wire::serve_stdio(&mut front)?;
         } else {
             wire::serve_tcp(listen.as_str(), &mut front)?;
+        }
+        if !trace_out.is_empty() {
+            std::fs::write(&trace_out, front.sim.chrome_trace().to_string())?;
+            eprintln!("echo serve: wrote {trace_out}");
         }
         let horizon = front.clock().max(1e-9);
         println!("{}", front.sim.report(horizon).to_json().pretty());
@@ -222,6 +246,11 @@ fn simulate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         .opt("offline-dataset", "loogle_qa_short", "sharegpt | loogle_qa_short | loogle_qa_long | toolbench | nextqa")
         .opt("offline-count", "0", "offline backlog size (0 = auto)")
         .opt("seed", "42", "rng seed")
+        .opt(
+            "trace-out",
+            "",
+            "write a Chrome-trace/Perfetto JSON of the run to this path",
+        )
         .opt("out", "", "write metrics JSON to this path");
     let args = parse_or_usage(&cli, program, argv)?;
     let cfg = load_config(&args)?;
@@ -235,6 +264,44 @@ fn simulate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let kind = cfg.scheduler.kind;
     let mut front = EngineServe::new(Engine::new(cfg, backend));
     front.engine.set_sample_interval(horizon / 480.0);
+    if !args.str("trace-out").is_empty() {
+        front.engine.enable_trace(crate::obs::DEFAULT_TRACE_EVENTS);
+    }
+    let n_off = args.usize("offline-count").map_err(anyhow::Error::msg)?;
+    submit_mixed_load(&mut front, horizon, rate, &spec, n_off, seed)?;
+    front.run_until(horizon, &mut NullSink)?;
+    let e = front.into_engine();
+    if let Some(ring) = e.trace() {
+        let path = args.str("trace-out");
+        std::fs::write(&path, crate::obs::chrome_trace(&[(0, ring)]).to_string())?;
+        println!("wrote {path}");
+    }
+    let j = e
+        .metrics
+        .to_json(&slo)
+        .set("strategy", kind.name())
+        .set("offline_dataset", spec.name)
+        .set("hit_ratio", e.kv.stats.hit_ratio())
+        .set("horizon", horizon);
+    println!("{}", j.pretty());
+    if !args.str("out").is_empty() {
+        std::fs::write(args.str("out"), j.pretty())?;
+    }
+    Ok(())
+}
+
+/// Submit the standard mixed load through a serving front door: tidal
+/// online arrivals plus a shuffled offline corpus whose submission order
+/// interleaves prefix groups (see `figures::run_mixed`). Shared by
+/// `simulate` and `obs`. `offline_count` 0 auto-sizes from the horizon.
+fn submit_mixed_load(
+    front: &mut EngineServe<SimBackend>,
+    horizon: f64,
+    rate: f64,
+    spec: &DatasetSpec,
+    offline_count: usize,
+    seed: u64,
+) -> anyhow::Result<()> {
     let trace = Trace::generate(&TraceConfig::compressed(horizon, rate, seed));
     let mut rng = Rng::new(seed);
     for &t in &trace.arrivals {
@@ -242,16 +309,14 @@ fn simulate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         let out = rng.range_usize(16, 256);
         front.submit(SubmitSpec::online(PromptSpec::sim(len, None), out).at(t))?;
     }
-    let mut n_off = args.usize("offline-count").map_err(anyhow::Error::msg)?;
-    if n_off == 0 {
-        n_off = figures::backlog_size(&spec, horizon);
-    }
-    // Synthesize the offline corpus in a scratch store, then feed it
-    // through the serving API; submission order interleaves prefix groups
-    // (see figures::run_mixed).
+    let n_off = if offline_count == 0 {
+        figures::backlog_size(spec, horizon)
+    } else {
+        offline_count
+    };
     let mut scratch = crate::core::RequestStore::new();
     let mut batch = synthesize(
-        &spec,
+        spec,
         n_off,
         crate::core::TaskClass::Offline,
         0.0,
@@ -263,18 +328,57 @@ fn simulate(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         let r = scratch.get(id);
         front.submit(SubmitSpec::offline(r.prompt.clone(), r.max_new_tokens))?;
     }
+    Ok(())
+}
+
+/// Traced run + observability report: histogram table (TTFT/TPOT/queue
+/// wait), estimator-accuracy audit, and the top recompute-cost requests.
+fn obs_cmd(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "traced simulation + observability summary: latency/estimator \
+         histogram table and top recompute-cost requests",
+    )
+    .opt("preset", "a100_llama8b", "config preset")
+    .opt("config", "", "config JSON file (overrides preset)")
+    .opt("strategy", "", "override scheduler strategy")
+    .opt("horizon", "120", "sim horizon, seconds")
+    .opt("rate", "12", "mean online arrival rate, req/s")
+    .opt("offline-dataset", "loogle_qa_short", "sharegpt | loogle_qa_short | loogle_qa_long | toolbench | nextqa")
+    .opt("offline-count", "0", "offline backlog size (0 = auto)")
+    .opt("trace-events", "65536", "per-engine trace ring capacity (events)")
+    .opt("seed", "42", "rng seed")
+    .opt(
+        "trace-out",
+        "",
+        "also write the Chrome-trace/Perfetto JSON to this path",
+    )
+    .opt("out", "", "write the summary JSON to this path");
+    let args = parse_or_usage(&cli, program, argv)?;
+    let cfg = load_config(&args)?;
+    let horizon = args.f64("horizon").map_err(anyhow::Error::msg)?;
+    let rate = args.f64("rate").map_err(anyhow::Error::msg)?;
+    let seed = args.u64("seed").map_err(anyhow::Error::msg)?;
+    let spec = dataset_by_name(&args.str("offline-dataset"))?;
+
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), seed, 0.02);
+    let mut front = EngineServe::new(Engine::new(cfg, backend));
+    let events = args.usize("trace-events").map_err(anyhow::Error::msg)?.max(1);
+    front.engine.enable_trace(events);
+    let n_off = args.usize("offline-count").map_err(anyhow::Error::msg)?;
+    submit_mixed_load(&mut front, horizon, rate, &spec, n_off, seed)?;
     front.run_until(horizon, &mut NullSink)?;
     let e = front.into_engine();
-    let j = e
-        .metrics
-        .to_json(&slo)
-        .set("strategy", kind.name())
-        .set("offline_dataset", spec.name)
-        .set("hit_ratio", e.kv.stats.hit_ratio())
-        .set("horizon", horizon);
-    println!("{}", j.pretty());
+    let ring = e.trace().expect("tracing was enabled above");
+    let summary = crate::obs::summary(&e.metrics, &[(0, ring)]);
+    print!("{}", crate::obs::render_summary(&summary));
+    if !args.str("trace-out").is_empty() {
+        let path = args.str("trace-out");
+        std::fs::write(&path, crate::obs::chrome_trace(&[(0, ring)]).to_string())?;
+        println!("wrote {path}");
+    }
     if !args.str("out").is_empty() {
-        std::fs::write(args.str("out"), j.pretty())?;
+        std::fs::write(args.str("out"), summary.pretty())?;
+        println!("wrote {}", args.str("out"));
     }
     Ok(())
 }
@@ -303,6 +407,11 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     .opt("min-replicas", "1", "autoscale floor")
     .opt("max-replicas", "0", "autoscale ceiling (0 = 2x --replicas)")
     .opt("seed", "42", "rng seed")
+    .opt(
+        "trace-out",
+        "",
+        "write a fleet Chrome-trace/Perfetto JSON (one track per replica)",
+    )
     .opt("out", "", "write the cluster report JSON to this path");
     let args = parse_or_usage(&cli, program, argv)?;
     let mut base = load_config(&args)?;
@@ -315,6 +424,9 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let mut cc = ClusterConfig::new(base, replicas);
     cc.sync_dt = args.f64("sync-dt").map_err(anyhow::Error::msg)?.max(1e-3);
     cc.threads = args.usize("threads").map_err(anyhow::Error::msg)?.max(1);
+    if !args.str("trace-out").is_empty() {
+        cc.trace_events = crate::obs::DEFAULT_TRACE_EVENTS;
+    }
     // Largest fleet the run can reach — backlog auto-sizing must cover it.
     let mut fleet_cap = replicas;
     if args.flag("autoscale") {
@@ -416,6 +528,11 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         "fleet: peak {} replicas, mean {:.2}; backlog remaining {}",
         report.peak_replicas, report.mean_replicas, report.backlog_remaining
     );
+    if !args.str("trace-out").is_empty() {
+        let path = args.str("trace-out");
+        std::fs::write(&path, front.sim.chrome_trace().to_string())?;
+        println!("wrote {path}");
+    }
     if !args.str("out").is_empty() {
         std::fs::write(args.str("out"), report.to_json().pretty())?;
         println!("wrote {}", args.str("out"));

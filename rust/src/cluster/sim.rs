@@ -17,6 +17,7 @@ use crate::config::SystemConfig;
 use crate::core::{PromptSpec, Request, RequestId, TaskClass};
 use crate::estimator::{PrefillItem, TimeModel};
 use crate::metrics::Metrics;
+use crate::obs::TraceRing;
 use crate::serve::TicketId;
 use crate::trace::Trace;
 use crate::utils::hash::FxHashMap;
@@ -137,6 +138,11 @@ pub struct ClusterConfig {
     /// stays single-threaded at quantum boundaries, and the parallel
     /// path is bit-exact with the serial one (see `advance_replicas`).
     pub threads: usize,
+    /// Trace-ring capacity per replica (0 = tracing disabled). When set,
+    /// every replica records lifecycle/iteration/KV events into a bounded
+    /// ring (`obs::TraceRing`) stamped with virtual time; rings survive
+    /// retirement so `trace_tracks` covers the whole fleet history.
+    pub trace_events: usize,
 }
 
 impl ClusterConfig {
@@ -156,6 +162,7 @@ impl ClusterConfig {
             jitter: 0.02,
             scale: None,
             threads: 1,
+            trace_events: 0,
         }
     }
 }
@@ -267,6 +274,10 @@ pub struct ClusterSim {
     /// batch-replay drivers (no tickets).
     ticket_place: FxHashMap<TicketId, (usize, RequestId)>,
     place_ticket: FxHashMap<(usize, RequestId), TicketId>,
+    /// Trace rings taken from retired replicas (replica id, ring), so a
+    /// fleet trace covers replicas that scaled away mid-run. Empty unless
+    /// `cfg.trace_events > 0`.
+    retired_traces: Vec<(usize, TraceRing)>,
 }
 
 impl ClusterSim {
@@ -298,6 +309,7 @@ impl ClusterSim {
             next_eval: 0.0,
             ticket_place: FxHashMap::default(),
             place_ticket: FxHashMap::default(),
+            retired_traces: Vec::new(),
             cfg,
         };
         for _ in 0..sim.cfg.replicas {
@@ -358,6 +370,9 @@ impl ClusterSim {
         // Join at cluster time: a mid-run spawn must not execute work "in
         // the past" (its virtual seconds would inflate fleet throughput).
         rep.engine.clock = now;
+        if self.cfg.trace_events > 0 {
+            rep.engine.enable_trace(self.cfg.trace_events);
+        }
         self.router.sync(rep.digest(self.cfg.summary_cap));
         self.replicas.push(rep);
     }
@@ -547,8 +562,11 @@ impl ClusterSim {
                 .iter()
                 .position(|r| r.id == id)
                 .expect("retiring id is live");
-            let rep = self.replicas.remove(pos);
+            let mut rep = self.replicas.remove(pos);
             self.router.forget(id);
+            if let Some(ring) = rep.engine.take_trace() {
+                self.retired_traces.push((id, ring));
+            }
             self.retired
                 .push(replica_report(&rep, Some(now), &slo));
         }
@@ -720,6 +738,31 @@ impl ClusterSim {
                 .map(|r| &r.metrics)
                 .chain(self.replicas.iter().map(|r| &r.engine.metrics)),
         )
+    }
+
+    /// Every trace ring the fleet has produced, as `(replica_id, ring)`
+    /// tracks sorted by replica id — retired rings first (their ids are
+    /// older), then live engines. Empty unless `cfg.trace_events > 0`.
+    /// Replica ids are unique and rings are stamped with virtual time, so
+    /// the track list is identical for any `cfg.threads`.
+    pub fn trace_tracks(&self) -> Vec<(usize, &TraceRing)> {
+        let mut tracks: Vec<(usize, &TraceRing)> = self
+            .retired_traces
+            .iter()
+            .map(|(id, ring)| (*id, ring))
+            .collect();
+        for rep in &self.replicas {
+            if let Some(ring) = rep.engine.trace() {
+                tracks.push((rep.id, ring));
+            }
+        }
+        tracks.sort_by_key(|&(id, _)| id);
+        tracks
+    }
+
+    /// Fleet Chrome-trace JSON (one Perfetto process per replica).
+    pub fn chrome_trace(&self) -> Json {
+        crate::obs::chrome_trace(&self.trace_tracks())
     }
 
     pub fn report(&self, horizon: f64) -> ClusterReport {
@@ -956,6 +999,74 @@ mod tests {
         let serial = run(1);
         assert_eq!(serial, run(2));
         assert_eq!(serial, run(4), "threads > replicas clamps safely");
+    }
+
+    #[test]
+    fn sample_cadence_survives_quantum_boundaries() {
+        // `Engine::run_until` restarts at every sync quantum, but the
+        // metrics sampler's anchor lives in `SampleCtl` (see `reset`), so
+        // the sampled instants must not depend on the quantum size.
+        let run = |sync_dt: f64| {
+            let mut cfg = small_cfg();
+            cfg.replicas = 1;
+            cfg.jitter = 0.0;
+            cfg.sync_dt = sync_dt;
+            let mut sim = ClusterSim::new(cfg);
+            sim.replicas[0].engine.set_sample_interval(0.3);
+            sim.submit_offline_backlog(offline_jobs(
+                &DatasetSpec::loogle_qa_short().scaled(0.05),
+                16,
+                3,
+            ));
+            sim.run(&[], 30.0).unwrap();
+            sim.replicas[0]
+                .engine
+                .metrics
+                .active_offline
+                .points
+                .iter()
+                .map(|&(t, _)| t.to_bits())
+                .collect::<Vec<u64>>()
+        };
+        let fine = run(0.25);
+        let coarse = run(2.0);
+        assert!(!fine.is_empty(), "the run must sample at least once");
+        assert_eq!(fine, coarse, "sample instants must not depend on sync_dt");
+        let times: Vec<f64> = fine.iter().map(|&b| f64::from_bits(b)).collect();
+        for w in times.windows(2) {
+            assert!(
+                w[1] - w[0] >= 0.3 - 1e-9,
+                "samples closer than the configured interval: {w:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn traced_cluster_collects_tracks_across_retirement() {
+        let mut cfg = small_cfg();
+        cfg.replicas = 1;
+        cfg.trace_events = 4096;
+        cfg.scale = Some(ScalePolicy {
+            eval_period: 5.0,
+            rate_window: 20.0,
+            ..ScalePolicy::tidal(1, 4)
+        });
+        let mut sim = ClusterSim::new(cfg);
+        let trace = Trace::generate(&TraceConfig::compressed(240.0, 6.0, 5));
+        let online = online_jobs_from_trace(&trace, &DatasetSpec::sharegpt(), 5);
+        let report = sim.run(&online, 240.0).unwrap();
+        assert!(report.peak_replicas > 1, "scale-up must have happened");
+        let tracks = sim.trace_tracks();
+        assert_eq!(
+            tracks.len(),
+            sim.next_replica_id,
+            "every replica ever spawned keeps a track, retired or live"
+        );
+        assert!(tracks.windows(2).all(|w| w[0].0 < w[1].0), "tracks sorted");
+        assert!(tracks.iter().any(|(_, ring)| !ring.is_empty()));
+        let chrome = sim.chrome_trace();
+        let events = chrome.at("traceEvents").and_then(Json::as_arr).unwrap();
+        assert!(events.len() > 8, "metadata plus real events");
     }
 
     #[test]

@@ -19,6 +19,7 @@ use crate::core::{ReqState, Request, RequestId, RequestStore, TaskClass, Token};
 use crate::estimator::{MemoryPredictor, TimeModel};
 use crate::kvcache::{EvictionPolicy, KvManager};
 use crate::metrics::{Metrics, SampleCtl};
+use crate::obs::{TraceEvent, TraceRing};
 use crate::scheduler::{OfflinePool, Outcome, Plan, Scheduler, WorkKind};
 use crate::utils::hash::FxHashSet;
 
@@ -99,6 +100,11 @@ pub struct Engine<B: ExecutionBackend> {
     /// load/digest scans iterate this set instead of the full history.
     live: BTreeSet<RequestId>,
     sample: SampleCtl,
+    /// Iteration-level trace collector (PR 6 observability). `None` =
+    /// tracing disabled: every hook below is a single `is_some` branch and
+    /// the steady step loop stays allocation-free. Enabled, the ring is
+    /// pre-allocated and `push` never allocates either.
+    trace: Option<TraceRing>,
     /// Hard stop against pathological loops; generous (24 h at 10 ms/iter).
     pub max_iterations: usize,
     /// Ceiling for idle-time jumps: when the engine is idle it fast-forwards
@@ -138,6 +144,7 @@ impl<B: ExecutionBackend> Engine<B> {
             scratch: StepScratch::default(),
             live: BTreeSet::new(),
             sample: SampleCtl::new(0.0),
+            trace: None,
             max_iterations: 10_000_000,
             clock_cap: f64::INFINITY,
             cfg,
@@ -145,8 +152,37 @@ impl<B: ExecutionBackend> Engine<B> {
     }
 
     /// Configure series sampling cadence (seconds of sim time per point).
+    /// The previous sample anchor is preserved, so mid-run reconfiguration
+    /// (or a cluster re-applying the interval at quantum boundaries) does
+    /// not make sampling drift or double-sample.
     pub fn set_sample_interval(&mut self, dt: f64) {
+        let last = self.sample.last_sample();
         self.sample = SampleCtl::new(dt);
+        self.sample.reset(last);
+    }
+
+    /// Enable iteration-level tracing with a ring of `events` capacity
+    /// (see [`crate::obs`]). Allocates the ring once, here; the step loop
+    /// itself never allocates for tracing.
+    pub fn enable_trace(&mut self, events: usize) {
+        self.trace = Some(TraceRing::with_capacity(events));
+    }
+
+    /// The trace collector, if tracing is enabled.
+    pub fn trace(&self) -> Option<&TraceRing> {
+        self.trace.as_ref()
+    }
+
+    /// Detach the trace collector, disabling tracing from here on.
+    pub fn take_trace(&mut self) -> Option<TraceRing> {
+        self.trace.take()
+    }
+
+    #[inline]
+    fn trace_push(&mut self, ev: TraceEvent) {
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(ev);
+        }
     }
 
     /// Queue an online request for arrival at `req.arrival` (>= clock).
@@ -166,6 +202,11 @@ impl<B: ExecutionBackend> Engine<B> {
             }
         }
         self.metrics.online_arrivals.push(t, 1.0);
+        self.trace_push(TraceEvent::Submit {
+            t,
+            req: id,
+            online: true,
+        });
     }
 
     /// Register an offline request in the pool (available immediately).
@@ -187,6 +228,11 @@ impl<B: ExecutionBackend> Engine<B> {
         self.kv.register_future(&keys);
         self.pool.add(id, prompt_len, keys);
         self.live.insert(id);
+        self.trace_push(TraceEvent::Submit {
+            t: self.clock,
+            req: id,
+            online: false,
+        });
     }
 
     /// Withdraw a pooled offline request from this engine (cluster
@@ -274,6 +320,10 @@ impl<B: ExecutionBackend> Engine<B> {
         r.release_interned_keys();
         self.live.remove(&id);
         self.metrics.record_cancellation(class);
+        self.trace_push(TraceEvent::Cancel {
+            t: self.clock,
+            req: id,
+        });
         true
     }
 
@@ -343,6 +393,13 @@ impl<B: ExecutionBackend> Engine<B> {
         }
 
         // 2. schedule (into the recycled outcome)
+        // KV stats snapshot for the per-iteration delta event (trace only;
+        // `CacheStats` is a handful of counters, the clone is heap-free).
+        let kv_before = if self.trace.is_some() {
+            Some(self.kv.stats.clone())
+        } else {
+            None
+        };
         let mut outcome = std::mem::take(&mut self.scratch.outcome);
         let out_caps = outcome_caps(&outcome);
         self.sched.schedule_into(
@@ -359,11 +416,41 @@ impl<B: ExecutionBackend> Engine<B> {
         }
         for &id in &outcome.admitted_online {
             self.in_queue.remove(&id);
+            let wait = (self.clock - self.store.get(id).arrival).max(0.0);
+            self.metrics.queue_wait_hist.record(wait);
+            self.trace_push(TraceEvent::Admit {
+                t: self.clock,
+                req: id,
+                online: true,
+                wait,
+            });
+        }
+        if self.trace.is_some() {
+            for &id in &outcome.admitted_offline {
+                let wait = (self.clock - self.store.get(id).arrival).max(0.0);
+                self.trace_push(TraceEvent::Admit {
+                    t: self.clock,
+                    req: id,
+                    online: false,
+                    wait,
+                });
+            }
         }
         self.metrics.preemptions += outcome.preempted.len();
         self.metrics.skipped_offline += outcome.skipped_offline;
         for &victim in &outcome.preempted {
             self.backend.on_release(victim);
+            if self.trace.is_some() {
+                // `seq_len` tokens must be re-prefilled on re-admission
+                // (modulo prefix-cache hits) — the recompute cost Eq. 2
+                // punishes.
+                let cost = self.store.get(victim).seq_len() as u32;
+                self.trace_push(TraceEvent::Preempt {
+                    t: self.clock,
+                    req: victim,
+                    cost_tokens: cost,
+                });
+            }
         }
 
         if outcome.plan.is_empty() {
@@ -397,9 +484,39 @@ impl<B: ExecutionBackend> Engine<B> {
                 return Err(e);
             }
         };
+        let iter_start = self.clock;
         self.clock += elapsed;
         self.metrics.busy_time += elapsed;
         self.metrics.iterations += 1;
+        // Estimator audit: predicted batch time (Eq. 8) vs what the
+        // backend reported (no-op when the estimator made no prediction).
+        self.metrics.record_estimate(outcome.plan.est_time, elapsed);
+        if self.trace.is_some() {
+            let mut prefills = 0u32;
+            let mut decodes = 0u32;
+            let mut batch_tokens = 0u32;
+            for item in &outcome.plan.items {
+                match item.kind {
+                    WorkKind::Prefill { chunk } => {
+                        prefills += 1;
+                        batch_tokens += chunk as u32;
+                    }
+                    WorkKind::Decode => {
+                        decodes += 1;
+                        batch_tokens += 1;
+                    }
+                }
+            }
+            self.trace_push(TraceEvent::Iteration {
+                start: iter_start,
+                dur: elapsed,
+                prefills,
+                decodes,
+                tokens: batch_tokens,
+                trials: outcome.trials as u32,
+                est: outcome.plan.est_time,
+            });
+        }
 
         // 4. token/completion accounting
         debug_assert_eq!(tokens.len(), outcome.plan.items.len());
@@ -422,8 +539,15 @@ impl<B: ExecutionBackend> Engine<B> {
                         // emitted token's own KV is not resident yet, so
                         // computed stays at the old seq_len = new seq_len-1.
                         emitted = true;
+                        let first = r.first_token_at.is_none();
                         if r.record_token(self.clock, *token) {
                             finished.push(item.req);
+                        }
+                        if first {
+                            self.trace_push(TraceEvent::FirstToken {
+                                t: self.clock,
+                                req: item.req,
+                            });
                         }
                     }
                 }
@@ -445,7 +569,37 @@ impl<B: ExecutionBackend> Engine<B> {
             }
         }
         for &id in &finished {
+            if self.trace.is_some() {
+                let (online, tokens_out) = {
+                    let r = self.store.get(id);
+                    (r.class == TaskClass::Online, r.generated as u32)
+                };
+                self.trace_push(TraceEvent::Finish {
+                    t: self.clock,
+                    req: id,
+                    online,
+                    tokens: tokens_out,
+                });
+            }
             self.finish_request(id);
+        }
+        // KV activity delta over this iteration (schedule + execute +
+        // completions), emitted only when some counter moved.
+        if let Some(before) = kv_before {
+            let s = &self.kv.stats;
+            let lookups = (s.lookup_blocks - before.lookup_blocks) as u32;
+            let hits = (s.hit_blocks - before.hit_blocks) as u32;
+            let evictions = (s.evictions - before.evictions) as u32;
+            let superseded = (s.superseded - before.superseded) as u32;
+            if lookups + hits + evictions + superseded > 0 {
+                self.trace_push(TraceEvent::Kv {
+                    t: self.clock,
+                    lookups,
+                    hits,
+                    evictions,
+                    superseded,
+                });
+            }
         }
         if tokens.capacity() > tok_cap || finished.capacity() > fin_cap {
             self.scratch.grows += 1;

@@ -41,6 +41,9 @@ pub struct CacheStats {
     pub punished_tokens: u64,
     /// Tokens of prefill saved through prefix hits.
     pub saved_tokens: u64,
+    /// Cached entries superseded by a fresh block for the same content key
+    /// (the old block lingers as a zombie holder until its RC drains).
+    pub superseded: u64,
 }
 
 impl CacheStats {
@@ -561,6 +564,7 @@ impl KvManager {
     fn cache_insert(&mut self, k: u128, b: BlockId) {
         if let Some(old_b) = self.cached.insert(k, b) {
             if old_b != b {
+                self.stats.superseded += 1;
                 self.stale_holders.entry(k).or_default().push(old_b);
             }
             return;

@@ -142,7 +142,10 @@ impl OracleKvManager {
     }
 
     fn cache_insert(&mut self, k: u128, b: BlockId) {
-        if self.cached.insert(k, b).is_some() {
+        if let Some(old_b) = self.cached.insert(k, b) {
+            if old_b != b {
+                self.stats.superseded += 1;
+            }
             return;
         }
         self.cached_sorted.insert(k);

@@ -14,6 +14,7 @@ pub mod estimator;
 pub mod figures;
 pub mod kvcache;
 pub mod metrics;
+pub mod obs;
 #[cfg(feature = "runtime")]
 pub mod runtime;
 pub mod scheduler;

@@ -4,7 +4,7 @@
 
 use crate::core::TaskClass;
 use crate::utils::json::Json;
-use crate::utils::stats::{Summary, TimeSeries};
+use crate::utils::stats::{LogHistogram, Summary, TimeSeries};
 
 /// Snapshot cadence control: long simulations sample series sparsely.
 #[derive(Clone, Copy, Debug)]
@@ -28,6 +28,21 @@ impl SampleCtl {
         } else {
             false
         }
+    }
+
+    /// Re-anchor the cadence: treat `t` as the most recent sample instant,
+    /// so the next sample falls due at `t + min_interval`. Mid-run
+    /// reconfiguration (`Engine::set_sample_interval`) threads the previous
+    /// anchor through this instead of resetting to "immediately due", which
+    /// keeps sparse series sampling from drifting when a cluster quantum
+    /// grid does not divide the interval.
+    pub fn reset(&mut self, t: f64) {
+        self.last = t;
+    }
+
+    /// The most recent sample instant (`NEG_INFINITY` before the first).
+    pub fn last_sample(&self) -> f64 {
+        self.last
     }
 }
 
@@ -76,16 +91,40 @@ pub struct Metrics {
     pub cache_lookups_cum: TimeSeries,
     pub cache_hits_cum: TimeSeries,
     pub online_arrivals: TimeSeries,
+    // ---- streaming percentile histograms (PR 6 observability) ----
+    // Log-bucketed and mergeable, so cluster aggregation yields true fleet
+    // percentiles instead of engine-local sample vectors.
+    pub ttft_hist: LogHistogram,
+    pub tpot_hist: LogHistogram,
+    /// Online admission wait (admission clock - arrival), seconds.
+    pub queue_wait_hist: LogHistogram,
+    /// Estimator audit: |predicted - actual| / actual per executed
+    /// iteration (recorded only when the estimator produced a prediction).
+    pub est_rel_err_hist: LogHistogram,
+    /// Signed relative error sum ((predicted - actual) / actual); divided
+    /// by `est_rel_err_hist.count()` this is the estimator's bias.
+    pub est_signed_err_sum: f64,
 }
 
 /// Windowed ratio series from two cumulative counters sampled at the same
 /// instants: d(hits)/d(lookups) per step, carrying the last value through
 /// empty windows.
+///
+/// The two series are expected to be aligned (same sampling instants, same
+/// length — debug builds assert the instants of the common prefix match).
+/// When one series has extra trailing samples (a capture cut mid-window),
+/// the tail is *not* dropped: each trailing instant gets the last computed
+/// ratio, mirroring the empty-window carry behavior above.
 pub fn windowed_ratio(lookups: &TimeSeries, hits: &TimeSeries) -> TimeSeries {
     let mut out = TimeSeries::default();
     let mut last = (0.0, 0.0);
     let mut last_ratio = 0.0;
-    for (&(t, l), &(_, h)) in lookups.points.iter().zip(&hits.points) {
+    let n = lookups.points.len().min(hits.points.len());
+    for (&(t, l), &(th, h)) in lookups.points[..n].iter().zip(&hits.points[..n]) {
+        debug_assert!(
+            (t - th).abs() < 1e-9,
+            "windowed_ratio: misaligned sampling instants {t} vs {th}"
+        );
         let dl = l - last.0;
         let dh = h - last.1;
         if dl > 0.0 {
@@ -94,7 +133,76 @@ pub fn windowed_ratio(lookups: &TimeSeries, hits: &TimeSeries) -> TimeSeries {
         out.push(t, last_ratio);
         last = (l, h);
     }
+    let longer = if lookups.points.len() > n {
+        &lookups.points[n..]
+    } else {
+        &hits.points[n..]
+    };
+    for &(t, _) in longer {
+        out.push(t, last_ratio);
+    }
     out
+}
+
+/// Percentile snapshot of one streaming histogram: p50/p90/p99 are within
+/// [`LogHistogram::REL_ERROR`] of the exact pooled percentiles; mean and
+/// count are exact.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistStats {
+    pub count: u64,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+impl HistStats {
+    pub fn of(h: &LogHistogram) -> HistStats {
+        HistStats {
+            count: h.count(),
+            mean: h.mean(),
+            p50: h.percentile(50.0),
+            p90: h.percentile(90.0),
+            p99: h.percentile(99.0),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("count", self.count)
+            .set("mean", self.mean)
+            .set("p50", self.p50)
+            .set("p90", self.p90)
+            .set("p99", self.p99)
+    }
+}
+
+/// Fleet-mergeable latency/accuracy digest: built per engine by
+/// [`Metrics::latency_view`], or over the merged rollup for a cluster —
+/// merging the underlying histograms first is what makes the cluster's
+/// percentiles true pooled percentiles.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyView {
+    pub ttft: HistStats,
+    pub tpot: HistStats,
+    pub queue_wait: HistStats,
+    /// |predicted - actual| / actual of the execution-time estimator.
+    pub est_err: HistStats,
+    /// Mean signed relative error (positive = over-prediction).
+    pub est_bias: f64,
+}
+
+impl LatencyView {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ttft", self.ttft.to_json())
+            .set("tpot", self.tpot.to_json())
+            .set("queue_wait", self.queue_wait.to_json())
+            .set(
+                "estimator",
+                self.est_err.to_json().set("bias", self.est_bias),
+            )
+    }
 }
 
 impl Metrics {
@@ -121,6 +229,11 @@ impl Metrics {
         self.skipped_offline += other.skipped_offline;
         self.cancelled_online += other.cancelled_online;
         self.cancelled_offline += other.cancelled_offline;
+        self.ttft_hist.merge_from(&other.ttft_hist);
+        self.tpot_hist.merge_from(&other.tpot_hist);
+        self.queue_wait_hist.merge_from(&other.queue_wait_hist);
+        self.est_rel_err_hist.merge_from(&other.est_rel_err_hist);
+        self.est_signed_err_sum += other.est_signed_err_sum;
     }
 
     /// Aggregate rollup over per-replica metrics (cluster reporting).
@@ -146,9 +259,11 @@ impl Metrics {
                 self.online_tokens_out += tokens_out as u64;
                 if let Some(t) = ttft {
                     self.online_ttft.push(t);
+                    self.ttft_hist.record(t);
                 }
                 if let Some(t) = tpot {
                     self.online_tpot.push(t);
+                    self.tpot_hist.record(t);
                 }
             }
             TaskClass::Offline => {
@@ -193,6 +308,41 @@ impl Metrics {
             0.0
         } else {
             self.online_tokens_out as f64 / self.busy_time
+        }
+    }
+
+    /// One executed iteration's estimator audit sample: `est` was the
+    /// scheduler's predicted batch time (Eq. 8), `actual` what the backend
+    /// reported. No-ops when the estimator made no prediction.
+    pub fn record_estimate(&mut self, est: f64, actual: f64) {
+        if est <= 0.0 || actual <= 0.0 {
+            return;
+        }
+        let rel = (est - actual) / actual;
+        self.est_rel_err_hist.record(rel.abs());
+        self.est_signed_err_sum += rel;
+    }
+
+    /// Mean signed relative error of the estimator ((est - actual)/actual);
+    /// positive = the time model over-predicts.
+    pub fn estimator_bias(&self) -> f64 {
+        let n = self.est_rel_err_hist.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.est_signed_err_sum / n as f64
+        }
+    }
+
+    /// Mergeable percentile digest for [`crate::serve::MetricsView`] and
+    /// the wire `metrics` reply.
+    pub fn latency_view(&self) -> LatencyView {
+        LatencyView {
+            ttft: HistStats::of(&self.ttft_hist),
+            tpot: HistStats::of(&self.tpot_hist),
+            queue_wait: HistStats::of(&self.queue_wait_hist),
+            est_err: HistStats::of(&self.est_rel_err_hist),
+            est_bias: self.estimator_bias(),
         }
     }
 
@@ -256,6 +406,7 @@ impl Metrics {
                     .set("mean", tpot.mean)
                     .set("attainment", a_tpot),
             )
+            .set("latency", self.latency_view().to_json())
     }
 }
 
@@ -313,5 +464,125 @@ mod tests {
         // Attainment over the pooled samples: one of two TTFTs meets 1.0 s.
         let (a_ttft, _) = agg.slo_attainment(&Slo::paper_eval());
         assert!((a_ttft - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windowed_ratio_carries_tail_instead_of_truncating() {
+        // Regression: `zip` used to drop trailing samples of the longer
+        // series; the tail must carry the last computed ratio instead.
+        let mut lookups = TimeSeries::default();
+        let mut hits = TimeSeries::default();
+        lookups.push(0.0, 10.0);
+        hits.push(0.0, 5.0);
+        lookups.push(1.0, 20.0);
+        hits.push(1.0, 10.0);
+        lookups.push(2.0, 40.0); // capture cut mid-window: no hits sample
+        let r = windowed_ratio(&lookups, &hits);
+        assert_eq!(r.points.len(), 3);
+        assert!((r.points[1].1 - 0.5).abs() < 1e-12);
+        assert_eq!(r.points[2], (2.0, 0.5));
+        // Symmetric case: hits longer than lookups.
+        let mut hits2 = hits.clone();
+        hits2.push(2.0, 12.0);
+        hits2.push(3.0, 13.0);
+        let mut lookups2 = TimeSeries::default();
+        lookups2.push(0.0, 10.0);
+        lookups2.push(1.0, 20.0);
+        let r2 = windowed_ratio(&lookups2, &hits2);
+        assert_eq!(r2.points.len(), 4);
+        assert_eq!(r2.points[2], (2.0, 0.5));
+        assert_eq!(r2.points[3], (3.0, 0.5));
+    }
+
+    #[test]
+    fn sample_ctl_reset_preserves_cadence() {
+        let mut s = SampleCtl::new(1.0);
+        assert!(s.due(0.0));
+        assert_eq!(s.last_sample(), 0.0);
+        // Re-anchoring at the previous sample instant keeps the next sample
+        // due at anchor + min_interval, not "immediately".
+        let anchor = s.last_sample();
+        let mut s2 = SampleCtl::new(1.0);
+        s2.reset(anchor);
+        assert!(!s2.due(0.5));
+        assert!(s2.due(1.0));
+    }
+
+    #[test]
+    fn estimator_audit_records_relative_error_and_bias() {
+        let mut m = Metrics::default();
+        m.record_estimate(1.2, 1.0); // +20%
+        m.record_estimate(0.9, 1.0); // -10%
+        m.record_estimate(0.0, 1.0); // ignored: no prediction
+        m.record_estimate(1.0, 0.0); // ignored: no actual
+        assert_eq!(m.est_rel_err_hist.count(), 2);
+        assert!((m.estimator_bias() - 0.05).abs() < 1e-12);
+        let v = m.latency_view();
+        assert_eq!(v.est_err.count, 2);
+        assert!((v.est_err.mean - 0.15).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histograms_merge_through_aggregate() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        for i in 0..50 {
+            a.record_completion(
+                TaskClass::Online,
+                10,
+                100,
+                Some(0.1 + i as f64 * 0.01),
+                Some(0.03),
+            );
+            b.record_completion(
+                TaskClass::Online,
+                10,
+                100,
+                Some(1.0 + i as f64 * 0.01),
+                Some(0.05),
+            );
+        }
+        a.record_estimate(1.1, 1.0);
+        b.record_estimate(0.8, 1.0);
+        let agg = Metrics::aggregate([&a, &b]);
+        assert_eq!(agg.ttft_hist.count(), 100);
+        assert_eq!(agg.tpot_hist.count(), 100);
+        assert_eq!(agg.est_rel_err_hist.count(), 2);
+        // Pooled p50 sits between the two replicas' medians.
+        let p50 = agg.ttft_hist.percentile(50.0);
+        assert!(p50 > a.ttft_hist.percentile(90.0) * 0.9);
+        assert!(p50 < b.ttft_hist.percentile(10.0) * 1.1);
+        // Bias averages over the pooled sample count.
+        assert!((agg.estimator_bias() - (-0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_view_exports_json_percentiles() {
+        let mut m = Metrics::default();
+        for i in 0..100 {
+            m.record_completion(
+                TaskClass::Online,
+                5,
+                50,
+                Some(0.2 + i as f64 * 0.002),
+                Some(0.04),
+            );
+        }
+        m.queue_wait_hist.record(0.5);
+        m.record_estimate(1.05, 1.0);
+        let j = m.to_json(&Slo::paper_eval());
+        for key in [
+            "latency.ttft.p50",
+            "latency.ttft.p99",
+            "latency.tpot.p90",
+            "latency.queue_wait.count",
+            "latency.estimator.mean",
+            "latency.estimator.bias",
+        ] {
+            assert!(j.at(key).is_some(), "missing {key}");
+        }
+        assert_eq!(j.at("latency.ttft.count").unwrap().as_u64(), Some(100));
+        let p50 = j.at("latency.ttft.p50").unwrap().as_f64().unwrap();
+        assert!((p50 / 0.3 - 1.0).abs() < 0.06, "p50 {p50} far from 0.3");
     }
 }

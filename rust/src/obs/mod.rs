@@ -1,0 +1,575 @@
+//! Observability: deterministic iteration-level tracing and summaries.
+//!
+//! The trace collector is a bounded ring of typed, virtual-clock-stamped
+//! events owned by each engine (one per replica in a cluster). Tracing is
+//! opt-in: a disabled engine carries `Option::None` and every hook is a
+//! single branch — nothing allocates in the steady step loop, preserving
+//! the `engine_step_allocs_steady == 0` invariant. Enabled, the ring is
+//! pre-allocated up front and `push` never allocates either; once full it
+//! overwrites the oldest event and counts the drop.
+//!
+//! Exporters turn collected rings into Chrome-trace/Perfetto JSON
+//! ([`chrome_trace`]) or an aggregate report ([`summary`], rendered for the
+//! terminal by [`render_summary`]). Event timestamps are the engine's
+//! virtual clock, so traces are bit-identical across worker thread counts.
+
+use std::collections::BTreeMap;
+
+use crate::core::RequestId;
+use crate::metrics::Metrics;
+use crate::utils::json::Json;
+
+/// Default ring capacity: 64Ki events (~3 MiB per replica). At one
+/// iteration event plus a handful of lifecycle events per step this covers
+/// tens of thousands of iterations before wrapping.
+pub const DEFAULT_TRACE_EVENTS: usize = 1 << 16;
+
+/// One virtual-clock-stamped trace event. All variants are `Copy` so the
+/// ring can overwrite slots without touching the heap.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Request entered the system (online queue or offline pool).
+    Submit { t: f64, req: RequestId, online: bool },
+    /// Scheduler admitted the request; `wait` is time since arrival.
+    Admit {
+        t: f64,
+        req: RequestId,
+        online: bool,
+        wait: f64,
+    },
+    /// First output token emitted (prefill completed).
+    FirstToken { t: f64, req: RequestId },
+    /// Preempted and evicted; `cost_tokens` is the prefill length that must
+    /// be recomputed (modulo prefix-cache hits) on re-admission.
+    Preempt {
+        t: f64,
+        req: RequestId,
+        cost_tokens: u32,
+    },
+    /// Request completed; `tokens` is the output length.
+    Finish {
+        t: f64,
+        req: RequestId,
+        online: bool,
+        tokens: u32,
+    },
+    /// Withdrawn through the serving API before completion.
+    Cancel { t: f64, req: RequestId },
+    /// One executed engine iteration: batch composition, scheduler trial
+    /// count, and predicted (`est`, 0 = estimator off) vs actual (`dur`)
+    /// execution time.
+    Iteration {
+        start: f64,
+        dur: f64,
+        prefills: u32,
+        decodes: u32,
+        tokens: u32,
+        trials: u32,
+        est: f64,
+    },
+    /// KV-cache activity delta over one iteration (emitted only when some
+    /// counter moved): prefix lookups/hits, evictions, superseded entries.
+    Kv {
+        t: f64,
+        lookups: u32,
+        hits: u32,
+        evictions: u32,
+        superseded: u32,
+    },
+}
+
+impl TraceEvent {
+    /// The event's (start) timestamp on the virtual clock.
+    pub fn timestamp(&self) -> f64 {
+        match *self {
+            TraceEvent::Submit { t, .. }
+            | TraceEvent::Admit { t, .. }
+            | TraceEvent::FirstToken { t, .. }
+            | TraceEvent::Preempt { t, .. }
+            | TraceEvent::Finish { t, .. }
+            | TraceEvent::Cancel { t, .. }
+            | TraceEvent::Kv { t, .. } => t,
+            TraceEvent::Iteration { start, .. } => start,
+        }
+    }
+}
+
+/// Fixed-capacity event ring. The buffer is allocated once at construction;
+/// `push` is branch + store, overwriting the oldest event when full.
+#[derive(Clone, Debug)]
+pub struct TraceRing {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Oldest live slot once the ring has wrapped (0 before that).
+    head: usize,
+    dropped: u64,
+}
+
+impl TraceRing {
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        TraceRing {
+            buf: Vec::with_capacity(cap),
+            cap,
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// Append an event, overwriting the oldest when full. Never allocates:
+    /// the backing buffer was sized at construction.
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.dropped += 1;
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// Live events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.buf[self.head..].iter().chain(&self.buf[..self.head])
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events overwritten after the ring filled.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Total events ever pushed (live + dropped).
+    pub fn total(&self) -> u64 {
+        self.buf.len() as u64 + self.dropped
+    }
+}
+
+fn micros(t: f64) -> f64 {
+    t * 1e6
+}
+
+/// One Chrome-trace event object. Iterations become `ph:"X"` duration
+/// events on the iteration track (tid 0); request lifecycle events become
+/// instants on the request track (tid 1) with admit→finish also bracketed
+/// as an async span (`ph:"b"/"e"`, id = request id) so Perfetto draws one
+/// bar per in-flight request; KV deltas are instants on tid 2.
+fn event_json(pid: usize, ev: &TraceEvent, out: &mut Vec<Json>) {
+    let base = |name: &str, ph: &str, tid: usize, ts: f64| {
+        Json::obj()
+            .set("name", name)
+            .set("ph", ph)
+            .set("pid", pid)
+            .set("tid", tid)
+            .set("ts", micros(ts))
+    };
+    match *ev {
+        TraceEvent::Submit { t, req, online } => {
+            out.push(
+                base("submit", "i", 1, t)
+                    .set("s", "t")
+                    .set("args", Json::obj().set("req", req).set("online", online)),
+            );
+        }
+        TraceEvent::Admit { t, req, online, wait } => {
+            out.push(
+                base("request", "b", 1, t)
+                    .set("cat", "request")
+                    .set("id", req)
+                    .set(
+                        "args",
+                        Json::obj()
+                            .set("req", req)
+                            .set("online", online)
+                            .set("queue_wait_s", wait),
+                    ),
+            );
+        }
+        TraceEvent::FirstToken { t, req } => {
+            out.push(
+                base("first_token", "i", 1, t)
+                    .set("s", "t")
+                    .set("args", Json::obj().set("req", req)),
+            );
+        }
+        TraceEvent::Preempt { t, req, cost_tokens } => {
+            let args = Json::obj().set("req", req).set("cost_tokens", cost_tokens as u64);
+            out.push(base("preempt", "i", 1, t).set("s", "t").set("args", args));
+        }
+        TraceEvent::Finish { t, req, online, tokens } => {
+            out.push(
+                base("request", "e", 1, t)
+                    .set("cat", "request")
+                    .set("id", req)
+                    .set(
+                        "args",
+                        Json::obj()
+                            .set("req", req)
+                            .set("online", online)
+                            .set("tokens", tokens as u64),
+                    ),
+            );
+        }
+        TraceEvent::Cancel { t, req } => {
+            out.push(
+                base("cancel", "i", 1, t)
+                    .set("s", "t")
+                    .set("args", Json::obj().set("req", req)),
+            );
+        }
+        TraceEvent::Iteration { start, dur, prefills, decodes, tokens, trials, est } => {
+            let args = Json::obj()
+                .set("prefills", prefills as u64)
+                .set("decodes", decodes as u64)
+                .set("tokens", tokens as u64)
+                .set("trials", trials as u64)
+                .set("est_s", est)
+                .set("actual_s", dur);
+            out.push(base("iteration", "X", 0, start).set("dur", micros(dur)).set("args", args));
+        }
+        TraceEvent::Kv { t, lookups, hits, evictions, superseded } => {
+            let args = Json::obj()
+                .set("lookups", lookups as u64)
+                .set("hits", hits as u64)
+                .set("evictions", evictions as u64)
+                .set("superseded", superseded as u64);
+            out.push(base("kv", "i", 2, t).set("s", "t").set("args", args));
+        }
+    }
+}
+
+/// Export rings as a Chrome-trace / Perfetto JSON object (`traceEvents`
+/// array). One process per replica (pid = replica id) with named tracks:
+/// tid 0 iterations, tid 1 request lifecycle, tid 2 KV cache. Pass tracks
+/// in replica-id order for a deterministic file.
+pub fn chrome_trace(tracks: &[(usize, &TraceRing)]) -> Json {
+    let mut events = Vec::new();
+    for &(pid, ring) in tracks {
+        let meta = |name: &str, val: Json| {
+            Json::obj()
+                .set("name", name)
+                .set("ph", "M")
+                .set("pid", pid)
+                .set("tid", 0)
+                .set("args", val)
+        };
+        events.push(meta("process_name", Json::obj().set("name", format!("replica-{pid}"))));
+        for (tid, label) in [(0, "iterations"), (1, "requests"), (2, "kv")] {
+            events.push(
+                Json::obj()
+                    .set("name", "thread_name")
+                    .set("ph", "M")
+                    .set("pid", pid)
+                    .set("tid", tid)
+                    .set("args", Json::obj().set("name", label)),
+            );
+        }
+        for ev in ring.events() {
+            event_json(pid, ev, &mut events);
+        }
+    }
+    Json::obj()
+        .set("traceEvents", Json::Arr(events))
+        .set("displayTimeUnit", "ms")
+}
+
+/// Highest-recompute-cost requests derived from `Preempt` events: each
+/// preemption evicts the request's KV blocks, so its prefill (minus any
+/// later prefix-cache hit) must be recomputed. Returns up to `k` entries
+/// sorted by total cost descending, ties by request id.
+pub fn top_recompute(tracks: &[(usize, &TraceRing)], k: usize) -> Vec<(RequestId, u64, usize)> {
+    let mut per_req: BTreeMap<RequestId, (u64, usize)> = BTreeMap::new();
+    for &(_, ring) in tracks {
+        for ev in ring.events() {
+            if let TraceEvent::Preempt { req, cost_tokens, .. } = *ev {
+                let e = per_req.entry(req).or_insert((0, 0));
+                e.0 += cost_tokens as u64;
+                e.1 += 1;
+            }
+        }
+    }
+    let mut rows: Vec<(RequestId, u64, usize)> =
+        per_req.into_iter().map(|(r, (c, n))| (r, c, n)).collect();
+    rows.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    rows.truncate(k);
+    rows
+}
+
+fn recompute_json(rows: &[(RequestId, u64, usize)]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|&(req, cost, n)| {
+                Json::obj()
+                    .set("req", req)
+                    .set("cost_tokens", cost)
+                    .set("preemptions", n)
+            })
+            .collect(),
+    )
+}
+
+/// Aggregate observability report over a (possibly merged) metrics rollup
+/// and the fleet's trace rings: latency/estimator histograms, counters, and
+/// per-replica trace accounting with the top-K recompute offenders.
+pub fn summary(m: &Metrics, tracks: &[(usize, &TraceRing)]) -> Json {
+    let replicas: Vec<Json> = tracks
+        .iter()
+        .map(|&(id, ring)| {
+            Json::obj()
+                .set("replica", id)
+                .set("events", ring.len())
+                .set("dropped", ring.dropped())
+        })
+        .collect();
+    Json::obj()
+        .set("latency", m.latency_view().to_json())
+        .set(
+            "counters",
+            Json::obj()
+                .set("iterations", m.iterations)
+                .set("preemptions", m.preemptions)
+                .set("online_completed", m.online_completed)
+                .set("offline_completed", m.offline_completed)
+                .set("cancelled_online", m.cancelled_online)
+                .set("cancelled_offline", m.cancelled_offline),
+        )
+        .set(
+            "trace",
+            Json::obj()
+                .set("replicas", Json::Arr(replicas))
+                .set("top_recompute", recompute_json(&top_recompute(tracks, 10))),
+        )
+}
+
+/// The same report shape built from a [`crate::serve::MetricsView`]
+/// snapshot — the default `Serve::obs` path for front ends that do not own
+/// trace rings.
+pub fn summary_from_view(v: &crate::serve::MetricsView) -> Json {
+    Json::obj()
+        .set("latency", v.latency.to_json())
+        .set(
+            "counters",
+            Json::obj()
+                .set("preemptions", v.preemptions)
+                .set("online_completed", v.online_completed)
+                .set("offline_completed", v.offline_completed)
+                .set("cancelled", v.cancelled),
+        )
+        .set(
+            "trace",
+            Json::obj()
+                .set("replicas", Json::Arr(Vec::new()))
+                .set("top_recompute", Json::Arr(Vec::new())),
+        )
+}
+
+fn fmt_ms(j: Option<&Json>) -> String {
+    match j.and_then(Json::as_f64) {
+        Some(x) => format!("{:.1}", x * 1e3),
+        None => "-".into(),
+    }
+}
+
+/// Render a [`summary`] JSON object as an aligned terminal table: one row
+/// per histogram (count/mean/p50/p90/p99), the estimator bias, and the
+/// top-K recompute list.
+pub fn render_summary(j: &Json) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{:<12} {:>8} {:>9} {:>9} {:>9} {:>9}\n",
+        "metric", "count", "mean_ms", "p50_ms", "p90_ms", "p99_ms"
+    ));
+    for (label, key) in [
+        ("ttft", "latency.ttft"),
+        ("tpot", "latency.tpot"),
+        ("queue_wait", "latency.queue_wait"),
+    ] {
+        let count = j
+            .at(&format!("{key}.count"))
+            .and_then(Json::as_u64)
+            .unwrap_or(0);
+        s.push_str(&format!(
+            "{:<12} {:>8} {:>9} {:>9} {:>9} {:>9}\n",
+            label,
+            count,
+            fmt_ms(j.at(&format!("{key}.mean"))),
+            fmt_ms(j.at(&format!("{key}.p50"))),
+            fmt_ms(j.at(&format!("{key}.p90"))),
+            fmt_ms(j.at(&format!("{key}.p99"))),
+        ));
+    }
+    let est_n = j
+        .at("latency.estimator.count")
+        .and_then(Json::as_u64)
+        .unwrap_or(0);
+    if est_n > 0 {
+        let pct = |p: &str| {
+            j.at(&format!("latency.estimator.{p}"))
+                .and_then(Json::as_f64)
+                .map(|x| format!("{:.1}%", x * 100.0))
+                .unwrap_or_else(|| "-".into())
+        };
+        s.push_str(&format!(
+            "estimator    {est_n} audited iterations | abs rel err mean {} p50 {} p99 {} | bias {}\n",
+            pct("mean"),
+            pct("p50"),
+            pct("p99"),
+            pct("bias"),
+        ));
+    } else {
+        s.push_str("estimator    no audited iterations\n");
+    }
+    if let Some(rows) = j.at("trace.top_recompute").and_then(Json::as_arr) {
+        if !rows.is_empty() {
+            s.push_str("top recompute cost (preempted requests):\n");
+            for r in rows {
+                s.push_str(&format!(
+                    "  req {:>6}  {:>8} tokens  {:>3} preemptions\n",
+                    r.at("req").and_then(Json::as_u64).unwrap_or(0),
+                    r.at("cost_tokens").and_then(Json::as_u64).unwrap_or(0),
+                    r.at("preemptions").and_then(Json::as_u64).unwrap_or(0),
+                ));
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn instant(t: f64, req: RequestId) -> TraceEvent {
+        TraceEvent::FirstToken { t, req }
+    }
+
+    #[test]
+    fn ring_keeps_most_recent_in_order() {
+        let mut r = TraceRing::with_capacity(4);
+        assert!(r.is_empty());
+        for i in 0..6 {
+            r.push(instant(i as f64, i));
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 2);
+        assert_eq!(r.total(), 6);
+        let ids: Vec<RequestId> = r
+            .events()
+            .map(|e| match *e {
+                TraceEvent::FirstToken { req, .. } => req,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn push_never_reallocates() {
+        let mut r = TraceRing::with_capacity(8);
+        let cap_before = r.buf.capacity();
+        for i in 0..100 {
+            r.push(instant(0.0, i));
+        }
+        assert_eq!(r.buf.capacity(), cap_before);
+    }
+
+    #[test]
+    fn chrome_trace_shape_and_microseconds() {
+        let mut r = TraceRing::with_capacity(16);
+        r.push(TraceEvent::Submit {
+            t: 0.5,
+            req: 7,
+            online: true,
+        });
+        r.push(TraceEvent::Iteration {
+            start: 1.0,
+            dur: 0.25,
+            prefills: 2,
+            decodes: 3,
+            tokens: 67,
+            trials: 4,
+            est: 0.24,
+        });
+        let j = chrome_trace(&[(3, &r)]);
+        let evs = j.at("traceEvents").and_then(Json::as_arr).unwrap();
+        // 1 process_name + 3 thread_name metadata + 2 events.
+        assert_eq!(evs.len(), 6);
+        assert_eq!(
+            evs[0].at("args.name").and_then(Json::as_str),
+            Some("replica-3")
+        );
+        let iter = evs
+            .iter()
+            .find(|e| e.at("ph").and_then(Json::as_str) == Some("X"))
+            .unwrap();
+        assert_eq!(iter.at("ts").and_then(Json::as_f64), Some(1e6));
+        assert_eq!(iter.at("dur").and_then(Json::as_f64), Some(0.25 * 1e6));
+        assert_eq!(iter.at("pid").and_then(Json::as_usize), Some(3));
+        assert_eq!(iter.at("args.trials").and_then(Json::as_u64), Some(4));
+        // Round-trips through the parser.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.at("traceEvents").and_then(Json::as_arr).unwrap().len(),
+            6
+        );
+    }
+
+    #[test]
+    fn top_recompute_aggregates_and_ranks() {
+        let mut a = TraceRing::with_capacity(16);
+        let mut b = TraceRing::with_capacity(16);
+        a.push(TraceEvent::Preempt {
+            t: 1.0,
+            req: 1,
+            cost_tokens: 100,
+        });
+        a.push(TraceEvent::Preempt {
+            t: 2.0,
+            req: 2,
+            cost_tokens: 300,
+        });
+        b.push(TraceEvent::Preempt {
+            t: 3.0,
+            req: 1,
+            cost_tokens: 250,
+        });
+        let rows = top_recompute(&[(0, &a), (1, &b)], 10);
+        assert_eq!(rows, vec![(1, 350, 2), (2, 300, 1)]);
+        assert_eq!(top_recompute(&[(0, &a)], 1).len(), 1);
+    }
+
+    #[test]
+    fn summary_renders_table() {
+        let mut m = Metrics::default();
+        m.record_completion(crate::core::TaskClass::Online, 10, 50, Some(0.2), Some(0.03));
+        m.record_estimate(1.1, 1.0);
+        let mut r = TraceRing::with_capacity(8);
+        r.push(TraceEvent::Preempt {
+            t: 1.0,
+            req: 9,
+            cost_tokens: 64,
+        });
+        let j = summary(&m, &[(0, &r)]);
+        assert!(j.at("latency.ttft.p50").is_some());
+        assert_eq!(
+            j.at("trace.top_recompute").and_then(Json::as_arr).unwrap().len(),
+            1
+        );
+        let text = render_summary(&j);
+        assert!(text.contains("ttft"));
+        assert!(text.contains("queue_wait"));
+        assert!(text.contains("req      9"));
+        assert!(text.contains("audited iterations"));
+    }
+}

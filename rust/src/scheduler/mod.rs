@@ -40,6 +40,9 @@ pub struct Outcome {
     pub preempted: Vec<RequestId>,
     /// Offline decodes left idle this iteration to honor the SLO.
     pub skipped_offline: usize,
+    /// Estimator shape evaluations performed while building this plan
+    /// (admission trials + SLO-budget probes); 0 when the estimator is off.
+    pub trials: usize,
 }
 
 pub struct Scheduler {
@@ -246,6 +249,7 @@ impl Scheduler {
         out.admitted_offline.clear();
         out.preempted.clear();
         out.skipped_offline = 0;
+        out.trials = 0;
         out.plan.est_time = 0.0;
         let mut items = std::mem::take(&mut out.plan.items);
         items.clear();
@@ -452,12 +456,13 @@ impl Scheduler {
             }
             let len = store.get(id).seq_len();
             let undo = shape.push_decode(len);
-            if self.cfg.kind.uses_estimator()
-                && self.time_model.batch_time_inc(&shape) > budget
-            {
-                shape.undo(undo);
-                out.skipped_offline += 1;
-                continue; // stays running & resident, idles this iteration
+            if self.cfg.kind.uses_estimator() {
+                out.trials += 1;
+                if self.time_model.batch_time_inc(&shape) > budget {
+                    shape.undo(undo);
+                    out.skipped_offline += 1;
+                    continue; // stays running & resident, idles this iteration
+                }
             }
             items.push(PlanItem {
                 req: id,
@@ -484,12 +489,13 @@ impl Scheduler {
                     context: r.computed,
                 },
             );
-            if self.cfg.kind.uses_estimator()
-                && self.time_model.batch_time_inc(&shape) > budget
-            {
-                shape.undo(undo);
-                out.skipped_offline += 1;
-                continue;
+            if self.cfg.kind.uses_estimator() {
+                out.trials += 1;
+                if self.time_model.batch_time_inc(&shape) > budget {
+                    shape.undo(undo);
+                    out.skipped_offline += 1;
+                    continue;
+                }
             }
             items.push(PlanItem {
                 req: id,
@@ -599,11 +605,12 @@ impl Scheduler {
             } else {
                 shape.push_decode(seq_len)
             };
-            if self.cfg.kind.uses_estimator()
-                && self.time_model.batch_time_inc(shape) > budget
-            {
-                shape.undo(undo);
-                break; // FCFS: if the head does not fit, stop
+            if self.cfg.kind.uses_estimator() {
+                out.trials += 1;
+                if self.time_model.batch_time_inc(shape) > budget {
+                    shape.undo(undo);
+                    break; // FCFS: if the head does not fit, stop
+                }
             }
             let allocated = {
                 let keys = store.get(head).content_key_path(self.block_size);
@@ -705,6 +712,7 @@ impl Scheduler {
                 } else {
                     shape.push_decode(seq_len)
                 };
+                out.trials += 1;
                 let t = self.time_model.batch_time_inc(shape);
                 shape.undo(undo);
                 if t > budget {

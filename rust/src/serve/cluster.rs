@@ -362,7 +362,13 @@ impl Serve for ClusterServe {
                 hits as f64 / lookups as f64
             },
             replicas: self.sim.active_replicas(),
+            latency: m.latency_view(),
         }
+    }
+
+    fn obs(&self) -> crate::utils::json::Json {
+        let m: Metrics = self.sim.all_metrics();
+        crate::obs::summary(&m, &self.sim.trace_tracks())
     }
 }
 

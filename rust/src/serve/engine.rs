@@ -103,6 +103,13 @@ impl<B: ExecutionBackend> Serve for EngineServe<B> {
     fn snapshot(&self) -> MetricsView {
         MetricsView::of_engine(&self.engine, "engine")
     }
+
+    fn obs(&self) -> crate::utils::json::Json {
+        match self.engine.trace() {
+            Some(ring) => crate::obs::summary(&self.engine.metrics, &[(0, ring)]),
+            None => crate::obs::summary(&self.engine.metrics, &[]),
+        }
+    }
 }
 
 #[cfg(test)]

@@ -265,6 +265,10 @@ pub struct MetricsView {
     pub hit_ratio: f64,
     /// Live serving engines behind this front door.
     pub replicas: usize,
+    /// Streaming latency percentiles + estimator audit (fleet-merged for
+    /// the cluster deployment: histograms merge, so these are true fleet
+    /// percentiles, not averages of per-replica percentiles).
+    pub latency: crate::metrics::LatencyView,
 }
 
 impl Default for MetricsView {
@@ -284,6 +288,7 @@ impl Default for MetricsView {
             offline_throughput: 0.0,
             hit_ratio: 0.0,
             replicas: 0,
+            latency: crate::metrics::LatencyView::default(),
         }
     }
 }
@@ -315,6 +320,7 @@ impl MetricsView {
             offline_throughput: m.offline_throughput(),
             hit_ratio: e.kv.stats.hit_ratio(),
             replicas: 1,
+            latency: m.latency_view(),
         }
     }
 
@@ -334,6 +340,7 @@ impl MetricsView {
             .set("offline_throughput_tok_s", self.offline_throughput)
             .set("hit_ratio", self.hit_ratio)
             .set("replicas", self.replicas)
+            .set("latency", self.latency.to_json())
     }
 }
 
@@ -365,6 +372,15 @@ pub trait Serve {
 
     /// Deployment-shape-independent load/outcome snapshot.
     fn snapshot(&self) -> MetricsView;
+
+    /// Observability report: latency/estimator histogram summaries plus
+    /// whatever trace data the deployment holds. The default builds it from
+    /// [`Serve::snapshot`] (no trace section); deployments that own trace
+    /// rings override it to include per-replica ring stats and top
+    /// recompute-cost requests (see [`crate::obs::summary`]).
+    fn obs(&self) -> Json {
+        crate::obs::summary_from_view(&self.snapshot())
+    }
 }
 
 // ---- shared event-extraction machinery -----------------------------------

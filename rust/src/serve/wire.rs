@@ -15,6 +15,17 @@
 //!          {"ok":true,"verb":"stream","done":true,"events":5}
 //!   {"verb":"metrics"}
 //!       -> {"ok":true,"verb":"metrics","metrics":{...}}
+//!          (`metrics.latency` carries streaming-histogram percentiles:
+//!          `ttft`/`tpot`/`queue_wait` objects with count/mean/p50/p90/p99
+//!          and an `estimator` object adding `bias` — fleet-merged for the
+//!          cluster deployment, so the percentiles are true fleet-wide
+//!          values)
+//!   {"verb":"obs"}
+//!       -> {"ok":true,"verb":"obs","obs":{...}}
+//!          (observability report: `latency` histogram summaries,
+//!          lifecycle `counters`, and `trace` — per-replica ring stats
+//!          plus the top recompute-cost requests — when the deployment
+//!          holds trace rings)
 //!   {"verb":"shutdown"}
 //!       -> {"ok":true,"verb":"shutdown"}   (and the server exits)
 //!
@@ -44,6 +55,7 @@ pub enum WireRequest {
     Cancel { ticket: TicketId },
     Stream { ticket: Option<TicketId> },
     Metrics,
+    Obs,
     Shutdown,
 }
 
@@ -117,6 +129,7 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
             ticket: j.get("ticket").and_then(|v| v.as_u64()),
         }),
         "metrics" => Ok(WireRequest::Metrics),
+        "obs" => Ok(WireRequest::Obs),
         "shutdown" => Ok(WireRequest::Shutdown),
         other => Err(format!("unknown verb {other:?}")),
     }
@@ -166,6 +179,7 @@ pub fn encode_request(req: &WireRequest) -> Json {
             }
         }
         WireRequest::Metrics => Json::obj().set("verb", "metrics"),
+        WireRequest::Obs => Json::obj().set("verb", "obs"),
         WireRequest::Shutdown => Json::obj().set("verb", "shutdown"),
     }
 }
@@ -304,6 +318,14 @@ impl<'a> WireSession<'a> {
                     .set("ok", true)
                     .set("verb", "metrics")
                     .set("metrics", self.serve.snapshot().to_json())
+                    .to_string()],
+                false,
+            ),
+            WireRequest::Obs => (
+                vec![Json::obj()
+                    .set("ok", true)
+                    .set("verb", "obs")
+                    .set("obs", self.serve.obs())
                     .to_string()],
                 false,
             ),

@@ -264,6 +264,151 @@ pub fn solve_dense(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
     Some(x)
 }
 
+// ---- streaming log-bucketed histogram (PR 6 observability) ---------------
+
+/// Smallest representable value; anything at or below lands in bucket 0.
+const HIST_MIN: f64 = 1e-6;
+/// Buckets per factor of two. 8 gives a per-bucket ratio of 2^(1/8)
+/// (~9.05%), so a geometric-midpoint estimate is within ~4.4% of any value
+/// in its bucket.
+const HIST_PER_OCTAVE: f64 = 8.0;
+/// Bucket count: 40 octaves ([1e-6, ~1e6)) x 8 buckets each. The last
+/// bucket absorbs overflow.
+const HIST_BUCKETS: usize = 320;
+
+/// Streaming log-bucketed histogram over a fixed geometric bucket layout.
+///
+/// Built for fleet telemetry: `merge_from` adds bucket counts elementwise,
+/// so merging per-replica histograms is associative and commutative (counts
+/// are integers; `sum` is the only float and is exact for integer-valued
+/// samples), and the merged percentiles are the true pooled percentiles to
+/// within the bucket quantization ([`LogHistogram::REL_ERROR`]). The bucket
+/// vector is allocated lazily on the first `record`, so a defaulted
+/// histogram costs nothing and a recording one never allocates again —
+/// which is what lets the engine feed one every iteration without breaking
+/// the zero-alloc steady-step invariant.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LogHistogram {
+    /// Bucket counts; empty until the first sample.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    /// Worst-case relative error of a percentile estimate vs the exact
+    /// value in the same bucket: half a bucket in log space, 2^(1/16) - 1.
+    pub const REL_ERROR: f64 = 0.0443;
+
+    fn bucket(x: f64) -> usize {
+        if x <= HIST_MIN {
+            return 0;
+        }
+        let i = ((x / HIST_MIN).log2() * HIST_PER_OCTAVE) as usize;
+        i.min(HIST_BUCKETS - 1)
+    }
+
+    /// Geometric midpoint of bucket `i` (the estimate it answers with).
+    fn representative(i: usize) -> f64 {
+        HIST_MIN * ((i as f64 + 0.5) / HIST_PER_OCTAVE).exp2()
+    }
+
+    /// Record one sample. Negative values clamp to the bottom bucket;
+    /// non-finite values are ignored.
+    pub fn record(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        let x = x.max(0.0);
+        if self.counts.is_empty() {
+            self.counts = vec![0; HIST_BUCKETS];
+        }
+        self.counts[Self::bucket(x)] += 1;
+        if self.count == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.count += 1;
+        self.sum += x;
+    }
+
+    /// Fold `other`'s samples into this histogram (fleet aggregation).
+    pub fn merge_from(&mut self, other: &LogHistogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = other.clone();
+            return;
+        }
+        for (a, &b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact mean (the running sum is not bucketed).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Percentile estimate (p in [0, 100]): the geometric midpoint of the
+    /// bucket holding the ceil(p/100 * n)-th smallest sample, clamped to
+    /// the exact observed [min, max]. Within [`Self::REL_ERROR`] of the
+    /// exact same-bucket value.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Self::representative(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+}
+
 /// Exponentially weighted moving average.
 #[derive(Clone, Copy, Debug)]
 pub struct Ewma {
@@ -384,5 +529,128 @@ mod tests {
             e.push(8.0);
         }
         assert!((e.get() - 8.0).abs() < 1e-6);
+    }
+
+    /// Deterministic LCG driving the histogram property tests (no rand
+    /// dependency; the same stream reproduces bit-identically everywhere).
+    struct Lcg(u64);
+
+    impl Lcg {
+        fn next_unit(&mut self) -> f64 {
+            self.0 = self
+                .0
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            (self.0 >> 11) as f64 / (1u64 << 53) as f64
+        }
+
+        /// Log-uniform over [10^-3, 10^1).
+        fn next_span(&mut self) -> f64 {
+            10f64.powf(-3.0 + 4.0 * self.next_unit())
+        }
+    }
+
+    #[test]
+    fn log_histogram_tracks_exact_percentiles() {
+        let mut rng = Lcg(0x5eed);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.next_span()).collect();
+        let mut h = LogHistogram::default();
+        for &x in &xs {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - mean(&xs)).abs() / mean(&xs) < 1e-12);
+        for p in [50.0, 90.0, 99.0] {
+            let exact = percentile(&xs, p);
+            let est = h.percentile(p);
+            let rel = (est - exact).abs() / exact;
+            // Bucket quantization (REL_ERROR) plus the order-statistic gap
+            // the exact percentile interpolates across.
+            assert!(rel < 0.05, "p{p}: est {est} exact {exact} rel {rel}");
+        }
+        // The extremes answer from the min/max sample's own bucket, so the
+        // estimate sits within half a bucket (REL_ERROR) of the exact value.
+        assert!((h.percentile(0.0) / h.min() - 1.0).abs() < 0.05);
+        assert!((h.percentile(100.0) / h.max() - 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn log_histogram_error_bound_over_many_streams() {
+        for seed in 1..30u64 {
+            let mut rng = Lcg(seed);
+            let xs: Vec<f64> = (0..1000).map(|_| rng.next_span()).collect();
+            let mut h = LogHistogram::default();
+            for &x in &xs {
+                h.record(x);
+            }
+            for p in [50.0, 90.0, 99.0] {
+                let exact = percentile(&xs, p);
+                let rel = (h.percentile(p) - exact).abs() / exact;
+                assert!(rel < 0.07, "seed {seed} p{p}: rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn log_histogram_merge_is_associative_and_commutative() {
+        // Integer-valued samples make the f64 running sums exact, so merge
+        // results compare bit-identically via PartialEq.
+        let mut rng = Lcg(7);
+        let parts: Vec<LogHistogram> = (0..3)
+            .map(|_| {
+                let mut h = LogHistogram::default();
+                for _ in 0..200 {
+                    h.record((rng.next_unit() * 50.0).floor() + 1.0);
+                }
+                h
+            })
+            .collect();
+        let (a, b, c) = (&parts[0], &parts[1], &parts[2]);
+        // (a + b) + c
+        let mut ab = a.clone();
+        ab.merge_from(b);
+        let mut ab_c = ab.clone();
+        ab_c.merge_from(c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge_from(c);
+        let mut a_bc = a.clone();
+        a_bc.merge_from(&bc);
+        assert_eq!(ab_c, a_bc, "merge must be associative");
+        // b + a == a + b
+        let mut ba = b.clone();
+        ba.merge_from(a);
+        assert_eq!(ab, ba, "merge must be commutative");
+        // Merging equals recording the concatenated stream.
+        let mut rng = Lcg(7);
+        let mut all = LogHistogram::default();
+        for _ in 0..600 {
+            all.record((rng.next_unit() * 50.0).floor() + 1.0);
+        }
+        assert_eq!(ab_c, all, "merge must equal pooled recording");
+    }
+
+    #[test]
+    fn log_histogram_deterministic_and_edge_cases() {
+        let mut a = LogHistogram::default();
+        let mut b = LogHistogram::default();
+        for x in [0.0, -1.0, 1e-9, 0.25, 3.0, 1e9] {
+            a.record(x);
+            b.record(x);
+        }
+        assert_eq!(a, b, "same stream must produce identical state");
+        a.record(f64::NAN);
+        a.record(f64::INFINITY);
+        assert_eq!(a.count(), 6, "non-finite samples are ignored");
+        assert_eq!(a.min(), 0.0);
+        assert_eq!(a.max(), 1e9);
+        let empty = LogHistogram::default();
+        assert_eq!(empty.percentile(50.0), 0.0);
+        assert_eq!(empty.mean(), 0.0);
+        let mut merged = LogHistogram::default();
+        merged.merge_from(&empty);
+        assert!(merged.is_empty());
+        merged.merge_from(&b);
+        assert_eq!(merged, b, "merge into empty clones the source");
     }
 }

@@ -13,7 +13,9 @@
 //!     indices — compared on exact Debug formatting, so every f64 bit
 //!     matters);
 //!   * identical fleet metrics rollups;
-//!   * identical final per-replica KV content-key sets.
+//!   * identical final per-replica KV content-key sets;
+//!   * identical rendered Chrome traces and fleet-merged latency
+//!     histograms when per-replica tracing is on (PR 6).
 
 use echo::cluster::{
     offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig, ClusterSim,
@@ -136,4 +138,37 @@ fn parallel_fleet_bit_exact_under_autoscale_and_stealing() {
     let serial = run(1);
     assert_eq!(serial, run(2), "2-thread fleet diverged from serial");
     assert_eq!(serial, run(4), "4-thread fleet diverged from serial");
+}
+
+#[test]
+fn parallel_fleet_traces_bit_exact_with_serial() {
+    // PR 6 observability: trace events are recorded inside each replica's
+    // engine with virtual-clock stamps and collected in replica-id order,
+    // so the rendered Chrome trace and the fleet-merged latency histograms
+    // must be byte-identical across thread counts.
+    let run = |threads: usize| {
+        let mut cc = fleet_cfg(7, 3, threads);
+        cc.trace_events = 1 << 14;
+        let mut sim = ClusterSim::new(cc);
+        sim.submit_offline_backlog(offline_jobs(
+            &DatasetSpec::toolbench().scaled(0.1),
+            30,
+            13,
+        ));
+        let trace = Trace::generate(&TraceConfig::compressed(120.0, 4.0, 5));
+        let online = online_jobs_from_trace(&trace, &online_session_spec(), 5);
+        sim.run(&online, 120.0).unwrap();
+        let chrome = sim.chrome_trace().pretty();
+        let merged = sim.all_metrics();
+        (chrome, format!("{:?}", merged.latency_view()))
+    };
+    let serial = run(1);
+    let (chrome, latency) = &serial;
+    assert!(
+        chrome.contains("\"traceEvents\""),
+        "trace must be Chrome-trace shaped"
+    );
+    assert!(!latency.is_empty());
+    assert_eq!(serial, run(2), "2-thread trace/histograms diverged");
+    assert_eq!(serial, run(4), "4-thread trace/histograms diverged");
 }

@@ -41,6 +41,7 @@ fn every_verb_round_trips() {
     roundtrip(r#"{"verb":"stream"}"#);
     roundtrip(r#"{"verb":"stream","ticket":0}"#);
     roundtrip(r#"{"verb":"metrics"}"#);
+    roundtrip(r#"{"verb":"obs"}"#);
     roundtrip(r#"{"verb":"shutdown"}"#);
 }
 
@@ -115,13 +116,15 @@ fn blank_lines_are_ignored() {
 
 /// The golden script: submit an online request and a long offline one,
 /// stream the online ticket to completion, cancel the offline one while it
-/// is still far from done, read metrics, drain, shut down.
+/// is still far from done, read metrics and the obs report, drain, shut
+/// down.
 const SCRIPT: &[&str] = &[
     r#"{"verb":"submit","class":"online","prompt_len":64,"max_new_tokens":4,"arrival":0}"#,
     r#"{"verb":"submit","class":"offline","prompt_len":8000,"max_new_tokens":64}"#,
     r#"{"verb":"stream","ticket":0}"#,
     r#"{"verb":"cancel","ticket":1}"#,
     r#"{"verb":"metrics"}"#,
+    r#"{"verb":"obs"}"#,
     r#"{"verb":"stream"}"#,
     r#"{"verb":"shutdown"}"#,
 ];
@@ -185,7 +188,9 @@ fn session_transcript_shape() {
     let cancel = Json::parse(&transcript[3][0]).unwrap();
     assert_eq!(cancel.get("cancelled").and_then(|v| v.as_bool()), Some(true));
 
-    // Metrics snapshot reflects one completion and one cancellation.
+    // Metrics snapshot reflects one completion and one cancellation, and
+    // carries the streaming-histogram percentiles (PR 6: the wire metrics
+    // reply exposes true percentile latency, not just counters).
     let metrics = Json::parse(&transcript[4][0]).unwrap();
     assert_eq!(
         metrics.at("metrics.online_completed").and_then(|v| v.as_u64()),
@@ -195,15 +200,51 @@ fn session_transcript_shape() {
         metrics.at("metrics.cancelled").and_then(|v| v.as_u64()),
         Some(1)
     );
+    assert_eq!(
+        metrics.at("metrics.latency.ttft.count").and_then(|v| v.as_u64()),
+        Some(1)
+    );
+    for key in [
+        "metrics.latency.ttft.p50",
+        "metrics.latency.ttft.p99",
+        "metrics.latency.tpot.p90",
+        "metrics.latency.queue_wait.mean",
+        "metrics.latency.estimator.bias",
+    ] {
+        assert!(
+            metrics.at(key).and_then(|v| v.as_f64()).is_some(),
+            "metrics reply must carry {key}"
+        );
+    }
+
+    // Obs report: same latency summaries plus lifecycle counters; this
+    // deployment holds no trace rings, so the trace section is empty.
+    let obs = Json::parse(&transcript[5][0]).unwrap();
+    assert_eq!(obs.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(obs.get("verb").and_then(|v| v.as_str()), Some("obs"));
+    assert_eq!(
+        obs.at("obs.latency.ttft.count").and_then(|v| v.as_u64()),
+        Some(1)
+    );
+    assert_eq!(
+        obs.at("obs.counters.online_completed").and_then(|v| v.as_u64()),
+        Some(1)
+    );
+    assert_eq!(
+        obs.at("obs.trace.replicas")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.len()),
+        Some(0)
+    );
 
     // Final drain: exactly the buffered Cancelled event for ticket 1.
-    let drain = &transcript[5];
+    let drain = &transcript[6];
     assert_eq!(drain.len(), 2, "cancelled event + summary: {drain:?}");
     let ev = Json::parse(&drain[0]).unwrap();
     assert_eq!(ev.get("event").and_then(|v| v.as_str()), Some("cancelled"));
     assert_eq!(ev.get("ticket").and_then(|v| v.as_u64()), Some(1));
 
     // Shutdown ack.
-    let bye = Json::parse(&transcript[6][0]).unwrap();
+    let bye = Json::parse(&transcript[7][0]).unwrap();
     assert_eq!(bye.get("verb").and_then(|v| v.as_str()), Some("shutdown"));
 }
