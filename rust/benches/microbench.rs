@@ -18,6 +18,11 @@
 //!     `Option<TraceRing>` branch is a no-op) vs enabled (every step
 //!     records an iteration span into the ring); fixed iteration counts,
 //!     so `--gate-obs` sees real timings even under `--quick`
+//!   * faults-step pair — the engine step loop with no fault schedule
+//!     installed (the `Option<ReplicaFaults>` hook folds to a skipped
+//!     branch) vs a non-empty schedule whose events never fire; fixed
+//!     iteration counts, so `--gate-faults` sees real timings even under
+//!     `--quick`
 //!   * KV manager hot paths at 1k/16k/64k blocks — pre-PR `OracleKvManager`
 //!     (global BTreeSet free table, scan-per-call availability) vs. the
 //!     bucketed victim index: allocate+release cycle, `availability()`,
@@ -32,7 +37,7 @@
 //!
 //! Flags (after `--`):
 //!   `--bench-json <path>`        write the machine-readable report
-//!                                (default name: BENCH_PR6.json) and
+//!                                (default name: BENCH_PR7.json) and
 //!                                self-validate it by re-parsing
 //!   `--quick`                    tiny iteration counts (CI smoke: proves
 //!                                the harness runs headless; micro timings
@@ -49,6 +54,12 @@
 //!                                within the noise band of the untraced
 //!                                one and the steady-state step loop stays
 //!                                allocation-free with tracing off
+//!   `--gate-faults`              fail unless the engine step with a fault
+//!                                schedule installed (but never firing)
+//!                                stays within the noise band of the
+//!                                hook-free step, and the steady-state
+//!                                step loop stays allocation-free with
+//!                                injection disabled
 //!   `--write-experiments <path>` rewrite the `<!-- perf:begin/end -->`
 //!                                block of EXPERIMENTS.md with the
 //!                                before/after table
@@ -284,8 +295,11 @@ impl Harness {
         if let Some(s) = self.speedup("obs-step", 8) {
             speedups = speedups.set("obs-step@8", s);
         }
+        if let Some(s) = self.speedup("faults-step", 8) {
+            speedups = speedups.set("faults-step@8", s);
+        }
         Json::obj()
-            .set("bench", "BENCH_PR6")
+            .set("bench", "BENCH_PR7")
             .set(
                 "note",
                 "baseline = pre-PR code paths (clone-trial scheduler, full \
@@ -663,7 +677,7 @@ fn bench_kv_pairs(h: &mut Harness, size: usize, variant: &str) {
     // churn on middle-aged cached keys re-inserts at mid-bucket positions,
     // where the ordered intrusive list pays O(distance-to-nearer-end) per
     // link vs the oracle's O(log n) BTreeSet — the one pattern the bucket
-    // design trades away. Kept visible in BENCH_PR6.json so the perf
+    // design trades away. Kept visible in BENCH_PR7.json so the perf
     // trajectory tracks it; a skip-hint can reclaim it if real workloads
     // ever look like this.
     let mid = warm.len() / 2;
@@ -1050,6 +1064,45 @@ fn bench_obs_step(h: &mut Harness, variant: &str) {
     );
 }
 
+// ---- faults: injector-hook overhead on the engine step loop ----------------
+
+/// The PR 7 pair: engine step with no fault schedule installed (`baseline`
+/// — the `Option<ReplicaFaults>` hook folds to a skipped branch) vs a
+/// non-empty schedule whose events never fire (`incremental` — a straggler
+/// window parked in the far future, so every step pays the full hook
+/// dispatch but injection never triggers). The schedule must be non-empty:
+/// `install_faults` drops empty schedules, which would make both sides
+/// identical and the gate vacuous. `--gate-faults` holds the armed side to
+/// the shared 5% noise band.
+fn bench_faults_step(h: &mut Harness, variant: &str) {
+    let armed = variant == "incremental";
+    let mode = if armed { "faults armed" } else { "faults off" };
+    let mut e = obs_step_engine(false);
+    if armed {
+        let plan = echo::faults::FaultPlan {
+            events: vec![echo::faults::FaultEvent::Slowdown {
+                at: 1.0e12,
+                until: 2.0e12,
+                replica: 0,
+                factor: 4.0,
+            }],
+            seed: 0,
+        };
+        e.install_faults(plan.for_replica(0));
+        assert!(e.faults_installed(), "the armed side must carry a schedule");
+    }
+    h.bench_fixed(
+        &format!("engine step [{mode}] (8 offline decodes)"),
+        "faults-step",
+        variant,
+        8,
+        500,
+        || {
+            e.step().unwrap();
+        },
+    );
+}
+
 #[cfg(not(feature = "runtime"))]
 fn bench_pjrt() {
     println!("pjrt step: skipped (built without the `runtime` feature)");
@@ -1112,8 +1165,11 @@ fn perf_table(h: &Harness) -> String {
     pairs.push(("estimator", 64));
     pairs.push(("content-keys", 2048));
     // obs-step "before" is tracing off and "after" is tracing on, so the
-    // interesting number is the speedup staying at ~1.0x.
+    // interesting number is the speedup staying at ~1.0x. Same story for
+    // faults-step: "before" is no injector hook, "after" is an installed
+    // (never-firing) fault schedule.
     pairs.push(("obs-step", 8));
+    pairs.push(("faults-step", 8));
     for (path, size) in pairs {
         let (Some(b), Some(i)) = (
             h.median_of(path, "baseline", size),
@@ -1195,10 +1251,11 @@ fn main() {
     let gate_fleet = args.iter().any(|a| a == "--gate-fleet");
     let gate_kv = args.iter().any(|a| a == "--gate-kv");
     let gate_obs = args.iter().any(|a| a == "--gate-obs");
+    let gate_faults = args.iter().any(|a| a == "--gate-faults");
     let json_path = args
         .iter()
         .position(|a| a == "--bench-json")
-        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR6.json".into()));
+        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR7.json".into()));
     let experiments_path = args
         .iter()
         .position(|a| a == "--write-experiments")
@@ -1230,6 +1287,9 @@ fn main() {
     for variant in ["baseline", "incremental"] {
         bench_obs_step(&mut h, variant);
     }
+    for variant in ["baseline", "incremental"] {
+        bench_faults_step(&mut h, variant);
+    }
     bench_kv_ops(&mut h);
     bench_radix(&mut h);
     bench_estimator(&mut h);
@@ -1259,6 +1319,9 @@ fn main() {
     }
     if let Some(s) = h.speedup("obs-step", 8) {
         println!("speedup obs-step@8 (untraced vs traced): {s:.2}x");
+    }
+    if let Some(s) = h.speedup("faults-step", 8) {
+        println!("speedup faults-step@8 (hook-free vs armed): {s:.2}x");
     }
     if gate_fleet {
         let s = fleet_speedup(&h, 16, 4).expect("fleet-step@16x4 must be measured");
@@ -1326,13 +1389,37 @@ fn main() {
         }
     }
 
+    if gate_faults {
+        let s = h
+            .speedup("faults-step", 8)
+            .expect("faults-step pair must be measured");
+        println!("faults gate: armed vs hook-free engine step = {s:.2}x");
+        // Same 5% noise band as the other gates: with no event in range the
+        // injector is one `Option` check plus a binary probe into a
+        // one-element schedule per step — orders of magnitude below the
+        // scheduler/estimator work — so a below-band reading means the hook
+        // started doing real work (or allocating) on the hot path.
+        assert!(
+            s >= 0.95,
+            "an installed-but-idle fault schedule must not slow the engine \
+             step loop beyond the noise band (measured {s:.2}x, gate 0.95x)"
+        );
+        if cfg!(not(debug_assertions)) {
+            assert_eq!(
+                alloc.steady, 0,
+                "faults gate: with injection disabled the steady-state \
+                 engine step must stay allocation-free"
+            );
+        }
+    }
+
     if let Some(path) = json_path {
         let j = h.to_json(quick, &alloc);
         let text = j.pretty();
         std::fs::write(&path, &text).expect("write bench json");
         // Self-validate: the emitted report must round-trip through the
         // in-repo JSON parser (the CI smoke step relies on this).
-        let parsed = Json::parse(&text).expect("BENCH_PR6.json must parse");
+        let parsed = Json::parse(&text).expect("BENCH_PR7.json must parse");
         let n = parsed
             .get("entries")
             .and_then(|e| e.as_arr())
@@ -1372,6 +1459,13 @@ fn main() {
                 .and_then(|v| v.as_f64())
                 .is_some(),
             "obs gate speedup obs-step@8 missing from report"
+        );
+        assert!(
+            parsed
+                .at("speedups.faults-step@8")
+                .and_then(|v| v.as_f64())
+                .is_some(),
+            "faults gate speedup faults-step@8 missing from report"
         );
         assert!(
             parsed

@@ -203,12 +203,12 @@ fn serve_demo(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     for _ in 0..n_off {
         let mut t = shared.clone();
         t.extend((0..16).map(|_| rng.range_u64(1, (vocab - 1) as u64) as u32));
-        handle.submit_detached(SubmitSpec::offline(PromptSpec::real(t), 8));
+        handle.submit_detached(SubmitSpec::offline(PromptSpec::real(t), 8))?;
     }
     let mut rxs = Vec::new();
     for _ in 0..n_on {
         let t: Vec<u32> = (0..40).map(|_| rng.range_u64(1, (vocab - 1) as u64) as u32).collect();
-        rxs.push(handle.submit_streaming(SubmitSpec::online(PromptSpec::real(t), 8)));
+        rxs.push(handle.submit_streaming(SubmitSpec::online(PromptSpec::real(t), 8))?);
         std::thread::sleep(std::time::Duration::from_millis(30));
     }
     for (i, (_ticket, rx)) in rxs.into_iter().enumerate() {
@@ -406,6 +406,16 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     .flag("autoscale", "scale the fleet with the tide (deployer-estimator driven)")
     .opt("min-replicas", "1", "autoscale floor")
     .opt("max-replicas", "0", "autoscale ceiling (0 = 2x --replicas)")
+    .opt(
+        "chaos-seed",
+        "0",
+        "inject a seeded fault plan (crashes/slowdowns/exec errors; 0 = off)",
+    )
+    .opt(
+        "chaos-intensity",
+        "1",
+        "fault-plan density multiplier (with --chaos-seed; <1 thins, >1 stacks)",
+    )
     .opt("seed", "42", "rng seed")
     .opt(
         "trace-out",
@@ -424,6 +434,15 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let mut cc = ClusterConfig::new(base, replicas);
     cc.sync_dt = args.f64("sync-dt").map_err(anyhow::Error::msg)?.max(1e-3);
     cc.threads = args.usize("threads").map_err(anyhow::Error::msg)?.max(1);
+    let chaos_seed = args.u64("chaos-seed").map_err(anyhow::Error::msg)?;
+    if chaos_seed != 0 {
+        let intensity = args.f64("chaos-intensity").map_err(anyhow::Error::msg)?;
+        cc.faults = crate::workload::chaos_overlay(chaos_seed, horizon, replicas, intensity);
+        println!(
+            "chaos: seed {chaos_seed} x{intensity} -> {} fault event(s)",
+            cc.faults.events.len()
+        );
+    }
     if !args.str("trace-out").is_empty() {
         cc.trace_events = crate::obs::DEFAULT_TRACE_EVENTS;
     }
@@ -528,6 +547,25 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         "fleet: peak {} replicas, mean {:.2}; backlog remaining {}",
         report.peak_replicas, report.mean_replicas, report.backlog_remaining
     );
+    if report.faults.any() {
+        println!(
+            "faults: {} crash(es) recovered (mean time-to-recovery {:.2}s), \
+             {} online re-dispatched, {} offline re-queued, {} tokens \
+             recomputed; shed {} offline / {} online; {} stalled cancel(s)",
+            report.faults.crashes,
+            if report.faults.crashes == 0 {
+                0.0
+            } else {
+                report.faults.recovery_time / report.faults.crashes as f64
+            },
+            report.faults.online_redispatched,
+            report.faults.offline_requeued,
+            report.faults.tokens_recomputed,
+            report.faults.shed_offline,
+            report.faults.shed_online,
+            report.faults.stalled_cancels
+        );
+    }
     if !args.str("trace-out").is_empty() {
         let path = args.str("trace-out");
         std::fs::write(&path, front.sim.chrome_trace().to_string())?;

@@ -16,6 +16,7 @@ use anyhow::Result;
 use crate::config::SystemConfig;
 use crate::core::{PromptSpec, Request, RequestId, TaskClass};
 use crate::estimator::{PrefillItem, TimeModel};
+use crate::faults::{FaultPlan, FaultStats, ShedPolicy};
 use crate::metrics::Metrics;
 use crate::obs::TraceRing;
 use crate::serve::TicketId;
@@ -143,6 +144,15 @@ pub struct ClusterConfig {
     /// ring (`obs::TraceRing`) stamped with virtual time; rings survive
     /// retirement so `trace_tracks` covers the whole fleet history.
     pub trace_events: usize,
+    /// Deterministic fault schedule (PR 7). Empty = injection disabled:
+    /// every hook below is a cheap emptiness check and the quantum loop is
+    /// byte-identical to a fault-free build. Crashes are detected by the
+    /// coordinator at quantum boundaries; slowdowns and transient execute
+    /// errors are installed into the targeted replica's engine at spawn.
+    pub faults: FaultPlan,
+    /// Overload shedding + stall-detection policy (defaults: shedding off,
+    /// stall detection on).
+    pub shed: ShedPolicy,
 }
 
 impl ClusterConfig {
@@ -163,6 +173,8 @@ impl ClusterConfig {
             scale: None,
             threads: 1,
             trace_events: 0,
+            faults: FaultPlan::none(),
+            shed: ShedPolicy::default(),
         }
     }
 }
@@ -207,6 +219,8 @@ pub struct ClusterReport {
     pub mean_replicas: f64,
     /// Offline jobs still undispatched at the horizon.
     pub backlog_remaining: usize,
+    /// Crash/recovery/shedding accounting (all zero on fault-free runs).
+    pub faults: FaultStats,
 }
 
 impl ClusterReport {
@@ -249,6 +263,7 @@ impl ClusterReport {
             .set("peak_replicas", self.peak_replicas)
             .set("mean_replicas", self.mean_replicas)
             .set("backlog_remaining", self.backlog_remaining)
+            .set("faults", self.faults.to_json())
             .set("timeline", Json::Arr(timeline))
     }
 }
@@ -278,6 +293,73 @@ pub struct ClusterSim {
     /// fleet trace covers replicas that scaled away mid-run. Empty unless
     /// `cfg.trace_events > 0`.
     retired_traces: Vec<(usize, TraceRing)>,
+    /// Replica failures detected during the current quantum's advance
+    /// (crash deadline reached or an error escaped `Engine::run_until`),
+    /// in replica-id order — serial and parallel advances produce the
+    /// identical list. Drained by `recover_failures` at the quantum
+    /// boundary; empty on the steady fault-free path.
+    pending_failures: Vec<ReplicaFailure>,
+    /// Crash/recovery/shedding accounting (see [`FaultStats`]).
+    pub fault_stats: FaultStats,
+}
+
+/// One detected replica failure awaiting quantum-boundary recovery.
+#[derive(Clone, Debug)]
+struct ReplicaFailure {
+    id: usize,
+    /// Virtual instant the replica stopped (crash time or error clock).
+    at: f64,
+    error: String,
+}
+
+/// Everything a dead replica owed the cluster.
+#[derive(Default)]
+struct Harvest {
+    offline: Vec<JobSpec>,
+    online: Vec<(OnlineJob, Option<TicketId>)>,
+}
+
+/// How one replica's quantum advance ended.
+enum Advanced {
+    Clean,
+    Failed(ReplicaFailure),
+    /// Non-recoverable (iteration backstop / worker panic): aborts the run
+    /// exactly like the pre-fault error contract.
+    Fatal(anyhow::Error),
+}
+
+/// Advance one replica to `t_end`, or to its scheduled crash instant if
+/// that falls inside this quantum. Pure per-replica (no shared state), so
+/// the serial and parallel fan-outs are bit-exact.
+fn advance_one(rep: &mut Replica, t_end: f64, crash_at: Option<f64>) -> Advanced {
+    let (cap, doomed) = match crash_at {
+        Some(c) if c <= t_end => (c.max(rep.engine.clock).min(t_end), true),
+        _ => (t_end, false),
+    };
+    match rep.engine.run_until(cap) {
+        Ok(_) if doomed => Advanced::Failed(ReplicaFailure {
+            id: rep.id,
+            at: cap,
+            error: format!("injected crash at t={cap:.3}"),
+        }),
+        Ok(_) => Advanced::Clean,
+        Err(e) => {
+            let msg = format!("{e:#}");
+            if msg.contains("max_iterations") {
+                // Scheduling livelock is an engine bug, not a fault to
+                // recover from — masking it behind a respawn would loop
+                // forever (the vendored anyhow has no downcast, so the
+                // classification keys on the typed Display text).
+                Advanced::Fatal(e)
+            } else {
+                Advanced::Failed(ReplicaFailure {
+                    id: rep.id,
+                    at: rep.engine.clock.min(cap),
+                    error: msg,
+                })
+            }
+        }
+    }
 }
 
 impl ClusterSim {
@@ -310,6 +392,8 @@ impl ClusterSim {
             ticket_place: FxHashMap::default(),
             place_ticket: FxHashMap::default(),
             retired_traces: Vec::new(),
+            pending_failures: Vec::new(),
+            fault_stats: FaultStats::default(),
             cfg,
         };
         for _ in 0..sim.cfg.replicas {
@@ -373,15 +457,19 @@ impl ClusterSim {
         if self.cfg.trace_events > 0 {
             rep.engine.enable_trace(self.cfg.trace_events);
         }
+        // The replica's slice of the fault plan (slowdowns + transient
+        // execute errors); `install_faults` drops empty slices, so the
+        // fault-free path stays a single None branch in the step loop.
+        rep.engine.install_faults(self.cfg.faults.for_replica(id));
         self.router.sync(rep.digest(self.cfg.summary_cap));
         self.replicas.push(rep);
     }
 
-    fn replica_mut(&mut self, id: usize) -> &mut Replica {
-        self.replicas
-            .iter_mut()
-            .find(|r| r.id == id)
-            .expect("router routed to an unknown replica")
+    /// Mutable replica lookup. `None` when the id is not live — reachable
+    /// during the post-crash window (a stale route or placement can point
+    /// at a corpse), so callers degrade gracefully instead of panicking.
+    fn replica_mut(&mut self, id: usize) -> Option<&mut Replica> {
+        self.replicas.iter_mut().find(|r| r.id == id)
     }
 
     fn pool_len(&self, id: usize) -> usize {
@@ -403,19 +491,21 @@ impl ClusterSim {
 
     fn submit_offline_to(&mut self, id: usize, job: JobSpec) {
         let ticket = job.ticket;
-        let rid = {
-            let rep = self.replica_mut(id);
-            let arrival = rep.engine.clock;
-            let rid = rep.engine.store.fresh_id();
-            rep.engine.submit_offline(Request::new(
-                rid,
-                TaskClass::Offline,
-                arrival,
-                job.prompt,
-                job.max_new_tokens,
-            ));
-            rid
+        let Some(rep) = self.replica_mut(id) else {
+            // Stale placement target (post-crash window): the job is not
+            // lost, it just waits in the shared backlog for the next steal.
+            self.backlog.push_back(job);
+            return;
         };
+        let arrival = rep.engine.clock;
+        let rid = rep.engine.store.fresh_id();
+        rep.engine.submit_offline(Request::new(
+            rid,
+            TaskClass::Offline,
+            arrival,
+            job.prompt,
+            job.max_new_tokens,
+        ));
         if let Some(t) = ticket {
             self.record_ticket(t, id, rid);
         }
@@ -430,15 +520,20 @@ impl ClusterSim {
     /// thief (recompute semantics, like preemption itself). The ticket, if
     /// any, travels with the extracted job.
     fn extract_jobs(&mut self, id: usize, n: usize) -> Vec<JobSpec> {
-        let victims = self.replica_mut(id).engine.pool.steal_candidates(n);
+        let Some(rep) = self.replica_mut(id) else {
+            return Vec::new();
+        };
+        let victims = rep.engine.pool.steal_candidates(n);
         let mut jobs = Vec::with_capacity(victims.len());
         for rid in victims {
             let (prompt, out) = {
-                let rep = self.replica_mut(id);
+                let Some(rep) = self.replica_mut(id) else { break };
                 let r = rep.engine.store.get(rid);
                 (r.prompt.clone(), r.max_new_tokens)
             };
-            self.replica_mut(id).engine.withdraw_offline(rid);
+            if let Some(rep) = self.replica_mut(id) {
+                rep.engine.withdraw_offline(rid);
+            }
             let ticket = self.unplace(id, rid);
             jobs.push(JobSpec {
                 prompt,
@@ -539,7 +634,11 @@ impl ClusterSim {
                 .collect();
             ids.sort_unstable_by(|a, b| b.cmp(a));
             for id in ids.into_iter().take(to_drain) {
-                self.replica_mut(id).draining = true;
+                if let Some(rep) = self.replica_mut(id) {
+                    rep.draining = true;
+                } else {
+                    continue;
+                }
                 // Its pending offline work goes back to the shared backlog.
                 let jobs = self.extract_jobs(id, usize::MAX);
                 self.backlog.extend(jobs);
@@ -589,7 +688,7 @@ impl ClusterSim {
             let service = self.service_estimate(job.prompt.total_len, job.max_new_tokens);
             self.rate_window.push_back((job.at, service));
         }
-        let rep = self.replica_mut(rid);
+        let rep = self.replica_mut(rid)?;
         let id = rep.engine.store.fresh_id();
         rep.engine.submit_online(Request::new(
             id,
@@ -637,39 +736,62 @@ impl ClusterSim {
                 rep.engine.clock = t;
             }
         }
+        // Crash deadlines are decided by the coordinator BEFORE fan-out so
+        // every thread count observes the same doom schedule. The fleet vec
+        // is id-sorted, so a contiguous chunk partition zipped against this
+        // list pairs each replica with its own deadline, and failure merges
+        // in chunk order equal the serial (id-order) collection exactly.
+        let deadlines: Vec<Option<f64>> = self
+            .replicas
+            .iter()
+            .map(|r| self.cfg.faults.crash_time(r.id))
+            .collect();
         let workers = self.cfg.threads.min(self.replicas.len()).max(1);
         if workers <= 1 {
             // Serial oracle path: advance in replica order on this thread.
-            for rep in &mut self.replicas {
-                rep.engine.run_until(t_end)?;
+            for (rep, crash) in self.replicas.iter_mut().zip(&deadlines) {
+                match advance_one(rep, t_end, *crash) {
+                    Advanced::Clean => {}
+                    Advanced::Failed(f) => self.pending_failures.push(f),
+                    Advanced::Fatal(e) => return Err(e),
+                }
             }
             return Ok(());
         }
         // Contiguous partition keeps the chunk list in replica-id order,
-        // so the error merge below reports the same (lowest-id) failure
-        // the serial loop would have hit first (see the error contract in
-        // the doc comment: post-error partial state is unspecified).
+        // so the merges below (failures and errors) match what the serial
+        // loop would have produced (see the error contract in the doc
+        // comment: post-error partial state is unspecified).
         let chunk = self.replicas.len().div_ceil(workers);
         let mut first_err: Option<anyhow::Error> = None;
+        let mut failed: Vec<ReplicaFailure> = Vec::new();
         std::thread::scope(|s| {
             let handles: Vec<_> = self
                 .replicas
                 .chunks_mut(chunk)
-                .map(|reps| {
-                    s.spawn(move || -> Result<()> {
-                        for rep in reps {
-                            rep.engine.run_until(t_end)?;
+                .zip(deadlines.chunks(chunk))
+                .map(|(reps, crashes)| {
+                    s.spawn(move || -> (Vec<ReplicaFailure>, Option<anyhow::Error>) {
+                        let mut fails = Vec::new();
+                        for (rep, crash) in reps.iter_mut().zip(crashes) {
+                            match advance_one(rep, t_end, *crash) {
+                                Advanced::Clean => {}
+                                Advanced::Failed(f) => fails.push(f),
+                                Advanced::Fatal(e) => return (fails, Some(e)),
+                            }
                         }
-                        Ok(())
+                        (fails, None)
                     })
                 })
                 .collect();
             for h in handles {
                 match h.join() {
-                    Ok(Ok(())) => {}
-                    Ok(Err(e)) => {
-                        if first_err.is_none() {
-                            first_err = Some(e);
+                    Ok((fails, err)) => {
+                        failed.extend(fails);
+                        if let Some(e) = err {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
                         }
                     }
                     Err(_) => {
@@ -680,16 +802,153 @@ impl ClusterSim {
                 }
             }
         });
+        self.pending_failures.extend(failed);
         match first_err {
             Some(e) => Err(e),
             None => Ok(()),
         }
     }
 
-    /// Post-quantum bookkeeping: republish digests, retire drained fleet
-    /// members, rebalance offline work, evaluate scaling, record the
-    /// timeline point.
+    /// True when `id` failed during the current quantum and is awaiting
+    /// recovery at the quantum boundary. Front-ends use this to avoid
+    /// judging a corpse's queue (its work is about to be re-dispatched,
+    /// not stuck).
+    pub fn failed_pending(&self, id: usize) -> bool {
+        self.pending_failures.iter().any(|f| f.id == id)
+    }
+
+    /// Strip every in-flight request off a dying replica: pooled offline
+    /// work first (`extract_jobs` keeps tickets attached), then whatever
+    /// remains live (running / queued online / preempted) is cloned back
+    /// into job specs and cancelled on the corpse so its KV blocks,
+    /// scheduler entries, and interned keys are all released before the
+    /// replica leaves the fleet. Iteration follows the engine's live set
+    /// (a `BTreeSet`, so id order) — deterministic for any thread count.
+    fn harvest_replica(&mut self, id: usize) -> Harvest {
+        let mut harvest = Harvest {
+            offline: self.extract_jobs(id, usize::MAX),
+            online: Vec::new(),
+        };
+        let live: Vec<RequestId> = match self.replica(id) {
+            Some(rep) => rep.engine.live_requests().map(|r| r.id).collect(),
+            None => return harvest,
+        };
+        for rid in live {
+            let Some(rep) = self.replica_mut(id) else { break };
+            let r = rep.engine.store.get(rid);
+            let (class, prompt, out, arrival, computed) = (
+                r.class,
+                r.prompt.clone(),
+                r.max_new_tokens,
+                r.arrival,
+                r.computed,
+            );
+            let ticket = self.unplace(id, rid);
+            self.fault_stats.tokens_recomputed += computed as u64;
+            if let Some(rep) = self.replica_mut(id) {
+                rep.engine.cancel(rid);
+            }
+            match class {
+                TaskClass::Offline => harvest.offline.push(JobSpec {
+                    prompt,
+                    max_new_tokens: out,
+                    ticket,
+                }),
+                TaskClass::Online => harvest.online.push((
+                    OnlineJob {
+                        at: arrival,
+                        prompt,
+                        max_new_tokens: out,
+                    },
+                    ticket,
+                )),
+            }
+        }
+        harvest
+    }
+
+    /// Crash recovery, run first at every quantum boundary (single
+    /// threaded, replica-id order — bit-exact for any `cfg.threads`). For
+    /// each failure: salvage the corpse's work, verify its KV manager left
+    /// no leaked blocks, retire it with a report, and spawn a cold
+    /// replacement so capacity recovers. Salvaged offline jobs go to the
+    /// FRONT of the backlog (they have already waited); salvaged online
+    /// jobs are re-routed immediately with their original arrival stamp,
+    /// so recovery latency shows up in their TTFT rather than vanishing.
+    fn recover_failures(&mut self, t_end: f64) {
+        if self.pending_failures.is_empty() {
+            return;
+        }
+        let slo = self.cfg.base.slo;
+        let failures = std::mem::take(&mut self.pending_failures);
+        let mut offline: Vec<JobSpec> = Vec::new();
+        let mut online: Vec<(OnlineJob, Option<TicketId>)> = Vec::new();
+        for f in failures {
+            log::warn!(
+                "replica {} failed at t={:.3} ({}); recovering at quantum end t={:.3}",
+                f.id,
+                f.at,
+                f.error,
+                t_end
+            );
+            let harvest = self.harvest_replica(f.id);
+            offline.extend(harvest.offline);
+            online.extend(harvest.online);
+            let Some(pos) = self.replicas.iter().position(|r| r.id == f.id) else {
+                log::error!("failed replica {} not in fleet; skipping", f.id);
+                continue;
+            };
+            let mut rep = self.replicas.remove(pos);
+            // Every live request was cancelled above, so the KV manager
+            // must be back to a steady state: no request-held blocks
+            // leaked, free counts consistent. `reclaim_orphans` is the
+            // belt-and-braces sweep (it finds nothing unless harvesting
+            // itself is buggy); a violation after it is a recovery bug,
+            // not an injected fault.
+            let live: Vec<RequestId> = rep.engine.live_requests().map(|r| r.id).collect();
+            let orphaned = rep.engine.kv.reclaim_orphans(&live);
+            if orphaned > 0 {
+                debug_assert!(false, "harvest left {orphaned} orphaned KV owners");
+                log::error!("replica {}: reclaimed {orphaned} orphaned KV owners", f.id);
+            }
+            if let Err(msg) = rep.engine.kv.check_invariants() {
+                debug_assert!(false, "KV invariants broken after crash harvest: {msg}");
+                log::error!("replica {}: KV invariants after harvest: {msg}", f.id);
+            }
+            self.router.forget(f.id);
+            if let Some(ring) = rep.engine.take_trace() {
+                self.retired_traces.push((f.id, ring));
+            }
+            self.retired.push(replica_report(&rep, Some(f.at), &slo));
+            self.fault_stats.crashes += 1;
+            self.fault_stats.recovery_time += (t_end - f.at).max(0.0);
+            self.spawn_replica(t_end);
+        }
+        self.fault_stats.offline_requeued += offline.len();
+        for job in offline.into_iter().rev() {
+            self.backlog.push_front(job);
+        }
+        for (job, ticket) in online {
+            match self.dispatch_online(&job) {
+                Some((rid, req)) => {
+                    self.fault_stats.online_redispatched += 1;
+                    if let Some(t) = ticket {
+                        self.record_ticket(t, rid, req);
+                    }
+                }
+                None => log::error!(
+                    "online job lost in recovery: empty fleet (arrival t={:.3})",
+                    job.at
+                ),
+            }
+        }
+    }
+
+    /// Post-quantum bookkeeping: recover crashed replicas, republish
+    /// digests, retire drained fleet members, rebalance offline work,
+    /// evaluate scaling, record the timeline point.
     pub fn finish_quantum(&mut self, t_end: f64) {
+        self.recover_failures(t_end);
         self.sync_router();
         self.retire_drained(t_end);
         self.work_steal();
@@ -797,6 +1056,7 @@ impl ClusterSim {
             peak_replicas: peak,
             mean_replicas: mean,
             backlog_remaining: self.backlog.len(),
+            faults: self.fault_stats,
             aggregate,
             replicas: reps,
         }
@@ -999,6 +1259,95 @@ mod tests {
         let serial = run(1);
         assert_eq!(serial, run(2));
         assert_eq!(serial, run(4), "threads > replicas clamps safely");
+    }
+
+    #[test]
+    fn crash_recovery_completes_all_work() {
+        use crate::faults::FaultEvent;
+        let mut cfg = small_cfg();
+        cfg.faults = FaultPlan {
+            events: vec![
+                // Mid-run replica death with live work aboard...
+                FaultEvent::Crash {
+                    at: 6.0,
+                    replica: 1,
+                },
+                // ...plus a transient execute hiccup the retry loop absorbs.
+                FaultEvent::ExecError {
+                    at: 3.0,
+                    replica: 0,
+                    failures: 2,
+                },
+            ],
+            seed: 1,
+        };
+        let mut sim = ClusterSim::new(cfg);
+        let jobs = offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 24, 7);
+        let n_jobs = jobs.len();
+        sim.submit_offline_backlog(jobs);
+        let online = tiny_online(30, 1.0);
+        let report = sim.run(&online, 180.0).unwrap();
+        assert_eq!(report.faults.crashes, 1, "{:?}", report.faults);
+        assert!(report.faults.recovery_time > 0.0);
+        // Every job still completes exactly once: salvaged online work is
+        // re-dispatched, salvaged offline work re-queued and re-stolen.
+        assert_eq!(report.aggregate.online_completed, 30);
+        assert_eq!(report.aggregate.offline_completed, n_jobs);
+        assert_eq!(report.backlog_remaining, 0);
+        // The transient exec fault was retried, not escalated.
+        assert!(report.aggregate.exec_faults >= 2, "{:?}", report.aggregate);
+        for rep in &sim.replicas {
+            rep.engine.kv.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn parallel_matches_serial_under_faults() {
+        let run = |threads: usize| {
+            let mut cfg = small_cfg();
+            cfg.replicas = 4;
+            cfg.threads = threads;
+            cfg.faults = FaultPlan::random(0xC4A05, 90.0, 4);
+            let mut sim = ClusterSim::new(cfg);
+            sim.submit_offline_backlog(offline_jobs(
+                &DatasetSpec::toolbench().scaled(0.1),
+                30,
+                11,
+            ));
+            let online = tiny_online(40, 0.7);
+            let r = sim.run(&online, 150.0).unwrap();
+            format!("{:?} {:?}", r.aggregate, r.faults)
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(2), "2 threads must match the serial oracle");
+        assert_eq!(serial, run(4), "4 threads must match the serial oracle");
+    }
+
+    #[test]
+    fn faults_on_idle_replicas_do_not_change_results() {
+        // A slowdown window entirely before any work arrives multiplies
+        // elapsed time that never gets sampled — the run must be bit-equal
+        // to the fault-free run.
+        let run = |faults: FaultPlan| {
+            let mut cfg = small_cfg();
+            cfg.faults = faults;
+            let mut sim = ClusterSim::new(cfg);
+            // Online-only: the fleet is provably idle until the first
+            // arrival at t=0.5, strictly after the slowdown window ends.
+            let r = sim.run(&tiny_online(10, 1.0), 90.0).unwrap();
+            format!("{:?}", r.aggregate)
+        };
+        use crate::faults::FaultEvent;
+        let idle_only = FaultPlan {
+            events: vec![FaultEvent::Slowdown {
+                at: 0.0,
+                until: 0.2,
+                replica: 0,
+                factor: 8.0,
+            }],
+            seed: 3,
+        };
+        assert_eq!(run(FaultPlan::none()), run(idle_only));
     }
 
     #[test]

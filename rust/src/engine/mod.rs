@@ -17,6 +17,7 @@ use std::collections::{BTreeSet, VecDeque};
 use crate::config::{SystemConfig, SchedulerKind};
 use crate::core::{ReqState, Request, RequestId, RequestStore, TaskClass, Token};
 use crate::estimator::{MemoryPredictor, TimeModel};
+use crate::faults::{backoff_delay, ReplicaFaults, ServeError, MAX_EXEC_ATTEMPTS};
 use crate::kvcache::{EvictionPolicy, KvManager};
 use crate::metrics::{Metrics, SampleCtl};
 use crate::obs::{TraceEvent, TraceRing};
@@ -105,6 +106,14 @@ pub struct Engine<B: ExecutionBackend> {
     /// the steady step loop stays allocation-free. Enabled, the ring is
     /// pre-allocated and `push` never allocates either.
     trace: Option<TraceRing>,
+    /// Fault-injection schedule (PR 7). `None` = injection disabled: the
+    /// execute path pays a single `is_some` branch, exactly like the trace
+    /// hook, and the steady step loop stays allocation-free. Installed, the
+    /// schedule is consulted around `ExecutionBackend::execute` — slowdown
+    /// windows stretch the reported elapsed time, transient faults fail
+    /// attempts that the retry loop below absorbs with capped exponential
+    /// backoff on the virtual clock.
+    faults: Option<ReplicaFaults>,
     /// Hard stop against pathological loops; generous (24 h at 10 ms/iter).
     pub max_iterations: usize,
     /// Ceiling for idle-time jumps: when the engine is idle it fast-forwards
@@ -145,6 +154,7 @@ impl<B: ExecutionBackend> Engine<B> {
             live: BTreeSet::new(),
             sample: SampleCtl::new(0.0),
             trace: None,
+            faults: None,
             max_iterations: 10_000_000,
             clock_cap: f64::INFINITY,
             cfg,
@@ -176,6 +186,18 @@ impl<B: ExecutionBackend> Engine<B> {
     /// Detach the trace collector, disabling tracing from here on.
     pub fn take_trace(&mut self) -> Option<TraceRing> {
         self.trace.take()
+    }
+
+    /// Install a per-replica fault schedule (see [`crate::faults`]). An
+    /// empty schedule is not installed at all, keeping the disabled path
+    /// identical to a fault-free engine.
+    pub fn install_faults(&mut self, f: ReplicaFaults) {
+        self.faults = if f.is_empty() { None } else { Some(f) };
+    }
+
+    /// Whether a fault schedule is installed.
+    pub fn faults_installed(&self) -> bool {
+        self.faults.is_some()
     }
 
     #[inline]
@@ -472,16 +494,68 @@ impl<B: ExecutionBackend> Engine<B> {
             return Ok(false);
         }
 
-        // 3. execute (into the recycled token buffer)
+        // 3. execute (into the recycled token buffer), absorbing transient
+        // faults. Injected faults (the schedule in `self.faults`) and real
+        // backend errors share one policy: capped exponential backoff on
+        // the virtual clock, escalating to a typed replica-fatal
+        // `ServeError::ExecFailed` once MAX_EXEC_ATTEMPTS have all failed.
+        // The vendored anyhow has no downcast, so classification happens
+        // here, before the error crosses the anyhow boundary: anything
+        // that escapes `step` is final, never retriable.
         let mut tokens = std::mem::take(&mut self.scratch.tokens);
         tokens.clear();
         let tok_cap = tokens.capacity();
-        let elapsed = match self.backend.execute(&outcome.plan, &self.store, &mut tokens) {
-            Ok(elapsed) => elapsed,
+        let injected = match self.faults.as_mut() {
+            Some(f) => f.take_exec_failures(self.clock).unwrap_or(0),
+            None => 0,
+        };
+        let mut failed_attempts = 0u32;
+        let exec: Result<f64, ServeError> = loop {
+            if failed_attempts < injected {
+                // Scheduled transient fault: this attempt fails by plan.
+                failed_attempts += 1;
+            } else {
+                tokens.clear();
+                match self.backend.execute(&outcome.plan, &self.store, &mut tokens) {
+                    Ok(elapsed) => break Ok(elapsed),
+                    Err(e) => {
+                        failed_attempts += 1;
+                        if failed_attempts >= MAX_EXEC_ATTEMPTS {
+                            break Err(ServeError::ExecFailed {
+                                attempts: failed_attempts,
+                                last: e.to_string(),
+                            });
+                        }
+                    }
+                }
+                continue;
+            }
+            if failed_attempts >= MAX_EXEC_ATTEMPTS {
+                break Err(ServeError::ExecFailed {
+                    attempts: failed_attempts,
+                    last: "injected transient fault".into(),
+                });
+            }
+        };
+        if failed_attempts > 0 {
+            self.metrics.exec_faults += failed_attempts as u64;
+            // Waiting out the backoff is idle time, not busy time.
+            self.clock += backoff_delay(failed_attempts);
+        }
+        let elapsed = match exec {
+            Ok(elapsed) => {
+                if failed_attempts > 0 {
+                    self.metrics.exec_retries += 1;
+                }
+                match self.faults.as_ref() {
+                    Some(f) => elapsed * f.slow_factor(self.clock),
+                    None => elapsed,
+                }
+            }
             Err(e) => {
                 self.scratch.outcome = outcome;
                 self.scratch.tokens = tokens;
-                return Err(e);
+                return Err(e.into());
             }
         };
         let iter_start = self.clock;
@@ -691,10 +765,10 @@ impl<B: ExecutionBackend> Engine<B> {
             }
             iters += 1;
             if iters >= self.max_iterations {
-                break Err(anyhow::anyhow!(
-                    "engine exceeded max_iterations {}",
-                    self.max_iterations
-                ));
+                break Err(ServeError::IterationBackstop {
+                    max_iterations: self.max_iterations,
+                }
+                .into());
             }
         };
         self.clock_cap = prev_cap;

@@ -1,0 +1,586 @@
+//! Deterministic fault injection and the failure vocabulary (PR 7).
+//!
+//! Echo's premise is over-provisioning for bursty online traffic — which
+//! only pays off if the system *degrades* instead of wedging when replicas
+//! die, backends hiccup, or load exceeds capacity (cf. ConServe's revocable
+//! offline work and HyGen's SLO protection under stragglers, PAPERS.md).
+//! This module defines:
+//!
+//! * [`FaultPlan`] — a seeded, virtual-clock-scheduled list of
+//!   [`FaultEvent`]s (replica crash, slowdown window, transient execute
+//!   errors, wire connection drop). Plans are plain data: the same seed
+//!   always produces the same plan, and injection sites consume the plan on
+//!   the virtual clock, so every fault fires at the same instant regardless
+//!   of wall time or worker thread count.
+//! * [`ReplicaFaults`] — the per-replica slice of a plan, installed into an
+//!   `Engine` as an `Option` hook (absent = zero cost, same pattern as the
+//!   trace ring).
+//! * [`CancelReason`] — why a ticket was terminated without finishing; part
+//!   of `TokenEvent::Cancelled` and the wire protocol.
+//! * [`ServeError`] — the typed error vocabulary surfaced through the
+//!   `Serve` trait (the vendored `anyhow` stub has no downcast, so
+//!   classification happens *before* conversion: the engine retries
+//!   transient faults internally and anything that escapes is
+//!   replica-fatal).
+//! * [`FaultStats`] — crash/recovery accounting the cluster reports.
+
+use crate::utils::json::Json;
+use crate::utils::rng::Rng;
+
+/// Maximum consecutive attempts for one engine iteration's execute call
+/// (1 initial + retries) before a transient fault escalates to replica
+/// death.
+pub const MAX_EXEC_ATTEMPTS: u32 = 4;
+
+/// First retry backoff (virtual seconds); doubles per attempt.
+pub const EXEC_BACKOFF_BASE: f64 = 0.01;
+
+/// Backoff cap (virtual seconds).
+pub const EXEC_BACKOFF_CAP: f64 = 0.08;
+
+/// Total virtual-clock delay the capped exponential backoff adds for
+/// `failures` consecutive failed attempts (attempt k waits
+/// `min(BASE * 2^k, CAP)` before re-trying).
+pub fn backoff_delay(failures: u32) -> f64 {
+    let mut total = 0.0;
+    for k in 0..failures {
+        total += (EXEC_BACKOFF_BASE * f64::powi(2.0, k as i32)).min(EXEC_BACKOFF_CAP);
+    }
+    total
+}
+
+/// One scheduled fault. Times are virtual-clock seconds on the deployment
+/// clock; `replica` is the replica id the fault targets (ids are assigned
+/// in spawn order, so a plan is meaningful across runs of the same config).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// The replica dies at `at`: its engine stops mid-quantum, the
+    /// coordinator detects the death at the next quantum boundary, retires
+    /// its digest, reclaims its KV, and re-dispatches its in-flight work.
+    Crash { at: f64, replica: usize },
+    /// Straggler window: every execute between `at` and `until` takes
+    /// `factor`× as long (virtual time), modelling thermal throttling or a
+    /// noisy neighbor.
+    Slowdown {
+        at: f64,
+        until: f64,
+        replica: usize,
+        factor: f64,
+    },
+    /// The next execute at or after `at` fails `failures` consecutive
+    /// times before succeeding. `failures >= MAX_EXEC_ATTEMPTS` exhausts
+    /// the retry budget and escalates to replica death.
+    ExecError {
+        at: f64,
+        replica: usize,
+        failures: u32,
+    },
+    /// A wire connection drops after serving `after_frames` request
+    /// frames (connection-level; no replica target).
+    ConnDrop { after_frames: u64 },
+}
+
+impl FaultEvent {
+    pub fn replica(&self) -> Option<usize> {
+        match *self {
+            FaultEvent::Crash { replica, .. }
+            | FaultEvent::Slowdown { replica, .. }
+            | FaultEvent::ExecError { replica, .. } => Some(replica),
+            FaultEvent::ConnDrop { .. } => None,
+        }
+    }
+}
+
+/// A seeded, deterministic schedule of faults.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// The empty plan (injection disabled).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Generate a random plan over `horizon` seconds targeting replicas
+    /// `0..replicas`. Deterministic per seed. Densities are modest — the
+    /// point is exercising recovery paths, not annihilating the fleet:
+    /// up to one crash per two replicas, a couple of slowdown windows,
+    /// a handful of transient execute errors (some past the retry budget
+    /// so escalation paths run too).
+    pub fn random(seed: u64, horizon: f64, replicas: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0xFA_017_5EED);
+        let mut events = Vec::new();
+        if replicas == 0 || horizon <= 0.0 {
+            return FaultPlan { events, seed };
+        }
+        let crashes = rng.range_usize(0, replicas / 2 + 1);
+        for _ in 0..crashes {
+            events.push(FaultEvent::Crash {
+                at: rng.f64() * horizon,
+                replica: rng.range_usize(0, replicas),
+            });
+        }
+        let slowdowns = rng.range_usize(0, 3);
+        for _ in 0..slowdowns {
+            let at = rng.f64() * horizon * 0.8;
+            events.push(FaultEvent::Slowdown {
+                at,
+                until: at + rng.f64() * horizon * 0.2 + 1e-3,
+                replica: rng.range_usize(0, replicas),
+                factor: 1.5 + rng.f64() * 6.5,
+            });
+        }
+        let exec_errors = rng.range_usize(0, 5);
+        for _ in 0..exec_errors {
+            events.push(FaultEvent::ExecError {
+                at: rng.f64() * horizon,
+                replica: rng.range_usize(0, replicas),
+                // Mostly transient (survive the retry budget), sometimes
+                // fatal (escalate to crash-equivalent recovery).
+                failures: if rng.bool(0.25) {
+                    MAX_EXEC_ATTEMPTS
+                } else {
+                    rng.range_u64(1, MAX_EXEC_ATTEMPTS as u64) as u32
+                },
+            });
+        }
+        FaultPlan { events, seed }
+    }
+
+    /// Earliest scheduled crash for `replica`, if any.
+    pub fn crash_time(&self, replica: usize) -> Option<f64> {
+        self.events
+            .iter()
+            .filter_map(|e| match *e {
+                FaultEvent::Crash { at, replica: r } if r == replica => Some(at),
+                _ => None,
+            })
+            .fold(None, |acc: Option<f64>, t| {
+                Some(acc.map_or(t, |a| a.min(t)))
+            })
+    }
+
+    /// The per-replica slice of this plan (slowdown windows + transient
+    /// execute errors, sorted by activation time). Crashes are coordinator
+    /// business ([`FaultPlan::crash_time`]) and connection drops are wire
+    /// business ([`FaultPlan::conn_drop`]); neither is installed in the
+    /// engine.
+    pub fn for_replica(&self, replica: usize) -> ReplicaFaults {
+        let mut slowdowns = Vec::new();
+        let mut exec = Vec::new();
+        for e in &self.events {
+            match *e {
+                FaultEvent::Slowdown {
+                    at,
+                    until,
+                    replica: r,
+                    factor,
+                } if r == replica => slowdowns.push((at, until, factor)),
+                FaultEvent::ExecError {
+                    at,
+                    replica: r,
+                    failures,
+                } if r == replica => exec.push((at, failures)),
+                _ => {}
+            }
+        }
+        slowdowns.sort_by(|a, b| a.0.total_cmp(&b.0));
+        exec.sort_by(|a, b| a.0.total_cmp(&b.0));
+        ReplicaFaults {
+            slowdowns,
+            exec,
+            next_exec: 0,
+        }
+    }
+
+    /// First scheduled connection drop (frames-served threshold), if any.
+    pub fn conn_drop(&self) -> Option<u64> {
+        self.events
+            .iter()
+            .filter_map(|e| match *e {
+                FaultEvent::ConnDrop { after_frames } => Some(after_frames),
+                _ => None,
+            })
+            .min()
+    }
+}
+
+/// The per-replica fault schedule an `Engine` consults around its execute
+/// call. Installed as `Option<ReplicaFaults>`: absent costs one branch.
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaFaults {
+    /// `(from, until, factor)` straggler windows, sorted by `from`.
+    slowdowns: Vec<(f64, f64, f64)>,
+    /// `(at, failures)` transient execute faults, sorted by `at`, consumed
+    /// in order as the clock passes them.
+    exec: Vec<(f64, u32)>,
+    next_exec: usize,
+}
+
+impl ReplicaFaults {
+    pub fn is_empty(&self) -> bool {
+        self.slowdowns.is_empty() && self.exec.is_empty()
+    }
+
+    /// Execution-time multiplier at virtual time `t` (1.0 outside every
+    /// window; overlapping windows multiply).
+    pub fn slow_factor(&self, t: f64) -> f64 {
+        let mut f = 1.0;
+        for &(from, until, factor) in &self.slowdowns {
+            if from > t {
+                break;
+            }
+            if t < until {
+                f *= factor;
+            }
+        }
+        f
+    }
+
+    /// Consume the next pending execute fault whose activation time has
+    /// passed: the imminent execute should fail this many consecutive
+    /// attempts. At most one fault fires per execute; queued-up faults
+    /// fire on subsequent iterations.
+    pub fn take_exec_failures(&mut self, t: f64) -> Option<u32> {
+        if self.next_exec < self.exec.len() && self.exec[self.next_exec].0 <= t {
+            let n = self.exec[self.next_exec].1;
+            self.next_exec += 1;
+            Some(n)
+        } else {
+            None
+        }
+    }
+}
+
+/// Why a ticket reached `Cancelled` instead of `Finished`. Carried on the
+/// event and the wire so clients can distinguish their own withdrawal from
+/// system-initiated termination.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelReason {
+    /// Client-requested withdrawal (the `cancel` verb / dropped receiver).
+    Client,
+    /// The request can never be scheduled (e.g. prompt exceeds KV memory).
+    Unschedulable,
+    /// The deployment stopped making progress and terminated remaining
+    /// work instead of spinning (virtual-clock progress deadline).
+    Stalled,
+    /// Shed at admission under overload (offline work sheds first).
+    ShedOverload,
+    /// Online work shed because its TTFT deadline had already expired
+    /// while still queued under overload.
+    DeadlineExpired,
+    /// The owning replica died and the work could not be re-dispatched.
+    ReplicaFailed,
+}
+
+impl CancelReason {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CancelReason::Client => "client",
+            CancelReason::Unschedulable => "unschedulable",
+            CancelReason::Stalled => "stalled",
+            CancelReason::ShedOverload => "shed_overload",
+            CancelReason::DeadlineExpired => "deadline_expired",
+            CancelReason::ReplicaFailed => "replica_failed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CancelReason> {
+        Some(match s {
+            "client" => CancelReason::Client,
+            "unschedulable" => CancelReason::Unschedulable,
+            "stalled" => CancelReason::Stalled,
+            "shed_overload" => CancelReason::ShedOverload,
+            "deadline_expired" => CancelReason::DeadlineExpired,
+            "replica_failed" => CancelReason::ReplicaFailed,
+            _ => return None,
+        })
+    }
+}
+
+/// Typed failure vocabulary for the serving stack. The vendored `anyhow`
+/// stub offers no downcast, so callers that need to *classify* must do it
+/// before the error crosses an `anyhow::Result` boundary; once it does,
+/// the convention is: any error escaping a replica advance is
+/// replica-fatal.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeError {
+    /// An execute call kept failing past the retry budget.
+    ExecFailed { attempts: u32, last: String },
+    /// The engine's iteration backstop tripped (scheduling livelock).
+    IterationBackstop { max_iterations: usize },
+    /// The cluster drain backstop tripped (quantum livelock).
+    QuantumBackstop { pumps: u64 },
+    /// Coordinator bookkeeping referenced a replica that is not live
+    /// (post-crash window; recoverable by re-dispatch).
+    UnknownReplica { replica: usize },
+    /// A wire frame exceeded the per-line size cap.
+    FrameTooLarge { len: usize, max: usize },
+    /// The threaded server's coordinator is gone.
+    ServerGone,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::ExecFailed { attempts, last } => write!(
+                f,
+                "backend execute failed {attempts} consecutive attempts \
+                 (retry budget exhausted): {last}"
+            ),
+            ServeError::IterationBackstop { max_iterations } => {
+                write!(f, "engine exceeded max_iterations {max_iterations}")
+            }
+            ServeError::QuantumBackstop { pumps } => {
+                write!(f, "cluster drain exceeded the quantum backstop ({pumps} pumps)")
+            }
+            ServeError::UnknownReplica { replica } => {
+                write!(f, "replica {replica} is not live")
+            }
+            ServeError::FrameTooLarge { len, max } => {
+                write!(f, "frame too large: {len} bytes (cap {max})")
+            }
+            ServeError::ServerGone => write!(f, "server coordinator is gone"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Crash/recovery accounting, reported by the cluster and merged into its
+/// report JSON.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultStats {
+    /// Replica deaths handled (scheduled crashes + escalated exec faults).
+    pub crashes: usize,
+    /// Online requests re-dispatched off dead replicas.
+    pub online_redispatched: usize,
+    /// Offline jobs returned to the backlog off dead replicas.
+    pub offline_requeued: usize,
+    /// Tokens of work lost to crashes that must be recomputed (prompt
+    /// prefill already computed + output tokens already generated).
+    pub tokens_recomputed: u64,
+    /// Sum over crashes of (detection quantum boundary − crash instant):
+    /// divide by `crashes` for mean time-to-recovery.
+    pub recovery_time: f64,
+    /// Offline tickets shed at admission under overload.
+    pub shed_offline: usize,
+    /// Queued online tickets shed after their TTFT deadline expired.
+    pub shed_online: usize,
+    /// Tickets terminated by the progress-deadline stall detector.
+    pub stalled_cancels: usize,
+}
+
+impl FaultStats {
+    pub fn any(&self) -> bool {
+        *self != FaultStats::default()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("crashes", self.crashes)
+            .set("online_redispatched", self.online_redispatched)
+            .set("offline_requeued", self.offline_requeued)
+            .set("tokens_recomputed", self.tokens_recomputed)
+            .set("recovery_time", self.recovery_time)
+            .set(
+                "mean_time_to_recovery",
+                if self.crashes == 0 {
+                    0.0
+                } else {
+                    self.recovery_time / self.crashes as f64
+                },
+            )
+            .set("shed_offline", self.shed_offline)
+            .set("shed_online", self.shed_online)
+            .set("stalled_cancels", self.stalled_cancels)
+    }
+}
+
+/// Overload-shedding and liveness policy (cluster admission). When the
+/// shared offline backlog exceeds `max_backlog`, the newest excess offline
+/// tickets are shed (`ShedOverload`) — offline work is revocable by
+/// contract, so it goes first. Queued online tickets older than
+/// `online_grace`× the SLO TTFT are shed as `DeadlineExpired` instead of
+/// queueing unboundedly. Both shedding knobs default to off (infinite);
+/// `stall_after` defaults on because it only fires when the deployment is
+/// provably frozen.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShedPolicy {
+    pub max_backlog: usize,
+    /// Multiple of the SLO TTFT a queued online request may wait before
+    /// being shed (`f64::INFINITY` = never shed online work).
+    pub online_grace: f64,
+    /// Virtual seconds a busy drain may go without any fleet progress
+    /// (iterations, completions, cancellations, queue movement) before the
+    /// remaining tickets are terminated as `Stalled` — the typed
+    /// alternative to an infinite `drain` hang.
+    pub stall_after: f64,
+}
+
+impl Default for ShedPolicy {
+    fn default() -> Self {
+        ShedPolicy {
+            max_backlog: usize::MAX,
+            online_grace: f64::INFINITY,
+            stall_after: 16.0,
+        }
+    }
+}
+
+impl ShedPolicy {
+    /// A policy that actively sheds (chaos/overload experiments).
+    pub fn aggressive(max_backlog: usize, online_grace: f64) -> Self {
+        ShedPolicy {
+            max_backlog,
+            online_grace,
+            ..ShedPolicy::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_per_seed() {
+        let a = FaultPlan::random(7, 60.0, 4);
+        let b = FaultPlan::random(7, 60.0, 4);
+        let c = FaultPlan::random(8, 60.0, 4);
+        assert_eq!(a, b);
+        assert!(a != c || a.is_empty() && c.is_empty());
+        for e in &a.events {
+            if let Some(r) = e.replica() {
+                assert!(r < 4);
+            }
+        }
+    }
+
+    #[test]
+    fn per_replica_slices_partition_the_plan() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::Slowdown {
+                    at: 1.0,
+                    until: 2.0,
+                    replica: 0,
+                    factor: 3.0,
+                },
+                FaultEvent::ExecError {
+                    at: 5.0,
+                    replica: 1,
+                    failures: 2,
+                },
+                FaultEvent::Crash { at: 9.0, replica: 0 },
+                FaultEvent::Crash { at: 4.0, replica: 0 },
+            ],
+            seed: 0,
+        };
+        let f0 = plan.for_replica(0);
+        assert!((f0.slow_factor(1.5) - 3.0).abs() < 1e-12);
+        assert_eq!(f0.slow_factor(2.5), 1.0);
+        let mut f1 = plan.for_replica(1);
+        assert_eq!(f1.take_exec_failures(4.9), None);
+        assert_eq!(f1.take_exec_failures(5.0), Some(2));
+        assert_eq!(f1.take_exec_failures(100.0), None, "consumed once");
+        assert_eq!(plan.crash_time(0), Some(4.0), "earliest crash wins");
+        assert_eq!(plan.crash_time(1), None);
+        assert!(plan.for_replica(2).is_empty());
+    }
+
+    #[test]
+    fn overlapping_slowdowns_multiply() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::Slowdown {
+                    at: 0.0,
+                    until: 10.0,
+                    replica: 0,
+                    factor: 2.0,
+                },
+                FaultEvent::Slowdown {
+                    at: 5.0,
+                    until: 6.0,
+                    replica: 0,
+                    factor: 3.0,
+                },
+            ],
+            seed: 0,
+        };
+        let f = plan.for_replica(0);
+        assert!((f.slow_factor(5.5) - 6.0).abs() < 1e-12);
+        assert!((f.slow_factor(8.0) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        assert_eq!(backoff_delay(0), 0.0);
+        assert!((backoff_delay(1) - 0.01).abs() < 1e-12);
+        assert!((backoff_delay(2) - 0.03).abs() < 1e-12);
+        // 0.01 + 0.02 + 0.04 + 0.08(capped) = 0.15
+        assert!((backoff_delay(4) - 0.15).abs() < 1e-12);
+        // further attempts add the cap only
+        assert!((backoff_delay(5) - 0.23).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cancel_reason_round_trips() {
+        for r in [
+            CancelReason::Client,
+            CancelReason::Unschedulable,
+            CancelReason::Stalled,
+            CancelReason::ShedOverload,
+            CancelReason::DeadlineExpired,
+            CancelReason::ReplicaFailed,
+        ] {
+            assert_eq!(CancelReason::parse(r.as_str()), Some(r));
+        }
+        assert_eq!(CancelReason::parse("nope"), None);
+    }
+
+    #[test]
+    fn serve_error_displays_and_converts() {
+        let e = ServeError::ExecFailed {
+            attempts: 4,
+            last: "boom".into(),
+        };
+        let a: anyhow::Error = e.into();
+        assert!(a.to_string().contains("retry budget exhausted"));
+        let b: anyhow::Error = ServeError::FrameTooLarge { len: 10, max: 4 }.into();
+        assert!(b.to_string().contains("frame too large"));
+    }
+
+    #[test]
+    fn conn_drop_picks_earliest_threshold() {
+        let plan = FaultPlan {
+            events: vec![
+                FaultEvent::ConnDrop { after_frames: 9 },
+                FaultEvent::ConnDrop { after_frames: 3 },
+            ],
+            seed: 0,
+        };
+        assert_eq!(plan.conn_drop(), Some(3));
+        assert_eq!(FaultPlan::none().conn_drop(), None);
+    }
+
+    #[test]
+    fn fault_stats_export() {
+        let mut s = FaultStats::default();
+        assert!(!s.any());
+        s.crashes = 2;
+        s.recovery_time = 0.5;
+        assert!(s.any());
+        let j = s.to_json();
+        assert_eq!(j.at("crashes").and_then(Json::as_u64), Some(2));
+        let mttr = j.at("mean_time_to_recovery").and_then(Json::as_f64).unwrap();
+        assert!((mttr - 0.25).abs() < 1e-12);
+    }
+}

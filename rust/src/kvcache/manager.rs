@@ -1032,6 +1032,30 @@ impl KvManager {
         (running, cached_online, cached_offline, self.free_list.len())
     }
 
+    /// Crash-recovery safety net: release every block whose owner is not
+    /// in `live` (sorted or not — membership is a linear probe over a
+    /// typically tiny set). In normal operation `Engine::cancel`/`release`
+    /// already free per-request state, so this finds nothing; the cluster
+    /// recovery path runs it on a harvested corpse so a partially-failed
+    /// cancel can never strand pinned blocks on a replica about to leave
+    /// the fleet. Returns the number of orphaned requests reclaimed.
+    pub fn reclaim_orphans(&mut self, live: &[RequestId]) -> usize {
+        let orphans: Vec<RequestId> = self
+            .owned
+            .keys()
+            .copied()
+            .filter(|r| !live.contains(r))
+            .collect();
+        // Sort for deterministic release order (owned is a hash map).
+        let mut orphans = orphans;
+        orphans.sort_unstable();
+        let n = orphans.len();
+        for req in orphans {
+            self.release(req, false);
+        }
+        n
+    }
+
     /// Invariant checker used by property tests. Covers the classic block
     /// accounting plus the victim index: list structure, per-bucket
     /// (LAT, id) ordering, bucket/priority agreement, and punished-counter

@@ -11,6 +11,7 @@ pub mod config;
 pub mod core;
 pub mod engine;
 pub mod estimator;
+pub mod faults;
 pub mod figures;
 pub mod kvcache;
 pub mod metrics;

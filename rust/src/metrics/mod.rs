@@ -78,6 +78,13 @@ pub struct Metrics {
     /// (dropped clients, explicit `cancel` verbs, harvested offline work).
     pub cancelled_online: usize,
     pub cancelled_offline: usize,
+    // ---- fault/recovery counters (PR 7) ----
+    /// Failed `ExecutionBackend::execute` attempts (injected or real)
+    /// absorbed by the engine's retry loop or escalated past it.
+    pub exec_faults: u64,
+    /// Iterations that recovered via retry after at least one failed
+    /// execute attempt.
+    pub exec_retries: u64,
     // ---- time series (Figures 8-10) ----
     pub active_online: TimeSeries,
     pub active_offline: TimeSeries,
@@ -229,6 +236,8 @@ impl Metrics {
         self.skipped_offline += other.skipped_offline;
         self.cancelled_online += other.cancelled_online;
         self.cancelled_offline += other.cancelled_offline;
+        self.exec_faults += other.exec_faults;
+        self.exec_retries += other.exec_retries;
         self.ttft_hist.merge_from(&other.ttft_hist);
         self.tpot_hist.merge_from(&other.tpot_hist);
         self.queue_wait_hist.merge_from(&other.queue_wait_hist);
@@ -388,6 +397,8 @@ impl Metrics {
             .set("skipped_offline", self.skipped_offline)
             .set("cancelled_online", self.cancelled_online)
             .set("cancelled_offline", self.cancelled_offline)
+            .set("exec_faults", self.exec_faults)
+            .set("exec_retries", self.exec_retries)
             .set(
                 "ttft",
                 Json::obj()

@@ -342,7 +342,9 @@ pub fn summary(m: &Metrics, tracks: &[(usize, &TraceRing)]) -> Json {
                 .set("online_completed", m.online_completed)
                 .set("offline_completed", m.offline_completed)
                 .set("cancelled_online", m.cancelled_online)
-                .set("cancelled_offline", m.cancelled_offline),
+                .set("cancelled_offline", m.cancelled_offline)
+                .set("exec_faults", m.exec_faults)
+                .set("exec_retries", m.exec_retries),
         )
         .set(
             "trace",

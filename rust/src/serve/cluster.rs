@@ -8,6 +8,7 @@ use std::collections::{BTreeMap, VecDeque};
 
 use crate::cluster::{ClusterConfig, ClusterSim, JobSpec, OnlineJob};
 use crate::core::{ReqState, TaskClass};
+use crate::faults::{CancelReason, ServeError};
 use crate::metrics::Metrics;
 
 use super::{Cursor, EventSink, MetricsView, Serve, SubmitSpec, Ticket, TicketId, TokenEvent};
@@ -115,6 +116,13 @@ impl ClusterServe {
             if rep.engine.clock >= t_end {
                 continue;
             }
+            // A crashed replica also stops short of the quantum end, but
+            // its queue is not stuck — recovery re-dispatches it at the
+            // quantum boundary. Judging the corpse here would cancel work
+            // that is about to be salvaged.
+            if self.sim.failed_pending(rep.id) {
+                continue;
+            }
             for r in rep.engine.live_requests() {
                 if matches!(r.state, ReqState::Queued | ReqState::Preempted) {
                     if let Some(ticket) = self.sim.ticket_at(rep.id, r.id) {
@@ -124,8 +132,10 @@ impl ClusterServe {
             }
         }
         for ticket in stuck {
-            let _ = self.cancel(ticket);
+            let _ = self.cancel_with(ticket, CancelReason::Unschedulable);
         }
+        // 2c. overload shedding (off under the default policy).
+        self.shed_overload(t_end);
         // 3. deliver events (before post-quantum bookkeeping: a drained
         // replica may retire there, dropping its store)
         let wants = sink.wants_events();
@@ -190,16 +200,108 @@ impl ClusterServe {
     /// shared backlog) are counted here; replica-placed cancels are already
     /// counted by that engine's metrics (`Engine::cancel`), so counting
     /// them again would double-book the snapshot.
-    fn emit_cancel(&mut self, ticket: TicketId, pre_placement: bool) {
+    fn emit_cancel(&mut self, ticket: TicketId, reason: CancelReason, pre_placement: bool) {
         self.cursors.remove(&ticket);
         self.last_place.remove(&ticket);
         self.pending_events.push(TokenEvent::Cancelled {
             ticket,
             at: self.clock,
+            reason,
         });
         if pre_placement {
             self.cancelled += 1;
         }
+    }
+
+    /// Cancel with a typed reason (the trait's `cancel` is the
+    /// client-initiated special case). Same three-tier search: pending
+    /// online, shared backlog, placed on a replica.
+    fn cancel_with(&mut self, ticket: TicketId, reason: CancelReason) -> bool {
+        // Not yet dispatched online?
+        if let Some(pos) = self.pending_online.iter().position(|&(t, _)| t == ticket) {
+            let _ = self.pending_online.remove(pos);
+            self.emit_cancel(ticket, reason, true);
+            return true;
+        }
+        // Still in the shared offline backlog?
+        if let Some(pos) = self.sim.backlog.iter().position(|j| j.ticket == Some(ticket)) {
+            let _ = self.sim.backlog.remove(pos);
+            self.emit_cancel(ticket, reason, true);
+            return true;
+        }
+        // Placed on a replica (pooled, running, or preempted there).
+        let Some((rep_id, rid)) = self.sim.ticket_location(ticket) else {
+            return false;
+        };
+        let Some(pos) = self.sim.replicas.iter().position(|r| r.id == rep_id) else {
+            return false; // replica retired; ticket already terminal
+        };
+        if self.sim.replicas[pos].engine.cancel(rid) {
+            self.sim.forget_ticket(ticket);
+            self.emit_cancel(ticket, reason, false);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Overload shedding per the cluster's [`crate::faults::ShedPolicy`].
+    /// Offline work is revocable by contract (§2's hybrid bargain), so the
+    /// newest backlog excess goes first; online requests are only shed once
+    /// they have waited past `online_grace`× the SLO TTFT in a queue — at
+    /// that point the SLO is unattainable and holding the slot just starves
+    /// the requests behind it. Both knobs default to off.
+    fn shed_overload(&mut self, t_end: f64) {
+        let shed = self.sim.cfg.shed;
+        while self.sim.backlog.len() > shed.max_backlog {
+            let Some(job) = self.sim.backlog.pop_back() else {
+                break;
+            };
+            self.sim.fault_stats.shed_offline += 1;
+            if let Some(ticket) = job.ticket {
+                self.emit_cancel(ticket, CancelReason::ShedOverload, true);
+            }
+        }
+        if !shed.online_grace.is_finite() {
+            return;
+        }
+        let deadline = self.sim.cfg.base.slo.ttft * shed.online_grace;
+        let mut expired: Vec<TicketId> = Vec::new();
+        for rep in &self.sim.replicas {
+            if self.sim.failed_pending(rep.id) {
+                continue; // about to be recovered, not stuck in a queue
+            }
+            for r in rep.engine.live_requests() {
+                if r.class == TaskClass::Online
+                    && r.state == ReqState::Queued
+                    && t_end - r.arrival > deadline
+                {
+                    if let Some(ticket) = self.sim.ticket_at(rep.id, r.id) {
+                        expired.push(ticket);
+                    }
+                }
+            }
+        }
+        for ticket in expired {
+            if self.cancel_with(ticket, CancelReason::DeadlineExpired) {
+                self.sim.fault_stats.shed_online += 1;
+            }
+        }
+    }
+
+    /// Fleet-progress signature for the drain stall detector: any change
+    /// means the deployment is still moving (executing, completing,
+    /// cancelling, or shuffling queues).
+    fn progress_signature(&self) -> (usize, usize, usize, usize, usize, usize) {
+        let m = self.sim.all_metrics();
+        (
+            m.iterations,
+            m.online_completed + m.offline_completed,
+            self.sim.backlog.len(),
+            self.pending_online.len(),
+            self.cursors.len(),
+            self.cancelled,
+        )
     }
 }
 
@@ -240,32 +342,7 @@ impl Serve for ClusterServe {
     }
 
     fn cancel(&mut self, ticket: TicketId) -> bool {
-        // Not yet dispatched online?
-        if let Some(pos) = self.pending_online.iter().position(|&(t, _)| t == ticket) {
-            let _ = self.pending_online.remove(pos);
-            self.emit_cancel(ticket, true);
-            return true;
-        }
-        // Still in the shared offline backlog?
-        if let Some(pos) = self.sim.backlog.iter().position(|j| j.ticket == Some(ticket)) {
-            let _ = self.sim.backlog.remove(pos);
-            self.emit_cancel(ticket, true);
-            return true;
-        }
-        // Placed on a replica (pooled, running, or preempted there).
-        let Some((rep_id, rid)) = self.sim.ticket_location(ticket) else {
-            return false;
-        };
-        let Some(pos) = self.sim.replicas.iter().position(|r| r.id == rep_id) else {
-            return false; // replica retired; ticket already terminal
-        };
-        if self.sim.replicas[pos].engine.cancel(rid) {
-            self.sim.forget_ticket(ticket);
-            self.emit_cancel(ticket, false);
-            true
-        } else {
-            false
-        }
+        self.cancel_with(ticket, CancelReason::Client)
     }
 
     fn pump(&mut self, sink: &mut dyn EventSink) -> anyhow::Result<bool> {
@@ -274,10 +351,52 @@ impl Serve for ClusterServe {
     }
 
     fn drain(&mut self, sink: &mut dyn EventSink) -> anyhow::Result<()> {
+        // Stall detection: `busy()` can stay true forever when something
+        // holds live work that never advances (a scheduling bug, or a
+        // pathological fault plan). Watch a fleet-progress signature on the
+        // virtual clock; after `stall_after` sim-seconds with zero change,
+        // terminate the remaining tickets as `Stalled` instead of spinning
+        // to the iteration backstop. Only armed while a ticket exists to
+        // judge — a truly wedged ticketless fleet falls through to the
+        // typed backstop error below.
+        let dt = self.sim.cfg.sync_dt.max(1e-9);
+        let stall_pumps = (self.sim.cfg.shed.stall_after / dt).ceil().max(1.0) as usize;
+        let mut last_sig = self.progress_signature();
+        let mut stalled = 0usize;
+        const MAX_PUMPS: usize = 10_000_000;
         // Generous backstop mirroring Engine::max_iterations.
-        for _ in 0..10_000_000usize {
+        for _ in 0..MAX_PUMPS {
             if !self.pump(sink)? {
                 return Ok(());
+            }
+            let sig = self.progress_signature();
+            if sig == last_sig {
+                stalled += 1;
+            } else {
+                stalled = 0;
+                last_sig = sig;
+            }
+            if stalled >= stall_pumps {
+                let wedged: Vec<TicketId> = self.cursors.keys().copied().collect();
+                if wedged.is_empty() {
+                    return Err(ServeError::QuantumBackstop {
+                        pumps: stalled as u64,
+                    }
+                    .into());
+                }
+                log::warn!(
+                    "fleet made no progress for {:.1} sim-seconds; cancelling {} stalled ticket(s)",
+                    stalled as f64 * dt,
+                    wedged.len()
+                );
+                for ticket in wedged {
+                    if self.cancel_with(ticket, CancelReason::Stalled) {
+                        self.sim.fault_stats.stalled_cancels += 1;
+                    }
+                }
+                stalled = 0;
+                last_sig = self.progress_signature();
+                continue;
             }
             // Idle fast-forward (the engine's idle-jump, fleet edition):
             // when every replica is drained and the backlog is empty, only
@@ -293,7 +412,10 @@ impl Serve for ClusterServe {
                 }
             }
         }
-        anyhow::bail!("cluster drain exceeded the quantum backstop")
+        Err(ServeError::QuantumBackstop {
+            pumps: MAX_PUMPS as u64,
+        }
+        .into())
     }
 
     fn run_until(&mut self, deadline: f64, sink: &mut dyn EventSink) -> anyhow::Result<()> {
@@ -459,5 +581,83 @@ mod tests {
             .any(|e| matches!(e, TokenEvent::Finished { ticket, .. } if *ticket == a.id)));
         assert_eq!(s.snapshot().offline_completed, 1);
         assert_eq!(s.snapshot().cancelled, 2);
+    }
+
+    #[test]
+    fn replica_crash_mid_serve_finishes_every_ticket() {
+        use crate::faults::{FaultEvent, FaultPlan};
+        let mut base = SystemConfig::a100_llama8b();
+        base.cache.capacity_tokens = 30_000;
+        base.scheduler.max_batch = 16;
+        let mut cc = ClusterConfig::new(base, 2);
+        cc.jitter = 0.0;
+        cc.faults = FaultPlan {
+            events: vec![FaultEvent::Crash {
+                at: 2.0,
+                replica: 0,
+            }],
+            seed: 9,
+        };
+        let mut s = ClusterServe::new(cc);
+        let mut tickets = Vec::new();
+        for i in 0..6 {
+            let spec = SubmitSpec::online(PromptSpec::sim(200 + i * 20, None), 4);
+            tickets.push(s.submit(spec.at(0.5 + i as f64)).unwrap().id);
+        }
+        for _ in 0..8 {
+            let t = s.submit(SubmitSpec::offline(PromptSpec::sim(400, None), 8)).unwrap();
+            tickets.push(t.id);
+        }
+        let mut evs: Vec<TokenEvent> = Vec::new();
+        s.drain(&mut evs).unwrap();
+        let finished: Vec<TicketId> = evs
+            .iter()
+            .filter(|e| matches!(e, TokenEvent::Finished { .. }))
+            .map(|e| e.ticket())
+            .collect();
+        for t in &tickets {
+            assert!(finished.contains(t), "ticket {t} must finish: {evs:?}");
+        }
+        assert_eq!(s.sim.fault_stats.crashes, 1);
+        for rep in &s.sim.replicas {
+            rep.engine.kv.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn overload_shedding_emits_typed_reasons() {
+        use crate::faults::ShedPolicy;
+        let mut base = SystemConfig::a100_llama8b();
+        base.cache.capacity_tokens = 30_000;
+        base.scheduler.max_batch = 16;
+        let mut cc = ClusterConfig::new(base, 2);
+        cc.jitter = 0.0;
+        // One job per pool at the flood, so the backlog length is exact.
+        cc.steal_low_water = 1;
+        cc.steal_batch = 1;
+        cc.shed = ShedPolicy::aggressive(4, f64::INFINITY);
+        let mut s = ClusterServe::new(cc);
+        for _ in 0..12 {
+            s.submit(SubmitSpec::offline(PromptSpec::sim(300, None), 8)).unwrap();
+        }
+        let mut evs: Vec<TokenEvent> = Vec::new();
+        s.drain(&mut evs).unwrap();
+        // 12 submitted - 2 flooded to pools - 4 kept in backlog = 6 shed
+        // (newest first), all with the typed ShedOverload reason.
+        let shed = evs
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e,
+                    TokenEvent::Cancelled {
+                        reason: CancelReason::ShedOverload,
+                        ..
+                    }
+                )
+            })
+            .count();
+        assert_eq!(shed, 6, "{evs:?}");
+        assert_eq!(s.sim.fault_stats.shed_offline, 6);
+        assert_eq!(s.snapshot().offline_completed, 6);
     }
 }

@@ -78,6 +78,7 @@ impl<B: ExecutionBackend> Serve for EngineServe<B> {
         self.pending.push(TokenEvent::Cancelled {
             ticket,
             at: self.engine.clock,
+            reason: crate::faults::CancelReason::Client,
         });
         true
     }

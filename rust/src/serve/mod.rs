@@ -35,6 +35,7 @@ pub use engine::EngineServe;
 use std::collections::BTreeMap;
 
 use crate::core::{Request, RequestId, RequestStore, Slo, TaskClass, Token};
+use crate::faults::CancelReason;
 use crate::utils::json::Json;
 
 /// Client-visible handle id. For the bare-engine deployment this equals the
@@ -160,8 +161,15 @@ pub enum TokenEvent {
         ttft: Option<f64>,
         mean_tpot: Option<f64>,
     },
-    /// Terminal: withdrawn before completion.
-    Cancelled { ticket: TicketId, at: f64 },
+    /// Terminal: withdrawn before completion. `reason` distinguishes a
+    /// client withdrawal from system-initiated termination (unschedulable,
+    /// overload shed, stall, replica failure) — see
+    /// [`crate::faults::CancelReason`].
+    Cancelled {
+        ticket: TicketId,
+        at: f64,
+        reason: CancelReason,
+    },
 }
 
 impl TokenEvent {

@@ -42,9 +42,16 @@ use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, ToSocketAddrs};
 
 use crate::core::{PromptSpec, Slo, TaskClass, Token};
+use crate::faults::{CancelReason, ServeError};
 use crate::utils::json::Json;
 
 use super::{Serve, SloClass, SubmitSpec, TicketId, TokenEvent};
+
+/// Hard cap on one request frame (a line). A line longer than this gets a
+/// typed `{"ok":false,...}` reply and closes that connection only — the
+/// listener and every other stream stay up, and the oversized bytes are
+/// discarded without ever being buffered in full.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024;
 
 // ---- frames --------------------------------------------------------------
 
@@ -203,7 +210,8 @@ pub fn encode_event(ev: &TokenEvent) -> Json {
                 None => b,
             }
         }
-        TokenEvent::Preempted { .. } | TokenEvent::Cancelled { .. } => base,
+        TokenEvent::Preempted { .. } => base,
+        TokenEvent::Cancelled { reason, .. } => base.set("reason", reason.as_str()),
         TokenEvent::Finished {
             tokens,
             ttft,
@@ -228,6 +236,12 @@ pub fn parse_event(j: &Json) -> Option<(String, TicketId, f64)> {
     let ticket = j.get("ticket")?.as_u64()?;
     let at = j.get("at")?.as_f64()?;
     Some((kind, ticket, at))
+}
+
+/// Decode the `reason` key of a `cancelled` event reply (client side).
+/// Absent on non-cancel events and on replies from pre-PR-7 servers.
+pub fn parse_cancel_reason(j: &Json) -> Option<CancelReason> {
+    CancelReason::parse(j.get("reason")?.as_str()?)
 }
 
 fn err_line(msg: &str) -> String {
@@ -428,10 +442,83 @@ impl<'a> WireSession<'a> {
 
 // ---- transports ----------------------------------------------------------
 
+/// Result of reading one frame from a connection.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// A complete line, within the size cap (trailing `\r`/`\n` stripped).
+    Line(String),
+    /// The line exceeded `max` bytes; the payload was discarded, not
+    /// buffered. Carries the total line length consumed.
+    TooLarge(usize),
+    /// Clean end of stream.
+    Eof,
+}
+
+/// Read one newline-delimited frame, never buffering more than `max`
+/// bytes: once a line overflows the cap the remainder is consumed and
+/// counted but dropped, so a hostile or buggy client cannot balloon
+/// server memory with a single unbounded line.
+pub fn read_frame<R: BufRead>(reader: &mut R, max: usize) -> std::io::Result<FrameRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut dropped = 0usize;
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF: a non-empty trailing line (no newline) still counts.
+            return Ok(if dropped > 0 {
+                FrameRead::TooLarge(buf.len() + dropped)
+            } else if buf.is_empty() {
+                FrameRead::Eof
+            } else {
+                FrameRead::Line(String::from_utf8_lossy(&buf).into_owned())
+            });
+        }
+        match chunk.iter().position(|&b| b == b'\n') {
+            Some(i) => {
+                if dropped == 0 && buf.len() + i <= max {
+                    buf.extend_from_slice(&chunk[..i]);
+                } else {
+                    dropped += i;
+                }
+                reader.consume(i + 1);
+                return Ok(if dropped > 0 {
+                    FrameRead::TooLarge(buf.len() + dropped)
+                } else {
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    FrameRead::Line(String::from_utf8_lossy(&buf).into_owned())
+                });
+            }
+            None => {
+                let n = chunk.len();
+                if dropped == 0 && buf.len() + n <= max {
+                    buf.extend_from_slice(chunk);
+                } else {
+                    dropped += n;
+                }
+                reader.consume(n);
+            }
+        }
+    }
+}
+
 /// Serve the protocol over TCP, one connection at a time (the coordinator
 /// is single-threaded by design; a fleet front door is still one process).
 /// Returns after a `shutdown` verb.
-pub fn serve_tcp<A: ToSocketAddrs>(addr: A, serve: &mut dyn Serve) -> anyhow::Result<()> {
+///
+/// Per-connection failures — an unclonable socket, an oversized frame, an
+/// I/O error mid-stream — close that connection only; the listener keeps
+/// accepting. `conn_drop` is the chaos hook ([`FaultPlan::conn_drop`]):
+/// when set, each connection is severed after that many frames, exercising
+/// client reconnect paths deterministically.
+///
+/// [`FaultPlan::conn_drop`]: crate::faults::FaultPlan::conn_drop
+pub fn serve_tcp_with<A: ToSocketAddrs>(
+    addr: A,
+    serve: &mut dyn Serve,
+    conn_drop: Option<u64>,
+) -> anyhow::Result<()> {
     let listener = TcpListener::bind(addr)?;
     eprintln!("echo serve: listening on {}", listener.local_addr()?);
     for conn in listener.incoming() {
@@ -442,11 +529,41 @@ pub fn serve_tcp<A: ToSocketAddrs>(addr: A, serve: &mut dyn Serve) -> anyhow::Re
                 continue;
             }
         };
-        let reader = BufReader::new(stream.try_clone()?);
+        let mut reader = match stream.try_clone() {
+            Ok(s) => BufReader::new(s),
+            Err(e) => {
+                log::warn!("connection unusable (clone failed): {e}");
+                continue;
+            }
+        };
         let mut writer = BufWriter::new(stream);
         let mut session = WireSession::new(&mut *serve);
-        for line in reader.lines() {
-            let Ok(line) = line else { break };
+        let mut frames = 0u64;
+        loop {
+            let line = match read_frame(&mut reader, MAX_FRAME_BYTES) {
+                Ok(FrameRead::Line(l)) => l,
+                Ok(FrameRead::Eof) => break,
+                Ok(FrameRead::TooLarge(len)) => {
+                    let e = ServeError::FrameTooLarge {
+                        len,
+                        max: MAX_FRAME_BYTES,
+                    };
+                    let _ = writeln!(writer, "{}", err_line(&e.to_string()));
+                    let _ = writer.flush();
+                    break;
+                }
+                Err(e) => {
+                    log::warn!("connection read failed: {e}");
+                    break;
+                }
+            };
+            frames += 1;
+            if let Some(cap) = conn_drop {
+                if frames > cap {
+                    log::warn!("chaos: dropping connection after {cap} frames");
+                    break;
+                }
+            }
             let (replies, shutdown) = session.handle_line(&line);
             let mut io_dead = false;
             for r in &replies {
@@ -464,6 +581,11 @@ pub fn serve_tcp<A: ToSocketAddrs>(addr: A, serve: &mut dyn Serve) -> anyhow::Re
         }
     }
     Ok(())
+}
+
+/// [`serve_tcp_with`] without fault injection.
+pub fn serve_tcp<A: ToSocketAddrs>(addr: A, serve: &mut dyn Serve) -> anyhow::Result<()> {
+    serve_tcp_with(addr, serve, None)
 }
 
 /// Serve the protocol on stdin/stdout (scripting and tests without

@@ -25,6 +25,7 @@ use std::time::Instant;
 
 use crate::core::{ReqState, Request, RequestId, TaskClass};
 use crate::engine::{Engine, ExecutionBackend};
+use crate::faults::{CancelReason, ServeError};
 use crate::serve::{
     collect_store_events, Cursor, EventSink, MetricsView, Serve, SubmitSpec, Ticket, TicketId,
     TokenEvent,
@@ -67,32 +68,50 @@ pub struct ServerHandle<B: ExecutionBackend + Send + 'static> {
 impl<B: ExecutionBackend + Send + 'static> ServerHandle<B> {
     /// Submit and stream: returns the ticket plus a dedicated per-ticket
     /// event channel. Dropping the receiver cancels the request (the
-    /// coordinator notices at its next event for this ticket).
-    pub fn submit_streaming(&self, spec: SubmitSpec) -> (Ticket, Receiver<TokenEvent>) {
+    /// coordinator notices at its next event for this ticket). Fails with
+    /// [`ServeError::ServerGone`] once the coordinator has exited.
+    pub fn submit_streaming(
+        &self,
+        spec: SubmitSpec,
+    ) -> Result<(Ticket, Receiver<TokenEvent>), ServeError> {
         let (ev_tx, ev_rx) = channel();
-        let ticket = self.submit_inner(spec, Some(ev_tx));
-        (ticket, ev_rx)
+        let ticket = self.submit_inner(spec, Some(ev_tx))?;
+        Ok((ticket, ev_rx))
     }
 
     /// Submit without a dedicated stream; events still flow through
     /// [`Serve::pump`].
-    pub fn submit_detached(&self, spec: SubmitSpec) -> Ticket {
+    pub fn submit_detached(&self, spec: SubmitSpec) -> Result<Ticket, ServeError> {
         self.submit_inner(spec, None)
     }
 
-    fn submit_inner(&self, spec: SubmitSpec, stream: Option<Sender<TokenEvent>>) -> Ticket {
+    fn submit_inner(
+        &self,
+        spec: SubmitSpec,
+        stream: Option<Sender<TokenEvent>>,
+    ) -> Result<Ticket, ServeError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let class = spec.slo.task_class();
         let submitted_at = self.t0.elapsed().as_secs_f64();
+        // Increment before the send: the coordinator may process (and even
+        // complete) the submission before this function returns, and its
+        // terminal-event decrement must never race ahead of the increment.
         self.outstanding.fetch_add(1, Ordering::Relaxed);
-        self.tx
+        if self
+            .tx
             .send(ServerRequest::Submit { id, spec, stream })
-            .expect("server gone");
-        Ticket {
+            .is_err()
+        {
+            let _ = self.outstanding.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                Some(n.saturating_sub(1))
+            });
+            return Err(ServeError::ServerGone);
+        }
+        Ok(Ticket {
             id,
             class,
             submitted_at,
-        }
+        })
     }
 
     /// Drain outstanding work and return the engine.
@@ -104,7 +123,7 @@ impl<B: ExecutionBackend + Send + 'static> ServerHandle<B> {
 
 impl<B: ExecutionBackend + Send + 'static> Serve for ServerHandle<B> {
     fn submit(&mut self, spec: SubmitSpec) -> anyhow::Result<Ticket> {
-        Ok(self.submit_detached(spec))
+        Ok(self.submit_detached(spec)?)
     }
 
     /// Asynchronous: the request is withdrawn at the coordinator's next
@@ -158,7 +177,12 @@ impl<B: ExecutionBackend + Send + 'static> Serve for ServerHandle<B> {
     }
 
     fn snapshot(&self) -> MetricsView {
-        self.snap.lock().expect("snapshot poisoned").clone()
+        // A poisoned lock means the coordinator panicked mid-update; the
+        // last published view is still the best available answer.
+        match self.snap.lock() {
+            Ok(s) => s.clone(),
+            Err(poisoned) => poisoned.into_inner().clone(),
+        }
     }
 }
 
@@ -242,6 +266,7 @@ pub fn spawn<B: ExecutionBackend + Send + 'static>(mut engine: Engine<B>) -> Ser
                                 TokenEvent::Cancelled {
                                     ticket: id,
                                     at: engine.clock,
+                                    reason: CancelReason::Client,
                                 },
                                 &mut streams,
                                 &ev_tx,
@@ -292,6 +317,7 @@ pub fn spawn<B: ExecutionBackend + Send + 'static>(mut engine: Engine<B>) -> Ser
                         TokenEvent::Cancelled {
                             ticket: id,
                             at: engine.clock,
+                            reason: CancelReason::Client,
                         },
                         &mut streams,
                         &ev_tx,
@@ -324,6 +350,7 @@ pub fn spawn<B: ExecutionBackend + Send + 'static>(mut engine: Engine<B>) -> Ser
                             TokenEvent::Cancelled {
                                 ticket: id,
                                 at: engine.clock,
+                                reason: CancelReason::Unschedulable,
                             },
                             &mut streams,
                             &ev_tx,
@@ -389,9 +416,14 @@ mod tests {
     #[test]
     fn serve_roundtrip_online_and_offline() {
         let h = handle();
-        let (t1, rx1) = h.submit_streaming(SubmitSpec::online(PromptSpec::sim(200, None), 8));
-        let (t2, rx2) = h.submit_streaming(SubmitSpec::online(PromptSpec::sim(400, None), 4));
-        h.submit_detached(SubmitSpec::offline(PromptSpec::sim(1000, None), 16));
+        let (t1, rx1) = h
+            .submit_streaming(SubmitSpec::online(PromptSpec::sim(200, None), 8))
+            .unwrap();
+        let (t2, rx2) = h
+            .submit_streaming(SubmitSpec::online(PromptSpec::sim(400, None), 4))
+            .unwrap();
+        h.submit_detached(SubmitSpec::offline(PromptSpec::sim(1000, None), 16))
+            .unwrap();
 
         match finish_of(&rx1) {
             TokenEvent::Finished {
@@ -423,7 +455,9 @@ mod tests {
     #[test]
     fn streaming_delivers_every_token_in_order() {
         let h = handle();
-        let (t, rx) = h.submit_streaming(SubmitSpec::online(PromptSpec::sim(100, None), 6));
+        let (t, rx) = h
+            .submit_streaming(SubmitSpec::online(PromptSpec::sim(100, None), 6))
+            .unwrap();
         let mut seen = Vec::new();
         loop {
             let ev = rx.recv_timeout(Duration::from_secs(30)).unwrap();
@@ -448,14 +482,17 @@ mod tests {
         let h = handle();
         // Effectively unbounded generation: can only end via cancel.
         let (victim, rx) =
-            h.submit_streaming(SubmitSpec::online(PromptSpec::sim(64, None), 1_000_000));
+            h.submit_streaming(SubmitSpec::online(PromptSpec::sim(64, None), 1_000_000))
+            .unwrap();
         // Wait until it is actually streaming, then abandon it.
         let first = rx.recv_timeout(Duration::from_secs(30)).unwrap();
         assert!(matches!(first, TokenEvent::FirstToken { .. }));
         drop(rx);
 
         // A second request proves the engine keeps serving others.
-        let (t2, rx2) = h.submit_streaming(SubmitSpec::online(PromptSpec::sim(128, None), 4));
+        let (t2, rx2) = h
+            .submit_streaming(SubmitSpec::online(PromptSpec::sim(128, None), 4))
+            .unwrap();
         match finish_of(&rx2) {
             TokenEvent::Finished { ticket, tokens, .. } => {
                 assert_eq!(ticket, t2.id);
@@ -493,7 +530,9 @@ mod tests {
         cfg.cache.capacity_tokens = 2_000;
         let backend = SimBackend::new(TimeModel::new(cfg.time_model), 4, 0.0);
         let h = spawn(Engine::new(cfg, backend));
-        let (t, rx) = h.submit_streaming(SubmitSpec::online(PromptSpec::sim(5_000, None), 4));
+        let (t, rx) = h
+            .submit_streaming(SubmitSpec::online(PromptSpec::sim(5_000, None), 4))
+            .unwrap();
         match rx.recv_timeout(Duration::from_secs(30)).unwrap() {
             TokenEvent::Cancelled { ticket, .. } => assert_eq!(ticket, t.id),
             other => panic!("expected Cancelled, got {other:?}"),
@@ -508,7 +547,8 @@ mod tests {
     fn serve_trait_pump_and_drain() {
         let mut h = handle();
         let t = Serve::submit(&mut h, SubmitSpec::online(PromptSpec::sim(150, None), 3)).unwrap();
-        h.submit_detached(SubmitSpec::offline(PromptSpec::sim(600, None), 8));
+        h.submit_detached(SubmitSpec::offline(PromptSpec::sim(600, None), 8))
+            .unwrap();
         let mut evs: Vec<TokenEvent> = Vec::new();
         h.drain(&mut evs).unwrap();
         let finishes = evs

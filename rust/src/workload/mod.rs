@@ -253,6 +253,41 @@ pub fn table1_specs() -> Vec<DatasetSpec> {
     ]
 }
 
+/// Chaos overlay for a workload run: a seeded fault plan sized to the
+/// replay (`horizon` sim-seconds over `replicas` fleet members, scaled by
+/// `intensity` — 1.0 is the chaos suite's default density, 0.0 disables).
+/// A trace overlay rather than part of the trace: the same workload can be
+/// replayed fault-free or under any chaos seed without regenerating
+/// arrivals, which is what the fault-free-equivalence tests rely on.
+pub fn chaos_overlay(
+    seed: u64,
+    horizon: f64,
+    replicas: usize,
+    intensity: f64,
+) -> crate::faults::FaultPlan {
+    if intensity <= 0.0 || replicas == 0 || horizon <= 0.0 {
+        return crate::faults::FaultPlan::none();
+    }
+    let mut plan = crate::faults::FaultPlan::random(seed, horizon, replicas);
+    if intensity < 1.0 {
+        // Thin deterministically: keep a stable prefix of each event kind
+        // rather than sampling, so lowering intensity only removes faults.
+        let keep = (plan.events.len() as f64 * intensity).ceil() as usize;
+        plan.events.truncate(keep);
+    } else if intensity > 1.0 {
+        let extra = intensity.ceil() as usize - 1;
+        for i in 0..extra {
+            let more = crate::faults::FaultPlan::random(
+                seed.wrapping_add(1 + i as u64),
+                horizon,
+                replicas,
+            );
+            plan.events.extend(more.events);
+        }
+    }
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

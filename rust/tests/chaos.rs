@@ -1,0 +1,262 @@
+//! Chaos property suite (PR 7): seeded fault plans × replica counts ×
+//! thread counts against the fleet front door.
+//!
+//! Properties pinned here:
+//!   * every submitted ticket reaches exactly one terminal state
+//!     (`Finished` or `Cancelled`) under every seeded fault plan;
+//!   * no leaked KV blocks or pool entries after crashes — the full
+//!     `KvManager::check_invariants` sweep passes on every surviving
+//!     replica, and `reclaim_orphans` finds nothing left to reclaim;
+//!   * parallel fleet stepping stays bit-exact with the serial oracle
+//!     under active fault injection (crash deadlines are fixed by the
+//!     coordinator before fan-out, recovery runs single-threaded at
+//!     quantum boundaries);
+//!   * a fault plan that only ever touches idle replicas is
+//!     observationally equivalent to no plan at all (the injector hook
+//!     must be inert when nothing fires).
+
+use echo::cluster::{offline_jobs, ClusterConfig, OnlineJob};
+use echo::config::SystemConfig;
+use echo::core::PromptSpec;
+use echo::faults::{FaultEvent, FaultPlan, ShedPolicy};
+use echo::serve::{ClusterServe, Serve, TicketId, TokenEvent};
+use echo::workload::DatasetSpec;
+
+fn fleet_cfg(seed: u64, replicas: usize, threads: usize) -> ClusterConfig {
+    let mut base = SystemConfig::a100_llama8b();
+    base.seed = seed;
+    base.cache.capacity_tokens = 30_000;
+    base.scheduler.max_batch = 16;
+    let mut cc = ClusterConfig::new(base, replicas);
+    cc.threads = threads;
+    cc
+}
+
+fn online_mix(n: usize) -> Vec<OnlineJob> {
+    (0..n)
+        .map(|i| OnlineJob {
+            at: 0.3 + i as f64 * 0.9,
+            prompt: PromptSpec::sim(180 + (i % 6) * 40, Some((100 + (i % 4) as u64, 96))),
+            max_new_tokens: 6 + (i % 3) * 4,
+        })
+        .collect()
+}
+
+/// Drain a faulted fleet and return (all tickets, events, fault stats
+/// debug, metrics debug). Panics if the drain itself errors — fault plans
+/// must be recoverable, never fatal.
+fn chaos_run(
+    plan: FaultPlan,
+    seed: u64,
+    replicas: usize,
+    threads: usize,
+) -> (Vec<TicketId>, Vec<TokenEvent>, String, String) {
+    let mut cc = fleet_cfg(seed, replicas, threads);
+    cc.faults = plan;
+    let mut front = ClusterServe::new(cc);
+    let mut tickets: Vec<TicketId> = front
+        .submit_offline_jobs(offline_jobs(
+            &DatasetSpec::loogle_qa_short().scaled(0.05),
+            6 + 3 * replicas,
+            seed,
+        ))
+        .unwrap()
+        .iter()
+        .map(|t| t.id)
+        .collect();
+    for job in &online_mix(18) {
+        let spec = echo::serve::SubmitSpec::online(job.prompt.clone(), job.max_new_tokens);
+        tickets.push(front.submit(spec.at(job.at)).unwrap().id);
+    }
+    let mut evs: Vec<TokenEvent> = Vec::new();
+    front.drain(&mut evs).unwrap();
+    // Post-crash hygiene on every surviving replica: the invariant sweep
+    // passes and there is nothing left for the orphan reclaimer to find.
+    for rep in &mut front.sim.replicas {
+        rep.engine.kv.check_invariants().unwrap_or_else(|e| {
+            panic!("replica {}: KV invariants violated after chaos: {e}", rep.id)
+        });
+        let live: Vec<_> = rep.engine.live_requests().map(|r| r.id).collect();
+        assert_eq!(
+            rep.engine.kv.reclaim_orphans(&live),
+            0,
+            "replica {} leaked KV owners past the drain",
+            rep.id
+        );
+    }
+    let stats = format!("{:?}", front.sim.fault_stats);
+    let metrics = format!("{:?}", front.sim.all_metrics());
+    (tickets, evs, stats, metrics)
+}
+
+fn assert_all_terminal(tickets: &[TicketId], evs: &[TokenEvent], label: &str) {
+    for &t in tickets {
+        let terminals = evs
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e,
+                    TokenEvent::Finished { ticket, .. } | TokenEvent::Cancelled { ticket, .. }
+                    if *ticket == t
+                )
+            })
+            .count();
+        assert_eq!(
+            terminals, 1,
+            "{label}: ticket {t} must reach exactly one terminal state"
+        );
+    }
+}
+
+#[test]
+fn every_ticket_terminates_under_random_fault_plans() {
+    for &plan_seed in &[1u64, 9, 23, 77] {
+        for &replicas in &[2usize, 4] {
+            let plan = FaultPlan::random(plan_seed, 40.0, replicas);
+            let label = format!("plan {plan_seed} x {replicas}r ({} events)", plan.events.len());
+            let (tickets, evs, stats, _) = chaos_run(plan, 5, replicas, 1);
+            assert_all_terminal(&tickets, &evs, &label);
+            // Sanity on the harness itself: the seed matrix must exercise
+            // fault machinery somewhere (not every seed crashes, but the
+            // stats string is checked non-trivially below in the crash
+            // test); here just require the run produced events.
+            assert!(!evs.is_empty(), "{label}: no events delivered ({stats})");
+        }
+    }
+}
+
+#[test]
+fn crash_with_inflight_work_recovers_everything() {
+    // A deterministic worst-ish case: both initial replicas die mid-run
+    // while holding online + offline work. Every ticket must still reach a
+    // terminal state and the crashes must be accounted.
+    let plan = FaultPlan {
+        events: vec![
+            FaultEvent::Crash {
+                at: 3.0,
+                replica: 0,
+            },
+            FaultEvent::Crash {
+                at: 7.5,
+                replica: 1,
+            },
+            FaultEvent::ExecError {
+                at: 2.0,
+                replica: 1,
+                failures: 2,
+            },
+        ],
+        seed: 13,
+    };
+    let (tickets, evs, stats, _) = chaos_run(plan, 7, 2, 1);
+    assert_all_terminal(&tickets, &evs, "double crash");
+    assert!(
+        stats.contains("crashes: 2"),
+        "both crashes must be recovered: {stats}"
+    );
+    // Recovered online work restarts its stream: at least one ticket must
+    // have observed a Preempted marker or the crash hit only idle queues.
+    let finished = evs
+        .iter()
+        .filter(|e| matches!(e, TokenEvent::Finished { .. }))
+        .count();
+    assert!(finished > 0, "work must still complete after crashes");
+}
+
+#[test]
+fn parallel_bit_exact_with_serial_under_faults() {
+    for &plan_seed in &[9u64, 23] {
+        for &replicas in &[2usize, 4] {
+            let plan = FaultPlan::random(plan_seed, 40.0, replicas);
+            let serial = chaos_run(plan.clone(), 11, replicas, 1);
+            let serial_evs = format!("{:?}", serial.1);
+            for &threads in &[2usize, 4] {
+                let par = chaos_run(plan.clone(), 11, replicas, threads);
+                assert_eq!(
+                    serial_evs,
+                    format!("{:?}", par.1),
+                    "event streams diverged (plan {plan_seed}, {replicas}r x {threads}t)"
+                );
+                assert_eq!(
+                    serial.2, par.2,
+                    "fault stats diverged (plan {plan_seed}, {replicas}r x {threads}t)"
+                );
+                assert_eq!(
+                    serial.3, par.3,
+                    "metrics diverged (plan {plan_seed}, {replicas}r x {threads}t)"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn faults_on_idle_replicas_are_observationally_free() {
+    // A slowdown window that closes before the first arrival and an exec
+    // error scheduled long after the last completion: the hook is
+    // installed (non-empty plan) but never fires, so the run must be
+    // bit-identical to the fault-free run.
+    let idle_plan = FaultPlan {
+        events: vec![
+            FaultEvent::Slowdown {
+                at: 0.0,
+                until: 0.2,
+                replica: 0,
+                factor: 9.0,
+            },
+            FaultEvent::ExecError {
+                at: 50_000.0,
+                replica: 1,
+                failures: 3,
+            },
+        ],
+        seed: 21,
+    };
+    let base = chaos_run(FaultPlan::none(), 3, 2, 1);
+    let faulted = chaos_run(idle_plan, 3, 2, 1);
+    assert_eq!(
+        format!("{:?}", base.1),
+        format!("{:?}", faulted.1),
+        "idle-replica faults must not perturb the event stream"
+    );
+    assert_eq!(base.3, faulted.3, "metrics must match bit for bit");
+}
+
+#[test]
+fn overload_shedding_under_faults_still_terminates_every_ticket() {
+    let mut cc = fleet_cfg(19, 2, 1);
+    cc.steal_low_water = 1;
+    cc.steal_batch = 1;
+    cc.shed = ShedPolicy::aggressive(3, 2.0);
+    cc.faults = FaultPlan {
+        events: vec![FaultEvent::Crash {
+            at: 4.0,
+            replica: 1,
+        }],
+        seed: 19,
+    };
+    let mut front = ClusterServe::new(cc);
+    let mut tickets: Vec<TicketId> = front
+        .submit_offline_jobs(offline_jobs(
+            &DatasetSpec::loogle_qa_short().scaled(0.05),
+            16,
+            19,
+        ))
+        .unwrap()
+        .iter()
+        .map(|t| t.id)
+        .collect();
+    for job in &online_mix(10) {
+        let spec = echo::serve::SubmitSpec::online(job.prompt.clone(), job.max_new_tokens);
+        tickets.push(front.submit(spec.at(job.at)).unwrap().id);
+    }
+    let mut evs: Vec<TokenEvent> = Vec::new();
+    front.drain(&mut evs).unwrap();
+    assert_all_terminal(&tickets, &evs, "shed + crash");
+    assert!(
+        front.sim.fault_stats.shed_offline > 0,
+        "the aggressive policy must actually shed: {:?}",
+        front.sim.fault_stats
+    );
+    assert_eq!(front.sim.fault_stats.crashes, 1);
+}

@@ -6,8 +6,12 @@ use echo::config::SystemConfig;
 use echo::core::{PromptSpec, Slo};
 use echo::engine::{sim::SimBackend, Engine};
 use echo::estimator::TimeModel;
-use echo::serve::wire::{encode_request, parse_request, WireRequest, WireSession};
-use echo::serve::{EngineServe, SubmitSpec};
+use echo::faults::CancelReason;
+use echo::serve::wire::{
+    encode_event, encode_request, parse_cancel_reason, parse_request, read_frame, FrameRead,
+    WireRequest, WireSession, MAX_FRAME_BYTES,
+};
+use echo::serve::{EngineServe, SubmitSpec, TokenEvent};
 use echo::utils::json::Json;
 
 fn front() -> EngineServe<SimBackend> {
@@ -101,6 +105,72 @@ fn malformed_and_unknown_get_error_replies() {
             .contains("tpot"),
         "ttft without tpot"
     );
+}
+
+// ---- frame hardening (PR 7) ----------------------------------------------
+
+#[test]
+fn read_frame_splits_lines_and_reports_eof() {
+    let mut buf = std::io::Cursor::new(b"{\"a\":1}\r\n{\"b\":2}\nrest".to_vec());
+    match read_frame(&mut buf, MAX_FRAME_BYTES).unwrap() {
+        FrameRead::Line(l) => assert_eq!(l, "{\"a\":1}", "CR must be stripped"),
+        other => panic!("expected a line, got {other:?}"),
+    }
+    match read_frame(&mut buf, MAX_FRAME_BYTES).unwrap() {
+        FrameRead::Line(l) => assert_eq!(l, "{\"b\":2}"),
+        other => panic!("expected a line, got {other:?}"),
+    }
+    // A trailing unterminated fragment is still a frame at EOF.
+    match read_frame(&mut buf, MAX_FRAME_BYTES).unwrap() {
+        FrameRead::Line(l) => assert_eq!(l, "rest"),
+        other => panic!("expected the trailing fragment, got {other:?}"),
+    }
+    assert!(matches!(
+        read_frame(&mut buf, MAX_FRAME_BYTES).unwrap(),
+        FrameRead::Eof
+    ));
+}
+
+#[test]
+fn oversized_frames_are_dropped_not_buffered() {
+    // A frame past the cap must come back as TooLarge with its true length
+    // counted — and the reader must stay usable for the next frame.
+    let cap = 64;
+    let big = "x".repeat(500);
+    let mut buf = std::io::Cursor::new(format!("{big}\n{{\"verb\":\"metrics\"}}\n").into_bytes());
+    match read_frame(&mut buf, cap).unwrap() {
+        FrameRead::TooLarge(len) => assert_eq!(len, 500),
+        other => panic!("expected TooLarge, got {other:?}"),
+    }
+    match read_frame(&mut buf, cap).unwrap() {
+        FrameRead::Line(l) => assert_eq!(l, "{\"verb\":\"metrics\"}"),
+        other => panic!("the connection must survive an oversized frame: {other:?}"),
+    }
+}
+
+#[test]
+fn cancelled_events_carry_typed_reasons_on_the_wire() {
+    for reason in [
+        CancelReason::Client,
+        CancelReason::Unschedulable,
+        CancelReason::Stalled,
+        CancelReason::ShedOverload,
+        CancelReason::DeadlineExpired,
+        CancelReason::ReplicaFailed,
+    ] {
+        let ev = TokenEvent::Cancelled {
+            ticket: 3,
+            at: 1.25,
+            reason,
+        };
+        let j = encode_event(&ev);
+        assert_eq!(j.get("event").and_then(|v| v.as_str()), Some("cancelled"));
+        assert_eq!(
+            parse_cancel_reason(&j),
+            Some(reason),
+            "reason must round-trip: {j}"
+        );
+    }
 }
 
 #[test]
