@@ -1,0 +1,282 @@
+//! Comment- and string-aware Rust lexer for echo-lint.
+//!
+//! Hand-rolled on purpose: `syn` is not reachable offline, and the rules
+//! only need a token stream with line numbers, not a syntax tree. The
+//! lexer understands exactly as much Rust as it takes to never mistake a
+//! string or comment for code: line comments, nested block comments, raw
+//! and byte strings (`r"…"`, `r#"…"#`, `br…`, `b"…"`), escaped quotes,
+//! char literals vs lifetimes. Everything else is idents, numbers, and
+//! single-char puncts (`::` is two `:` tokens; rules sequence-match).
+//!
+//! Comments are collected separately from tokens because the directive
+//! grammar (see [`super::rules`]) lives in comments, while every code
+//! rule works on the token stream and can therefore never fire on
+//! commented-out or quoted text.
+
+/// Token class. `Life` is a lifetime (`'a`), distinct from `Char` (`'a'`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Life,
+    Punct,
+}
+
+/// One code token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+/// One comment (line or block, full text) with its 1-based start line.
+#[derive(Clone, Debug)]
+pub struct CommentTok {
+    pub text: String,
+    pub line: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_ascii_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    is_ident_start(c) || c.is_ascii_digit()
+}
+
+fn span(s: &[char], a: usize, b: usize) -> String {
+    s[a.min(s.len())..b.min(s.len())].iter().collect()
+}
+
+/// Find the closing quote of a raw string: a `"` followed by `hashes` `#`s.
+fn raw_close(s: &[char], from: usize, hashes: usize) -> Option<usize> {
+    let n = s.len();
+    let fence = |k: usize| s[k + 1..k + 1 + hashes].iter().all(|&h| h == '#');
+    let mut j = from;
+    while j < n {
+        if s[j] == '"' && j + 1 + hashes <= n && fence(j) {
+            return Some(j);
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Tokenize `src` into (tokens, comments), both carrying 1-based lines.
+///
+/// Unterminated strings/comments run to end of file rather than erroring:
+/// the linter must keep scanning a broken tree, not die on it.
+pub fn lex(src: &str) -> (Vec<Tok>, Vec<CommentTok>) {
+    let s: Vec<char> = src.chars().collect();
+    let n = s.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<CommentTok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    while i < n {
+        let c = s[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == ' ' || c == '\t' || c == '\r' {
+            i += 1;
+            continue;
+        }
+        // line comment (covers `///` and `//!` doc comments too)
+        if c == '/' && i + 1 < n && s[i + 1] == '/' {
+            let mut j = i;
+            while j < n && s[j] != '\n' {
+                j += 1;
+            }
+            comments.push(CommentTok {
+                text: span(&s, i, j),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        // block comment, nested
+        if c == '/' && i + 1 < n && s[i + 1] == '*' {
+            let start = i;
+            let start_line = line;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if s[i] == '/' && i + 1 < n && s[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == '*' && i + 1 < n && s[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push(CommentTok {
+                text: span(&s, start, i),
+                line: start_line,
+            });
+            continue;
+        }
+        // raw / byte strings: r"…", r#"…"#, br#"…"#, b"…"
+        if c == 'r' || c == 'b' {
+            let mut p = i + 1;
+            if c == 'b' && p < n && s[p] == 'r' {
+                p += 1;
+            }
+            let hash_start = p;
+            while p < n && s[p] == '#' {
+                p += 1;
+            }
+            let hashes = p - hash_start;
+            if p < n && s[p] == '"' {
+                let (text, next) = match raw_close(&s, p + 1, hashes) {
+                    Some(j) => (span(&s, i, j + 1 + hashes), j + 1 + hashes),
+                    None => (span(&s, i, n), n),
+                };
+                // count newlines from the whole token AFTER recording its
+                // start line, so multi-line raw strings never drift lines
+                let newlines = text.chars().filter(|&ch| ch == '\n').count();
+                toks.push(Tok {
+                    kind: TokKind::Str,
+                    text,
+                    line,
+                });
+                line += newlines;
+                i = next;
+                continue;
+            }
+            // not a raw-string head: fall through to the ident branch
+        }
+        // plain string; skip `\x` escape pairs so `\"` never closes it
+        if c == '"' {
+            let start_line = line;
+            let mut j = i + 1;
+            while j < n {
+                if s[j] == '\\' {
+                    j += 2;
+                    continue;
+                }
+                if s[j] == '"' {
+                    break;
+                }
+                j += 1;
+            }
+            let text = span(&s, i, j + 1);
+            // escape pairs can hide `\`-newline continuations: count the
+            // newlines from the finished token text, not during the scan
+            let newlines = text.chars().filter(|&ch| ch == '\n').count();
+            toks.push(Tok {
+                kind: TokKind::Str,
+                text,
+                line: start_line,
+            });
+            line += newlines;
+            i = j + 1;
+            continue;
+        }
+        // `'a'` is a char, `'a` is a lifetime; `'ab'` and longer are never
+        // chars in Rust, so an ident run longer than one char is a lifetime
+        if c == '\'' {
+            if i + 1 < n && is_ident_start(s[i + 1]) {
+                let mut k = i + 2;
+                while k < n && is_ident_cont(s[k]) {
+                    k += 1;
+                }
+                if k < n && s[k] == '\'' && k == i + 2 {
+                    toks.push(Tok {
+                        kind: TokKind::Char,
+                        text: span(&s, i, k + 1),
+                        line,
+                    });
+                    i = k + 1;
+                } else {
+                    toks.push(Tok {
+                        kind: TokKind::Life,
+                        text: span(&s, i, k),
+                        line,
+                    });
+                    i = k;
+                }
+                continue;
+            }
+            // escaped (`'\n'`) or punct (`'{'`) char literal
+            let mut j = i + 1;
+            if j < n && s[j] == '\\' {
+                j += 2;
+            }
+            while j < n && s[j] != '\'' {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Char,
+                text: span(&s, i, j + 1),
+                line,
+            });
+            i = j + 1;
+            continue;
+        }
+        if is_ident_start(c) {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(s[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Ident,
+                text: span(&s, i, j),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i + 1;
+            while j < n && is_ident_cont(s[j]) {
+                j += 1;
+            }
+            toks.push(Tok {
+                kind: TokKind::Num,
+                text: span(&s, i, j),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Tok {
+            kind: TokKind::Punct,
+            text: c.to_string(),
+            line,
+        });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// Literal value of a string token: strips the optional `r`/`br`/`b`
+/// prefix, the `#` fencing, and the quotes. Escapes are left unresolved —
+/// the rules only compare paths and JSON keys, which never contain them.
+pub fn str_value(text: &str) -> String {
+    for pre in ["br", "r", "b", ""] {
+        let Some(rest) = text.strip_prefix(pre) else {
+            continue;
+        };
+        let hashes = rest.chars().take_while(|&c| c == '#').count();
+        let fenced = &rest[hashes..];
+        let Some(inner) = fenced.strip_prefix('"') else {
+            continue;
+        };
+        let close = format!("\"{}", "#".repeat(hashes));
+        if let Some(body) = inner.strip_suffix(close.as_str()) {
+            return body.to_string();
+        }
+    }
+    text.trim_matches('"').to_string()
+}

@@ -1,0 +1,153 @@
+//! echo-lint — repo-invariant static analysis (PR 8).
+//!
+//! A dependency-free analyzer that enforces at CI time the invariants the
+//! repo otherwise only states in prose: simulation determinism (no wall
+//! clock, no std hash-order iteration), zero-alloc hot paths, unwrap
+//! hygiene, oracle test coverage, microbench gate coverage, and
+//! DESIGN.md/doc drift. See DESIGN.md "Static analysis (PR 8)" for the
+//! rule catalog and the directive grammar, [`rules`] for semantics, and
+//! [`lexer`] for the token model.
+//!
+//! Entry points: `echo lint` (CLI) and [`lint_repo`] (in-process — the
+//! `repo_is_lint_clean` tier-1 test runs the same pass `cargo test` side).
+
+pub mod lexer;
+pub mod rules;
+
+pub use lexer::{lex, str_value, CommentTok, Tok, TokKind};
+pub use rules::{run, Finding, LintFile, LintInput, LintOutcome, SuppressedFinding, RULE_NAMES};
+
+use crate::utils::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Schema version of `LINT_REPORT.json`.
+pub const REPORT_VERSION: u64 = 1;
+
+/// Full result of linting a repo checkout, serializable to
+/// `LINT_REPORT.json` (byte-stable: findings are sorted, objects use
+/// ordered keys).
+#[derive(Debug)]
+pub struct LintReport {
+    pub root: PathBuf,
+    pub outcome: LintOutcome,
+}
+
+impl LintReport {
+    /// True when there are zero unsuppressed findings.
+    pub fn ok(&self) -> bool {
+        self.outcome.findings.is_empty()
+    }
+
+    /// Unsuppressed finding count per rule, in [`RULE_NAMES`] order.
+    pub fn counts(&self) -> Vec<(&'static str, usize)> {
+        RULE_NAMES
+            .iter()
+            .map(|&rule| {
+                let n = self.outcome.findings.iter().filter(|f| f.rule == rule).count();
+                (rule, n)
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let findings: Vec<Json> = self.outcome.findings.iter().map(finding_json).collect();
+        let suppressed: Vec<Json> = self
+            .outcome
+            .suppressed
+            .iter()
+            .map(|s| finding_json(&s.finding).set("reason", s.reason.as_str()))
+            .collect();
+        let mut counts = Json::obj();
+        for (rule, n) in self.counts() {
+            if n > 0 {
+                counts = counts.set(rule, n);
+            }
+        }
+        Json::obj()
+            .set("version", REPORT_VERSION)
+            .set("root", self.root.display().to_string())
+            .set("files_scanned", self.outcome.files_scanned)
+            .set("ok", self.ok())
+            .set("counts", counts)
+            .set("findings", Json::Arr(findings))
+            .set("suppressed", Json::Arr(suppressed))
+    }
+}
+
+fn finding_json(f: &Finding) -> Json {
+    Json::obj()
+        .set("rule", f.rule)
+        .set("file", f.file.as_str())
+        .set("line", f.line)
+        .set("message", f.message.as_str())
+}
+
+/// Walk upward from the CWD to the first directory containing `rust/src`.
+pub fn find_root() -> anyhow::Result<PathBuf> {
+    let mut dir = std::env::current_dir()?;
+    loop {
+        if dir.join("rust").join("src").is_dir() {
+            return Ok(dir);
+        }
+        if !dir.pop() {
+            anyhow::bail!("no rust/src found in the CWD or any parent; pass --root");
+        }
+    }
+}
+
+fn collect_rs(base: &Path, dir: &Path, out: &mut Vec<(String, String)>) -> anyhow::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let p = entry?.path();
+        if p.is_dir() {
+            collect_rs(base, &p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            let rel = match p.strip_prefix(base) {
+                Ok(r) => r.to_string_lossy().replace('\\', "/"),
+                Err(_) => p.display().to_string(),
+            };
+            let text = std::fs::read_to_string(&p)?;
+            out.push((rel, text));
+        }
+    }
+    Ok(())
+}
+
+/// Read the repo at `root` from disk and run every rule: all of
+/// `rust/src/**/*.rs` (sorted by relative path for deterministic output),
+/// `rust/tests/*.rs` for oracle coverage, `rust/benches/microbench.rs`
+/// for gate coverage, and `DESIGN.md` for doc drift.
+pub fn lint_repo(root: &Path) -> anyhow::Result<LintReport> {
+    let src_base = root.join("rust").join("src");
+    if !src_base.is_dir() {
+        anyhow::bail!("{} is not an echo repo root (no rust/src)", root.display());
+    }
+    let mut src = Vec::new();
+    collect_rs(&src_base, &src_base, &mut src)?;
+    src.sort_by(|a, b| a.0.cmp(&b.0));
+
+    let mut tests = Vec::new();
+    let tdir = root.join("rust").join("tests");
+    if tdir.is_dir() {
+        collect_rs(&tdir, &tdir, &mut tests)?;
+        tests.sort_by(|a, b| a.0.cmp(&b.0));
+    }
+
+    let mb = root.join("rust").join("benches").join("microbench.rs");
+    let microbench = if mb.is_file() {
+        Some(std::fs::read_to_string(&mb)?)
+    } else {
+        None
+    };
+    let design = std::fs::read_to_string(root.join("DESIGN.md")).unwrap_or_default();
+
+    let outcome = rules::run(&LintInput {
+        src,
+        tests,
+        microbench,
+        design,
+    });
+    Ok(LintReport {
+        root: root.to_path_buf(),
+        outcome,
+    })
+}

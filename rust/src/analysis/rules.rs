@@ -1,0 +1,793 @@
+//! echo-lint rule engine: directives, regions, and the rule families.
+//!
+//! Directive grammar (all inside comments; the word "lint" followed by a
+//! colon marks one — spelled out here rather than written literally so
+//! this file stays clean under its own scanner):
+//!
+//!   * `allow-<rule>(reason)` suppresses `<rule>` on the directive's own
+//!     line or the line directly below. An empty reason or an unknown
+//!     rule name is itself a finding (rule id `directive`), so every
+//!     suppression in the tree carries a justification.
+//!   * `hot-path` marks the next `fn` at or below the directive; the
+//!     `alloc` rule then bans allocating calls inside its brace-matched
+//!     body.
+//!
+//! `#[cfg(test)]` regions are exempt from the per-line rules: tests may
+//! unwrap, allocate, and use std maps freely.
+//!
+//! Rule families (ids as they appear in reports and suppressions):
+//!   std-map         std HashMap/HashSet outside `utils/hash.rs`
+//!   wall-clock      Instant/SystemTime/thread/env reads outside the
+//!                   wall-clock allowlist (server/, runtime/, serve/wire.rs,
+//!                   engine/pjrt.rs)
+//!   alloc           allocating calls in hot-path function bodies
+//!   unwrap          `.unwrap()` / `.expect(` in non-test code
+//!   oracle-coverage every `Oracle*` type referenced from `rust/tests/`
+//!   gate-coverage   every microbench path gated or documented ungated
+//!   doc-drift       wire verbs + metrics keys present in DESIGN.md
+//!   directive       malformed or reason-less directives
+
+use super::lexer::{lex, str_value, CommentTok, Tok, TokKind};
+use crate::utils::hash::FxHashSet;
+
+/// Every rule id, in report order. `directive` is internal: it cannot be
+/// suppressed (a broken suppression must not be able to excuse itself).
+pub const RULE_NAMES: [&str; 8] = [
+    "std-map",
+    "wall-clock",
+    "alloc",
+    "unwrap",
+    "oracle-coverage",
+    "gate-coverage",
+    "doc-drift",
+    "directive",
+];
+
+/// One diagnostic. `file` is relative to `rust/src` for source findings;
+/// cross-file rules use repo-relative paths (e.g. `rust/benches/…`).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub rule: &'static str,
+    pub line: usize,
+    pub message: String,
+}
+
+/// A finding silenced by a per-site `allow-` directive, with its reason.
+#[derive(Clone, Debug)]
+pub struct SuppressedFinding {
+    pub finding: Finding,
+    pub reason: String,
+}
+
+/// Everything the rules read. Built from disk by [`super::lint_repo`], or
+/// assembled in-memory by the analyzer's own tests.
+#[derive(Debug, Default)]
+pub struct LintInput {
+    /// `(rel_path, text)` for every `.rs` under `rust/src`, rel to it.
+    pub src: Vec<(String, String)>,
+    /// `(name, text)` for every `.rs` directly under `rust/tests`.
+    pub tests: Vec<(String, String)>,
+    /// Text of `rust/benches/microbench.rs`, if present.
+    pub microbench: Option<String>,
+    /// Text of `DESIGN.md` (empty when missing).
+    pub design: String,
+}
+
+/// Result of a full run: unsuppressed findings (sorted by file, line,
+/// rule, message) and the suppressed ones with their reasons.
+#[derive(Debug)]
+pub struct LintOutcome {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub suppressed: Vec<SuppressedFinding>,
+}
+
+// ------------------------------------------------------------ directives
+
+struct Directives {
+    /// `(rule, line, reason)` per valid `allow-` site.
+    allows: Vec<(&'static str, usize, String)>,
+    /// Lines carrying a `hot-path` directive.
+    hots: Vec<usize>,
+    /// `(line, message)` for malformed directives.
+    bad: Vec<(usize, String)>,
+}
+
+// String literals are invisible to the directive scanner (it reads
+// comments only), so the marker can be spelled plainly here.
+const MARKER: &str = "lint:";
+
+fn find_from(chars: &[char], from: usize, needle: &str) -> Option<usize> {
+    let pat: Vec<char> = needle.chars().collect();
+    let mut p = from;
+    while p + pat.len() <= chars.len() {
+        if chars[p..p + pat.len()] == pat[..] {
+            return Some(p);
+        }
+        p += 1;
+    }
+    None
+}
+
+fn starts_with_at(chars: &[char], at: usize, needle: &str) -> bool {
+    let pat: Vec<char> = needle.chars().collect();
+    at + pat.len() <= chars.len() && chars[at..at + pat.len()] == pat[..]
+}
+
+fn canonical_rule(name: &str) -> Option<&'static str> {
+    RULE_NAMES.iter().copied().find(|r| *r == name)
+}
+
+fn parse_directives(comments: &[CommentTok]) -> Directives {
+    let mut d = Directives {
+        allows: Vec::new(),
+        hots: Vec::new(),
+        bad: Vec::new(),
+    };
+    for c in comments {
+        if !c.text.contains(MARKER) {
+            continue;
+        }
+        let chars: Vec<char> = c.text.chars().collect();
+        let mut matched = false;
+        // hot-path: the marker, optional whitespace, `hot-path`, boundary
+        let mut p = 0usize;
+        while let Some(at) = find_from(&chars, p, MARKER) {
+            let mut q = at + MARKER.len();
+            while q < chars.len() && chars[q].is_whitespace() {
+                q += 1;
+            }
+            if starts_with_at(&chars, q, "hot-path") {
+                let after = q + "hot-path".len();
+                let boundary = after >= chars.len()
+                    || !(chars[after].is_ascii_alphanumeric() || chars[after] == '_');
+                if boundary {
+                    d.hots.push(c.line);
+                    matched = true;
+                }
+            }
+            p = at + MARKER.len();
+        }
+        // allow-<rule>(reason): non-overlapping, a match consumes its span
+        let mut p = 0usize;
+        while let Some(at) = find_from(&chars, p, MARKER) {
+            p = at + MARKER.len();
+            let mut q = p;
+            while q < chars.len() && chars[q].is_whitespace() {
+                q += 1;
+            }
+            if !starts_with_at(&chars, q, "allow-") {
+                continue;
+            }
+            let name_start = q + "allow-".len();
+            let mut e = name_start;
+            while e < chars.len()
+                && (chars[e].is_ascii_lowercase() || chars[e].is_ascii_digit() || chars[e] == '-')
+            {
+                e += 1;
+            }
+            if e == name_start || e >= chars.len() || chars[e] != '(' {
+                continue;
+            }
+            let Some(close_off) = chars[e + 1..].iter().position(|&ch| ch == ')') else {
+                continue;
+            };
+            let rule: String = chars[name_start..e].iter().collect();
+            let reason = chars[e + 1..e + 1 + close_off]
+                .iter()
+                .collect::<String>()
+                .trim()
+                .to_string();
+            matched = true;
+            p = e + 2 + close_off;
+            match canonical_rule(&rule) {
+                None | Some("directive") => {
+                    d.bad.push((c.line, format!("unknown rule in allow-{rule}")));
+                }
+                Some(r) => {
+                    if reason.is_empty() {
+                        d.bad.push((c.line, format!("allow-{r} missing a reason")));
+                    } else {
+                        d.allows.push((r, c.line, reason));
+                    }
+                }
+            }
+        }
+        if !matched {
+            d.bad.push((c.line, "malformed lint directive".to_string()));
+        }
+    }
+    d
+}
+
+// --------------------------------------------------------------- regions
+
+type Region = (usize, usize);
+
+/// Start/end lines of the brace pair opening at `toks[start_idx]`.
+fn brace_region(toks: &[Tok], start_idx: usize) -> Region {
+    let start_line = toks[start_idx].line;
+    let mut depth = 0i64;
+    for t in &toks[start_idx..] {
+        if t.kind == TokKind::Punct {
+            if t.text == "{" {
+                depth += 1;
+            } else if t.text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    return (start_line, t.line);
+                }
+            }
+        }
+    }
+    (start_line, toks.last().map_or(start_line, |t| t.line))
+}
+
+fn hot_regions(toks: &[Tok], hots: &[usize], bad: &mut Vec<(usize, String)>) -> Vec<Region> {
+    let mut regions = Vec::new();
+    for &hline in hots {
+        let fn_idx = toks
+            .iter()
+            .position(|t| t.line >= hline && t.kind == TokKind::Ident && t.text == "fn");
+        let Some(fn_idx) = fn_idx else {
+            bad.push((hline, "hot-path directive without a following fn".to_string()));
+            continue;
+        };
+        let brace = toks[fn_idx..]
+            .iter()
+            .position(|t| t.kind == TokKind::Punct && t.text == "{")
+            .map(|off| fn_idx + off);
+        let Some(brace) = brace else {
+            bad.push((hline, "hot-path fn without a body".to_string()));
+            continue;
+        };
+        regions.push(brace_region(toks, brace));
+    }
+    regions
+}
+
+fn cfg_test_regions(toks: &[Tok]) -> Vec<Region> {
+    let mut regions = Vec::new();
+    for k in 0..toks.len().saturating_sub(4) {
+        let is_cfg_test = toks[k].kind == TokKind::Ident
+            && toks[k].text == "cfg"
+            && toks[k + 1].kind == TokKind::Punct
+            && toks[k + 1].text == "("
+            && toks[k + 2].kind == TokKind::Ident
+            && toks[k + 2].text == "test"
+            && toks[k + 3].kind == TokKind::Punct
+            && toks[k + 3].text == ")";
+        if !is_cfg_test {
+            continue;
+        }
+        if let Some(off) = toks[k + 4..]
+            .iter()
+            .position(|t| t.kind == TokKind::Punct && t.text == "{")
+        {
+            regions.push(brace_region(toks, k + 4 + off));
+        }
+    }
+    regions
+}
+
+fn in_regions(line: usize, regions: &[Region]) -> bool {
+    regions.iter().any(|&(a, b)| a <= line && line <= b)
+}
+
+// ----------------------------------------------------------- line rules
+
+type Pat = &'static [(TokKind, Option<&'static str>)];
+
+fn seq_match(toks: &[Tok], k: usize, pat: &[(TokKind, Option<&str>)]) -> bool {
+    if k + pat.len() > toks.len() {
+        return false;
+    }
+    pat.iter().enumerate().all(|(off, &(kind, text))| {
+        let t = &toks[k + off];
+        t.kind == kind && text.map_or(true, |x| t.text == x)
+    })
+}
+
+const COLON: (TokKind, Option<&'static str>) = (TokKind::Punct, Some(":"));
+
+const WALL_CLOCK_SEQS: [(&str, Pat); 5] = [
+    (
+        "Instant::now",
+        &[(TokKind::Ident, Some("Instant")), COLON, COLON, (TokKind::Ident, Some("now"))],
+    ),
+    (
+        "SystemTime::now",
+        &[(TokKind::Ident, Some("SystemTime")), COLON, COLON, (TokKind::Ident, Some("now"))],
+    ),
+    (
+        "thread::current",
+        &[(TokKind::Ident, Some("thread")), COLON, COLON, (TokKind::Ident, Some("current"))],
+    ),
+    (
+        "env::var",
+        &[(TokKind::Ident, Some("env")), COLON, COLON, (TokKind::Ident, Some("var"))],
+    ),
+    (
+        "env::var_os",
+        &[(TokKind::Ident, Some("env")), COLON, COLON, (TokKind::Ident, Some("var_os"))],
+    ),
+];
+
+const ALLOC_SEQS: [(&str, Pat); 7] = [
+    (
+        "Vec::new",
+        &[(TokKind::Ident, Some("Vec")), COLON, COLON, (TokKind::Ident, Some("new"))],
+    ),
+    ("vec! macro", &[(TokKind::Ident, Some("vec")), (TokKind::Punct, Some("!"))]),
+    (
+        "Box::new",
+        &[(TokKind::Ident, Some("Box")), COLON, COLON, (TokKind::Ident, Some("new"))],
+    ),
+    ("format! macro", &[(TokKind::Ident, Some("format")), (TokKind::Punct, Some("!"))]),
+    (
+        ".to_vec()",
+        &[
+            (TokKind::Punct, Some(".")),
+            (TokKind::Ident, Some("to_vec")),
+            (TokKind::Punct, Some("(")),
+        ],
+    ),
+    (
+        ".collect()",
+        &[
+            (TokKind::Punct, Some(".")),
+            (TokKind::Ident, Some("collect")),
+            (TokKind::Punct, Some("(")),
+        ],
+    ),
+    (
+        ".clone()",
+        &[
+            (TokKind::Punct, Some(".")),
+            (TokKind::Ident, Some("clone")),
+            (TokKind::Punct, Some("(")),
+        ],
+    ),
+];
+
+const UNWRAP_SEQS: [(&str, Pat); 2] = [
+    (
+        ".unwrap()",
+        &[
+            (TokKind::Punct, Some(".")),
+            (TokKind::Ident, Some("unwrap")),
+            (TokKind::Punct, Some("(")),
+        ],
+    ),
+    (
+        ".expect()",
+        &[
+            (TokKind::Punct, Some(".")),
+            (TokKind::Ident, Some("expect")),
+            (TokKind::Punct, Some("(")),
+        ],
+    ),
+];
+
+const WALL_CLOCK_ALLOW_FILES: [&str; 2] = ["serve/wire.rs", "engine/pjrt.rs"];
+const WALL_CLOCK_ALLOW_DIRS: [&str; 2] = ["server/", "runtime/"];
+
+/// One parsed source file with its directives and regions resolved.
+#[derive(Debug)]
+pub struct LintFile {
+    pub rel: String,
+    pub toks: Vec<Tok>,
+    allows: Vec<(&'static str, usize, String)>,
+    hot: Vec<Region>,
+    test: Vec<Region>,
+    bad: Vec<(usize, String)>,
+}
+
+impl LintFile {
+    pub fn parse(rel: &str, src: &str) -> LintFile {
+        let (toks, comments) = lex(src);
+        let d = parse_directives(&comments);
+        let mut bad = d.bad;
+        let hot = hot_regions(&toks, &d.hots, &mut bad);
+        let test = cfg_test_regions(&toks);
+        LintFile {
+            rel: rel.to_string(),
+            toks,
+            allows: d.allows,
+            hot,
+            test,
+            bad,
+        }
+    }
+
+    fn allow_reason(&self, rule: &str, line: usize) -> Option<&str> {
+        self.allows
+            .iter()
+            .find(|(r, ln, _)| *r == rule && *ln == line)
+            .or_else(|| {
+                self.allows
+                    .iter()
+                    .find(|(r, ln, _)| *r == rule && *ln + 1 == line)
+            })
+            .map(|(_, _, reason)| reason.as_str())
+    }
+}
+
+fn finding(file: &str, rule: &'static str, line: usize, message: String) -> Finding {
+    Finding {
+        file: file.to_string(),
+        rule,
+        line,
+        message,
+    }
+}
+
+fn line_rule_findings(f: &LintFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let toks = &f.toks;
+    if !f.rel.ends_with("utils/hash.rs") {
+        for t in toks {
+            if t.kind == TokKind::Ident
+                && (t.text == "HashMap" || t.text == "HashSet")
+                && !in_regions(t.line, &f.test)
+            {
+                out.push(finding(
+                    &f.rel,
+                    "std-map",
+                    t.line,
+                    format!("use Fx{} from utils::hash instead of std {}", t.text, t.text),
+                ));
+            }
+        }
+    }
+    let wall_allowed = WALL_CLOCK_ALLOW_FILES.contains(&f.rel.as_str())
+        || WALL_CLOCK_ALLOW_DIRS.iter().any(|d| f.rel.starts_with(d));
+    if !wall_allowed {
+        for k in 0..toks.len() {
+            for (name, pat) in &WALL_CLOCK_SEQS {
+                if seq_match(toks, k, pat) && !in_regions(toks[k].line, &f.test) {
+                    out.push(finding(
+                        &f.rel,
+                        "wall-clock",
+                        toks[k].line,
+                        format!("{name} breaks virtual-clock determinism"),
+                    ));
+                }
+            }
+        }
+    }
+    if !f.hot.is_empty() {
+        for k in 0..toks.len() {
+            for (name, pat) in &ALLOC_SEQS {
+                if seq_match(toks, k, pat)
+                    && in_regions(toks[k].line, &f.hot)
+                    && !in_regions(toks[k].line, &f.test)
+                {
+                    out.push(finding(
+                        &f.rel,
+                        "alloc",
+                        toks[k].line,
+                        format!("{name} in a hot-path function"),
+                    ));
+                }
+            }
+        }
+    }
+    for k in 0..toks.len() {
+        for (name, pat) in &UNWRAP_SEQS {
+            if seq_match(toks, k, pat) && !in_regions(toks[k].line, &f.test) {
+                out.push(finding(
+                    &f.rel,
+                    "unwrap",
+                    toks[k].line,
+                    format!("{name} in non-test code"),
+                ));
+            }
+        }
+    }
+    for (ln, msg) in &f.bad {
+        out.push(finding(&f.rel, "directive", *ln, msg.clone()));
+    }
+    out
+}
+
+// ---------------------------------------------------------- cross-file
+
+fn oracle_rule(files: &[LintFile], test_idents: &FxHashSet<String>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        for k in 0..f.toks.len().saturating_sub(1) {
+            let decl = f.toks[k].kind == TokKind::Ident
+                && matches!(f.toks[k].text.as_str(), "struct" | "enum" | "trait")
+                && f.toks[k + 1].kind == TokKind::Ident
+                && f.toks[k + 1].text.starts_with("Oracle");
+            if decl && !test_idents.contains(&f.toks[k + 1].text) {
+                out.push(finding(
+                    &f.rel,
+                    "oracle-coverage",
+                    f.toks[k + 1].line,
+                    format!(
+                        "{} is not referenced from any rust/tests/ file",
+                        f.toks[k + 1].text
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// String literals inside the bracketed initializer of `const <name>`.
+/// Skips to the `=` first: the type annotation may also contain brackets.
+fn const_str_list(toks: &[Tok], name: &str) -> Vec<(String, usize)> {
+    let mut vals = Vec::new();
+    for k in 1..toks.len() {
+        let is_decl = toks[k].kind == TokKind::Ident
+            && toks[k].text == name
+            && toks[k - 1].kind == TokKind::Ident
+            && toks[k - 1].text == "const";
+        if !is_decl {
+            continue;
+        }
+        let mut eq = k;
+        while eq < toks.len() && !(toks[eq].kind == TokKind::Punct && toks[eq].text == "=") {
+            eq += 1;
+        }
+        let mut depth = 0i64;
+        let mut started = false;
+        for t in &toks[eq..] {
+            if t.kind == TokKind::Punct && t.text == "[" {
+                depth += 1;
+                started = true;
+            } else if t.kind == TokKind::Punct && t.text == "]" {
+                depth -= 1;
+                if started && depth == 0 {
+                    return vals;
+                }
+            } else if started && t.kind == TokKind::Str {
+                vals.push((str_value(&t.text), t.line));
+            }
+        }
+        return vals;
+    }
+    vals
+}
+
+/// `(path, line)` for every literal second argument of a `.bench(` or
+/// `.bench_fixed(` call. Non-literal (forwarded) paths are skipped.
+fn bench_paths(toks: &[Tok]) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for k in 0..toks.len().saturating_sub(2) {
+        let call = toks[k].kind == TokKind::Punct
+            && toks[k].text == "."
+            && toks[k + 1].kind == TokKind::Ident
+            && (toks[k + 1].text == "bench" || toks[k + 1].text == "bench_fixed")
+            && toks[k + 2].kind == TokKind::Punct
+            && toks[k + 2].text == "(";
+        if !call {
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut args: Vec<Vec<&Tok>> = vec![Vec::new()];
+        for t in &toks[k + 2..] {
+            let p = t.kind == TokKind::Punct;
+            if p && (t.text == "(" || t.text == "[" || t.text == "{") {
+                depth += 1;
+                if depth == 1 {
+                    continue;
+                }
+            } else if p && (t.text == ")" || t.text == "]" || t.text == "}") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if p && t.text == "," && depth == 1 {
+                args.push(Vec::new());
+                continue;
+            }
+            if depth >= 1 {
+                if let Some(last) = args.last_mut() {
+                    last.push(t);
+                }
+            }
+        }
+        if args.len() >= 2 && args[1].len() == 1 && args[1][0].kind == TokKind::Str {
+            out.push((str_value(&args[1][0].text), args[1][0].line));
+        }
+    }
+    out
+}
+
+const MICROBENCH_REL: &str = "rust/benches/microbench.rs";
+
+fn gate_rule(microbench: Option<&str>) -> Vec<Finding> {
+    let Some(src) = microbench else {
+        return vec![finding(
+            MICROBENCH_REL,
+            "gate-coverage",
+            1,
+            "microbench.rs not found".to_string(),
+        )];
+    };
+    let (toks, _) = lex(src);
+    let gated = const_str_list(&toks, "GATED_PAIRS");
+    let ungated_raw = const_str_list(&toks, "UNGATED_PAIRS");
+    // UNGATED_PAIRS string literals alternate (path, reason)
+    let mut ungated: Vec<(&(String, usize), &(String, usize))> = Vec::new();
+    let mut i = 0;
+    while i + 1 < ungated_raw.len() {
+        ungated.push((&ungated_raw[i], &ungated_raw[i + 1]));
+        i += 2;
+    }
+    if gated.is_empty() && ungated.is_empty() {
+        return vec![finding(
+            MICROBENCH_REL,
+            "gate-coverage",
+            1,
+            "GATED_PAIRS/UNGATED_PAIRS manifests missing".to_string(),
+        )];
+    }
+    let mut out = Vec::new();
+    let in_gated = |v: &str| gated.iter().any(|(g, _)| g == v);
+    let in_ungated = |v: &str| ungated.iter().any(|((u, _), _)| u == v);
+    let calls = bench_paths(&toks);
+    let called = |v: &str| calls.iter().any(|(c, _)| c == v);
+    for (v, ln) in &calls {
+        if !in_gated(v) && !in_ungated(v) {
+            out.push(finding(
+                MICROBENCH_REL,
+                "gate-coverage",
+                *ln,
+                format!("bench path \"{v}\" is neither gated nor in the documented ungated list"),
+            ));
+        }
+    }
+    for (v, ln) in &gated {
+        if !called(v) {
+            out.push(finding(
+                MICROBENCH_REL,
+                "gate-coverage",
+                *ln,
+                format!("GATED_PAIRS entry \"{v}\" matches no bench call"),
+            ));
+        }
+    }
+    for ((v, ln), (reason, rln)) in &ungated {
+        if !called(v) {
+            out.push(finding(
+                MICROBENCH_REL,
+                "gate-coverage",
+                *ln,
+                format!("UNGATED_PAIRS entry \"{v}\" matches no bench call"),
+            ));
+        }
+        if reason.trim().is_empty() {
+            out.push(finding(
+                MICROBENCH_REL,
+                "gate-coverage",
+                *rln,
+                format!("UNGATED_PAIRS entry \"{v}\" has an empty reason"),
+            ));
+        }
+    }
+    out
+}
+
+fn doc_rule(files: &[LintFile], design: &str) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let set_call: Pat = &[
+        (TokKind::Punct, Some(".")),
+        (TokKind::Ident, Some("set")),
+        (TokKind::Punct, Some("(")),
+    ];
+    for f in files {
+        if f.rel != "serve/wire.rs" {
+            continue;
+        }
+        let toks = &f.toks;
+        for k in 0..toks.len().saturating_sub(5) {
+            let is_verb = seq_match(toks, k, set_call)
+                && toks[k + 3].kind == TokKind::Str
+                && str_value(&toks[k + 3].text) == "verb"
+                && toks[k + 4].kind == TokKind::Punct
+                && toks[k + 4].text == ","
+                && toks[k + 5].kind == TokKind::Str;
+            if !is_verb {
+                continue;
+            }
+            let v = str_value(&toks[k + 5].text);
+            if !design.contains(&format!("\"verb\":\"{v}\"")) {
+                out.push(finding(
+                    &f.rel,
+                    "doc-drift",
+                    toks[k + 5].line,
+                    format!("wire verb \"{v}\" missing from DESIGN.md wire grammar"),
+                ));
+            }
+        }
+    }
+    for f in files {
+        if f.rel != "metrics/mod.rs" {
+            continue;
+        }
+        let toks = &f.toks;
+        for k in 0..toks.len().saturating_sub(3) {
+            if !(seq_match(toks, k, set_call) && toks[k + 3].kind == TokKind::Str) {
+                continue;
+            }
+            let ln = toks[k + 3].line;
+            if in_regions(ln, &f.test) {
+                continue;
+            }
+            let key = str_value(&toks[k + 3].text);
+            if !design.contains(&format!("`{key}`")) {
+                out.push(finding(
+                    &f.rel,
+                    "doc-drift",
+                    ln,
+                    format!("Metrics::to_json key `{key}` missing from DESIGN.md schema"),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ------------------------------------------------------------------ run
+
+/// Run every rule over `input`, apply suppressions, sort deterministically.
+pub fn run(input: &LintInput) -> LintOutcome {
+    let files: Vec<LintFile> = input
+        .src
+        .iter()
+        .map(|(rel, text)| LintFile::parse(rel, text))
+        .collect();
+    let mut all: Vec<Finding> = Vec::new();
+    for f in &files {
+        all.extend(line_rule_findings(f));
+    }
+    let mut test_idents: FxHashSet<String> = FxHashSet::default();
+    for (_, text) in &input.tests {
+        let (toks, _) = lex(text);
+        for t in toks {
+            if t.kind == TokKind::Ident {
+                test_idents.insert(t.text);
+            }
+        }
+    }
+    all.extend(oracle_rule(&files, &test_idents));
+    all.extend(gate_rule(input.microbench.as_deref()));
+    all.extend(doc_rule(&files, &input.design));
+    all.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule, a.message.as_str()).cmp(&(
+            b.file.as_str(),
+            b.line,
+            b.rule,
+            b.message.as_str(),
+        ))
+    });
+    let mut findings = Vec::new();
+    let mut suppressed = Vec::new();
+    for fnd in all {
+        let reason = files
+            .iter()
+            .find(|f| f.rel == fnd.file)
+            .and_then(|f| f.allow_reason(fnd.rule, fnd.line))
+            .map(str::to_string);
+        match reason {
+            Some(reason) if fnd.rule != "directive" => {
+                suppressed.push(SuppressedFinding {
+                    finding: fnd,
+                    reason,
+                });
+            }
+            _ => findings.push(fnd),
+        }
+    }
+    LintOutcome {
+        files_scanned: files.len(),
+        findings,
+        suppressed,
+    }
+}

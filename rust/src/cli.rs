@@ -12,6 +12,8 @@
 //!   calibrate  — fit Eq. 6-8 coefficients against the PJRT backend
 //!   trace-gen  — generate a paper-shaped arrival trace to a JSON file
 //!   figures    — regenerate a paper table/figure (same code as `cargo bench`)
+//!   lint       — repo-invariant static analysis (determinism, hot-path
+//!                allocations, unwrap hygiene, oracle/gate/doc coverage)
 //!   smoke      — PJRT wiring check
 
 use crate::cluster::{ClusterConfig, ScalePolicy};
@@ -40,7 +42,7 @@ pub fn run_cli() -> i32 {
     if argv.is_empty() {
         eprintln!(
             "{ABOUT}\n\nSubcommands: serve, serve-demo, simulate, cluster, obs, estimate, \
-             calibrate, trace-gen, figures, smoke\nRun `{program} <cmd> --help` for options."
+             calibrate, trace-gen, figures, lint, smoke\nRun `{program} <cmd> --help` for options."
         );
         return 2;
     }
@@ -55,6 +57,7 @@ pub fn run_cli() -> i32 {
         "calibrate" => calibrate(&program, argv),
         "trace-gen" => trace_gen(&program, argv),
         "figures" => figures_cmd(&program, argv),
+        "lint" => lint_cmd(&program, argv),
         "smoke" => smoke(),
         other => {
             eprintln!("unknown subcommand {other:?}");
@@ -368,6 +371,7 @@ fn obs_cmd(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     submit_mixed_load(&mut front, horizon, rate, &spec, n_off, seed)?;
     front.run_until(horizon, &mut NullSink)?;
     let e = front.into_engine();
+    // lint: allow-unwrap(enable_trace ran a few lines up; trace() is Some)
     let ring = e.trace().expect("tracing was enabled above");
     let summary = crate::obs::summary(&e.metrics, &[(0, ring)]);
     print!("{}", crate::obs::render_summary(&summary));
@@ -780,6 +784,50 @@ fn figures_cmd(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
             obj = obj.set(k, v);
         }
         std::fs::write(args.str("out"), obj.pretty())?;
+    }
+    Ok(())
+}
+
+/// Repo-invariant static analysis (see DESIGN.md "Static analysis").
+/// Exits nonzero when any unsuppressed finding remains, so CI can gate on
+/// it; `--report` writes the machine-readable `LINT_REPORT.json`.
+fn lint_cmd(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
+    let cli = Cli::new(
+        "repo-invariant static analysis: determinism (wall-clock, std-map), \
+         zero-alloc hot paths, unwrap hygiene, oracle/gate/doc coverage",
+    )
+    .opt("root", "", "repo root (default: walk up from the CWD to find rust/src)")
+    .opt("report", "", "write the machine-readable report JSON to this path");
+    let args = parse_or_usage(&cli, program, argv)?;
+    let root = if args.str("root").is_empty() {
+        crate::analysis::find_root()?
+    } else {
+        std::path::PathBuf::from(args.str("root"))
+    };
+    let report = crate::analysis::lint_repo(&root)?;
+    for f in &report.outcome.findings {
+        println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.message);
+    }
+    let mut count_parts = Vec::new();
+    for (rule, n) in report.counts() {
+        if n > 0 {
+            count_parts.push(format!("{rule}: {n}"));
+        }
+    }
+    if !args.str("report").is_empty() {
+        std::fs::write(args.str("report"), report.to_json().pretty())?;
+    }
+    let n = report.outcome.findings.len();
+    println!(
+        "echo lint: scanned {} files, {} unsuppressed finding(s){}{}, {} suppressed",
+        report.outcome.files_scanned,
+        n,
+        if count_parts.is_empty() { "" } else { " — " },
+        count_parts.join(", "),
+        report.outcome.suppressed.len()
+    );
+    if n > 0 {
+        anyhow::bail!("{n} unsuppressed lint finding(s)");
     }
     Ok(())
 }

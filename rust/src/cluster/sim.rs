@@ -553,6 +553,7 @@ impl ClusterSim {
             while !self.backlog.is_empty() && self.pool_len(rid) < self.cfg.steal_low_water {
                 let take = self.cfg.steal_batch.min(self.backlog.len());
                 for _ in 0..take {
+                    // lint: allow-unwrap(take <= backlog.len() by construction)
                     let job = self.backlog.pop_front().expect("checked non-empty");
                     self.submit_offline_to(rid, job);
                 }
@@ -660,6 +661,7 @@ impl ClusterSim {
                 .replicas
                 .iter()
                 .position(|r| r.id == id)
+                // lint: allow-unwrap(retiring ids were collected from live replicas above)
                 .expect("retiring id is live");
             let mut rep = self.replicas.remove(pos);
             self.router.forget(id);

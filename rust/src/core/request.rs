@@ -429,7 +429,7 @@ impl Request {
         if self.token_times.len() < 2 {
             return None;
         }
-        let dt = self.token_times.last().unwrap() - self.token_times[0];
+        let dt = self.token_times.last()? - self.token_times[0];
         Some(dt / (self.token_times.len() - 1) as f64)
     }
 }

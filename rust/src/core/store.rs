@@ -32,6 +32,7 @@ impl RequestStore {
     }
 
     pub fn get_mut(&mut self, id: RequestId) -> &mut Request {
+        // lint: allow-unwrap(indexing contract: callers pass live ids, like get())
         self.map.get_mut(&id).expect("unknown request id")
     }
 

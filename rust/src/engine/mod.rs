@@ -406,9 +406,11 @@ impl<B: ExecutionBackend> Engine<B> {
     /// remaining work can never be scheduled). In steady state (carried
     /// batch, no admissions/completions) the loop allocates nothing: plan,
     /// token, and finished buffers are recycled through [`StepScratch`].
+    // lint: hot-path
     pub fn step(&mut self) -> anyhow::Result<bool> {
         // 1. replay due arrivals
         while matches!(self.arrivals.front(), Some(&(t, _)) if t <= self.clock) {
+            // lint: allow-unwrap(the matches! loop condition saw Some(front))
             let (_, id) = self.arrivals.pop_front().unwrap();
             self.online_queue.push_back(id);
             self.in_queue.insert(id);
@@ -418,6 +420,7 @@ impl<B: ExecutionBackend> Engine<B> {
         // KV stats snapshot for the per-iteration delta event (trace only;
         // `CacheStats` is a handful of counters, the clone is heap-free).
         let kv_before = if self.trace.is_some() {
+            // lint: allow-alloc(CacheStats is a few counters; the clone is heap-free)
             Some(self.kv.stats.clone())
         } else {
             None

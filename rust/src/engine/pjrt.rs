@@ -11,18 +11,17 @@
 //! chunked prefill on; logical block accounting still runs above) — see
 //! DESIGN.md "Hardware adaptation".
 
-use std::collections::HashMap;
-
 use anyhow::{anyhow, bail, Result};
 
 use super::ExecutionBackend;
 use crate::core::{RequestId, RequestStore, Token};
+use crate::utils::hash::FxHashMap;
 use crate::runtime::ModelRuntime;
 use crate::scheduler::{Plan, WorkKind};
 
 pub struct PjrtBackend {
     pub rt: ModelRuntime,
-    slots: HashMap<RequestId, usize>,
+    slots: FxHashMap<RequestId, usize>,
     free_slots: Vec<usize>,
 }
 
@@ -31,7 +30,7 @@ impl PjrtBackend {
         let b = rt.manifest.max_batch;
         PjrtBackend {
             rt,
-            slots: HashMap::new(),
+            slots: FxHashMap::default(),
             free_slots: (0..b).rev().collect(),
         }
     }

@@ -137,6 +137,7 @@ impl TrialShape {
                     .shape
                     .decode_lens
                     .pop()
+                    // lint: allow-unwrap(undo tokens are handed out by push; LIFO pairing)
                     .expect("TrialShape::undo without a matching decode push");
                 self.decode_sum -= len as u64;
                 self.decode_max = prev_max;
@@ -145,6 +146,7 @@ impl TrialShape {
                 self.shape
                     .prefills
                     .pop()
+                    // lint: allow-unwrap(undo tokens are handed out by push; LIFO pairing)
                     .expect("TrialShape::undo without a matching prefill push");
                 self.prefill_secs = prev_secs;
             }
@@ -194,6 +196,7 @@ impl TimeModel {
         if lens.is_empty() {
             return 0.0;
         }
+        // lint: allow-unwrap(is_empty was checked above)
         let max = lens.iter().copied().max().unwrap() as f64;
         let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
         self.cfg.gamma * max + self.cfg.delta * mean
@@ -296,6 +299,7 @@ impl TimeModel {
                 .iter()
                 .map(|s| {
                     let lens = &s.shape.decode_lens;
+                    // lint: allow-unwrap(dec samples all carry at least one decode)
                     let max = lens.iter().copied().max().unwrap() as f64;
                     let mean = lens.iter().sum::<usize>() as f64 / lens.len() as f64;
                     vec![max, mean]

@@ -231,6 +231,7 @@ impl ReplicaFaults {
 
     /// Execution-time multiplier at virtual time `t` (1.0 outside every
     /// window; overlapping windows multiply).
+    // lint: hot-path
     pub fn slow_factor(&self, t: f64) -> f64 {
         let mut f = 1.0;
         for &(from, until, factor) in &self.slowdowns {
@@ -248,6 +249,7 @@ impl ReplicaFaults {
     /// passed: the imminent execute should fail this many consecutive
     /// attempts. At most one fault fires per execute; queued-up faults
     /// fire on subsequent iterations.
+    // lint: hot-path
     pub fn take_exec_failures(&mut self, t: f64) -> Option<u32> {
         if self.next_exec < self.exec.len() && self.exec[self.next_exec].0 <= t {
             let n = self.exec[self.next_exec].1;

@@ -538,6 +538,7 @@ pub fn ablation_budget(opts: &FigureOpts) -> anyhow::Result<(String, Json)> {
             let r = scratch.get(id);
             front.submit(SubmitSpec::offline(r.prompt.clone(), r.max_new_tokens))?;
         }
+        // lint: allow-wall-clock(measures host wall time of the run itself; never feeds sim state)
         let wall = std::time::Instant::now();
         front.run_until(o.horizon, &mut NullSink)?;
         let wall = wall.elapsed().as_secs_f64();

@@ -725,6 +725,7 @@ impl KvManager {
         }
     }
 
+    // lint: hot-path
     fn requeue_free(&mut self, b: BlockId) {
         let meta = &self.blocks[b as usize];
         let eligible = meta.ref_count == 0 && meta.key.is_some();
@@ -767,6 +768,7 @@ impl KvManager {
 
     /// Evict the lowest-priority free block; returns its id. Records
     /// punishment if the block was still wanted.
+    // lint: hot-path
     fn evict_one(&mut self) -> Option<BlockId> {
         let b = self.victims.front()?;
         self.victims.unlink(b);
@@ -836,6 +838,7 @@ impl KvManager {
     /// yields the hit count, the free-table membership tally (reserve
     /// accounting), and the block ids to pin — the pre-PR code resolved
     /// each hit three times (peek, free-table filter, pin re-get).
+    // lint: hot-path
     pub fn allocate(
         &mut self,
         req: RequestId,
@@ -849,6 +852,7 @@ impl KvManager {
             self.log_op(KvOp::Allocate {
                 req,
                 class,
+                // lint: allow-alloc(op log is a test-only recording path; None in production)
                 keys: keys.to_vec(),
                 total_blocks,
                 now,
@@ -901,6 +905,7 @@ impl KvManager {
 
         // 3. Fresh blocks (keyed for prompt region, unkeyed past `keys`).
         for i in hit_blocks..total_blocks {
+            // lint: allow-unwrap(feasibility was checked against availability() above)
             let b = self.take_block().expect("availability check lied");
             let key = keys.get(i).copied();
             {
@@ -936,6 +941,7 @@ impl KvManager {
             return false;
         }
         for _ in 0..n {
+            // lint: allow-unwrap(feasibility was checked against availability() above)
             let b = self.take_block().expect("availability check lied");
             let meta = &mut self.blocks[b as usize];
             meta.ref_count = 1;

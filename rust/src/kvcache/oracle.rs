@@ -18,6 +18,7 @@
 //! Do not optimize this module; its value is being the slow, obviously
 //! correct baseline.
 
+// lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
 use std::collections::{BTreeSet, HashMap, HashSet};
 
 use super::manager::{lat_bits, prio_bits, Availability, CacheStats, EvictionPolicy, KvOp};
@@ -56,16 +57,16 @@ pub struct OracleKvManager {
     policy: EvictionPolicy,
     blocks: Vec<BlockMeta>,
     free_list: Vec<BlockId>,
-    cached: HashMap<u128, BlockId>,
+    cached: HashMap<u128, BlockId>, // lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
     cached_sorted: BTreeSet<u128>,
     track_churn: bool,
-    churn_added: HashSet<u128>,
-    churn_removed: HashSet<u128>,
+    churn_added: HashSet<u128>, // lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
+    churn_removed: HashSet<u128>, // lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
     /// Eviction order: (priority_bits, lat_bits, id). Only ref_count == 0
     /// blocks live here.
     free_table: BTreeSet<(u64, u64, BlockId)>,
-    future_refs: HashMap<u128, u32>,
-    owned: HashMap<RequestId, Vec<BlockId>>,
+    future_refs: HashMap<u128, u32>, // lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
+    owned: HashMap<RequestId, Vec<BlockId>>, // lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
     reserve_blocks: usize,
     pub stats: CacheStats,
 }
@@ -78,14 +79,14 @@ impl OracleKvManager {
             policy,
             blocks: vec![BlockMeta::fresh(); capacity_blocks],
             free_list: (0..capacity_blocks as BlockId).rev().collect(),
-            cached: HashMap::new(),
+            cached: HashMap::new(), // lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
             cached_sorted: BTreeSet::new(),
             track_churn: false,
-            churn_added: HashSet::new(),
-            churn_removed: HashSet::new(),
+            churn_added: HashSet::new(), // lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
+            churn_removed: HashSet::new(), // lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
             free_table: BTreeSet::new(),
-            future_refs: HashMap::new(),
-            owned: HashMap::new(),
+            future_refs: HashMap::new(), // lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
+            owned: HashMap::new(), // lint: allow-std-map(oracle keeps the pre-PR-5 std maps verbatim)
             reserve_blocks: 0,
             stats: CacheStats::default(),
         }
@@ -332,6 +333,7 @@ impl OracleKvManager {
 
         let mut held = Vec::with_capacity(total_blocks);
         for &k in keys.iter().take(hit_blocks) {
+            // lint: allow-unwrap(peek_prefix resolved these keys moments ago)
             let b = *self.cached.get(&k).expect("peeked block vanished");
             let meta = &mut self.blocks[b as usize];
             meta.ref_count += 1;
@@ -343,6 +345,7 @@ impl OracleKvManager {
         self.stats.saved_tokens += (hit_blocks * self.block_size) as u64;
 
         for i in hit_blocks..total_blocks {
+            // lint: allow-unwrap(feasibility was checked against availability() above)
             let b = self.take_block().expect("availability check lied");
             let key = keys.get(i).copied();
             {
@@ -373,6 +376,7 @@ impl OracleKvManager {
             return false;
         }
         for _ in 0..n {
+            // lint: allow-unwrap(feasibility was checked against availability() above)
             let b = self.take_block().expect("availability check lied");
             let meta = &mut self.blocks[b as usize];
             meta.ref_count = 1;

@@ -6,6 +6,16 @@
 //! (layers 2/1) through the PJRT C API. See DESIGN.md for the inventory and
 //! EXPERIMENTS.md for the paper-vs-measured record.
 
+// Curated crate-level lint posture (PR 8). Repo-specific invariants —
+// determinism, zero-alloc hot paths, unwrap hygiene — are enforced by the
+// in-tree analyzer (`analysis`, `echo lint`); these cover what rustc and
+// clippy can check natively. `unsafe_code` is denied except under the
+// `runtime` feature, whose PJRT handle needs one `unsafe impl Send`.
+#![deny(non_ascii_idents)]
+#![cfg_attr(not(feature = "runtime"), deny(unsafe_code))]
+#![warn(clippy::dbg_macro, clippy::todo, clippy::unimplemented)]
+
+pub mod analysis;
 pub mod cluster;
 pub mod config;
 pub mod core;

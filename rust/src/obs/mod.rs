@@ -118,6 +118,7 @@ impl TraceRing {
 
     /// Append an event, overwriting the oldest when full. Never allocates:
     /// the backing buffer was sized at construction.
+    // lint: hot-path
     pub fn push(&mut self, ev: TraceEvent) {
         if self.buf.len() < self.cap {
             self.buf.push(ev);

@@ -236,6 +236,7 @@ impl Scheduler {
     /// lists) is cleared and refilled in place, and the partition lists
     /// come from the scheduler's own scratch — an engine that passes the
     /// same `Outcome` every iteration allocates nothing in steady state.
+    // lint: hot-path
     pub fn schedule_into(
         &mut self,
         now: f64,
@@ -334,6 +335,7 @@ impl Scheduler {
                 let req = store.get_mut(id);
                 req.preempt();
                 kv.release(id, false);
+                // lint: allow-alloc(preemption path, not steady state; pool takes ownership)
                 let keys = req.content_key_path(self.block_size).to_vec();
                 pool.add(id, req.prompt.total_len, keys);
                 self.running_offline.retain(|&r| r != id);

@@ -220,6 +220,7 @@ impl OfflinePool {
             .buckets
             .iter()
             .position(|b| prompt_len <= b.max_len)
+            // lint: allow-unwrap(the last bucket's max_len is usize::MAX)
             .expect("catch-all bucket");
         &mut self.buckets[i]
     }

@@ -97,6 +97,7 @@ impl ClusterServe {
         let t = self.clock;
         // 1. dispatch online submissions due in (t, t_end]
         while matches!(self.pending_online.front(), Some((_, job)) if job.at <= t_end) {
+            // lint: allow-unwrap(the matches! loop condition saw Some(front))
             let (ticket, job) = self.pending_online.pop_front().expect("checked non-empty");
             if let Some((rep, rid)) = self.sim.dispatch_online(&job) {
                 self.sim.record_ticket(ticket, rep, rid);

@@ -16,7 +16,7 @@
 //!   * `shutdown()` drains remaining work, then joins and returns the
 //!     engine (metrics intact).
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -30,6 +30,7 @@ use crate::serve::{
     collect_store_events, Cursor, EventSink, MetricsView, Serve, SubmitSpec, Ticket, TicketId,
     TokenEvent,
 };
+use crate::utils::hash::FxHashMap;
 
 /// Bound on the shared (pump-consumed) event queue. Callers that only use
 /// per-ticket streaming receivers never pump, so an unbounded queue would
@@ -117,6 +118,7 @@ impl<B: ExecutionBackend + Send + 'static> ServerHandle<B> {
     /// Drain outstanding work and return the engine.
     pub fn shutdown(self) -> Engine<B> {
         let _ = self.tx.send(ServerRequest::Shutdown);
+        // lint: allow-unwrap(join fails only if the coordinator panicked; propagate it)
         self.join.join().expect("coordinator panicked")
     }
 }
@@ -198,7 +200,7 @@ fn view_of<B: ExecutionBackend>(e: &Engine<B>) -> MetricsView {
 /// the subscriber turned out to be dead (abandoned request).
 fn publish_event(
     ev: TokenEvent,
-    streams: &mut HashMap<RequestId, Sender<TokenEvent>>,
+    streams: &mut FxHashMap<RequestId, Sender<TokenEvent>>,
     ev_tx: &SyncSender<TokenEvent>,
     outstanding: &AtomicUsize,
 ) -> Option<RequestId> {
@@ -233,7 +235,7 @@ pub fn spawn<B: ExecutionBackend + Send + 'static>(mut engine: Engine<B>) -> Ser
     let outstanding_w = outstanding.clone();
     let join = std::thread::spawn(move || {
         let t0 = Instant::now();
-        let mut streams: HashMap<RequestId, Sender<TokenEvent>> = HashMap::new();
+        let mut streams: FxHashMap<RequestId, Sender<TokenEvent>> = FxHashMap::default();
         let mut cursors: BTreeMap<RequestId, Cursor> = BTreeMap::new();
         let mut shutting_down = false;
         loop {

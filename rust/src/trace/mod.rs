@@ -118,7 +118,7 @@ impl Trace {
         let mut t = 0.0;
         let in_burst_at = |t: f64, bursts: &[(f64, f64)]| {
             // bursts are sorted; binary search the interval
-            match bursts.binary_search_by(|&(s, _)| s.partial_cmp(&t).unwrap()) {
+            match bursts.binary_search_by(|&(s, _)| s.total_cmp(&t)) {
                 Ok(_) => true,
                 Err(i) => i > 0 && t < bursts[i - 1].1,
             }

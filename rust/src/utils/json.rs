@@ -277,7 +277,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+    fn expect_byte(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.pos += 1;
             Ok(())
@@ -309,7 +309,7 @@ impl<'a> Parser<'a> {
     }
 
     fn object(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -320,7 +320,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let v = self.value()?;
             m.insert(k, v);
@@ -337,7 +337,7 @@ impl<'a> Parser<'a> {
     }
 
     fn array(&mut self) -> Result<Json, JsonError> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut v = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -360,7 +360,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             match self.peek() {
@@ -434,6 +434,7 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
+        // lint: allow-unwrap(the scanned span holds only ASCII sign/digit/dot/exp bytes)
         let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
         text.parse::<f64>()
             .map(Json::Num)

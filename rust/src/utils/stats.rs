@@ -30,7 +30,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -68,7 +68,7 @@ impl Summary {
             return Summary::default();
         }
         let mut v: Vec<f64> = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         Summary {
             count: v.len(),
             mean: mean(&v),

@@ -1,0 +1,385 @@
+//! echo-lint self-tests (PR 8): one known-bad and one known-good fixture
+//! per rule family, suppression round-trips, lexer regressions, and the
+//! tier-1 `repo_is_lint_clean` gate that runs the full pass over this
+//! checkout — the same invariants CI enforces via `echo lint`.
+
+use echo::analysis::{lint_repo, run, LintInput, LintOutcome};
+use std::path::Path;
+
+/// A microbench fixture that satisfies the gate-coverage rule: one call,
+/// gated.
+const MB_OK: &str = r#"
+const GATED_PAIRS: [&str; 1] = ["kv"];
+fn main(r: &mut Runner) { r.bench("kv pair", "kv", 64); }
+"#;
+
+fn lint_named(rel: &str, text: &str) -> LintOutcome {
+    run(&LintInput {
+        src: vec![(rel.to_string(), text.to_string())],
+        tests: vec![],
+        microbench: Some(MB_OK.to_string()),
+        design: String::new(),
+    })
+}
+
+fn lint_src(text: &str) -> LintOutcome {
+    lint_named("m.rs", text)
+}
+
+fn rule_lines(o: &LintOutcome, rule: &str) -> Vec<usize> {
+    o.findings.iter().filter(|f| f.rule == rule).map(|f| f.line).collect()
+}
+
+// ------------------------------------------------------------- std-map
+
+#[test]
+fn std_map_flagged() {
+    let o = lint_src("use std::collections::HashMap;\nuse std::collections::HashSet;\n");
+    assert_eq!(rule_lines(&o, "std-map"), vec![1, 2]);
+}
+
+#[test]
+fn std_map_exempt_in_test_mod_and_hash_rs() {
+    let o = lint_src("#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n");
+    assert!(rule_lines(&o, "std-map").is_empty(), "{:?}", o.findings);
+    let o = lint_named("utils/hash.rs", "use std::collections::HashMap;\n");
+    assert!(rule_lines(&o, "std-map").is_empty());
+}
+
+#[test]
+fn std_map_suppressed_with_reason() {
+    let o = lint_src(
+        "// lint: allow-std-map(oracle keeps the std maps on purpose)\n\
+         use std::collections::HashMap;\n",
+    );
+    assert!(rule_lines(&o, "std-map").is_empty());
+    assert_eq!(o.suppressed.len(), 1);
+    assert_eq!(o.suppressed[0].reason, "oracle keeps the std maps on purpose");
+}
+
+// ---------------------------------------------------------- wall-clock
+
+#[test]
+fn wall_clock_flagged() {
+    let src = "fn f() { let t = std::time::Instant::now(); }\n";
+    let o = lint_src(src);
+    assert_eq!(rule_lines(&o, "wall-clock"), vec![1]);
+    // the same text is fine in a wall-clock-allowlisted layer
+    let o = lint_named("server/mod.rs", src);
+    assert!(rule_lines(&o, "wall-clock").is_empty());
+}
+
+#[test]
+fn env_reads_flagged() {
+    let o = lint_src("fn f() { let v = std::env::var(\"HOME\"); }\n");
+    assert_eq!(rule_lines(&o, "wall-clock"), vec![1]);
+}
+
+// --------------------------------------------------------------- alloc
+
+#[test]
+fn alloc_flagged_only_inside_hot_paths() {
+    // no hot-path annotation: allocation is fine
+    let o = lint_src("fn cold() { let v = vec![1, 2]; }\n");
+    assert!(rule_lines(&o, "alloc").is_empty());
+    // annotated fn: the same allocation is a finding, a sibling fn is not
+    let o = lint_src(
+        "// lint: hot-path\n\
+         fn hot() {\n    let v = vec![1, 2];\n}\n\
+         fn cold() { let v = vec![3]; }\n",
+    );
+    assert_eq!(rule_lines(&o, "alloc"), vec![3]);
+}
+
+#[test]
+fn alloc_suppressed_at_site() {
+    let o = lint_src(
+        "// lint: hot-path\n\
+         fn hot() {\n\
+             // lint: allow-alloc(preemption path, not steady state)\n\
+             let v = x.to_vec();\n\
+         }\n",
+    );
+    assert!(rule_lines(&o, "alloc").is_empty());
+    assert_eq!(o.suppressed.len(), 1);
+}
+
+// -------------------------------------------------------------- unwrap
+
+#[test]
+fn unwrap_and_expect_flagged() {
+    let o = lint_src("fn f() {\n    x.unwrap();\n    y.expect(\"boom\");\n}\n");
+    assert_eq!(rule_lines(&o, "unwrap"), vec![2, 3]);
+}
+
+#[test]
+fn unwrap_suppression_same_line_and_line_above() {
+    let o = lint_src(
+        "fn f() {\n\
+             // lint: allow-unwrap(checked non-empty above)\n\
+             x.unwrap();\n\
+             y.unwrap(); // lint: allow-unwrap(guarded by the match arm)\n\
+         }\n",
+    );
+    assert!(rule_lines(&o, "unwrap").is_empty(), "{:?}", o.findings);
+    assert_eq!(o.suppressed.len(), 2);
+}
+
+#[test]
+fn suppression_for_the_wrong_rule_does_not_mask() {
+    let o = lint_src(
+        "fn f() {\n\
+             // lint: allow-alloc(wrong rule for this site)\n\
+             x.unwrap();\n\
+         }\n",
+    );
+    assert_eq!(rule_lines(&o, "unwrap"), vec![3]);
+}
+
+#[test]
+fn unwrap_fine_in_test_mod() {
+    let o = lint_src("#[cfg(test)]\nmod tests {\n    fn t() { x.unwrap(); }\n}\n");
+    assert!(rule_lines(&o, "unwrap").is_empty());
+}
+
+// ----------------------------------------------------------- directive
+
+#[test]
+fn empty_reason_is_a_directive_finding_and_does_not_suppress() {
+    let o = lint_src(
+        "fn f() {\n\
+             // lint: allow-unwrap()\n\
+             x.unwrap();\n\
+         }\n",
+    );
+    assert_eq!(rule_lines(&o, "unwrap"), vec![3]);
+    assert_eq!(rule_lines(&o, "directive"), vec![2]);
+}
+
+#[test]
+fn unknown_rule_and_malformed_marker_are_findings() {
+    let o = lint_src("// lint: allow-no-such-rule(reason)\n// lint: gibberish\n");
+    assert_eq!(rule_lines(&o, "directive"), vec![1, 2]);
+}
+
+#[test]
+fn directive_findings_cannot_suppress_themselves() {
+    let o = lint_src("// lint: allow-directive(nice try)\n");
+    assert_eq!(rule_lines(&o, "directive"), vec![1]);
+}
+
+// ----------------------------------------------------- oracle-coverage
+
+#[test]
+fn oracle_types_must_be_referenced_from_tests() {
+    let src = "pub struct OracleKv { x: u32 }\n";
+    let o = run(&LintInput {
+        src: vec![("m.rs".into(), src.into())],
+        tests: vec![],
+        microbench: Some(MB_OK.into()),
+        design: String::new(),
+    });
+    assert_eq!(rule_lines(&o, "oracle-coverage"), vec![1]);
+    let o = run(&LintInput {
+        src: vec![("m.rs".into(), src.into())],
+        tests: vec![("t.rs".into(), "fn t() { let o = OracleKv::new(); }\n".into())],
+        microbench: Some(MB_OK.into()),
+        design: String::new(),
+    });
+    assert!(rule_lines(&o, "oracle-coverage").is_empty());
+}
+
+#[test]
+fn oracle_name_in_a_test_string_does_not_count() {
+    let o = run(&LintInput {
+        src: vec![("m.rs".into(), "pub struct OracleKv;\n".into())],
+        tests: vec![("t.rs".into(), "fn t() { let s = \"OracleKv\"; }\n".into())],
+        microbench: Some(MB_OK.into()),
+        design: String::new(),
+    });
+    assert_eq!(rule_lines(&o, "oracle-coverage"), vec![1]);
+}
+
+// ------------------------------------------------------- gate-coverage
+
+fn lint_bench(mb: &str) -> LintOutcome {
+    run(&LintInput {
+        src: vec![],
+        tests: vec![],
+        microbench: Some(mb.to_string()),
+        design: String::new(),
+    })
+}
+
+#[test]
+fn missing_manifests_is_a_finding() {
+    let o = lint_bench("fn main(r: &mut Runner) { r.bench(\"kv pair\", \"kv\", 64); }\n");
+    assert_eq!(rule_lines(&o, "gate-coverage"), vec![1]);
+    assert!(o.findings[0].message.contains("manifests missing"));
+}
+
+#[test]
+fn ungated_path_without_manifest_entry_is_a_finding() {
+    let o = lint_bench(
+        "const GATED_PAIRS: [&str; 1] = [\"kv\"];\n\
+         fn main(r: &mut Runner) {\n\
+             r.bench(\"kv pair\", \"kv\", 64);\n\
+             r.bench_fixed(\"stray\", \"stray-path\", 64);\n\
+         }\n",
+    );
+    assert_eq!(rule_lines(&o, "gate-coverage"), vec![4]);
+    assert!(o.findings[0].message.contains("stray-path"));
+}
+
+#[test]
+fn stale_manifest_entries_and_empty_reasons_are_findings() {
+    let o = lint_bench(
+        "const GATED_PAIRS: [&str; 2] = [\"kv\", \"gone\"];\n\
+         const UNGATED_PAIRS: [(&str, &str); 1] = [(\"kv2\", \"\")];\n\
+         fn main(r: &mut Runner) {\n\
+             r.bench(\"a\", \"kv\", 64);\n\
+             r.bench(\"b\", \"kv2\", 64);\n\
+         }\n",
+    );
+    let msgs: Vec<&str> = o.findings.iter().map(|f| f.message.as_str()).collect();
+    assert_eq!(o.findings.len(), 2, "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("\"gone\" matches no bench call")));
+    assert!(msgs.iter().any(|m| m.contains("\"kv2\" has an empty reason")));
+}
+
+#[test]
+fn ungated_entry_with_reason_passes() {
+    let o = lint_bench(
+        "const UNGATED_PAIRS: [(&str, &str); 1] =\n\
+             [(\"probe\", \"timing-only probe, no oracle to gate against\")];\n\
+         fn main(r: &mut Runner) { r.bench(\"p\", \"probe\", 64); }\n",
+    );
+    assert!(rule_lines(&o, "gate-coverage").is_empty(), "{:?}", o.findings);
+}
+
+// ----------------------------------------------------------- doc-drift
+
+#[test]
+fn wire_verbs_must_appear_in_design() {
+    let wire = "fn f() { let j = Json::obj().set(\"verb\", \"submit\"); }\n";
+    let o = run(&LintInput {
+        src: vec![("serve/wire.rs".into(), wire.into())],
+        tests: vec![],
+        microbench: Some(MB_OK.into()),
+        design: String::new(),
+    });
+    assert_eq!(rule_lines(&o, "doc-drift"), vec![1]);
+    let o = run(&LintInput {
+        src: vec![("serve/wire.rs".into(), wire.into())],
+        tests: vec![],
+        microbench: Some(MB_OK.into()),
+        design: "| `{\"verb\":\"submit\"}` | accepted |\n".into(),
+    });
+    assert!(rule_lines(&o, "doc-drift").is_empty());
+}
+
+#[test]
+fn metrics_keys_must_appear_in_design() {
+    let metrics = "fn to_json() { let j = Json::obj().set(\"ttft\", 1.0); }\n";
+    let o = run(&LintInput {
+        src: vec![("metrics/mod.rs".into(), metrics.into())],
+        tests: vec![],
+        microbench: Some(MB_OK.into()),
+        design: String::new(),
+    });
+    assert_eq!(rule_lines(&o, "doc-drift"), vec![1]);
+    let o = run(&LintInput {
+        src: vec![("metrics/mod.rs".into(), metrics.into())],
+        tests: vec![],
+        microbench: Some(MB_OK.into()),
+        design: "The block carries `ttft` percentiles.\n".into(),
+    });
+    assert!(rule_lines(&o, "doc-drift").is_empty());
+}
+
+// ------------------------------------------------------ lexer regressions
+
+#[test]
+fn escaped_newline_in_string_does_not_shift_lines() {
+    // the `\`-newline continuation spans two source lines; the unwrap on
+    // line 3 must be reported at line 3, not 2
+    let src = "fn f() {\n    let s = \"a\\\n       b\";\n    x.unwrap();\n}\n";
+    let o = lint_src(src);
+    assert_eq!(rule_lines(&o, "unwrap"), vec![4]);
+}
+
+#[test]
+fn directives_inside_strings_are_ignored() {
+    let src = "fn f() {\n    let s = \"// lint: allow-unwrap(nope)\";\n    x.unwrap();\n}\n";
+    let o = lint_src(src);
+    assert_eq!(rule_lines(&o, "unwrap"), vec![3]);
+}
+
+#[test]
+fn code_inside_comments_and_strings_is_not_flagged() {
+    let o = lint_src(
+        "// a comment mentioning x.unwrap() and HashMap\n\
+         fn f() { let s = \"x.unwrap() HashMap\"; }\n\
+         /* block with vec! and Instant::now */\n",
+    );
+    assert!(o.findings.is_empty(), "{:?}", o.findings);
+}
+
+#[test]
+fn raw_strings_and_lifetimes_lex_cleanly() {
+    let o = lint_src(
+        "fn f<'a>(x: &'a str) {\n\
+             let r = r#\"quoted \"body\" with // not a comment\"#;\n\
+             let c = '\\n';\n\
+             x.unwrap();\n\
+         }\n",
+    );
+    assert_eq!(rule_lines(&o, "unwrap"), vec![4]);
+}
+
+#[test]
+fn findings_sorted_by_file_then_line() {
+    let o = run(&LintInput {
+        src: vec![
+            ("b.rs".into(), "fn f() { x.unwrap(); }\n".into()),
+            ("a.rs".into(), "fn f() {\n x.unwrap();\n y.unwrap(); }\n".into()),
+        ],
+        tests: vec![],
+        microbench: Some(MB_OK.into()),
+        design: String::new(),
+    });
+    let order: Vec<(String, usize)> =
+        o.findings.iter().map(|f| (f.file.clone(), f.line)).collect();
+    assert_eq!(
+        order,
+        vec![("a.rs".into(), 2), ("a.rs".into(), 3), ("b.rs".into(), 1)]
+    );
+}
+
+// ------------------------------------------------------------- the repo
+
+/// Tier-1 gate: this checkout must be lint-clean, every suppression must
+/// carry a reason, and the report JSON must say so. This is the in-process
+/// twin of the CI `echo lint` invocation.
+#[test]
+fn repo_is_lint_clean() {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let root = manifest.parent().expect("rust/ has a parent");
+    let report = lint_repo(root).expect("lint pass over the checkout");
+    let mut rendered = String::new();
+    for f in &report.outcome.findings {
+        rendered.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    assert!(report.ok(), "unsuppressed lint findings:\n{rendered}");
+    assert!(report.outcome.files_scanned > 30, "src walk looks broken");
+    assert!(!report.outcome.suppressed.is_empty(), "repo has known allow sites");
+    for s in &report.outcome.suppressed {
+        assert!(!s.reason.trim().is_empty(), "reason-less suppression slipped through");
+    }
+    let j = report.to_json();
+    assert_eq!(j.at("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(
+        j.at("files_scanned").and_then(|v| v.as_usize()),
+        Some(report.outcome.files_scanned)
+    );
+}
