@@ -23,6 +23,11 @@
 //!     branch) vs a non-empty schedule whose events never fire; fixed
 //!     iteration counts, so `--gate-faults` sees real timings even under
 //!     `--quick`
+//!   * slo-tick pair — a fleet quantum (replica advance + coordinator
+//!     finish) with no SLO guard configured vs the guard armed but idle
+//!     (target 0.0: the controller folds fleet histograms and runs the
+//!     control law every quantum yet never actuates); fixed iteration
+//!     counts, so `--gate-slo` sees real timings even under `--quick`
 //!   * KV manager hot paths at 1k/16k/64k blocks — pre-PR `OracleKvManager`
 //!     (global BTreeSet free table, scan-per-call availability) vs. the
 //!     bucketed victim index: allocate+release cycle, `availability()`,
@@ -37,7 +42,7 @@
 //!
 //! Flags (after `--`):
 //!   `--bench-json <path>`        write the machine-readable report
-//!                                (default name: BENCH_PR8.json) and
+//!                                (default name: BENCH_PR9.json) and
 //!                                self-validate it by re-parsing
 //!   `--quick`                    tiny iteration counts (CI smoke: proves
 //!                                the harness runs headless; micro timings
@@ -60,6 +65,11 @@
 //!                                hook-free step, and the steady-state
 //!                                step loop stays allocation-free with
 //!                                injection disabled
+//!   `--gate-slo`                 fail unless the fleet quantum with the
+//!                                SLO guard armed-but-idle stays within the
+//!                                noise band of the guardless quantum, and
+//!                                the steady-state engine step stays
+//!                                allocation-free with the controller off
 //!   `--write-experiments <path>` rewrite the `<!-- perf:begin/end -->`
 //!                                block of EXPERIMENTS.md with the
 //!                                before/after table
@@ -79,6 +89,7 @@ use echo::estimator::{BatchShape, PrefillItem, TimeModel, TrialShape};
 use echo::kvcache::{Availability, EvictionPolicy, KvManager, OracleKvManager};
 use echo::scheduler::{OfflinePool, OracleScheduler, RadixIndex, Scheduler};
 use echo::serve::{EngineServe, NullSink, Serve, SubmitSpec};
+use echo::slo::SloGuardConfig;
 use echo::utils::json::Json;
 use echo::utils::rng::Rng;
 use echo::workload::{synthesize, DatasetSpec};
@@ -298,6 +309,9 @@ impl Harness {
         if let Some(s) = self.speedup("faults-step", 8) {
             speedups = speedups.set("faults-step@8", s);
         }
+        if let Some(s) = self.speedup("slo-tick", 4) {
+            speedups = speedups.set("slo-tick@4", s);
+        }
         // Gate-coverage manifest (echo-lint G1): record which paths CI
         // asserts on and why the rest are tracked-only, so the report is
         // self-describing.
@@ -307,7 +321,7 @@ impl Harness {
             .map(|&(p, why)| Json::obj().set("path", p).set("reason", why))
             .collect();
         Json::obj()
-            .set("bench", "BENCH_PR8")
+            .set("bench", "BENCH_PR9")
             .set(
                 "note",
                 "baseline = pre-PR code paths (clone-trial scheduler, full \
@@ -554,7 +568,7 @@ const KV_GATE_PATHS: [&str; 4] = [
 
 /// Paths asserted by a `--gate-*` flag (`--gate-kv` covers the four KV
 /// pairs across `KV_SIZES`; fleet/obs/faults gate their single path).
-const GATED_PAIRS: [&str; 7] = [
+const GATED_PAIRS: [&str; 8] = [
     "kv-alloc-release",
     "kv-availability",
     "kv-requeue-storm",
@@ -562,6 +576,7 @@ const GATED_PAIRS: [&str; 7] = [
     "fleet-step",
     "obs-step",
     "faults-step",
+    "slo-tick",
 ];
 
 /// Measured-but-ungated paths, each with the reason no CI assertion holds
@@ -740,7 +755,7 @@ fn bench_kv_pairs(h: &mut Harness, size: usize, variant: &str) {
     // churn on middle-aged cached keys re-inserts at mid-bucket positions,
     // where the ordered intrusive list pays O(distance-to-nearer-end) per
     // link vs the oracle's O(log n) BTreeSet — the one pattern the bucket
-    // design trades away. Kept visible in BENCH_PR8.json so the perf
+    // design trades away. Kept visible in BENCH_PR9.json so the perf
     // trajectory tracks it; a skip-hint can reclaim it if real workloads
     // ever look like this.
     let mid = warm.len() / 2;
@@ -1166,6 +1181,55 @@ fn bench_faults_step(h: &mut Harness, variant: &str) {
     );
 }
 
+// ---- slo guard: controller overhead on the fleet quantum -------------------
+
+/// The PR 9 pair: one fleet quantum (replica advance + single-threaded
+/// coordinator finish) with no guard configured (`baseline` — the
+/// `Option<SloGuard>` tick is one skipped branch and every engine-side
+/// actuator an untaken compare against the `usize::MAX` sentinel) vs the
+/// guard armed but idle (`incremental` — target 0.0 with a `usize::MAX`
+/// ceiling: no window can ever miss and the AIMD cap stays at the disabled
+/// sentinel, so the controller folds the fleet's latency histograms and
+/// runs the full control law every quantum without ever actuating). The
+/// armed-idle fleet is bit-exact with the disarmed one by construction
+/// (see `cluster::sim` tests), so both sides do identical scheduling work
+/// and the ratio isolates pure controller cost. `--gate-slo` holds the
+/// armed side to the shared 5% noise band.
+fn bench_slo_tick(h: &mut Harness, variant: &str) {
+    let armed = variant == "incremental";
+    let mode = if armed { "guard armed-idle" } else { "guard off" };
+    let mut base = SystemConfig::a100_llama8b();
+    base.seed = 11;
+    base.cache.capacity_tokens = 30_000;
+    base.scheduler.max_batch = 16;
+    let mut cc = ClusterConfig::new(base, 4);
+    if armed {
+        cc.guard = Some(SloGuardConfig {
+            target: 0.0,
+            cap_max: usize::MAX,
+            ..SloGuardConfig::default()
+        });
+    }
+    let mut sim = ClusterSim::new(cc);
+    sim.submit_offline_backlog(offline_jobs(&DatasetSpec::loogle_qa_short(), 2000, 11));
+    sim.begin();
+    let dt = 0.25;
+    let mut t = 0.0;
+    h.bench_fixed(
+        &format!("fleet quantum [{mode}] (4 replicas, offline flood)"),
+        "slo-tick",
+        variant,
+        4,
+        400,
+        || {
+            let t_end = t + dt;
+            sim.advance_replicas(t, t_end).unwrap();
+            sim.finish_quantum(t_end);
+            t = t_end;
+        },
+    );
+}
+
 #[cfg(not(feature = "runtime"))]
 fn bench_pjrt() {
     println!("pjrt step: skipped (built without the `runtime` feature)");
@@ -1315,10 +1379,11 @@ fn main() {
     let gate_kv = args.iter().any(|a| a == "--gate-kv");
     let gate_obs = args.iter().any(|a| a == "--gate-obs");
     let gate_faults = args.iter().any(|a| a == "--gate-faults");
+    let gate_slo = args.iter().any(|a| a == "--gate-slo");
     let json_path = args
         .iter()
         .position(|a| a == "--bench-json")
-        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR8.json".into()));
+        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR9.json".into()));
     let experiments_path = args
         .iter()
         .position(|a| a == "--write-experiments")
@@ -1353,6 +1418,9 @@ fn main() {
     for variant in ["baseline", "incremental"] {
         bench_faults_step(&mut h, variant);
     }
+    for variant in ["baseline", "incremental"] {
+        bench_slo_tick(&mut h, variant);
+    }
     bench_kv_ops(&mut h);
     bench_radix(&mut h);
     bench_estimator(&mut h);
@@ -1385,6 +1453,9 @@ fn main() {
     }
     if let Some(s) = h.speedup("faults-step", 8) {
         println!("speedup faults-step@8 (hook-free vs armed): {s:.2}x");
+    }
+    if let Some(s) = h.speedup("slo-tick", 4) {
+        println!("speedup slo-tick@4 (guardless vs armed-idle): {s:.2}x");
     }
     if gate_fleet {
         let s = fleet_speedup(&h, 16, 4).expect("fleet-step@16x4 must be measured");
@@ -1476,13 +1547,37 @@ fn main() {
         }
     }
 
+    if gate_slo {
+        let s = h
+            .speedup("slo-tick", 4)
+            .expect("slo-tick pair must be measured");
+        println!("slo gate: armed-idle vs guardless fleet quantum = {s:.2}x");
+        // Same 5% noise band as the other gates: an idle controller tick is
+        // one histogram fold into pre-sized scratch plus a few compares per
+        // quantum — orders of magnitude below the replica advance it rides
+        // on — so a below-band reading means the guard started doing real
+        // work (or allocating) on the coordinator hot path.
+        assert!(
+            s >= 0.95,
+            "an armed-but-idle SLO guard must not slow the fleet quantum \
+             beyond the noise band (measured {s:.2}x, gate 0.95x)"
+        );
+        if cfg!(not(debug_assertions)) {
+            assert_eq!(
+                alloc.steady, 0,
+                "slo gate: with the controller off the steady-state engine \
+                 step must stay allocation-free"
+            );
+        }
+    }
+
     if let Some(path) = json_path {
         let j = h.to_json(quick, &alloc);
         let text = j.pretty();
         std::fs::write(&path, &text).expect("write bench json");
         // Self-validate: the emitted report must round-trip through the
         // in-repo JSON parser (the CI smoke step relies on this).
-        let parsed = Json::parse(&text).expect("BENCH_PR8.json must parse");
+        let parsed = Json::parse(&text).expect("BENCH_PR9.json must parse");
         let n = parsed
             .get("entries")
             .and_then(|e| e.as_arr())
@@ -1529,6 +1624,13 @@ fn main() {
                 .and_then(|v| v.as_f64())
                 .is_some(),
             "faults gate speedup faults-step@8 missing from report"
+        );
+        assert!(
+            parsed
+                .at("speedups.slo-tick@4")
+                .and_then(|v| v.as_f64())
+                .is_some(),
+            "slo gate speedup slo-tick@4 missing from report"
         );
         assert!(
             parsed

@@ -410,6 +410,22 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     .flag("autoscale", "scale the fleet with the tide (deployer-estimator driven)")
     .opt("min-replicas", "1", "autoscale floor")
     .opt("max-replicas", "0", "autoscale ceiling (0 = 2x --replicas)")
+    .flag(
+        "slo-guard",
+        "arm the measured-latency SLO guard (AIMD offline caps, admission \
+         backpressure, brownout ladder)",
+    )
+    .opt(
+        "guard-target",
+        "0.9",
+        "SLO-guard attainment floor that triggers escalation (with --slo-guard)",
+    )
+    .opt(
+        "offline-cap",
+        "0",
+        "static offline tokens-per-quantum reservation per replica (0 = off; \
+         composes with --slo-guard as a ceiling)",
+    )
     .opt(
         "chaos-seed",
         "0",
@@ -438,6 +454,16 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let mut cc = ClusterConfig::new(base, replicas);
     cc.sync_dt = args.f64("sync-dt").map_err(anyhow::Error::msg)?.max(1e-3);
     cc.threads = args.usize("threads").map_err(anyhow::Error::msg)?.max(1);
+    let static_cap = args.usize("offline-cap").map_err(anyhow::Error::msg)?;
+    if static_cap != 0 {
+        cc.offline_cap = static_cap;
+    }
+    if args.flag("slo-guard") {
+        let mut g = crate::slo::SloGuardConfig::default();
+        g.target = args.f64("guard-target").map_err(anyhow::Error::msg)?.clamp(0.0, 1.0);
+        g.recover = g.recover.max(g.target);
+        cc.guard = Some(g);
+    }
     let chaos_seed = args.u64("chaos-seed").map_err(anyhow::Error::msg)?;
     if chaos_seed != 0 {
         let intensity = args.f64("chaos-intensity").map_err(anyhow::Error::msg)?;
@@ -568,6 +594,26 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
             report.faults.shed_offline,
             report.faults.shed_online,
             report.faults.stalled_cancels
+        );
+    }
+    if args.flag("slo-guard") {
+        println!(
+            "slo-guard: {} transition(s) ({} up / {} down), {} paused \
+             quantum(s), {} emergency preemption(s); backpressured {} retry / \
+             {} shed; final attainment {:.3}, offline cap {}",
+            report.guard.transitions,
+            report.guard.escalations,
+            report.guard.deescalations,
+            report.guard.pause_ticks,
+            report.guard.emergency_preempted,
+            report.guard.retry_submits,
+            report.guard.shed_submits,
+            report.guard.last_attainment,
+            if report.guard.cap == usize::MAX {
+                "unbounded".to_string()
+            } else {
+                report.guard.cap.to_string()
+            }
         );
     }
     if !args.str("trace-out").is_empty() {
@@ -713,7 +759,11 @@ fn trace_gen(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
 
 fn figures_cmd(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let cli = Cli::new("regenerate a paper table/figure")
-        .opt("which", "all", "table1|fig2|fig6|fig7|fig8|fig9|fig10|fig11|ablations|cluster|all")
+        .opt(
+            "which",
+            "all",
+            "table1|fig2|fig6|fig7|fig8|fig9|fig10|fig11|ablations|cluster|slo_guard|all",
+        )
         .flag("quick", "small horizons (fast, CI-scale)")
         .opt("out", "", "append JSON data to this path");
     let args = parse_or_usage(&cli, program, argv)?;
@@ -777,6 +827,11 @@ fn figures_cmd(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         let (t, j) = figures::fig_cluster(&opts)?;
         println!("{t}");
         out_json.push(("cluster", j));
+    }
+    if want("slo_guard") {
+        let (t, j) = figures::fig_slo_guard(&opts)?;
+        println!("{t}");
+        out_json.push(("slo_guard", j));
     }
     if !args.str("out").is_empty() {
         let mut obj = Json::obj();

@@ -26,6 +26,12 @@
 //!     instead of KV tokens). Scale-down drains: pending offline work
 //!     returns to the backlog, running requests finish, then the replica
 //!     retires with its metrics preserved.
+//!   * When armed (`ClusterConfig::guard`), the [`crate::slo::SloGuard`]
+//!     feedback controller ticks once per sync quantum in the coordinator
+//!     phase: it folds fleet-wide online-latency histograms into sliding
+//!     windows and drives the offline actuators (AIMD per-replica token
+//!     caps, admission pause, brownout preemption) from *measured*
+//!     attainment instead of a static reservation.
 //!
 //! Reporting: per-replica SLO attainment and cache hit rates, plus
 //! cluster-level rollups (`Metrics::aggregate`), offline throughput over

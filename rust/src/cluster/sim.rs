@@ -18,8 +18,9 @@ use crate::core::{PromptSpec, Request, RequestId, TaskClass};
 use crate::estimator::{PrefillItem, TimeModel};
 use crate::faults::{FaultPlan, FaultStats, ShedPolicy};
 use crate::metrics::Metrics;
-use crate::obs::TraceRing;
+use crate::obs::{TraceEvent, TraceRing};
 use crate::serve::TicketId;
+use crate::slo::{GuardDecision, GuardStats, SloGuard, SloGuardConfig};
 use crate::trace::Trace;
 use crate::utils::hash::FxHashMap;
 use crate::utils::json::Json;
@@ -153,6 +154,16 @@ pub struct ClusterConfig {
     /// Overload shedding + stall-detection policy (defaults: shedding off,
     /// stall detection on).
     pub shed: ShedPolicy,
+    /// Static per-replica offline token reservation (the classic
+    /// static-partitioning baseline the SLO guard is compared against):
+    /// every replica's scheduler caps offline tokens per quantum at this
+    /// value. `usize::MAX` (default) disables the reservation. When the
+    /// guard is also armed, its dynamic cap is clamped by this ceiling.
+    pub offline_cap: usize,
+    /// Measured-latency SLO-guard feedback controller (PR 9). `None`
+    /// (default) disarms the guard entirely — no windows, no actuators —
+    /// and the quantum loop stays byte-identical to a guard-free build.
+    pub guard: Option<SloGuardConfig>,
 }
 
 impl ClusterConfig {
@@ -175,6 +186,8 @@ impl ClusterConfig {
             trace_events: 0,
             faults: FaultPlan::none(),
             shed: ShedPolicy::default(),
+            offline_cap: usize::MAX,
+            guard: None,
         }
     }
 }
@@ -221,6 +234,8 @@ pub struct ClusterReport {
     pub backlog_remaining: usize,
     /// Crash/recovery/shedding accounting (all zero on fault-free runs).
     pub faults: FaultStats,
+    /// SLO-guard controller accounting (all zero while disarmed).
+    pub guard: GuardStats,
 }
 
 impl ClusterReport {
@@ -264,6 +279,7 @@ impl ClusterReport {
             .set("mean_replicas", self.mean_replicas)
             .set("backlog_remaining", self.backlog_remaining)
             .set("faults", self.faults.to_json())
+            .set("guard", self.guard.to_json())
             .set("timeline", Json::Arr(timeline))
     }
 }
@@ -301,6 +317,13 @@ pub struct ClusterSim {
     pending_failures: Vec<ReplicaFailure>,
     /// Crash/recovery/shedding accounting (see [`FaultStats`]).
     pub fault_stats: FaultStats,
+    /// Armed SLO-guard controller (`None` while disarmed). Ticked once per
+    /// sync quantum in the single-threaded coordinator phase, so every
+    /// decision is bit-exact for any `cfg.threads`.
+    guard: Option<SloGuard>,
+    /// The guard's most recent decision (the inert disarmed default until
+    /// the first armed tick).
+    last_guard: GuardDecision,
 }
 
 /// One detected replica failure awaiting quantum-boundary recovery.
@@ -379,6 +402,9 @@ impl ClusterSim {
         }
         let service_model = TimeModel::new(cfg.base.time_model);
         let router = Router::new(service_model, cfg.base.cache.block_size);
+        let guard = cfg
+            .guard
+            .map(|g| SloGuard::new(g, cfg.base.slo, cfg.sync_dt));
         let mut sim = ClusterSim {
             replicas: Vec::new(),
             router,
@@ -394,6 +420,8 @@ impl ClusterSim {
             retired_traces: Vec::new(),
             pending_failures: Vec::new(),
             fault_stats: FaultStats::default(),
+            guard,
+            last_guard: GuardDecision::default(),
             cfg,
         };
         for _ in 0..sim.cfg.replicas {
@@ -461,6 +489,14 @@ impl ClusterSim {
         // execute errors); `install_faults` drops empty slices, so the
         // fault-free path stays a single None branch in the step loop.
         rep.engine.install_faults(self.cfg.faults.for_replica(id));
+        // Join under the guard's current decision (a mid-run spawn must not
+        // spend its first quantum admitting offline work the rest of the
+        // fleet is draining). Disarmed, `replica_cap` passes `usize::MAX`
+        // through and only the static reservation (if any) applies.
+        rep.engine
+            .set_offline_cap(self.last_guard.replica_cap(0).min(self.cfg.offline_cap));
+        rep.engine
+            .set_offline_admit_paused(self.last_guard.drain_running);
         self.router.sync(rep.digest(self.cfg.summary_cap));
         self.replicas.push(rep);
     }
@@ -946,14 +982,83 @@ impl ClusterSim {
         }
     }
 
+    /// Tick the SLO-guard feedback controller (single-threaded coordinator
+    /// phase — bit-exact for any `cfg.threads`): fold the fleet-wide
+    /// online-latency histograms (retired corpses first, then live
+    /// engines) into the sliding windows, then drive every actuator from
+    /// the resulting decision — per-replica AIMD offline caps (halved for
+    /// replicas with queued online work), admission pause, and the
+    /// Emergency preempt-all-offline sweep. Disarmed (`cfg.guard = None`)
+    /// this is a single `None` branch and the quantum loop is byte-equal
+    /// to a guard-free build.
+    // lint: hot-path
+    fn guard_tick(&mut self, now: f64) {
+        let Some(guard) = self.guard.as_mut() else {
+            return;
+        };
+        let decision = guard.tick(
+            now,
+            self.retired
+                .iter()
+                .map(|r| &r.metrics)
+                .chain(self.replicas.iter().map(|r| &r.engine.metrics)),
+        );
+        let static_cap = self.cfg.offline_cap;
+        let prev_level = self.last_guard.level;
+        for rep in &mut self.replicas {
+            let queued = rep.engine.backlog_online();
+            rep.engine
+                .set_offline_cap(decision.replica_cap(queued).min(static_cap));
+            rep.engine.set_offline_admit_paused(decision.drain_running);
+            if decision.emergency {
+                let preempted = rep.engine.preempt_all_offline();
+                guard.stats.emergency_preempted += preempted as u64;
+            }
+            if decision.changed {
+                // Stamp the ladder transition into every live replica's
+                // trace ring so Perfetto shows brownout spans fleet-wide.
+                rep.engine.trace_push(TraceEvent::Brownout {
+                    t: now,
+                    from: prev_level.as_u8(),
+                    to: decision.level.as_u8(),
+                });
+            }
+        }
+        self.last_guard = decision;
+    }
+
+    /// The guard's most recent decision — the inert disarmed default
+    /// (`Normal`, uncapped, nothing paused) until the first armed tick.
+    pub fn guard_decision(&self) -> GuardDecision {
+        self.last_guard
+    }
+
+    /// Guard controller counters (all zero while disarmed).
+    pub fn guard_stats(&self) -> GuardStats {
+        self.guard
+            .as_ref()
+            .map(|g| g.stats.clone())
+            .unwrap_or_default()
+    }
+
+    /// Mutable guard access for the serving front door (admission-verdict
+    /// accounting). `None` while disarmed.
+    pub(crate) fn guard_mut(&mut self) -> Option<&mut SloGuard> {
+        self.guard.as_mut()
+    }
+
     /// Post-quantum bookkeeping: recover crashed replicas, republish
-    /// digests, retire drained fleet members, rebalance offline work,
+    /// digests, tick the SLO guard, retire drained fleet members,
+    /// rebalance offline work (unless the guard paused offline admission),
     /// evaluate scaling, record the timeline point.
     pub fn finish_quantum(&mut self, t_end: f64) {
         self.recover_failures(t_end);
         self.sync_router();
+        self.guard_tick(t_end);
         self.retire_drained(t_end);
-        self.work_steal();
+        if !self.last_guard.pause_admission {
+            self.work_steal();
+        }
         if let Some(policy) = self.cfg.scale.clone() {
             if t_end >= self.next_eval {
                 self.evaluate_scaling(&policy, t_end);
@@ -1059,6 +1164,7 @@ impl ClusterSim {
             mean_replicas: mean,
             backlog_remaining: self.backlog.len(),
             faults: self.fault_stats,
+            guard: self.guard_stats(),
             aggregate,
             replicas: reps,
         }
@@ -1460,6 +1566,100 @@ mod tests {
             report.peak_replicas
         );
         assert_eq!(report.router.dispatched_online, online.len());
+    }
+
+    #[test]
+    fn static_reservation_caps_offline_throughput() {
+        let run = |cap: usize| {
+            let mut cfg = small_cfg();
+            cfg.offline_cap = cap;
+            let mut sim = ClusterSim::new(cfg);
+            sim.submit_offline_backlog(offline_jobs(
+                &DatasetSpec::loogle_qa_short().scaled(0.05),
+                24,
+                7,
+            ));
+            // Short horizon: neither run drains the backlog, so generated
+            // tokens measure throughput rather than total work.
+            sim.run(&[], 8.0).unwrap().aggregate.offline_tokens_out
+        };
+        let uncapped = run(usize::MAX);
+        let capped = run(32);
+        assert!(capped > 0, "a 32-token reservation still makes progress");
+        assert!(
+            capped < uncapped,
+            "static reservation must throttle offline: {capped} vs {uncapped}"
+        );
+    }
+
+    #[test]
+    fn armed_guard_brownouts_under_impossible_slo() {
+        use crate::slo::BrownoutLevel;
+        // An unattainable SLO forces every online completion to miss: the
+        // ladder must climb to Emergency, starve offline, and only ratchet
+        // back once the online burst leaves the measurement window.
+        let mut cfg = small_cfg();
+        cfg.base.slo = crate::core::Slo::new(1e-6, 1e-9);
+        cfg.guard = Some(SloGuardConfig::default());
+        let mut sim = ClusterSim::new(cfg);
+        sim.submit_offline_backlog(offline_jobs(
+            &DatasetSpec::loogle_qa_short().scaled(0.05),
+            24,
+            7,
+        ));
+        let online = tiny_online(30, 1.0);
+        let report = sim.run(&online, 48.0).unwrap();
+        assert_eq!(report.aggregate.online_completed, 30);
+        assert!(
+            report.guard.escalations >= 4,
+            "misses must climb the full ladder: {:?}",
+            report.guard
+        );
+        assert!(report.guard.pause_ticks > 0);
+        assert!(
+            report.aggregate.offline_completed < 24,
+            "a browned-out fleet must starve offline work"
+        );
+        assert!(
+            report.guard.deescalations >= 1,
+            "an empty window after the burst must start recovery: {:?}",
+            report.guard
+        );
+        assert!(sim.guard_decision().level > BrownoutLevel::Normal);
+        for rep in &sim.replicas {
+            rep.engine.kv.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn idle_guard_is_byte_identical_to_disarmed() {
+        // A guard that can never actuate (target 0 ⇒ no miss can escalate,
+        // unbounded cap ⇒ the AIMD cap stays at the `usize::MAX` sentinel)
+        // must observe without perturbing: same aggregate as disarmed.
+        let run = |guard: Option<SloGuardConfig>| {
+            let mut cfg = small_cfg();
+            cfg.guard = guard;
+            let mut sim = ClusterSim::new(cfg);
+            sim.submit_offline_backlog(offline_jobs(
+                &DatasetSpec::toolbench().scaled(0.1),
+                30,
+                11,
+            ));
+            let online = tiny_online(40, 0.7);
+            let r = sim.run(&online, 90.0).unwrap();
+            (format!("{:?}", r.aggregate), r.guard)
+        };
+        let (disarmed, zero_stats) = run(None);
+        assert_eq!(zero_stats, GuardStats::default());
+        let idle = SloGuardConfig {
+            target: 0.0,
+            cap_max: usize::MAX,
+            ..SloGuardConfig::default()
+        };
+        let (armed, stats) = run(Some(idle));
+        assert_eq!(disarmed, armed, "an idle guard must not perturb the run");
+        assert_eq!(stats.transitions, 0);
+        assert_eq!(stats.cap, usize::MAX);
     }
 
     #[test]

@@ -200,8 +200,43 @@ impl<B: ExecutionBackend> Engine<B> {
         self.faults.is_some()
     }
 
+    /// SLO-guard actuator (PR 9): offline tokens-per-batch cap for this
+    /// replica's scheduler. `usize::MAX` disarms it — the guard-off path
+    /// stays a single never-taken comparison inside `schedule_into`.
+    pub fn set_offline_cap(&mut self, cap: usize) {
+        self.sched.set_offline_cap(cap);
+    }
+
+    /// SLO-guard actuator (PR 9): pause/resume new offline admissions
+    /// (resident offline work keeps draining under the cap).
+    pub fn set_offline_admit_paused(&mut self, paused: bool) {
+        self.sched.set_offline_admit_paused(paused);
+    }
+
+    /// SLO-guard Emergency actuator (PR 9): preempt every running offline
+    /// request on this replica (recompute mode — victims return to the
+    /// pool). Coordinator-phase only; returns the number preempted.
+    pub fn preempt_all_offline(&mut self) -> usize {
+        let victims = self
+            .sched
+            .preempt_all_offline(&mut self.store, &mut self.pool, &mut self.kv);
+        self.metrics.preemptions += victims.len();
+        for &victim in &victims {
+            self.backend.on_release(victim);
+            if self.trace.is_some() {
+                let cost = self.store.get(victim).seq_len() as u32;
+                self.trace_push(TraceEvent::Preempt {
+                    t: self.clock,
+                    req: victim,
+                    cost_tokens: cost,
+                });
+            }
+        }
+        victims.len()
+    }
+
     #[inline]
-    fn trace_push(&mut self, ev: TraceEvent) {
+    pub(crate) fn trace_push(&mut self, ev: TraceEvent) {
         if let Some(tr) = self.trace.as_mut() {
             tr.push(ev);
         }

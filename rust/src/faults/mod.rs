@@ -275,6 +275,10 @@ pub enum CancelReason {
     Stalled,
     /// Shed at admission under overload (offline work sheds first).
     ShedOverload,
+    /// Rejected at the front door by the SLO-guard brownout ladder
+    /// (PR 9): the fleet is protecting online attainment, the client
+    /// should back off for the `retry_after` hint carried on the wire.
+    Shed,
     /// Online work shed because its TTFT deadline had already expired
     /// while still queued under overload.
     DeadlineExpired,
@@ -289,6 +293,7 @@ impl CancelReason {
             CancelReason::Unschedulable => "unschedulable",
             CancelReason::Stalled => "stalled",
             CancelReason::ShedOverload => "shed_overload",
+            CancelReason::Shed => "shed",
             CancelReason::DeadlineExpired => "deadline_expired",
             CancelReason::ReplicaFailed => "replica_failed",
         }
@@ -300,6 +305,7 @@ impl CancelReason {
             "unschedulable" => CancelReason::Unschedulable,
             "stalled" => CancelReason::Stalled,
             "shed_overload" => CancelReason::ShedOverload,
+            "shed" => CancelReason::Shed,
             "deadline_expired" => CancelReason::DeadlineExpired,
             "replica_failed" => CancelReason::ReplicaFailed,
             _ => return None,
@@ -540,6 +546,7 @@ mod tests {
             CancelReason::Unschedulable,
             CancelReason::Stalled,
             CancelReason::ShedOverload,
+            CancelReason::Shed,
             CancelReason::DeadlineExpired,
             CancelReason::ReplicaFailed,
         ] {

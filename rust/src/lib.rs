@@ -31,6 +31,7 @@ pub mod runtime;
 pub mod scheduler;
 pub mod serve;
 pub mod server;
+pub mod slo;
 pub mod sim;
 pub mod trace;
 pub mod utils;

@@ -151,6 +151,182 @@ pub fn windowed_ratio(lookups: &TimeSeries, hits: &TimeSeries) -> TimeSeries {
     out
 }
 
+/// Sliding-window view over a *cumulative* [`LogHistogram`] (PR 9).
+///
+/// The PR 6 histograms are cumulative by design (cheap associative merge);
+/// the SLO-guard feedback loop needs the last `W` seconds, not lifetime
+/// history. `WindowedHist` keeps a ring of cumulative bucket-count
+/// snapshots, one per `push` (the controller pushes once per sync
+/// quantum), and answers window queries as the element-wise difference
+/// between the newest snapshot and the newest snapshot at least `W`
+/// seconds older. All slots are pre-sized at construction, so `push` and
+/// every query are allocation-free — the controller tick can run inside
+/// the coordinator phase without breaking the steady-state alloc
+/// discipline.
+///
+/// Startup semantics: until a snapshot older than the window exists, the
+/// baseline is the all-zero snapshot (the window covers "everything so
+/// far"). Once the ring has wrapped, the oldest retained snapshot is used
+/// as a best-effort baseline (it is at most one quantum older than `W`).
+#[derive(Clone, Debug)]
+pub struct WindowedHist {
+    window: f64,
+    /// Ring of cumulative snapshots, each `LogHistogram::BUCKETS` wide.
+    slots: Vec<WindowSlot>,
+    /// Next slot index to (over)write.
+    head: usize,
+    /// Number of valid slots (saturates at `slots.len()`).
+    len: usize,
+}
+
+#[derive(Clone, Debug)]
+struct WindowSlot {
+    at: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl WindowedHist {
+    /// `window` seconds of history, snapshotted every ~`dt` seconds. The
+    /// ring holds `ceil(window/dt) + 2` slots so a baseline at least
+    /// `window` old is always retained once warm.
+    pub fn new(window: f64, dt: f64) -> Self {
+        let cap = ((window / dt.max(1e-9)).ceil() as usize).saturating_add(2);
+        let slots = (0..cap)
+            .map(|_| WindowSlot {
+                at: f64::NEG_INFINITY,
+                counts: vec![0u64; LogHistogram::BUCKETS],
+                total: 0,
+            })
+            .collect();
+        WindowedHist {
+            window,
+            slots,
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn window(&self) -> f64 {
+        self.window
+    }
+
+    /// Record a cumulative snapshot at virtual time `at` (monotone
+    /// non-decreasing across calls). `counts` is the histogram's raw
+    /// bucket array — an empty slice (lazily unallocated histogram) is
+    /// treated as all-zeros. Allocation-free.
+    // lint: hot-path
+    pub fn push(&mut self, at: f64, counts: &[u64]) {
+        let slot = &mut self.slots[self.head];
+        slot.at = at;
+        let mut total = 0u64;
+        for (i, dst) in slot.counts.iter_mut().enumerate() {
+            let c = counts.get(i).copied().unwrap_or(0);
+            *dst = c;
+            total += c;
+        }
+        slot.total = total;
+        self.head = (self.head + 1) % self.slots.len();
+        self.len = (self.len + 1).min(self.slots.len());
+    }
+
+    /// Index of the newest slot (the last `push`), if any.
+    fn newest(&self) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        Some((self.head + self.slots.len() - 1) % self.slots.len())
+    }
+
+    /// Baseline slot for the current window: the newest retained snapshot
+    /// at least `window` older than the newest one. `None` means the
+    /// all-zero (startup) baseline.
+    fn baseline(&self) -> Option<usize> {
+        let newest = self.newest()?;
+        let cutoff = self.slots[newest].at - self.window;
+        let mut best: Option<usize> = None;
+        for k in 1..self.len {
+            let i = (self.head + self.slots.len() - 1 - k) % self.slots.len();
+            if self.slots[i].at <= cutoff {
+                best = match best {
+                    Some(b) if self.slots[b].at >= self.slots[i].at => Some(b),
+                    _ => Some(i),
+                };
+            }
+        }
+        if best.is_none() && self.len == self.slots.len() {
+            // Ring wrapped: everything retained is younger than the
+            // window cutoff should be impossible (capacity covers the
+            // window), but fall back to the oldest slot for safety.
+            return Some((self.head + self.slots.len() - self.len) % self.slots.len());
+        }
+        best
+    }
+
+    /// Samples recorded inside the window.
+    pub fn count(&self) -> u64 {
+        let Some(newest) = self.newest() else {
+            return 0;
+        };
+        let base_total = self.baseline().map_or(0, |b| self.slots[b].total);
+        self.slots[newest].total - base_total
+    }
+
+    /// Fraction of window samples at or below `threshold` (bucket
+    /// resolution: the boundary bucket counts as attained, so the answer
+    /// is within [`LogHistogram::REL_ERROR`] of exact). Empty windows are
+    /// vacuously attained (1.0) — this is what lets a browned-out fleet
+    /// with no fresh online traffic recover to Normal.
+    pub fn attainment(&self, threshold: f64) -> f64 {
+        let Some(newest) = self.newest() else {
+            return 1.0;
+        };
+        let base = self.baseline();
+        let cut = LogHistogram::bucket_index(threshold);
+        let mut ok = 0u64;
+        let mut n = 0u64;
+        for i in 0..LogHistogram::BUCKETS {
+            let b = base.map_or(0, |bi| self.slots[bi].counts[i]);
+            let d = self.slots[newest].counts[i] - b;
+            n += d;
+            if i <= cut {
+                ok += d;
+            }
+        }
+        if n == 0 {
+            1.0
+        } else {
+            ok as f64 / n as f64
+        }
+    }
+
+    /// Percentile estimate over the window delta (p in [0, 100]); 0.0 for
+    /// an empty window. Bucket-midpoint resolution, like
+    /// [`LogHistogram::percentile`] but without the exact min/max clamp
+    /// (the window does not track extremes).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let Some(newest) = self.newest() else {
+            return 0.0;
+        };
+        let base = self.baseline();
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * n as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(n);
+        let mut cum = 0u64;
+        for i in 0..LogHistogram::BUCKETS {
+            let b = base.map_or(0, |bi| self.slots[bi].counts[i]);
+            cum += self.slots[newest].counts[i] - b;
+            if cum >= rank {
+                return LogHistogram::bucket_value(i);
+            }
+        }
+        LogHistogram::bucket_value(LogHistogram::BUCKETS - 1)
+    }
+}
+
 /// Percentile snapshot of one streaming histogram: p50/p90/p99 are within
 /// [`LogHistogram::REL_ERROR`] of the exact pooled percentiles; mean and
 /// count are exact.
@@ -565,6 +741,64 @@ mod tests {
         assert!(p50 < b.ttft_hist.percentile(10.0) * 1.1);
         // Bias averages over the pooled sample count.
         assert!((agg.estimator_bias() - (-0.05)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windowed_hist_sees_only_the_last_window() {
+        // Cumulative histogram: 100 fast samples, then 100 slow ones. A
+        // window that covers only the slow phase must report the slow
+        // percentile and the slow-phase attainment, not lifetime history.
+        let mut h = LogHistogram::default();
+        let mut w = WindowedHist::new(10.0, 1.0);
+        let mut t = 0.0;
+        for step in 0..40 {
+            for _ in 0..5 {
+                h.record(if step < 20 { 0.1 } else { 2.0 });
+            }
+            t += 1.0;
+            w.push(t, h.bucket_counts());
+        }
+        // Window [30, 40]: slow samples only.
+        assert_eq!(w.count(), 50);
+        let p50 = w.percentile(50.0);
+        assert!((p50 / 2.0 - 1.0).abs() < 0.05, "p50 {p50}");
+        assert!(w.attainment(1.0) < 1e-9);
+        assert!((w.attainment(3.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn windowed_hist_startup_and_empty_semantics() {
+        let mut w = WindowedHist::new(10.0, 1.0);
+        // No snapshots at all: vacuous attainment, zero percentile.
+        assert_eq!(w.count(), 0);
+        assert_eq!(w.attainment(1.0), 1.0);
+        assert_eq!(w.percentile(99.0), 0.0);
+        // Startup (no baseline older than the window): everything counts.
+        let mut h = LogHistogram::default();
+        h.record(0.5);
+        w.push(1.0, h.bucket_counts());
+        assert_eq!(w.count(), 1);
+        assert!((w.attainment(1.0) - 1.0).abs() < 1e-12);
+        // A quiet stretch longer than the window empties it again.
+        let mut t = 1.0;
+        for _ in 0..15 {
+            t += 1.0;
+            w.push(t, h.bucket_counts());
+        }
+        assert_eq!(w.count(), 0, "stale samples must age out");
+        assert_eq!(w.attainment(0.001), 1.0, "empty window is vacuously attained");
+    }
+
+    #[test]
+    fn windowed_hist_tolerates_lazy_empty_counts() {
+        // A defaulted LogHistogram has no bucket vector; the window must
+        // treat the empty slice as all-zeros.
+        let h = LogHistogram::default();
+        let mut w = WindowedHist::new(5.0, 1.0);
+        w.push(1.0, h.bucket_counts());
+        w.push(2.0, h.bucket_counts());
+        assert_eq!(w.count(), 0);
+        assert_eq!(w.attainment(1.0), 1.0);
     }
 
     #[test]

@@ -76,6 +76,11 @@ pub enum TraceEvent {
         evictions: u32,
         superseded: u32,
     },
+    /// SLO-guard brownout ladder transition (PR 9): `from`/`to` are
+    /// [`crate::slo::BrownoutLevel`] ranks. Emitted into every live
+    /// replica's ring at the coordinator tick so Perfetto shows the
+    /// brownout span on each replica track.
+    Brownout { t: f64, from: u8, to: u8 },
 }
 
 impl TraceEvent {
@@ -88,7 +93,8 @@ impl TraceEvent {
             | TraceEvent::Preempt { t, .. }
             | TraceEvent::Finish { t, .. }
             | TraceEvent::Cancel { t, .. }
-            | TraceEvent::Kv { t, .. } => t,
+            | TraceEvent::Kv { t, .. }
+            | TraceEvent::Brownout { t, .. } => t,
             TraceEvent::Iteration { start, .. } => start,
         }
     }
@@ -246,6 +252,21 @@ fn event_json(pid: usize, ev: &TraceEvent, out: &mut Vec<Json>) {
                 .set("evictions", evictions as u64)
                 .set("superseded", superseded as u64);
             out.push(base("kv", "i", 2, t).set("s", "t").set("args", args));
+        }
+        TraceEvent::Brownout { t, from, to } => {
+            let level_name = |v: u8| match v {
+                0 => "normal",
+                1 => "pause_offline_admission",
+                2 => "drain_offline_running",
+                3 => "shed_new_offline",
+                _ => "emergency",
+            };
+            let args = Json::obj()
+                .set("from", level_name(from))
+                .set("to", level_name(to))
+                .set("from_level", from as u64)
+                .set("to_level", to as u64);
+            out.push(base("brownout", "i", 0, t).set("s", "p").set("args", args));
         }
     }
 }

@@ -57,6 +57,15 @@ pub struct Scheduler {
     /// admission/preemption/completion transitions instead of re-collected
     /// and re-sorted from the store every iteration.
     running: Vec<RequestId>,
+    /// SLO-guard actuator (PR 9): offline tokens-per-batch cap. The
+    /// `usize::MAX` sentinel means "unguarded" and keeps the off path to a
+    /// single never-taken comparison per offline item — no branch on an
+    /// `Option`, no allocation.
+    offline_cap: usize,
+    /// SLO-guard actuator (PR 9): when set, phases 5/6 still run resident
+    /// offline work (drain) unless the cap is 0, but phase 7 admits no new
+    /// offline requests from the pool.
+    offline_admit_paused: bool,
     /// Reusable partition buffers for [`Scheduler::schedule_into`]: cleared
     /// and refilled in place each iteration, so the steady-state decision
     /// makes no heap allocation (see `Engine::step_alloc_growth`).
@@ -119,8 +128,29 @@ impl Scheduler {
             block_size,
             running_offline: Vec::new(),
             running: Vec::new(),
+            offline_cap: usize::MAX,
+            offline_admit_paused: false,
             scratch: SchedScratch::default(),
         }
+    }
+
+    /// Set the offline tokens-per-batch cap (SLO-guard actuator).
+    /// `usize::MAX` disarms it.
+    pub fn set_offline_cap(&mut self, cap: usize) {
+        self.offline_cap = cap;
+    }
+
+    pub fn offline_cap(&self) -> usize {
+        self.offline_cap
+    }
+
+    /// Pause/resume new offline admissions (SLO-guard drain actuator).
+    pub fn set_offline_admit_paused(&mut self, paused: bool) {
+        self.offline_admit_paused = paused;
+    }
+
+    pub fn offline_admit_paused(&self) -> bool {
+        self.offline_admit_paused
     }
 
     /// Times the partition scratch had to grow a buffer (regression hook,
@@ -406,6 +436,10 @@ impl Scheduler {
         // per trial. Plans come out bit-identical to the clone-trial oracle
         // (`oracle::OracleScheduler`); the equivalence tests pin this down.
         let mut token_budget = self.cfg.max_batched_tokens;
+        // Offline tokens-per-batch cap (SLO-guard actuator). Unguarded the
+        // sentinel never binds: the `min`/`== 0` checks below are the whole
+        // cost of the disarmed path.
+        let mut offline_budget = self.offline_cap;
 
         for &id in &online_decodes {
             items.push(PlanItem {
@@ -453,7 +487,7 @@ impl Scheduler {
         // ---- 5. offline work, cheapest first: resident decodes ----------
         let mut slots_left = self.cfg.max_batch.saturating_sub(items.len());
         for &id in &offline_decodes {
-            if slots_left == 0 || token_budget == 0 {
+            if slots_left == 0 || token_budget == 0 || offline_budget == 0 {
                 break;
             }
             let len = store.get(id).seq_len();
@@ -471,16 +505,21 @@ impl Scheduler {
                 kind: WorkKind::Decode,
             });
             token_budget -= 1;
+            offline_budget = offline_budget.saturating_sub(1);
             slots_left -= 1;
         }
 
         // ---- 6. continue running offline prefills ------------------------
         for &id in &offline_prefills {
-            if slots_left == 0 || token_budget == 0 {
+            if slots_left == 0 || token_budget == 0 || offline_budget == 0 {
                 break;
             }
             let r = store.get(id);
-            let chunk = r.remaining_prefill().min(self.cfg.chunk).min(token_budget);
+            let chunk = r
+                .remaining_prefill()
+                .min(self.cfg.chunk)
+                .min(token_budget)
+                .min(offline_budget);
             if chunk == 0 {
                 continue;
             }
@@ -504,11 +543,12 @@ impl Scheduler {
                 kind: WorkKind::Prefill { chunk },
             });
             token_budget -= chunk;
+            offline_budget -= chunk;
             slots_left -= 1;
         }
 
         // ---- 7. new offline admissions -----------------------------------
-        if budget > MIN_BUDGET {
+        if budget > MIN_BUDGET && !self.offline_admit_paused {
             match self.cfg.kind {
                 SchedulerKind::Bs | SchedulerKind::BsE => self.admit_fcfs(
                     now,
@@ -518,6 +558,7 @@ impl Scheduler {
                     &mut items,
                     &mut shape,
                     &mut token_budget,
+                    &mut offline_budget,
                     &mut slots_left,
                     budget,
                     out,
@@ -530,6 +571,7 @@ impl Scheduler {
                     &mut items,
                     &mut shape,
                     &mut token_budget,
+                    &mut offline_budget,
                     &mut slots_left,
                     budget,
                     out,
@@ -574,11 +616,12 @@ impl Scheduler {
         items: &mut Vec<PlanItem>,
         shape: &mut TrialShape,
         token_budget: &mut usize,
+        offline_budget: &mut usize,
         slots_left: &mut usize,
         budget: f64,
         out: &mut Outcome,
     ) {
-        while *slots_left > 0 && *token_budget > 0 {
+        while *slots_left > 0 && *token_budget > 0 && *offline_budget > 0 {
             let Some(head) = pool.fcfs_head() else { break };
             let (prompt_len, seq_len) = {
                 let r = store.get(head);
@@ -594,7 +637,10 @@ impl Scheduler {
             } else {
                 0
             };
-            let chunk = (seq_len - ff).min(self.cfg.chunk).min(*token_budget);
+            let chunk = (seq_len - ff)
+                .min(self.cfg.chunk)
+                .min(*token_budget)
+                .min(*offline_budget);
             // estimator check (BS skips: budget = inf)
             let undo = if chunk > 0 {
                 shape.push_prefill(
@@ -636,12 +682,14 @@ impl Scheduler {
                     kind: WorkKind::Prefill { chunk },
                 });
                 *token_budget -= chunk;
+                *offline_budget -= chunk;
             } else {
                 items.push(PlanItem {
                     req: head,
                     kind: WorkKind::Decode,
                 });
                 *token_budget -= 1;
+                *offline_budget = offline_budget.saturating_sub(1);
             }
             *slots_left -= 1;
         }
@@ -663,11 +711,12 @@ impl Scheduler {
         items: &mut Vec<PlanItem>,
         shape: &mut TrialShape,
         token_budget: &mut usize,
+        offline_budget: &mut usize,
         slots_left: &mut usize,
         budget: f64,
         out: &mut Outcome,
     ) {
-        while *slots_left > 0 && *token_budget > 0 {
+        while *slots_left > 0 && *token_budget > 0 && *offline_budget > 0 {
             let candidates = pool.candidates(kv, self.cfg.mutation_budget);
             if candidates.is_empty() {
                 break;
@@ -702,7 +751,10 @@ impl Scheduler {
                 if fresh > avail.for_offline() {
                     continue;
                 }
-                let chunk = (seq_len - ff).min(self.cfg.chunk).min(*token_budget);
+                let chunk = (seq_len - ff)
+                    .min(self.cfg.chunk)
+                    .min(*token_budget)
+                    .min(*offline_budget);
                 let undo = if chunk > 0 {
                     shape.push_prefill(
                         &self.time_model,
@@ -769,6 +821,7 @@ impl Scheduler {
                     kind: WorkKind::Prefill { chunk },
                 });
                 *token_budget -= chunk;
+                *offline_budget -= chunk;
             } else {
                 let _ = shape.push_decode(seq_len);
                 items.push(PlanItem {
@@ -776,9 +829,33 @@ impl Scheduler {
                     kind: WorkKind::Decode,
                 });
                 *token_budget -= 1;
+                *offline_budget = offline_budget.saturating_sub(1);
             }
             *slots_left -= 1;
         }
+    }
+
+    /// Emergency brownout actuator: preempt *every* running offline
+    /// request (recompute mode), returning the victims newest-admitted
+    /// first. Coordinator-phase only — not part of the per-iteration hot
+    /// path, so the returned `Vec` is fine.
+    pub fn preempt_all_offline(
+        &mut self,
+        store: &mut RequestStore,
+        pool: &mut OfflinePool,
+        kv: &mut KvManager,
+    ) -> Vec<RequestId> {
+        let mut victims = Vec::with_capacity(self.running_offline.len());
+        while let Some(victim) = self.running_offline.pop() {
+            let req = store.get_mut(victim);
+            req.preempt();
+            kv.release(victim, false);
+            let keys = req.content_key_path(self.block_size).to_vec();
+            pool.add(victim, req.prompt.total_len, keys);
+            self.drop_running(victim);
+            victims.push(victim);
+        }
+        victims
     }
 }
 
@@ -1039,6 +1116,61 @@ mod tests {
         );
         // One snapshot per round + one inside each successful allocate.
         assert_eq!(small, 4);
+    }
+
+    #[test]
+    fn offline_cap_and_pause_gate_offline_work() {
+        let mut f = fixture(SchedulerKind::Echo, 1000);
+        add_offline(&mut f, 200, 20);
+        // Paused admission: the pool head stays put.
+        f.sched.set_offline_admit_paused(true);
+        let out = f
+            .sched
+            .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert!(out.admitted_offline.is_empty());
+        assert_eq!(f.pool.len(), 1);
+        // Unpaused but capped: the admitted prefill chunk honors the cap
+        // (cfg.chunk is 128, cap is 64).
+        f.sched.set_offline_admit_paused(false);
+        f.sched.set_offline_cap(64);
+        let out = f
+            .sched
+            .schedule(0.1, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert_eq!(out.admitted_offline.len(), 1);
+        assert_eq!(out.plan.total_tokens(), 64);
+        // Cap 0: resident offline work idles entirely.
+        f.sched.set_offline_cap(0);
+        let out = f
+            .sched
+            .schedule(0.2, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert!(out.plan.items.is_empty());
+    }
+
+    #[test]
+    fn preempt_all_offline_returns_everything_to_the_pool() {
+        let mut f = fixture(SchedulerKind::Echo, 1000);
+        for _ in 0..3 {
+            add_offline(&mut f, 100, 10);
+        }
+        let out = f
+            .sched
+            .schedule(0.0, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert_eq!(out.admitted_offline.len(), 3);
+        let victims = f
+            .sched
+            .preempt_all_offline(&mut f.store, &mut f.pool, &mut f.kv);
+        assert_eq!(victims.len(), 3);
+        assert_eq!(f.pool.len(), 3);
+        assert_eq!(f.sched.running_offline_count(), 0);
+        for &v in &victims {
+            assert_eq!(f.store.get(v).state, ReqState::Preempted);
+        }
+        f.kv.check_invariants().unwrap();
+        // Next schedule re-admits from the pool as usual.
+        let out = f
+            .sched
+            .schedule(0.5, &mut f.store, &mut f.queue, &mut f.pool, &mut f.kv);
+        assert!(!out.admitted_offline.is_empty());
     }
 
     #[test]

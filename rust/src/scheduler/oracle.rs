@@ -34,6 +34,10 @@ pub struct OracleScheduler {
     block_size: usize,
     /// Admission (LIFO preemption) order of running offline requests.
     running_offline: Vec<RequestId>,
+    /// SLO-guard actuators, mirrored from the incremental scheduler so the
+    /// equivalence tests hold with the guard armed.
+    offline_cap: usize,
+    offline_admit_paused: bool,
 }
 
 impl OracleScheduler {
@@ -49,7 +53,17 @@ impl OracleScheduler {
             time_model,
             block_size,
             running_offline: Vec::new(),
+            offline_cap: usize::MAX,
+            offline_admit_paused: false,
         }
+    }
+
+    pub fn set_offline_cap(&mut self, cap: usize) {
+        self.offline_cap = cap;
+    }
+
+    pub fn set_offline_admit_paused(&mut self, paused: bool) {
+        self.offline_admit_paused = paused;
     }
 
     fn blocks_for(&self, tokens: usize) -> usize {
@@ -224,6 +238,7 @@ impl OracleScheduler {
         let mut shape = BatchShape::default();
         let mut items = Vec::new();
         let mut token_budget = self.cfg.max_batched_tokens;
+        let mut offline_budget = self.offline_cap;
 
         for &id in &online_decodes {
             items.push(PlanItem {
@@ -268,7 +283,7 @@ impl OracleScheduler {
         // ---- 5. offline resident decodes --------------------------------
         let mut slots_left = self.cfg.max_batch.saturating_sub(items.len());
         for &id in &offline_decodes {
-            if slots_left == 0 || token_budget == 0 {
+            if slots_left == 0 || token_budget == 0 || offline_budget == 0 {
                 break;
             }
             let len = store.get(id).seq_len();
@@ -286,16 +301,21 @@ impl OracleScheduler {
                 kind: WorkKind::Decode,
             });
             token_budget -= 1;
+            offline_budget = offline_budget.saturating_sub(1);
             slots_left -= 1;
         }
 
         // ---- 6. continue running offline prefills -----------------------
         for &id in &offline_prefills {
-            if slots_left == 0 || token_budget == 0 {
+            if slots_left == 0 || token_budget == 0 || offline_budget == 0 {
                 break;
             }
             let r = store.get(id);
-            let chunk = r.remaining_prefill().min(self.cfg.chunk).min(token_budget);
+            let chunk = r
+                .remaining_prefill()
+                .min(self.cfg.chunk)
+                .min(token_budget)
+                .min(offline_budget);
             if chunk == 0 {
                 continue;
             }
@@ -316,11 +336,12 @@ impl OracleScheduler {
                 kind: WorkKind::Prefill { chunk },
             });
             token_budget -= chunk;
+            offline_budget -= chunk;
             slots_left -= 1;
         }
 
         // ---- 7. new offline admissions ----------------------------------
-        if budget > MIN_BUDGET {
+        if budget > MIN_BUDGET && !self.offline_admit_paused {
             match self.cfg.kind {
                 SchedulerKind::Bs | SchedulerKind::BsE => self.admit_fcfs(
                     now,
@@ -330,6 +351,7 @@ impl OracleScheduler {
                     &mut items,
                     &mut shape,
                     &mut token_budget,
+                    &mut offline_budget,
                     &mut slots_left,
                     budget,
                     &mut out,
@@ -342,6 +364,7 @@ impl OracleScheduler {
                     &mut items,
                     &mut shape,
                     &mut token_budget,
+                    &mut offline_budget,
                     &mut slots_left,
                     budget,
                     &mut out,
@@ -372,11 +395,12 @@ impl OracleScheduler {
         items: &mut Vec<PlanItem>,
         shape: &mut BatchShape,
         token_budget: &mut usize,
+        offline_budget: &mut usize,
         slots_left: &mut usize,
         budget: f64,
         out: &mut Outcome,
     ) {
-        while *slots_left > 0 && *token_budget > 0 {
+        while *slots_left > 0 && *token_budget > 0 && *offline_budget > 0 {
             let Some(head) = pool.fcfs_head() else { break };
             let (prompt_len, seq_len, keys) = {
                 let r = store.get(head);
@@ -393,7 +417,10 @@ impl OracleScheduler {
             } else {
                 0
             };
-            let chunk = (seq_len - ff).min(self.cfg.chunk).min(*token_budget);
+            let chunk = (seq_len - ff)
+                .min(self.cfg.chunk)
+                .min(*token_budget)
+                .min(*offline_budget);
             let mut trial = shape.clone();
             if chunk > 0 {
                 trial.prefills.push(PrefillItem {
@@ -426,12 +453,14 @@ impl OracleScheduler {
                     kind: WorkKind::Prefill { chunk },
                 });
                 *token_budget -= chunk;
+                *offline_budget -= chunk;
             } else {
                 items.push(PlanItem {
                     req: head,
                     kind: WorkKind::Decode,
                 });
                 *token_budget -= 1;
+                *offline_budget = offline_budget.saturating_sub(1);
             }
             *slots_left -= 1;
         }
@@ -447,11 +476,12 @@ impl OracleScheduler {
         items: &mut Vec<PlanItem>,
         shape: &mut BatchShape,
         token_budget: &mut usize,
+        offline_budget: &mut usize,
         slots_left: &mut usize,
         budget: f64,
         out: &mut Outcome,
     ) {
-        while *slots_left > 0 && *token_budget > 0 {
+        while *slots_left > 0 && *token_budget > 0 && *offline_budget > 0 {
             let candidates = pool.candidates(kv, self.cfg.mutation_budget);
             if candidates.is_empty() {
                 break;
@@ -477,7 +507,10 @@ impl OracleScheduler {
                 if fresh > avail.for_offline() {
                     continue;
                 }
-                let chunk = (seq_len - ff).min(self.cfg.chunk).min(*token_budget);
+                let chunk = (seq_len - ff)
+                    .min(self.cfg.chunk)
+                    .min(*token_budget)
+                    .min(*offline_budget);
                 let mut trial = shape.clone();
                 if chunk > 0 {
                     trial.prefills.push(PrefillItem {
@@ -531,12 +564,14 @@ impl OracleScheduler {
                     kind: WorkKind::Prefill { chunk },
                 });
                 *token_budget -= chunk;
+                *offline_budget -= chunk;
             } else {
                 items.push(PlanItem {
                     req: id,
                     kind: WorkKind::Decode,
                 });
                 *token_budget -= 1;
+                *offline_budget = offline_budget.saturating_sub(1);
             }
             *slots_left -= 1;
         }

@@ -11,7 +11,10 @@ use crate::core::{ReqState, TaskClass};
 use crate::faults::{CancelReason, ServeError};
 use crate::metrics::Metrics;
 
-use super::{Cursor, EventSink, MetricsView, Serve, SubmitSpec, Ticket, TicketId, TokenEvent};
+use super::{
+    AdmissionVerdict, Cursor, EventSink, MetricsView, Serve, SubmitSpec, Ticket, TicketId,
+    TokenEvent,
+};
 
 pub struct ClusterServe {
     pub sim: ClusterSim,
@@ -32,6 +35,9 @@ pub struct ClusterServe {
     /// Cancellation events queued for the next pump.
     pending_events: Vec<TokenEvent>,
     cancelled: usize,
+    /// Verdict of the most recent `submit` (SLO-guard backpressure): the
+    /// wire layer reads this to put `verdict`/`retry_after` on the ack.
+    last_verdict: AdmissionVerdict,
 }
 
 impl ClusterServe {
@@ -46,6 +52,7 @@ impl ClusterServe {
             last_place: BTreeMap::new(),
             pending_events: Vec::new(),
             cancelled: 0,
+            last_verdict: AdmissionVerdict::Accept,
         }
     }
 
@@ -246,12 +253,44 @@ impl ClusterServe {
         }
     }
 
+    /// THE offline-admission decision (SLO guard, PR 9): the single place
+    /// a new offline submission is judged. Maps the guard's current
+    /// brownout decision to a typed verdict — `Retry` at `ShedNewOffline`
+    /// (transient: back off `retry_after` seconds and resubmit), `Shed`
+    /// under `Emergency` (the fleet is actively preempting offline work).
+    /// Disarmed or below `ShedNewOffline` every submission is accepted;
+    /// backlog *overflow* trimming after acceptance stays with
+    /// [`Self::shed_overload`], driven by the same static `ShedPolicy` as
+    /// PR 7 — so exactly one controller state decides front-door shedding
+    /// and exactly one policy decides overflow shedding.
+    fn offline_admission_verdict(&self) -> AdmissionVerdict {
+        let d = self.sim.guard_decision();
+        if d.emergency {
+            AdmissionVerdict::Shed {
+                after: d.retry_after,
+            }
+        } else if d.shed_new {
+            AdmissionVerdict::Retry {
+                after: d.retry_after,
+            }
+        } else {
+            AdmissionVerdict::Accept
+        }
+    }
+
     /// Overload shedding per the cluster's [`crate::faults::ShedPolicy`].
     /// Offline work is revocable by contract (§2's hybrid bargain), so the
     /// newest backlog excess goes first; online requests are only shed once
     /// they have waited past `online_grace`× the SLO TTFT in a queue — at
     /// that point the SLO is unattainable and holding the slot just starves
     /// the requests behind it. Both knobs default to off.
+    ///
+    /// Division of labor with the SLO guard (PR 9): this trims *accepted*
+    /// backlog against static limits; the guard rejects *new* offline work
+    /// at the front door ([`Self::offline_admission_verdict`]) and
+    /// pauses/preempts *placed* work via the scheduler actuators. Each
+    /// shed path has exactly one owner, so the two policies never fight
+    /// over the same request.
     fn shed_overload(&mut self, t_end: f64) {
         let shed = self.sim.cfg.shed;
         while self.sim.backlog.len() > shed.max_backlog {
@@ -292,8 +331,14 @@ impl ClusterServe {
 
     /// Fleet-progress signature for the drain stall detector: any change
     /// means the deployment is still moving (executing, completing,
-    /// cancelling, or shuffling queues).
-    fn progress_signature(&self) -> (usize, usize, usize, usize, usize, usize) {
+    /// cancelling, or shuffling queues). The guard's `pause_ticks` counter
+    /// is part of the signature: a backlog deliberately held back by the
+    /// brownout ladder is *paused by policy*, not stuck — the controller
+    /// is guaranteed to ratchet back to `Normal` once the online burst
+    /// leaves the measurement window (empty windows read as vacuous
+    /// attainment), so counting those ticks as progress keeps the stall
+    /// detector from cancelling work the guard is about to release.
+    fn progress_signature(&self) -> (usize, usize, usize, usize, usize, usize, u64) {
         let m = self.sim.all_metrics();
         (
             m.iterations,
@@ -302,6 +347,7 @@ impl ClusterServe {
             self.pending_online.len(),
             self.cursors.len(),
             self.cancelled,
+            self.sim.guard_stats().pause_ticks,
         )
     }
 }
@@ -312,6 +358,7 @@ impl Serve for ClusterServe {
         self.next_ticket += 1;
         let class = spec.slo.task_class();
         let arrival = spec.arrival.unwrap_or(self.clock);
+        self.last_verdict = AdmissionVerdict::Accept;
         match class {
             TaskClass::Online => {
                 let job = OnlineJob {
@@ -327,6 +374,30 @@ impl Serve for ClusterServe {
                 self.pending_online.insert(pos, (ticket, job));
             }
             TaskClass::Offline => {
+                // SLO-guard backpressure: a browned-out fleet rejects new
+                // offline work with a typed verdict instead of queueing it
+                // behind a paused backlog. The ticket is still issued —
+                // its immediate terminal `Cancelled(Shed)` event is the
+                // in-band signal, and the verdict (with `retry_after`)
+                // rides the wire ack.
+                let verdict = self.offline_admission_verdict();
+                self.last_verdict = verdict;
+                if !verdict.is_accept() {
+                    if let Some(guard) = self.sim.guard_mut() {
+                        match verdict {
+                            AdmissionVerdict::Retry { .. } => guard.stats.retry_submits += 1,
+                            AdmissionVerdict::Shed { .. } => guard.stats.shed_submits += 1,
+                            AdmissionVerdict::Accept => {}
+                        }
+                    }
+                    self.sim.fault_stats.shed_offline += 1;
+                    self.emit_cancel(ticket, CancelReason::Shed, true);
+                    return Ok(Ticket {
+                        id: ticket,
+                        class,
+                        submitted_at: arrival,
+                    });
+                }
                 self.sim.backlog.push_back(JobSpec {
                     prompt: spec.prompt,
                     max_new_tokens: spec.max_new_tokens,
@@ -340,6 +411,10 @@ impl Serve for ClusterServe {
             class,
             submitted_at: arrival,
         })
+    }
+
+    fn last_verdict(&self) -> AdmissionVerdict {
+        self.last_verdict
     }
 
     fn cancel(&mut self, ticket: TicketId) -> bool {
@@ -623,6 +698,63 @@ mod tests {
         for rep in &s.sim.replicas {
             rep.engine.kv.check_invariants().unwrap();
         }
+    }
+
+    #[test]
+    fn guard_front_door_rejects_offline_with_typed_backpressure() {
+        use crate::slo::{BrownoutLevel, SloGuardConfig};
+        // An unattainable SLO climbs the ladder; once the fleet is at
+        // ShedNewOffline or worse, new offline submits must get a typed
+        // non-accept verdict, an immediate terminal Cancelled(Shed) event,
+        // and a positive retry_after hint.
+        let mut base = SystemConfig::a100_llama8b();
+        base.cache.capacity_tokens = 30_000;
+        base.scheduler.max_batch = 16;
+        base.slo = crate::core::Slo::new(1e-6, 1e-9);
+        let mut cc = ClusterConfig::new(base, 2);
+        cc.jitter = 0.0;
+        cc.guard = Some(SloGuardConfig::default());
+        let mut s = ClusterServe::new(cc);
+        for i in 0..12 {
+            let spec = SubmitSpec::online(PromptSpec::sim(200, None), 4);
+            s.submit(spec.at(0.2 + 0.5 * i as f64)).unwrap();
+        }
+        assert!(s.last_verdict().is_accept(), "online is never backpressured");
+        let mut evs: Vec<TokenEvent> = Vec::new();
+        let mut level = BrownoutLevel::Normal;
+        for _ in 0..200 {
+            s.pump(&mut evs).unwrap();
+            level = s.sim.guard_decision().level;
+            if level >= BrownoutLevel::ShedNewOffline {
+                break;
+            }
+        }
+        assert!(
+            level >= BrownoutLevel::ShedNewOffline,
+            "misses must climb the ladder (got {level:?})"
+        );
+        let t = s
+            .submit(SubmitSpec::offline(PromptSpec::sim(300, None), 8))
+            .unwrap();
+        let v = s.last_verdict();
+        assert!(!v.is_accept(), "browned-out fleet must backpressure: {v:?}");
+        let after = v.retry_after().unwrap();
+        assert!(after > 0.0, "retry hint must be positive: {after}");
+        s.pump(&mut evs).unwrap();
+        assert!(
+            evs.iter().any(|e| matches!(
+                e,
+                TokenEvent::Cancelled {
+                    ticket,
+                    reason: CancelReason::Shed,
+                    ..
+                } if *ticket == t.id
+            )),
+            "rejected ticket must be terminal with the typed reason: {evs:?}"
+        );
+        let stats = s.sim.guard_stats();
+        assert_eq!(stats.retry_submits + stats.shed_submits, 1, "{stats:?}");
+        assert_eq!(s.sim.fault_stats.shed_offline, 1);
     }
 
     #[test]

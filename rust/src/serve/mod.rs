@@ -129,6 +129,47 @@ pub struct Ticket {
     pub submitted_at: f64,
 }
 
+/// Front-door admission verdict for a submission (PR 9 backpressure).
+/// `submit` always returns a `Ticket` — a non-`Accept` verdict means the
+/// ticket was created already terminal (an immediate
+/// `Cancelled(CancelReason::Shed)` event follows on the next pump) and the
+/// client should resubmit no sooner than the `retry_after` hint (deployment
+/// seconds). Today only offline submits to a brownout-laddered cluster get
+/// non-`Accept` verdicts.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AdmissionVerdict {
+    /// Admitted normally.
+    Accept,
+    /// Rejected under brownout (ShedNewOffline rung): transient — retry
+    /// after the hint.
+    Retry { after: f64 },
+    /// Rejected under Emergency: the fleet is actively preempting offline
+    /// work; back off at least the hint, expect further rejections.
+    Shed { after: f64 },
+}
+
+impl AdmissionVerdict {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AdmissionVerdict::Accept => "accept",
+            AdmissionVerdict::Retry { .. } => "retry",
+            AdmissionVerdict::Shed { .. } => "shed",
+        }
+    }
+
+    pub fn is_accept(self) -> bool {
+        matches!(self, AdmissionVerdict::Accept)
+    }
+
+    /// The backoff hint, if any.
+    pub fn retry_after(self) -> Option<f64> {
+        match self {
+            AdmissionVerdict::Accept => None,
+            AdmissionVerdict::Retry { after } | AdmissionVerdict::Shed { after } => Some(after),
+        }
+    }
+}
+
 /// One step of a ticket's observable lifecycle, delivered through
 /// [`EventSink`]s. Timestamps are deployment-clock seconds. `Preempted` is
 /// informational: the ticket stays live and re-admits later (recompute
@@ -358,6 +399,15 @@ impl MetricsView {
 pub trait Serve {
     /// Accept a request; returns the client-held ticket.
     fn submit(&mut self, spec: SubmitSpec) -> anyhow::Result<Ticket>;
+
+    /// The admission verdict the most recent `submit` was given (PR 9
+    /// backpressure). Deployments without a feedback controller always
+    /// report `Accept`; `ClusterServe` overrides this to surface the SLO
+    /// guard's `Retry`/`Shed` decisions so the wire layer can put the
+    /// verdict (and its `retry_after` hint) on the submit ack.
+    fn last_verdict(&self) -> AdmissionVerdict {
+        AdmissionVerdict::Accept
+    }
 
     /// Withdraw a ticket. Terminal: releases the request's KV interest,
     /// pool/queue entry, and interned content keys; a `Cancelled` event is

@@ -6,7 +6,13 @@
 //! see DESIGN.md "Serving API" for the full table):
 //!
 //!   {"verb":"submit","class":"online","prompt_len":200,"max_new_tokens":8}
-//!       -> {"ok":true,"verb":"submit","ticket":0,"class":"online",...}
+//!       -> {"ok":true,"verb":"submit","ticket":0,"class":"online",
+//!           "verdict":"accept",...}
+//!          (`verdict` is the SLO-guard admission decision: `"accept"`,
+//!          or — offline submits against a browned-out fleet — `"retry"` /
+//!          `"shed"`, each adding `"retry_after":<seconds>`; a non-accept
+//!          ticket is already terminal and its `cancelled` event carries
+//!          reason `"shed"`)
 //!   {"verb":"cancel","ticket":0}
 //!       -> {"ok":true,"verb":"cancel","ticket":0,"cancelled":true}
 //!   {"verb":"stream","ticket":0}
@@ -304,6 +310,16 @@ impl<'a> WireSession<'a> {
                                 },
                             )
                             .set("submitted_at", t.submitted_at);
+                        // SLO-guard admission verdict (PR 9): typed
+                        // backpressure on the ack. Non-accept verdicts add
+                        // the controller's retry hint; the ticket is
+                        // already terminal (`cancelled` with reason
+                        // `"shed"` on its stream).
+                        let verdict = self.serve.last_verdict();
+                        ack = ack.set("verdict", verdict.as_str());
+                        if let Some(after) = verdict.retry_after() {
+                            ack = ack.set("retry_after", after);
+                        }
                         // Echo accepted per-ticket targets back (they are
                         // carried, not yet enforced — see SloClass docs).
                         if let Some(slo) = targets {

@@ -1,0 +1,549 @@
+//! SLO guard (PR 9): measured-latency feedback control for co-located
+//! serving.
+//!
+//! Echo's admission control is *predictive* — the Eq. 6–8 estimator gates
+//! offline work before it runs. A mispredicted burst, estimator drift, or
+//! a fault-recovery recompute storm (PR 7) can still blow p99 TTFT with no
+//! corrective path. Following HyGen's measured-latency feedback loop and
+//! ConServe's fast-reclamation granularity (PAPERS.md), this module closes
+//! the loop from *measured* windowed attainment back to scheduling
+//! decisions, entirely on the virtual clock:
+//!
+//! * **Window** — sliding p50/p99 TTFT/TPOT attainment over the last `W`
+//!   seconds, via [`WindowedHist`] snapshot deltas of the cumulative PR 6
+//!   histograms (fleet-summed, so the signal is the true pooled window).
+//! * **AIMD offline budget** — a tokens-per-batch cap on offline work the
+//!   scheduler must respect: additive increase while the window attains,
+//!   multiplicative decrease the moment it does not.
+//! * **Brownout ladder** — Normal → PauseOfflineAdmission →
+//!   DrainOfflineRunning → ShedNewOffline → Emergency (preempt all
+//!   offline), with hysteresis: escalation needs a short hold at the
+//!   current rung, de-escalation needs sustained recovery for at least a
+//!   full window (`min_dwell` is clamped to ≥ `window`), so the ladder
+//!   never round-trips Normal → Pause → Normal inside one window.
+//!
+//! The controller ticks once per sync quantum in the cluster coordinator
+//! phase (strictly single-threaded), so an armed guard is bit-exact across
+//! `--threads`; disarmed, the fleet carries no guard state at all and every
+//! engine-side actuator is an untaken comparison.
+//!
+//! An empty window (no online samples in the last `W` seconds) counts as
+//! vacuously attained. This is deliberate: a browned-out fleet whose online
+//! traffic has gone quiet *must* ratchet back up — otherwise a paused
+//! backlog could never drain and the stall detector's paused-by-policy
+//! exemption (see `serve::ClusterServe`) would turn into a real hang.
+
+use crate::core::Slo;
+use crate::metrics::{Metrics, WindowedHist};
+use crate::utils::json::Json;
+use crate::utils::stats::LogHistogram;
+
+/// Brownout rungs, mildest to harshest. Each rung implies every milder
+/// rung's actuators.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum BrownoutLevel {
+    /// Full co-location: offline admission and execution unconstrained
+    /// (beyond the AIMD token cap, which stays at its ceiling while the
+    /// window attains).
+    #[default]
+    Normal,
+    /// The fleet stops feeding new offline work from the shared backlog to
+    /// replica pools (work-stealing pauses); already-dispatched offline
+    /// work keeps running.
+    PauseOfflineAdmission,
+    /// Replicas additionally stop admitting new offline requests from
+    /// their local pools; resident offline work drains to completion.
+    DrainOfflineRunning,
+    /// New offline submits at the serve front door are rejected with typed
+    /// backpressure (`Retry` with a `retry_after` hint).
+    ShedNewOffline,
+    /// Preempt every running offline request fleet-wide and schedule zero
+    /// offline tokens; new offline submits are shed outright.
+    Emergency,
+}
+
+impl BrownoutLevel {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            BrownoutLevel::Normal => 0,
+            BrownoutLevel::PauseOfflineAdmission => 1,
+            BrownoutLevel::DrainOfflineRunning => 2,
+            BrownoutLevel::ShedNewOffline => 3,
+            BrownoutLevel::Emergency => 4,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> BrownoutLevel {
+        match v {
+            0 => BrownoutLevel::Normal,
+            1 => BrownoutLevel::PauseOfflineAdmission,
+            2 => BrownoutLevel::DrainOfflineRunning,
+            3 => BrownoutLevel::ShedNewOffline,
+            _ => BrownoutLevel::Emergency,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BrownoutLevel::Normal => "normal",
+            BrownoutLevel::PauseOfflineAdmission => "pause_offline_admission",
+            BrownoutLevel::DrainOfflineRunning => "drain_offline_running",
+            BrownoutLevel::ShedNewOffline => "shed_new_offline",
+            BrownoutLevel::Emergency => "emergency",
+        }
+    }
+
+    fn up(self) -> BrownoutLevel {
+        BrownoutLevel::from_u8((self.as_u8() + 1).min(4))
+    }
+
+    fn down(self) -> BrownoutLevel {
+        BrownoutLevel::from_u8(self.as_u8().saturating_sub(1))
+    }
+}
+
+/// Control-law knobs. Defaults target the paper-eval SLO regime; every
+/// field is virtual-clock seconds or tokens.
+#[derive(Clone, Copy, Debug)]
+pub struct SloGuardConfig {
+    /// Escalate (and multiplicatively cut the cap) when the windowed
+    /// attainment falls below this.
+    pub target: f64,
+    /// De-escalate (and additively grow the cap) when the windowed
+    /// attainment is at or above this. Must be ≥ `target` (hysteresis gap).
+    pub recover: f64,
+    /// Sliding-window width, seconds.
+    pub window: f64,
+    /// Minimum time at a rung before de-escalating; clamped to ≥ `window`
+    /// at construction so the ladder cannot round-trip inside one window.
+    pub min_dwell: f64,
+    /// Minimum time at a rung before escalating further (lets an actuator
+    /// take effect before the next rung piles on).
+    pub escalate_hold: f64,
+    /// AIMD additive increase per tick, tokens.
+    pub cap_increase: usize,
+    /// AIMD floor: the offline token cap never drops below this outside
+    /// Emergency (a trickle keeps resident offline work drainable).
+    pub cap_min: usize,
+    /// AIMD ceiling (and starting value): typically the scheduler's
+    /// `max_batched_tokens`, i.e. "uncapped".
+    pub cap_max: usize,
+}
+
+impl Default for SloGuardConfig {
+    fn default() -> Self {
+        SloGuardConfig {
+            target: 0.9,
+            recover: 0.95,
+            window: 10.0,
+            min_dwell: 10.0,
+            escalate_hold: 0.5,
+            cap_increase: 64,
+            cap_min: 16,
+            cap_max: 2048,
+        }
+    }
+}
+
+/// One tick's actuator outputs. `Default` is the disarmed state: Normal,
+/// uncapped, nothing paused or shed — `ClusterSim` hands this out when no
+/// guard is configured, so downstream consumers never branch on an
+/// `Option`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GuardDecision {
+    pub level: BrownoutLevel,
+    /// Offline tokens-per-batch cap for replica schedulers
+    /// (`usize::MAX` = uncapped, 0 = no offline tokens at all).
+    pub offline_cap: usize,
+    /// Gate the backlog → replica-pool feed (work-stealing).
+    pub pause_admission: bool,
+    /// Block new offline admissions inside replica schedulers.
+    pub drain_running: bool,
+    /// Reject new offline submits at the front door.
+    pub shed_new: bool,
+    /// Preempt all running offline work this quantum.
+    pub emergency: bool,
+    /// Wire backpressure hint, seconds: earliest instant the ladder could
+    /// de-escalate below the shedding rung.
+    pub retry_after: f64,
+    /// The level changed on this tick (transition edge, for tracing).
+    pub changed: bool,
+}
+
+impl Default for GuardDecision {
+    fn default() -> Self {
+        GuardDecision {
+            level: BrownoutLevel::Normal,
+            offline_cap: usize::MAX,
+            pause_admission: false,
+            drain_running: false,
+            shed_new: false,
+            emergency: false,
+            retry_after: 0.0,
+            changed: false,
+        }
+    }
+}
+
+impl GuardDecision {
+    /// Per-replica headroom split of the fleet cap: a replica with online
+    /// work waiting in its admission queue has no harvest headroom and
+    /// gets half the budget; an idle-online replica gets the full cap.
+    /// Deterministic pure function of coordinator-phase state.
+    pub fn replica_cap(&self, queued_online: usize) -> usize {
+        if self.emergency {
+            return 0;
+        }
+        if self.offline_cap == usize::MAX {
+            return usize::MAX;
+        }
+        if queued_online == 0 {
+            self.offline_cap
+        } else {
+            (self.offline_cap / 2).max(1)
+        }
+    }
+}
+
+/// Controller telemetry, surfaced in the cluster report. Counters owned by
+/// the guard are updated in `tick`; `shed_submits`/`retry_submits`/
+/// `emergency_preempted` are credited by the front door / coordinator.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GuardStats {
+    /// Ladder transitions (either direction).
+    pub transitions: u64,
+    pub escalations: u64,
+    pub deescalations: u64,
+    /// Ticks spent at PauseOfflineAdmission or above. Also the
+    /// paused-by-policy progress counter the stall detector consumes.
+    pub pause_ticks: u64,
+    /// Running offline requests preempted by Emergency rungs.
+    pub emergency_preempted: u64,
+    /// Offline submits rejected with `Retry` backpressure.
+    pub retry_submits: u64,
+    /// Offline submits shed outright.
+    pub shed_submits: u64,
+    /// Most recent windowed attainment (min of TTFT and TPOT windows).
+    pub last_attainment: f64,
+    /// Most recent AIMD cap.
+    pub cap: usize,
+}
+
+impl GuardStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("transitions", self.transitions)
+            .set("escalations", self.escalations)
+            .set("deescalations", self.deescalations)
+            .set("pause_ticks", self.pause_ticks)
+            .set("emergency_preempted", self.emergency_preempted)
+            .set("retry_submits", self.retry_submits)
+            .set("shed_submits", self.shed_submits)
+            .set("last_attainment", self.last_attainment)
+            .set("offline_cap", if self.cap == usize::MAX { 0 } else { self.cap as u64 })
+    }
+}
+
+/// The deterministic feedback controller. One instance per fleet, ticked
+/// at quantum boundaries in the single-threaded coordinator phase.
+#[derive(Clone, Debug)]
+pub struct SloGuard {
+    cfg: SloGuardConfig,
+    slo: Slo,
+    level: BrownoutLevel,
+    /// Virtual time the current level was entered.
+    entered_at: f64,
+    /// AIMD offline token cap.
+    cap: usize,
+    ttft_win: WindowedHist,
+    tpot_win: WindowedHist,
+    /// Fleet-summed cumulative bucket counts, recycled every tick.
+    scratch_ttft: Vec<u64>,
+    scratch_tpot: Vec<u64>,
+    pub stats: GuardStats,
+    last: GuardDecision,
+}
+
+impl SloGuard {
+    /// `dt` is the tick cadence (the cluster sync quantum) — it sizes the
+    /// snapshot ring and floors the `retry_after` hint.
+    pub fn new(mut cfg: SloGuardConfig, slo: Slo, dt: f64) -> Self {
+        cfg.min_dwell = cfg.min_dwell.max(cfg.window);
+        cfg.recover = cfg.recover.max(cfg.target);
+        cfg.cap_min = cfg.cap_min.min(cfg.cap_max).max(1);
+        let cap = cfg.cap_max;
+        SloGuard {
+            cfg,
+            slo,
+            level: BrownoutLevel::Normal,
+            entered_at: 0.0,
+            cap,
+            ttft_win: WindowedHist::new(cfg.window, dt),
+            tpot_win: WindowedHist::new(cfg.window, dt),
+            scratch_ttft: vec![0u64; LogHistogram::BUCKETS],
+            scratch_tpot: vec![0u64; LogHistogram::BUCKETS],
+            stats: GuardStats {
+                cap,
+                last_attainment: 1.0,
+                ..GuardStats::default()
+            },
+            last: GuardDecision::default(),
+        }
+    }
+
+    pub fn config(&self) -> &SloGuardConfig {
+        &self.cfg
+    }
+
+    pub fn level(&self) -> BrownoutLevel {
+        self.level
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// The most recent decision (what `tick` last returned).
+    pub fn decision(&self) -> GuardDecision {
+        self.last
+    }
+
+    /// Windowed attainment pair (TTFT, TPOT) as of the last tick.
+    pub fn window_attainment(&self) -> (f64, f64) {
+        (
+            self.ttft_win.attainment(self.slo.ttft),
+            self.tpot_win.attainment(self.slo.tpot),
+        )
+    }
+
+    /// Windowed latency percentile pair (TTFT p, TPOT p) as of the last
+    /// tick — telemetry for reports and figures.
+    pub fn window_percentile(&self, p: f64) -> (f64, f64) {
+        (self.ttft_win.percentile(p), self.tpot_win.percentile(p))
+    }
+
+    /// One controller tick at virtual time `now`: fold the fleet's
+    /// cumulative latency histograms (live replicas + retired corpses —
+    /// cumulative snapshots must never go backwards), advance the window,
+    /// run the AIMD law and the ladder, and return the actuator set.
+    /// Allocation-free in steady state (scratch and window rings are
+    /// pre-sized); called only from the single-threaded coordinator phase,
+    /// so an armed guard stays bit-exact across `--threads`.
+    // lint: hot-path
+    pub fn tick<'a>(
+        &mut self,
+        now: f64,
+        parts: impl Iterator<Item = &'a Metrics>,
+    ) -> GuardDecision {
+        // ---- 1. fleet-summed cumulative snapshots -----------------------
+        self.scratch_ttft.fill(0);
+        self.scratch_tpot.fill(0);
+        for m in parts {
+            for (i, &c) in m.ttft_hist.bucket_counts().iter().enumerate() {
+                self.scratch_ttft[i] += c;
+            }
+            for (i, &c) in m.tpot_hist.bucket_counts().iter().enumerate() {
+                self.scratch_tpot[i] += c;
+            }
+        }
+        self.ttft_win.push(now, &self.scratch_ttft);
+        self.tpot_win.push(now, &self.scratch_tpot);
+
+        // ---- 2. pressure signal ----------------------------------------
+        let att_ttft = self.ttft_win.attainment(self.slo.ttft);
+        let att_tpot = self.tpot_win.attainment(self.slo.tpot);
+        let att = att_ttft.min(att_tpot);
+        self.stats.last_attainment = att;
+
+        // ---- 3. AIMD offline token budget ------------------------------
+        if att < self.cfg.target {
+            self.cap = (self.cap / 2).max(self.cfg.cap_min);
+        } else if att >= self.cfg.recover {
+            self.cap = self.cap.saturating_add(self.cfg.cap_increase).min(self.cfg.cap_max);
+        }
+        self.stats.cap = self.cap;
+
+        // ---- 4. brownout ladder with hysteresis ------------------------
+        let dwelled = now - self.entered_at;
+        let prev = self.level;
+        if att < self.cfg.target
+            && self.level < BrownoutLevel::Emergency
+            && (self.level == BrownoutLevel::Normal || dwelled >= self.cfg.escalate_hold)
+        {
+            self.level = self.level.up();
+        } else if att >= self.cfg.recover
+            && self.level > BrownoutLevel::Normal
+            && dwelled >= self.cfg.min_dwell
+        {
+            self.level = self.level.down();
+        }
+        if self.level != prev {
+            self.entered_at = now;
+            self.stats.transitions += 1;
+            if self.level > prev {
+                self.stats.escalations += 1;
+            } else {
+                self.stats.deescalations += 1;
+            }
+        }
+        if self.level >= BrownoutLevel::PauseOfflineAdmission {
+            self.stats.pause_ticks += 1;
+        }
+
+        // ---- 5. actuator set -------------------------------------------
+        let emergency = self.level == BrownoutLevel::Emergency;
+        self.last = GuardDecision {
+            level: self.level,
+            offline_cap: if emergency { 0 } else { self.cap },
+            pause_admission: self.level >= BrownoutLevel::PauseOfflineAdmission,
+            drain_running: self.level >= BrownoutLevel::DrainOfflineRunning,
+            shed_new: self.level >= BrownoutLevel::ShedNewOffline,
+            emergency,
+            retry_after: (self.entered_at + self.cfg.min_dwell - now)
+                .max(self.ttft_win.window() * 0.1),
+            changed: self.level != prev,
+        };
+        self.last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::TaskClass;
+
+    fn guard(window: f64, dt: f64) -> SloGuard {
+        let cfg = SloGuardConfig {
+            window,
+            min_dwell: window,
+            escalate_hold: dt,
+            ..SloGuardConfig::default()
+        };
+        SloGuard::new(cfg, Slo::paper_eval(), dt)
+    }
+
+    /// Feed `n` online completions with the given TTFT/TPOT into `m`.
+    fn feed(m: &mut Metrics, n: usize, ttft: f64, tpot: f64) {
+        for _ in 0..n {
+            m.record_completion(TaskClass::Online, 8, 100, Some(ttft), Some(tpot));
+        }
+    }
+
+    #[test]
+    fn ladder_escalates_under_misses_and_recovers_with_dwell() {
+        let mut g = guard(4.0, 1.0);
+        let mut m = Metrics::default();
+        let mut t = 0.0;
+        // Healthy traffic: stays Normal, cap at ceiling.
+        for _ in 0..5 {
+            feed(&mut m, 4, 0.2, 0.01);
+            t += 1.0;
+            let d = g.tick(t, std::iter::once(&m));
+            assert_eq!(d.level, BrownoutLevel::Normal);
+            assert!(!d.pause_admission);
+        }
+        assert_eq!(g.cap(), g.config().cap_max);
+        // Sustained misses: ladder climbs one rung per tick (after the
+        // hold), cap halves toward the floor.
+        for _ in 0..6 {
+            feed(&mut m, 4, 5.0, 0.01);
+            t += 1.0;
+            g.tick(t, std::iter::once(&m));
+        }
+        assert_eq!(g.level(), BrownoutLevel::Emergency);
+        assert_eq!(g.cap(), g.config().cap_min);
+        let d = g.decision();
+        assert!(d.pause_admission && d.drain_running && d.shed_new && d.emergency);
+        assert_eq!(d.offline_cap, 0);
+        assert!(d.retry_after > 0.0);
+        // Traffic goes quiet: the window empties (vacuous attainment) and
+        // the ladder ratchets all the way back down, one dwell per rung.
+        for _ in 0..40 {
+            t += 1.0;
+            g.tick(t, std::iter::once(&m));
+        }
+        assert_eq!(g.level(), BrownoutLevel::Normal);
+        assert!(g.stats.deescalations >= 4);
+        assert_eq!(g.decision().offline_cap, g.cap());
+    }
+
+    #[test]
+    fn hysteresis_blocks_round_trip_within_one_window() {
+        let mut g = guard(6.0, 1.0);
+        let mut m = Metrics::default();
+        let mut t = 0.0;
+        // One bad burst, then immediately perfect traffic again.
+        feed(&mut m, 10, 5.0, 0.01);
+        t += 1.0;
+        let d = g.tick(t, std::iter::once(&m));
+        assert_eq!(d.level, BrownoutLevel::PauseOfflineAdmission);
+        let entered = t;
+        loop {
+            feed(&mut m, 10, 0.1, 0.01);
+            t += 1.0;
+            let d = g.tick(t, std::iter::once(&m));
+            if d.level == BrownoutLevel::Normal {
+                break;
+            }
+            assert!(t < 60.0, "must eventually recover");
+        }
+        // De-escalation can only have happened after a full dwell >= window.
+        assert!(t - entered >= g.config().min_dwell - 1e-9);
+        assert!(g.config().min_dwell >= g.config().window);
+    }
+
+    #[test]
+    fn aimd_cap_halves_and_regrows() {
+        let mut g = guard(4.0, 1.0);
+        let mut m = Metrics::default();
+        let mut t = 0.0;
+        feed(&mut m, 10, 5.0, 0.01);
+        t += 1.0;
+        g.tick(t, std::iter::once(&m));
+        assert_eq!(g.cap(), g.config().cap_max / 2);
+        feed(&mut m, 10, 5.0, 0.01);
+        t += 1.0;
+        g.tick(t, std::iter::once(&m));
+        assert_eq!(g.cap(), g.config().cap_max / 4);
+        // Recovery: additive regrowth, never past the ceiling.
+        for _ in 0..200 {
+            feed(&mut m, 40, 0.1, 0.01);
+            t += 1.0;
+            g.tick(t, std::iter::once(&m));
+        }
+        assert_eq!(g.cap(), g.config().cap_max);
+    }
+
+    #[test]
+    fn replica_cap_splits_on_online_pressure() {
+        let d = GuardDecision {
+            offline_cap: 100,
+            ..GuardDecision::default()
+        };
+        assert_eq!(d.replica_cap(0), 100);
+        assert_eq!(d.replica_cap(3), 50);
+        let un = GuardDecision::default();
+        assert_eq!(un.replica_cap(5), usize::MAX);
+        let em = GuardDecision {
+            emergency: true,
+            ..GuardDecision::default()
+        };
+        assert_eq!(em.replica_cap(0), 0);
+    }
+
+    #[test]
+    fn disarmed_default_decision_is_inert() {
+        let d = GuardDecision::default();
+        assert_eq!(d.level, BrownoutLevel::Normal);
+        assert_eq!(d.offline_cap, usize::MAX);
+        assert!(!d.pause_admission && !d.drain_running && !d.shed_new && !d.emergency);
+    }
+
+    #[test]
+    fn level_round_trips_through_u8() {
+        for v in 0..=4u8 {
+            assert_eq!(BrownoutLevel::from_u8(v).as_u8(), v);
+        }
+        assert!(BrownoutLevel::Normal < BrownoutLevel::Emergency);
+    }
+}

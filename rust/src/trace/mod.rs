@@ -164,6 +164,74 @@ impl Trace {
         }
     }
 
+    /// Overlay a flash crowd (PR 9's burst regime): extra Poisson arrivals
+    /// at `(mult - 1) × tidal_rate(t)` inside `[at, at + dur)`, so the
+    /// local rate becomes `mult ×` the base tide — the paper's short-scale
+    /// burstiness pushed to regime scale, the scenario the SLO guard's
+    /// brownout ladder exists for. Deterministic in `seed`; existing
+    /// arrivals are untouched and the result stays sorted. The crowd
+    /// window is recorded as a burst interval for inspection.
+    pub fn with_flash_crowd(
+        &self,
+        cfg: &TraceConfig,
+        at: f64,
+        dur: f64,
+        mult: f64,
+        seed: u64,
+    ) -> Trace {
+        let end = (at + dur).min(cfg.horizon);
+        let ratio = cfg.tidal_ratio.max(1.0);
+        let extra_peak =
+            cfg.mean_rate * (1.0 + (ratio - 1.0) / (ratio + 1.0)) * (mult - 1.0).max(0.0);
+        let mut rng = Rng::new(seed);
+        let mut arrivals = self.arrivals.clone();
+        if extra_peak > 0.0 && end > at {
+            // Lewis thinning against the crowd's peak extra rate.
+            let mut t = at;
+            loop {
+                t += rng.exponential(extra_peak);
+                if t >= end {
+                    break;
+                }
+                let rate = cfg.tidal_rate(t) * (mult - 1.0);
+                if rng.f64() < rate / extra_peak {
+                    arrivals.push(t);
+                }
+            }
+        }
+        arrivals.sort_by(f64::total_cmp);
+        let mut bursts = self.burst_intervals.clone();
+        bursts.push((at, end));
+        bursts.sort_by(|x, y| x.0.total_cmp(&y.0));
+        Trace {
+            arrivals,
+            burst_intervals: bursts,
+        }
+    }
+
+    /// Re-modulate this trace with a second diurnal envelope (e.g. a
+    /// weekly cycle over a daily tide): each arrival is kept with
+    /// probability `(1 + amp·cos(2πt/period)) / (1 + amp)` — deterministic
+    /// thinning, so the result is a subset of the original arrivals and
+    /// stays sorted. `amp` is clamped to [0, 1]; 0 keeps everything.
+    pub fn with_diurnal_overlay(&self, amp: f64, period: f64, seed: u64) -> Trace {
+        let a = amp.clamp(0.0, 1.0);
+        let mut rng = Rng::new(seed);
+        let arrivals = self
+            .arrivals
+            .iter()
+            .copied()
+            .filter(|&t| {
+                let keep = (1.0 + a * (t / period * std::f64::consts::TAU).cos()) / (1.0 + a);
+                rng.f64() < keep
+            })
+            .collect();
+        Trace {
+            arrivals,
+            burst_intervals: self.burst_intervals.clone(),
+        }
+    }
+
     /// Requests per bin (Fig. 2's plotted series).
     pub fn rate_series(&self, horizon: f64, bins: usize) -> Vec<f64> {
         let mut counts = vec![0.0; bins];
@@ -290,6 +358,59 @@ mod tests {
         let scaled = tr.scale_time(2.0);
         assert_eq!(tr.len(), scaled.len());
         assert!((scaled.arrivals[0] - tr.arrivals[0] * 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flash_crowd_raises_rate_only_inside_the_window() {
+        let cfg = TraceConfig::compressed(600.0, 2.0, 13);
+        let base = Trace::generate(&cfg);
+        let crowd = base.with_flash_crowd(&cfg, 200.0, 60.0, 4.0, 99);
+        assert!(crowd.len() > base.len(), "the crowd must add arrivals");
+        assert!(crowd.arrivals.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        // Every added arrival falls inside the crowd window.
+        let outside_base = base
+            .arrivals
+            .iter()
+            .filter(|&&t| !(200.0..260.0).contains(&t))
+            .count();
+        let outside_crowd = crowd
+            .arrivals
+            .iter()
+            .filter(|&&t| !(200.0..260.0).contains(&t))
+            .count();
+        assert_eq!(outside_base, outside_crowd, "arrivals outside untouched");
+        // Rate inside the window roughly mult× the base's.
+        let in_base = base.len() - outside_base;
+        let in_crowd = crowd.len() - outside_crowd;
+        assert!(
+            in_crowd as f64 > 2.0 * in_base.max(1) as f64,
+            "crowd window must be much denser: {in_crowd} vs {in_base}"
+        );
+        // Deterministic.
+        let again = base.with_flash_crowd(&cfg, 200.0, 60.0, 4.0, 99);
+        assert_eq!(crowd.arrivals, again.arrivals);
+    }
+
+    #[test]
+    fn diurnal_overlay_thins_deterministically() {
+        let cfg = TraceConfig::compressed(600.0, 2.0, 13);
+        let base = Trace::generate(&cfg);
+        let wk = base.with_diurnal_overlay(0.8, 600.0, 5);
+        assert!(wk.len() < base.len(), "amp 0.8 must thin the trace");
+        assert!(wk.len() > 0);
+        assert!(wk.arrivals.windows(2).all(|w| w[0] <= w[1]), "sorted");
+        // Subset property: every kept arrival came from the base.
+        let mut it = base.arrivals.iter();
+        assert!(
+            wk.arrivals.iter().all(|t| it.any(|b| b == t)),
+            "overlay output must be a subset of the input"
+        );
+        assert_eq!(
+            wk.arrivals,
+            base.with_diurnal_overlay(0.8, 600.0, 5).arrivals
+        );
+        // amp 0 keeps everything.
+        assert_eq!(base.with_diurnal_overlay(0.0, 600.0, 5).len(), base.len());
     }
 
     #[test]

@@ -302,6 +302,10 @@ impl LogHistogram {
     /// value in the same bucket: half a bucket in log space, 2^(1/16) - 1.
     pub const REL_ERROR: f64 = 0.0443;
 
+    /// Fixed bucket count of the geometric layout (shared by every
+    /// histogram, so cumulative-count snapshots are directly comparable).
+    pub const BUCKETS: usize = HIST_BUCKETS;
+
     fn bucket(x: f64) -> usize {
         if x <= HIST_MIN {
             return 0;
@@ -310,9 +314,28 @@ impl LogHistogram {
         i.min(HIST_BUCKETS - 1)
     }
 
+    /// Bucket index a value of `x` lands in (layout is identical across
+    /// all histograms). Public for windowed snapshot-delta consumers.
+    pub fn bucket_index(x: f64) -> usize {
+        Self::bucket(x.max(0.0))
+    }
+
     /// Geometric midpoint of bucket `i` (the estimate it answers with).
     fn representative(i: usize) -> f64 {
         HIST_MIN * ((i as f64 + 0.5) / HIST_PER_OCTAVE).exp2()
+    }
+
+    /// Geometric midpoint of bucket `i` — the value a sample in that
+    /// bucket is estimated as. Public counterpart of `representative`.
+    pub fn bucket_value(i: usize) -> f64 {
+        Self::representative(i.min(HIST_BUCKETS - 1))
+    }
+
+    /// Raw bucket counts. Empty until the first `record` (the vector is
+    /// lazily allocated); callers accumulating snapshots must treat an
+    /// empty slice as all-zeros.
+    pub fn bucket_counts(&self) -> &[u64] {
+        &self.counts
     }
 
     /// Record one sample. Negative values clamp to the bottom bucket;

@@ -260,3 +260,52 @@ fn overload_shedding_under_faults_still_terminates_every_ticket() {
     );
     assert_eq!(front.sim.fault_stats.crashes, 1);
 }
+
+#[test]
+fn guard_paused_backlog_is_not_a_stall() {
+    // Satellite regression (PR 9): an offline backlog that sits idle
+    // because the SLO guard browned the fleet out is *paused by policy*,
+    // not stuck — the drain's progress deadline must not fire a Stalled
+    // sweep while the ladder holds, and once online traffic quiets the
+    // vacuous window ratchets the guard back down and the backlog drains
+    // to real completion.
+    use echo::core::Slo;
+    use echo::faults::CancelReason;
+    use echo::slo::SloGuardConfig;
+    let mut cc = fleet_cfg(31, 2, 1);
+    cc.base.slo = Slo::new(1e-3, 1e-4); // every online completion misses
+    cc.guard = Some(SloGuardConfig {
+        window: 2.0,
+        min_dwell: 2.0,
+        escalate_hold: 0.25,
+        ..SloGuardConfig::default()
+    });
+    let mut front = ClusterServe::new(cc);
+    let offline: Vec<TicketId> = front
+        .submit_offline_jobs(offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 12, 31))
+        .unwrap()
+        .iter()
+        .map(|t| t.id)
+        .collect();
+    let mut tickets = offline.clone();
+    for job in &online_mix(12) {
+        let spec = echo::serve::SubmitSpec::online(job.prompt.clone(), job.max_new_tokens);
+        tickets.push(front.submit(spec.at(job.at)).unwrap().id);
+    }
+    let mut evs: Vec<TokenEvent> = Vec::new();
+    front.drain(&mut evs).unwrap();
+    assert_all_terminal(&tickets, &evs, "guard-paused backlog");
+    let stats = front.sim.guard_stats();
+    assert!(stats.pause_ticks > 0, "impossible SLO must pause the backlog: {stats:?}");
+    let stalled = evs
+        .iter()
+        .any(|e| matches!(e, TokenEvent::Cancelled { reason: CancelReason::Stalled, .. }));
+    assert!(!stalled, "paused-by-policy must not trip the stall detector");
+    for &t in &offline {
+        assert!(
+            evs.iter().any(|e| matches!(e, TokenEvent::Finished { ticket, .. } if *ticket == t)),
+            "offline ticket {t} must finish once the guard recovers"
+        );
+    }
+    assert_eq!(front.sim.fault_stats.stalled_cancels, 0);
+}

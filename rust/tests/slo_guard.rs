@@ -1,0 +1,225 @@
+//! SLO-guard property suite (PR 9): the measured-latency feedback
+//! controller against the fleet front door.
+//!
+//! Properties pinned here:
+//!   * arming the guard never *hurts* windowed online attainment relative
+//!     to the unguarded fleet on the same seeded burst trace, and every
+//!     ticket (including backpressured offline submits) still reaches
+//!     exactly one terminal state;
+//!   * hysteresis: the brownout ladder never round-trips
+//!     Normal → Pause → Normal inside one attainment window;
+//!   * an armed guard is bit-exact across `--threads` (the controller
+//!     ticks only in the single-threaded coordinator phase);
+//!   * a replica crash while the fleet is browned out recovers cleanly
+//!     and the ladder still ratchets back to Normal once traffic quiets.
+
+use echo::cluster::{offline_jobs, online_jobs_from_trace, online_session_spec, ClusterConfig};
+use echo::config::SystemConfig;
+use echo::core::{PromptSpec, Slo};
+use echo::faults::{FaultEvent, FaultPlan};
+use echo::serve::{ClusterServe, NullSink, Serve, SubmitSpec, TicketId, TokenEvent};
+use echo::slo::{BrownoutLevel, SloGuardConfig};
+use echo::trace::{Trace, TraceConfig};
+use echo::workload::DatasetSpec;
+
+/// Small-window guard so ladder excursions fit a test-sized horizon.
+fn test_guard() -> SloGuardConfig {
+    SloGuardConfig {
+        window: 2.0,
+        min_dwell: 2.0,
+        escalate_hold: 0.25,
+        ..SloGuardConfig::default()
+    }
+}
+
+fn fleet_cfg(seed: u64, replicas: usize, threads: usize, slo: Slo) -> ClusterConfig {
+    let mut base = SystemConfig::a100_llama8b();
+    base.seed = seed;
+    base.cache.capacity_tokens = 30_000;
+    base.scheduler.max_batch = 16;
+    base.slo = slo;
+    let mut cc = ClusterConfig::new(base, replicas);
+    cc.threads = threads;
+    cc
+}
+
+fn assert_all_terminal(tickets: &[TicketId], evs: &[TokenEvent], label: &str) {
+    for &t in tickets {
+        let terminals = evs
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e,
+                    TokenEvent::Finished { ticket, .. } | TokenEvent::Cancelled { ticket, .. }
+                    if *ticket == t
+                )
+            })
+            .count();
+        assert_eq!(
+            terminals, 1,
+            "{label}: ticket {t} must reach exactly one terminal state"
+        );
+    }
+}
+
+/// Drain a burst-trace run and return (tickets, events, min online
+/// attainment, guard stats debug, metrics debug).
+fn burst_run(
+    seed: u64,
+    replicas: usize,
+    threads: usize,
+    guard: Option<SloGuardConfig>,
+) -> (Vec<TicketId>, Vec<TokenEvent>, f64, String, String) {
+    let mut cc = fleet_cfg(seed, replicas, threads, Slo::new(0.35, 0.05));
+    cc.guard = guard;
+    let horizon = 40.0;
+    let tcfg = TraceConfig::compressed(horizon, 1.0, seed);
+    // A 5x flash crowd in the middle of the day is the burst the guard is
+    // for: predictive admission saw the base rate, the crowd is measured.
+    let trace = Trace::generate(&tcfg).with_flash_crowd(&tcfg, 10.0, 8.0, 5.0, seed ^ 0xf1a5);
+    let online = online_jobs_from_trace(&trace, &online_session_spec(), seed ^ 0x00ff);
+    let mut front = ClusterServe::new(cc);
+    let mut tickets: Vec<TicketId> = front
+        .submit_offline_jobs(offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 24, seed))
+        .unwrap()
+        .iter()
+        .map(|t| t.id)
+        .collect();
+    tickets.extend(front.submit_online_jobs(&online).unwrap().iter().map(|t| t.id));
+    let mut evs: Vec<TokenEvent> = Vec::new();
+    front.drain(&mut evs).unwrap();
+    let report = front.sim.report(horizon);
+    let att = report.online_attainment.0.min(report.online_attainment.1);
+    let stats = format!("{:?}", front.sim.guard_stats());
+    let metrics = format!("{:?}", front.sim.all_metrics());
+    (tickets, evs, att, stats, metrics)
+}
+
+#[test]
+fn guard_never_hurts_attainment_and_every_ticket_terminates() {
+    for &seed in &[11u64, 42] {
+        let (_, _, unguarded_att, ..) = burst_run(seed, 2, 1, None);
+        let (tickets, evs, guarded_att, stats, _) = burst_run(seed, 2, 1, Some(test_guard()));
+        assert_all_terminal(&tickets, &evs, &format!("guarded burst seed {seed}"));
+        // The guard only ever *removes* offline interference (caps, pauses,
+        // preempts offline work); it has no actuator that can slow online
+        // traffic, so measured attainment must be at least the unguarded
+        // fleet's on the identical trace.
+        assert!(
+            guarded_att >= unguarded_att - 1e-9,
+            "seed {seed}: guard worsened attainment \
+             ({guarded_att:.4} < {unguarded_att:.4}); {stats}"
+        );
+    }
+}
+
+#[test]
+fn hysteresis_never_round_trips_within_one_window() {
+    // An unattainable SLO: every online completion is a miss, so the
+    // ladder climbs while traffic flows and ratchets back down (vacuous
+    // empty-window attainment) once it stops — at least one full
+    // excursion above Normal and back.
+    let mut cc = fleet_cfg(5, 2, 1, Slo::new(1e-3, 1e-4));
+    let gcfg = test_guard();
+    cc.guard = Some(gcfg);
+    let mut front = ClusterServe::new(cc);
+    front
+        .submit_offline_jobs(offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 8, 5))
+        .unwrap();
+    for i in 0..8 {
+        let spec = SubmitSpec::online(PromptSpec::sim(200, None), 4);
+        front.submit(spec.at(0.2 + 0.5 * i as f64)).unwrap();
+    }
+    // Sample the ladder one sync quantum at a time.
+    let mut timeline: Vec<(f64, u8)> = Vec::new();
+    let mut t = 0.0;
+    while t < 30.0 {
+        t += 0.25;
+        front.run_until(t, &mut NullSink).unwrap();
+        timeline.push((t, front.sim.guard_decision().level.as_u8()));
+    }
+    let stats = front.sim.guard_stats();
+    assert!(stats.escalations >= 1, "ladder must climb: {stats:?}");
+    assert!(stats.deescalations >= 1, "ladder must recover: {stats:?}");
+    // Every excursion above Normal must last at least one full window:
+    // de-escalating the last rung requires min_dwell >= window there.
+    let mut up_at: Option<f64> = None;
+    let mut excursions = 0;
+    for &(at, level) in &timeline {
+        match (up_at, level) {
+            (None, l) if l > 0 => up_at = Some(at),
+            (Some(started), 0) => {
+                excursions += 1;
+                assert!(
+                    at - started >= gcfg.window - 1e-9,
+                    "excursion [{started:.2}, {at:.2}) round-tripped inside \
+                     one {}s window",
+                    gcfg.window
+                );
+                up_at = None;
+            }
+            _ => {}
+        }
+    }
+    assert!(
+        excursions >= 1 || up_at.is_some(),
+        "the impossible SLO must push the ladder above Normal"
+    );
+}
+
+#[test]
+fn armed_guard_parallel_matches_serial() {
+    for &replicas in &[2usize, 4] {
+        let serial = burst_run(17, replicas, 1, Some(test_guard()));
+        for &threads in &[2usize, 4] {
+            let par = burst_run(17, replicas, threads, Some(test_guard()));
+            assert_eq!(
+                format!("{:?}", serial.1),
+                format!("{:?}", par.1),
+                "event streams diverged ({replicas}r x {threads}t)"
+            );
+            assert_eq!(serial.3, par.3, "guard stats diverged ({replicas}r x {threads}t)");
+            assert_eq!(serial.4, par.4, "metrics diverged ({replicas}r x {threads}t)");
+        }
+    }
+}
+
+#[test]
+fn crash_during_brownout_recovers_to_normal() {
+    let mut cc = fleet_cfg(7, 2, 1, Slo::new(1e-3, 1e-4));
+    cc.guard = Some(test_guard());
+    cc.faults = FaultPlan {
+        events: vec![FaultEvent::Crash { at: 2.0, replica: 0 }],
+        seed: 7,
+    };
+    let mut front = ClusterServe::new(cc);
+    let mut tickets: Vec<TicketId> = front
+        .submit_offline_jobs(offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 10, 7))
+        .unwrap()
+        .iter()
+        .map(|t| t.id)
+        .collect();
+    for i in 0..10 {
+        let spec = SubmitSpec::online(PromptSpec::sim(200, None), 4);
+        tickets.push(front.submit(spec.at(0.2 + 0.4 * i as f64)).unwrap().id);
+    }
+    // Step to the crash instant: the impossible SLO has already pushed the
+    // fleet above Normal, so the crash lands mid-brownout.
+    front.run_until(2.0, &mut NullSink).unwrap();
+    assert!(
+        front.sim.guard_decision().level > BrownoutLevel::Normal,
+        "fleet must be browned out before the crash: {:?}",
+        front.sim.guard_stats()
+    );
+    let mut evs: Vec<TokenEvent> = Vec::new();
+    front.drain(&mut evs).unwrap();
+    assert_all_terminal(&tickets, &evs, "crash during brownout");
+    assert_eq!(front.sim.fault_stats.crashes, 1, "{:?}", front.sim.fault_stats);
+    let stats = front.sim.guard_stats();
+    assert!(stats.deescalations >= 1, "ladder must ratchet down: {stats:?}");
+    assert_eq!(
+        front.sim.guard_decision().level,
+        BrownoutLevel::Normal,
+        "a drained fleet must settle at Normal: {stats:?}"
+    );
+}

@@ -155,6 +155,7 @@ fn cancelled_events_carry_typed_reasons_on_the_wire() {
         CancelReason::Unschedulable,
         CancelReason::Stalled,
         CancelReason::ShedOverload,
+        CancelReason::Shed,
         CancelReason::DeadlineExpired,
         CancelReason::ReplicaFailed,
     ] {
@@ -232,6 +233,13 @@ fn session_transcript_shape() {
     let sub1 = Json::parse(&transcript[1][0]).unwrap();
     assert_eq!(sub1.get("ticket").and_then(|v| v.as_u64()), Some(1));
     assert_eq!(sub1.get("class").and_then(|v| v.as_str()), Some("offline"));
+    // Every submit ack carries the SLO-guard admission verdict (PR 9);
+    // an unguarded single-engine deployment always accepts, with no
+    // retry_after hint.
+    for sub in [&sub0, &sub1] {
+        assert_eq!(sub.get("verdict").and_then(|v| v.as_str()), Some("accept"));
+        assert!(sub.get("retry_after").is_none(), "accept carries no hint");
+    }
 
     // Stream of ticket 0: first_token + 3 tokens + finished, then summary.
     let stream = &transcript[2];
