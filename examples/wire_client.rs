@@ -1,17 +1,32 @@
-//! Client for the `echo serve` wire front door: submits online + offline
-//! work over TCP, streams per-token events, cancels a ticket, and reads
-//! the metrics snapshot. The same script works against one engine
-//! (`echo serve`) or a fleet (`echo serve --replicas 4`).
+//! Reference client for the `echo serve` wire front door: durable sessions
+//! end to end (PR 10). Submits carry idempotency keys so a resubmit after a
+//! dropped connection lands on the same ticket instead of double-executing;
+//! `retry`/`shed` verdicts (PR 9 backpressure) are honored with
+//! seeded-deterministic jittered backoff around the server's `retry_after`
+//! hint; and streams resume with `stream {from_seq}` after an
+//! auto-reconnect, so every token arrives exactly once, in order. The same
+//! script works against one engine (`echo serve`) or a fleet; without
+//! `--durable` it degrades to the plain (non-resumable) protocol.
 //!
 //!     # terminal 1
-//!     cargo run --release -- serve --listen 127.0.0.1:7878
+//!     cargo run --release -- serve --listen 127.0.0.1:7878 --replicas 4 --durable
 //!     # terminal 2
-//!     cargo run --release --example wire_client -- 127.0.0.1:7878
+//!     cargo run --release --example wire_client -- 127.0.0.1:7878 [seed]
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use echo::utils::json::Json;
+use echo::utils::rng::Rng;
+
+/// Ceiling on a single backoff sleep so a stale `retry_after` hint cannot
+/// wedge the example.
+const MAX_BACKOFF_S: f64 = 2.0;
+/// Reconnect attempts before giving up on the server entirely.
+const MAX_RECONNECTS: u32 = 8;
+/// Submit attempts (shed/retry verdicts + dropped connections) per key.
+const MAX_SUBMITS: u32 = 32;
 
 struct Client {
     reader: BufReader<TcpStream>,
@@ -35,8 +50,11 @@ impl Client {
 
     fn recv(&mut self) -> anyhow::Result<Json> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        Ok(Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))?)
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            anyhow::bail!("connection closed by server");
+        }
+        Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad reply: {e}"))
     }
 
     /// Send one request expecting exactly one reply line.
@@ -46,46 +64,197 @@ impl Client {
     }
 }
 
-fn main() -> anyhow::Result<()> {
-    let addr = std::env::args().nth(1).unwrap_or_else(|| "127.0.0.1:7878".into());
-    let mut c = Client::connect(&addr)?;
+/// Seeded jittered backoff. The server's `retry_after` hint (when present)
+/// is the floor; exponential growth covers repeated verdicts and the jitter
+/// spreads clients out so a shed herd does not return in lockstep. Seeded
+/// via [`Rng`], so a given seed replays the exact same schedule.
+fn backoff(rng: &mut Rng, hint: Option<f64>, attempt: u32) -> Duration {
+    let base = hint.unwrap_or(0.05).max(0.01);
+    let scaled = base * f64::from(1u32 << attempt.min(5));
+    let jittered = scaled * (1.0 + 0.5 * rng.f64());
+    Duration::from_secs_f64(jittered.min(MAX_BACKOFF_S))
+}
 
-    // Submit two online requests and an offline one.
-    let submit = |len: usize, class: &str, max: usize| {
-        Json::obj()
-            .set("verb", "submit")
-            .set("class", class)
-            .set("prompt_len", len)
-            .set("max_new_tokens", max)
-    };
-    let r1 = c.call(submit(200, "online", 8))?;
-    let t1 = r1.get("ticket").and_then(|v| v.as_u64()).expect("ticket");
-    println!("submitted online ticket {t1}: {r1}");
-    let r2 = c.call(submit(5000, "offline", 64))?;
-    let t2 = r2.get("ticket").and_then(|v| v.as_u64()).expect("ticket");
-    println!("submitted offline ticket {t2}: {r2}");
+/// Re-dial the server with jittered backoff between attempts.
+fn reconnect(addr: &str, rng: &mut Rng) -> anyhow::Result<Client> {
+    for attempt in 0..MAX_RECONNECTS {
+        match Client::connect(addr) {
+            Ok(c) => return Ok(c),
+            Err(e) => {
+                let wait = backoff(rng, None, attempt);
+                eprintln!("reconnect to {addr} failed ({e}); retrying in {wait:?}");
+                std::thread::sleep(wait);
+            }
+        }
+    }
+    anyhow::bail!("could not reach {addr} after {MAX_RECONNECTS} attempts")
+}
 
-    // Stream ticket t1 to completion: event lines, then a stream summary.
-    c.send(&Json::obj().set("verb", "stream").set("ticket", t1))?;
-    loop {
-        let line = c.recv()?;
-        if let Some(ev) = line.get("event").and_then(|v| v.as_str()) {
+/// Submit with an idempotency key. `retry`/`shed` verdicts back off around
+/// the server's hint and resubmit; a dropped connection reconnects and
+/// resubmits the *same key* — the journal dedupes, so the work is admitted
+/// exactly once no matter how many acks we lost.
+fn submit_durable(
+    c: &mut Client,
+    addr: &str,
+    rng: &mut Rng,
+    key: u64,
+    class: &str,
+    prompt_len: usize,
+    max_new_tokens: usize,
+) -> anyhow::Result<u64> {
+    let req = Json::obj()
+        .set("verb", "submit")
+        .set("class", class)
+        .set("prompt_len", prompt_len)
+        .set("max_new_tokens", max_new_tokens)
+        .set("key", key);
+    for attempt in 0..MAX_SUBMITS {
+        let reply = match c.send(&req).and_then(|()| c.recv()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("submit {key}: connection lost ({e}); reconnecting");
+                *c = reconnect(addr, rng)?;
+                continue; // same key: replay-safe
+            }
+        };
+        if reply.get("ok").and_then(|v| v.as_bool()) != Some(true) {
+            anyhow::bail!("submit {key}: server error: {reply}");
+        }
+        let ticket = reply.get("ticket").and_then(|v| v.as_u64());
+        if reply.get("replayed").and_then(|v| v.as_bool()) == Some(true) {
             println!(
-                "  event {ev:>12}  ticket {}  at {:.3}s",
-                line.get("ticket").and_then(|v| v.as_u64()).unwrap_or(0),
-                line.get("at").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                "submit {key}: journal replay -> ticket {}",
+                ticket.unwrap_or(0)
             );
+        }
+        match reply.get("verdict").and_then(|v| v.as_str()) {
+            Some("retry") | Some("shed") => {
+                let hint = reply.get("retry_after").and_then(|v| v.as_f64());
+                let wait = backoff(rng, hint, attempt);
+                println!(
+                    "submit {key}: verdict {} (retry_after {:?}); backing off {wait:?}",
+                    reply.get("verdict").and_then(|v| v.as_str()).unwrap_or("?"),
+                    hint
+                );
+                std::thread::sleep(wait);
+            }
+            _ => match ticket {
+                Some(t) => return Ok(t),
+                None => anyhow::bail!("submit {key}: ack without a ticket: {reply}"),
+            },
+        }
+    }
+    anyhow::bail!("submit {key}: still shed after {MAX_SUBMITS} attempts")
+}
+
+/// Stream a ticket to its terminal event, resuming across dropped
+/// connections. Durable tickets carry a `seq` on every event and a
+/// `next_seq` on the stream summary; after a reconnect we ask for
+/// `stream {from_seq: next_seq}` and the journal replays exactly the
+/// events we have not seen. Non-durable tickets (journal disarmed) stream
+/// once without resume.
+fn stream_resumable(
+    c: &mut Client,
+    addr: &str,
+    rng: &mut Rng,
+    ticket: u64,
+) -> anyhow::Result<usize> {
+    let mut next_seq: Option<u64> = None;
+    let mut delivered = 0usize;
+    loop {
+        let mut req = Json::obj().set("verb", "stream").set("ticket", ticket);
+        if let Some(s) = next_seq {
+            req = req.set("from_seq", s);
+        }
+        if let Err(e) = c.send(&req) {
+            eprintln!("stream {ticket}: connection lost ({e}); reconnecting");
+            *c = reconnect(addr, rng)?;
             continue;
         }
-        println!("stream done: {line}");
-        break;
+        loop {
+            let line = match c.recv() {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("stream {ticket}: connection lost ({e}); reconnecting");
+                    *c = reconnect(addr, rng)?;
+                    break; // re-issue the stream verb from next_seq
+                }
+            };
+            if let Some(ev) = line.get("event").and_then(|v| v.as_str()) {
+                // Durable event lines carry their journal sequence number;
+                // remember seq+1 so a resume never re-delivers this event.
+                if let Some(seq) = line.get("seq").and_then(|v| v.as_u64()) {
+                    next_seq = Some(seq + 1);
+                }
+                delivered += 1;
+                println!(
+                    "  event {ev:>12}  ticket {}  at {:.3}s{}",
+                    line.get("ticket").and_then(|v| v.as_u64()).unwrap_or(0),
+                    line.get("at").and_then(|v| v.as_f64()).unwrap_or(0.0),
+                    match line.get("seq").and_then(|v| v.as_u64()) {
+                        Some(s) => format!("  seq {s}"),
+                        None => String::new(),
+                    },
+                );
+                continue;
+            }
+            // Stream summary line.
+            if let Some(n) = line.get("next_seq").and_then(|v| v.as_u64()) {
+                next_seq = Some(n);
+            }
+            if line.get("gap").and_then(|v| v.as_bool()) == Some(true) {
+                eprintln!("stream {ticket}: journal gap — early events were evicted");
+            }
+            if line.get("done").and_then(|v| v.as_bool()) == Some(true) {
+                println!("stream done: {line}");
+                return Ok(delivered);
+            }
+            // Not done (stalled or non-durable partial): if the ticket is
+            // durable we can simply re-issue from next_seq; otherwise stop.
+            if next_seq.is_some() {
+                break;
+            }
+            println!("stream ended without terminal event: {line}");
+            return Ok(delivered);
+        }
     }
+}
+
+fn main() -> anyhow::Result<()> {
+    let addr = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "127.0.0.1:7878".into());
+    let seed = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(42);
+    let mut rng = Rng::new(seed);
+    let mut c = reconnect(&addr, &mut rng)?;
+
+    // Submit an online request and an offline one, each under an
+    // idempotency key derived from the seed: re-running this client with
+    // the same seed against a durable server replays instead of re-running.
+    let k1 = seed.wrapping_mul(1000) + 1;
+    let k2 = seed.wrapping_mul(1000) + 2;
+    let t1 = submit_durable(&mut c, &addr, &mut rng, k1, "online", 200, 8)?;
+    println!("submitted online ticket {t1} (key {k1})");
+    let t2 = submit_durable(&mut c, &addr, &mut rng, k2, "offline", 5000, 64)?;
+    println!("submitted offline ticket {t2} (key {k2})");
+
+    // Stream the online ticket to completion, resuming across drops.
+    let n = stream_resumable(&mut c, &addr, &mut rng, t1)?;
+    println!("ticket {t1}: {n} event(s) delivered");
+
+    // Ack releases the journal entry (otherwise the terminal TTL does).
+    let r = c.call(Json::obj().set("verb", "ack").set("ticket", t1))?;
+    println!("ack ticket {t1}: {r}");
 
     // Cancel the offline job (cheap harvest of abandoned work).
     let r = c.call(Json::obj().set("verb", "cancel").set("ticket", t2))?;
     println!("cancel ticket {t2}: {r}");
 
-    // Metrics snapshot.
+    // Metrics snapshot (includes journal counters when durable).
     let m = c.call(Json::obj().set("verb", "metrics"))?;
     println!("metrics: {m}");
     Ok(())

@@ -28,6 +28,15 @@
 //!     (target 0.0: the controller folds fleet histograms and runs the
 //!     control law every quantum yet never actuates); fixed iteration
 //!     counts, so `--gate-slo` sees real timings even under `--quick`
+//!   * journal-step pair — the serve pump loop with the durable-session
+//!     journal disarmed (one `Option` check) vs armed but idle (no keyed
+//!     submits, so every pump pays exactly the `is_empty()` fast path);
+//!     fixed iteration counts, so `--gate-durable` sees real timings even
+//!     under `--quick`
+//!   * health-tick pair — a fleet quantum with no gray-failure monitor vs
+//!     the monitor armed on a healthy fleet (every quantum folds each
+//!     replica's drift window; no transition ever fires); fixed iteration
+//!     counts, so `--gate-durable` sees real timings even under `--quick`
 //!   * KV manager hot paths at 1k/16k/64k blocks — pre-PR `OracleKvManager`
 //!     (global BTreeSet free table, scan-per-call availability) vs. the
 //!     bucketed victim index: allocate+release cycle, `availability()`,
@@ -42,7 +51,7 @@
 //!
 //! Flags (after `--`):
 //!   `--bench-json <path>`        write the machine-readable report
-//!                                (default name: BENCH_PR9.json) and
+//!                                (default name: BENCH_PR10.json) and
 //!                                self-validate it by re-parsing
 //!   `--quick`                    tiny iteration counts (CI smoke: proves
 //!                                the harness runs headless; micro timings
@@ -70,6 +79,12 @@
 //!                                noise band of the guardless quantum, and
 //!                                the steady-state engine step stays
 //!                                allocation-free with the controller off
+//!   `--gate-durable`             fail unless the armed-idle journal pump
+//!                                and the armed-healthy health tick each
+//!                                stay within the noise band of their
+//!                                disarmed twins, and the steady-state
+//!                                engine step stays allocation-free with
+//!                                both disarmed
 //!   `--write-experiments <path>` rewrite the `<!-- perf:begin/end -->`
 //!                                block of EXPERIMENTS.md with the
 //!                                before/after table
@@ -80,7 +95,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use echo::cluster::{
-    offline_jobs, ClusterConfig, ClusterSim, LoadDigest, OnlineJob, PrefixSummary, Router,
+    offline_jobs, ClusterConfig, ClusterSim, HealthConfig, LoadDigest, OnlineJob, PrefixSummary,
+    Router,
 };
 use echo::config::{SchedulerKind, SystemConfig};
 use echo::core::{PromptSpec, Request, RequestStore, TaskClass};
@@ -88,7 +104,7 @@ use echo::engine::{sim::SimBackend, Engine};
 use echo::estimator::{BatchShape, PrefillItem, TimeModel, TrialShape};
 use echo::kvcache::{Availability, EvictionPolicy, KvManager, OracleKvManager};
 use echo::scheduler::{OfflinePool, OracleScheduler, RadixIndex, Scheduler};
-use echo::serve::{EngineServe, NullSink, Serve, SubmitSpec};
+use echo::serve::{EngineServe, JournalConfig, NullSink, Serve, SubmitSpec};
 use echo::slo::SloGuardConfig;
 use echo::utils::json::Json;
 use echo::utils::rng::Rng;
@@ -312,6 +328,12 @@ impl Harness {
         if let Some(s) = self.speedup("slo-tick", 4) {
             speedups = speedups.set("slo-tick@4", s);
         }
+        if let Some(s) = self.speedup("journal-step", 8) {
+            speedups = speedups.set("journal-step@8", s);
+        }
+        if let Some(s) = self.speedup("health-tick", 4) {
+            speedups = speedups.set("health-tick@4", s);
+        }
         // Gate-coverage manifest (echo-lint G1): record which paths CI
         // asserts on and why the rest are tracked-only, so the report is
         // self-describing.
@@ -321,7 +343,7 @@ impl Harness {
             .map(|&(p, why)| Json::obj().set("path", p).set("reason", why))
             .collect();
         Json::obj()
-            .set("bench", "BENCH_PR9")
+            .set("bench", "BENCH_PR10")
             .set(
                 "note",
                 "baseline = pre-PR code paths (clone-trial scheduler, full \
@@ -505,6 +527,7 @@ impl SyncReplica {
             free_blocks: 1000,
             block_size: 16,
             draining: false,
+            degraded: false,
             summary,
         }
     }
@@ -568,7 +591,7 @@ const KV_GATE_PATHS: [&str; 4] = [
 
 /// Paths asserted by a `--gate-*` flag (`--gate-kv` covers the four KV
 /// pairs across `KV_SIZES`; fleet/obs/faults gate their single path).
-const GATED_PAIRS: [&str; 8] = [
+const GATED_PAIRS: [&str; 10] = [
     "kv-alloc-release",
     "kv-availability",
     "kv-requeue-storm",
@@ -577,6 +600,8 @@ const GATED_PAIRS: [&str; 8] = [
     "obs-step",
     "faults-step",
     "slo-tick",
+    "journal-step",
+    "health-tick",
 ];
 
 /// Measured-but-ungated paths, each with the reason no CI assertion holds
@@ -755,7 +780,7 @@ fn bench_kv_pairs(h: &mut Harness, size: usize, variant: &str) {
     // churn on middle-aged cached keys re-inserts at mid-bucket positions,
     // where the ordered intrusive list pays O(distance-to-nearer-end) per
     // link vs the oracle's O(log n) BTreeSet — the one pattern the bucket
-    // design trades away. Kept visible in BENCH_PR9.json so the perf
+    // design trades away. Kept visible in BENCH_PR10.json so the perf
     // trajectory tracks it; a skip-hint can reclaim it if real workloads
     // ever look like this.
     let mid = warm.len() / 2;
@@ -1230,6 +1255,95 @@ fn bench_slo_tick(h: &mut Harness, variant: &str) {
     );
 }
 
+// ---- durable sessions: journal + health-monitor overhead (PR 10) -----------
+
+/// The PR 10 pump pair: the single-engine serve pump with the
+/// durable-session journal disarmed (`baseline` — the journal `Option` is
+/// never even constructed) vs armed but idle (`incremental` — the journal
+/// exists but no submit carried an idempotency key, so every pump pays
+/// exactly the `is_empty()` fast path and never materializes events).
+/// `--gate-durable` holds the armed side to the shared 5% noise band.
+fn bench_journal_step(h: &mut Harness, variant: &str) {
+    let armed = variant == "incremental";
+    let mode = if armed { "journal armed-idle" } else { "journal off" };
+    let cfg = {
+        let mut c = SystemConfig::a100_llama8b();
+        c.seed = 13;
+        c.scheduler.max_batch = 16;
+        c
+    };
+    let backend = SimBackend::new(TimeModel::new(cfg.time_model), 13, 0.0);
+    let mut front = EngineServe::new(Engine::new(cfg, backend));
+    if armed {
+        assert!(front.arm_journal(JournalConfig::default()), "engine front arms");
+        assert!(
+            front.journal().is_some_and(|j| j.is_empty()),
+            "the armed side must stay idle (no keyed submits)"
+        );
+    }
+    // A deep keyless offline pool so every pump advances real work and the
+    // journal (when armed) stays empty.
+    for i in 0..64usize {
+        front
+            .submit(SubmitSpec::offline(
+                PromptSpec::sim(600 + (i % 7) * 100, None),
+                32,
+            ))
+            .unwrap();
+    }
+    let mut sink = NullSink;
+    h.bench_fixed(
+        &format!("serve pump [{mode}] (64-job offline pool)"),
+        "journal-step",
+        variant,
+        8,
+        500,
+        || {
+            front.pump(&mut sink).unwrap();
+        },
+    );
+}
+
+/// The PR 10 quantum pair: one fleet quantum with no gray-failure monitor
+/// (`baseline` — the health tick is one `is_none` branch) vs the monitor
+/// armed on a healthy fleet (`incremental` — every quantum folds each
+/// replica's drift window against the coordinator clock; the estimator
+/// tracks actuals, so no window ever judges bad and no transition fires).
+/// The armed-healthy fleet is bit-exact with the disarmed one by
+/// construction (see `cluster::sim` tests), so the ratio isolates pure
+/// monitor cost. `--gate-durable` holds the armed side to the shared 5%
+/// noise band.
+fn bench_health_tick(h: &mut Harness, variant: &str) {
+    let armed = variant == "incremental";
+    let mode = if armed { "monitor armed-healthy" } else { "monitor off" };
+    let mut base = SystemConfig::a100_llama8b();
+    base.seed = 11;
+    base.cache.capacity_tokens = 30_000;
+    base.scheduler.max_batch = 16;
+    let mut cc = ClusterConfig::new(base, 4);
+    if armed {
+        cc.health = Some(HealthConfig::default());
+    }
+    let mut sim = ClusterSim::new(cc);
+    sim.submit_offline_backlog(offline_jobs(&DatasetSpec::loogle_qa_short(), 2000, 11));
+    sim.begin();
+    let dt = 0.25;
+    let mut t = 0.0;
+    h.bench_fixed(
+        &format!("fleet quantum [{mode}] (4 replicas, offline flood)"),
+        "health-tick",
+        variant,
+        4,
+        400,
+        || {
+            let t_end = t + dt;
+            sim.advance_replicas(t, t_end).unwrap();
+            sim.finish_quantum(t_end);
+            t = t_end;
+        },
+    );
+}
+
 #[cfg(not(feature = "runtime"))]
 fn bench_pjrt() {
     println!("pjrt step: skipped (built without the `runtime` feature)");
@@ -1380,10 +1494,11 @@ fn main() {
     let gate_obs = args.iter().any(|a| a == "--gate-obs");
     let gate_faults = args.iter().any(|a| a == "--gate-faults");
     let gate_slo = args.iter().any(|a| a == "--gate-slo");
+    let gate_durable = args.iter().any(|a| a == "--gate-durable");
     let json_path = args
         .iter()
         .position(|a| a == "--bench-json")
-        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR9.json".into()));
+        .map(|i| args.get(i + 1).cloned().unwrap_or_else(|| "BENCH_PR10.json".into()));
     let experiments_path = args
         .iter()
         .position(|a| a == "--write-experiments")
@@ -1421,6 +1536,12 @@ fn main() {
     for variant in ["baseline", "incremental"] {
         bench_slo_tick(&mut h, variant);
     }
+    for variant in ["baseline", "incremental"] {
+        bench_journal_step(&mut h, variant);
+    }
+    for variant in ["baseline", "incremental"] {
+        bench_health_tick(&mut h, variant);
+    }
     bench_kv_ops(&mut h);
     bench_radix(&mut h);
     bench_estimator(&mut h);
@@ -1456,6 +1577,12 @@ fn main() {
     }
     if let Some(s) = h.speedup("slo-tick", 4) {
         println!("speedup slo-tick@4 (guardless vs armed-idle): {s:.2}x");
+    }
+    if let Some(s) = h.speedup("journal-step", 8) {
+        println!("speedup journal-step@8 (disarmed vs armed-idle): {s:.2}x");
+    }
+    if let Some(s) = h.speedup("health-tick", 4) {
+        println!("speedup health-tick@4 (unmonitored vs armed-healthy): {s:.2}x");
     }
     if gate_fleet {
         let s = fleet_speedup(&h, 16, 4).expect("fleet-step@16x4 must be measured");
@@ -1571,13 +1698,47 @@ fn main() {
         }
     }
 
+    if gate_durable {
+        let js = h
+            .speedup("journal-step", 8)
+            .expect("journal-step pair must be measured");
+        let ht = h
+            .speedup("health-tick", 4)
+            .expect("health-tick pair must be measured");
+        println!("durable gate: armed-idle vs disarmed serve pump = {js:.2}x");
+        println!("durable gate: armed-healthy vs unmonitored fleet quantum = {ht:.2}x");
+        // Same 5% noise band as the other gates: an idle journal is one
+        // `is_empty()` check per pump, and a healthy monitor tick is one
+        // subtraction + compare per replica per quantum — both orders of
+        // magnitude below the scheduling work they ride on, so a
+        // below-band reading means durability started doing real work (or
+        // allocating) on a hot path.
+        assert!(
+            js >= 0.95,
+            "an armed-but-idle journal must not slow the serve pump beyond \
+             the noise band (measured {js:.2}x, gate 0.95x)"
+        );
+        assert!(
+            ht >= 0.95,
+            "an armed-but-healthy gray-failure monitor must not slow the \
+             fleet quantum beyond the noise band (measured {ht:.2}x, gate 0.95x)"
+        );
+        if cfg!(not(debug_assertions)) {
+            assert_eq!(
+                alloc.steady, 0,
+                "durable gate: with journal and monitor disarmed the \
+                 steady-state engine step must stay allocation-free"
+            );
+        }
+    }
+
     if let Some(path) = json_path {
         let j = h.to_json(quick, &alloc);
         let text = j.pretty();
         std::fs::write(&path, &text).expect("write bench json");
         // Self-validate: the emitted report must round-trip through the
         // in-repo JSON parser (the CI smoke step relies on this).
-        let parsed = Json::parse(&text).expect("BENCH_PR9.json must parse");
+        let parsed = Json::parse(&text).expect("BENCH_PR10.json must parse");
         let n = parsed
             .get("entries")
             .and_then(|e| e.as_arr())

@@ -110,6 +110,12 @@ fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     )
     .opt("listen", "127.0.0.1:7878", "TCP bind address")
     .flag("stdio", "speak the protocol on stdin/stdout instead of TCP")
+    .flag(
+        "durable",
+        "arm the durable-session journal: idempotency-keyed submits are \
+         replay-safe and streams resume via {from_seq} after a disconnect \
+         (fleet mode, --replicas > 1)",
+    )
     .opt(
         "trace-out",
         "",
@@ -125,6 +131,15 @@ fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
     let listen = args.str("listen");
     let trace_out = args.str("trace-out");
     if replicas == 1 {
+        if args.flag("durable") {
+            // The threaded server fans events out on another thread; the
+            // journal's exactly-once replay contract needs the virtual
+            // clock pump. Refuse loudly rather than half-honor it.
+            eprintln!(
+                "echo serve: --durable needs the co-simulated fleet \
+                 (--replicas > 1); ignoring"
+            );
+        }
         let backend = SimBackend::new(TimeModel::new(cfg.time_model), seed, 0.0);
         let mut engine = Engine::new(cfg, backend);
         if !trace_out.is_empty() {
@@ -149,6 +164,9 @@ fn serve(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
             cc.trace_events = crate::obs::DEFAULT_TRACE_EVENTS;
         }
         let mut front = ClusterServe::new(cc);
+        if args.flag("durable") {
+            front.arm_journal(crate::serve::JournalConfig::default());
+        }
         if args.flag("stdio") {
             wire::serve_stdio(&mut front)?;
         } else {
@@ -426,6 +444,11 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         "static offline tokens-per-quantum reservation per replica (0 = off; \
          composes with --slo-guard as a ceiling)",
     )
+    .flag(
+        "quarantine",
+        "arm the gray-failure monitor: estimator-drift health ladder; sick \
+         replicas are routed around, drained, and respawned under fresh ids",
+    )
     .opt(
         "chaos-seed",
         "0",
@@ -463,6 +486,9 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
         g.target = args.f64("guard-target").map_err(anyhow::Error::msg)?.clamp(0.0, 1.0);
         g.recover = g.recover.max(g.target);
         cc.guard = Some(g);
+    }
+    if args.flag("quarantine") {
+        cc.health = Some(crate::cluster::HealthConfig::default());
     }
     let chaos_seed = args.u64("chaos-seed").map_err(anyhow::Error::msg)?;
     if chaos_seed != 0 {
@@ -594,6 +620,16 @@ fn cluster(program: &str, argv: Vec<String>) -> anyhow::Result<()> {
             report.faults.shed_offline,
             report.faults.shed_online,
             report.faults.stalled_cancels
+        );
+    }
+    if args.flag("quarantine") {
+        println!(
+            "quarantine: {} probation(s), {} recovery(ies), {} quarantine(s), \
+             {} respawn(s)",
+            report.health.probations,
+            report.health.recoveries,
+            report.health.quarantines,
+            report.health.respawns
         );
     }
     if args.flag("slo-guard") {

@@ -1,0 +1,315 @@
+//! Gray-failure detection and quarantine (PR 10).
+//!
+//! A crashed replica is easy: PR 7's fault machinery sees the fault and
+//! harvests the wreck. A *gray* failure — thermal throttling, a noisy
+//! neighbor, a sick NIC — keeps the replica alive and answering syncs
+//! while silently running N× slower. The fleet signal that exposes it is
+//! already on the books: the execution-time estimator (paper §5.1) keeps
+//! predicting the healthy latency while actuals inflate, so the replica's
+//! windowed mean *signed* relative error (see
+//! [`crate::estimator::DriftWindow`]) swings hard negative. A slowdown of
+//! factor `F` biases the mean toward `-(1 - 1/F)`.
+//!
+//! Per replica, a hysteresis ladder folds those windows:
+//!
+//! ```text
+//! Healthy --bad×probation_after--> Probation --bad×quarantine_after--> Quarantined
+//!    ^                                 |
+//!    +------good×recover_after---------+
+//! ```
+//!
+//! * **Probation**: the router stops dispatching new online work to the
+//!   replica (`LoadDigest::degraded`) and work-stealing skips it, but
+//!   running requests finish and its offline pool drains — a cheap,
+//!   reversible brown-listing.
+//! * **Quarantined**: the coordinator steals everything away (reusing the
+//!   crash-recovery harvest path), retires the replica, and respawns a
+//!   fresh one under a **new replica id** — which heals id-keyed
+//!   `Slowdown` faults the way a process restart heals a wedged host.
+//!
+//! All folding happens in the coordinator phase of the sync quantum, so
+//! parallel and serial pumps see bit-identical ladders. Disarmed
+//! (`ClusterConfig::health = None`) the whole subsystem is one `is_none`
+//! branch per quantum.
+
+use crate::estimator::{DriftSample, DriftWindow};
+use crate::utils::json::Json;
+
+/// Rung on the per-replica health ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum HealthState {
+    Healthy,
+    /// No new online dispatch; offline drains; fully reversible.
+    Probation,
+    /// Drain, harvest, respawn under a fresh id.
+    Quarantined,
+}
+
+impl HealthState {
+    pub fn as_u8(self) -> u8 {
+        match self {
+            HealthState::Healthy => 0,
+            HealthState::Probation => 1,
+            HealthState::Quarantined => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Probation => "probation",
+            HealthState::Quarantined => "quarantined",
+        }
+    }
+}
+
+/// Knobs for the gray-failure monitor. Defaults detect a sustained 2×
+/// slowdown within ~4 windows while shrugging off single noisy windows.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// Drift-window length (virtual seconds).
+    pub window: f64,
+    /// Slowdown factor treated as sick: a window is *bad* when its mean
+    /// signed relative error ≤ `-(1 - 1/inflation_threshold)` (factor 2
+    /// → threshold -0.5).
+    pub inflation_threshold: f64,
+    /// Minimum estimator samples in a window to judge it at all.
+    pub min_samples: u64,
+    /// Consecutive bad windows before Healthy → Probation.
+    pub probation_after: u32,
+    /// Further consecutive bad windows before Probation → Quarantined.
+    pub quarantine_after: u32,
+    /// Consecutive clean windows before Probation → Healthy.
+    pub recover_after: u32,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            window: 2.0,
+            inflation_threshold: 2.0,
+            min_samples: 8,
+            probation_after: 2,
+            quarantine_after: 2,
+            recover_after: 3,
+        }
+    }
+}
+
+impl HealthConfig {
+    /// Bad-window threshold on the mean signed relative error implied by
+    /// `inflation_threshold`.
+    pub fn bias_threshold(&self) -> f64 {
+        -(1.0 - 1.0 / self.inflation_threshold.max(1.0 + 1e-9))
+    }
+}
+
+/// Per-replica ladder slot, owned by the replica itself — a respawn under
+/// a fresh id starts from a clean `Healthy` slate by construction.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaHealth {
+    pub state: HealthState,
+    drift: DriftWindow,
+    bad_windows: u32,
+    good_windows: u32,
+}
+
+impl ReplicaHealth {
+    pub fn new(window: f64) -> Self {
+        ReplicaHealth {
+            state: HealthState::Healthy,
+            drift: DriftWindow::new(window),
+            bad_windows: 0,
+            good_windows: 0,
+        }
+    }
+
+    /// True when the router should route around this replica.
+    #[inline]
+    pub fn degraded(&self) -> bool {
+        self.state != HealthState::Healthy
+    }
+
+    /// Fold one coordinator tick of the replica's cumulative estimator
+    /// error. Returns `Some((from, to))` when the ladder moved.
+    // lint: hot-path
+    pub fn tick(
+        &mut self,
+        now: f64,
+        cum_err_sum: f64,
+        cum_samples: u64,
+        cfg: &HealthConfig,
+    ) -> Option<(HealthState, HealthState)> {
+        let bad = match self.drift.fold(now, cum_err_sum, cum_samples, cfg.min_samples) {
+            DriftSample::Open => return None,
+            // A sparse window is no evidence of sickness. For a degraded
+            // replica it counts as clean — probation starves it of online
+            // dispatch, so demanding fresh samples would pin it on the
+            // ladder forever. For a healthy replica it is neutral.
+            DriftSample::Sparse => {
+                if self.state == HealthState::Healthy {
+                    return None;
+                }
+                false
+            }
+            DriftSample::Closed { mean } => mean <= cfg.bias_threshold(),
+        };
+        if bad {
+            self.bad_windows += 1;
+            self.good_windows = 0;
+        } else {
+            self.good_windows += 1;
+            self.bad_windows = 0;
+        }
+        let from = self.state;
+        match self.state {
+            HealthState::Healthy if self.bad_windows >= cfg.probation_after => {
+                self.state = HealthState::Probation;
+                self.bad_windows = 0;
+                self.good_windows = 0;
+            }
+            HealthState::Probation if self.bad_windows >= cfg.quarantine_after.max(1) => {
+                self.state = HealthState::Quarantined;
+            }
+            HealthState::Probation if self.good_windows >= cfg.recover_after.max(1) => {
+                self.state = HealthState::Healthy;
+                self.bad_windows = 0;
+                self.good_windows = 0;
+            }
+            _ => {}
+        }
+        (from != self.state).then_some((from, self.state))
+    }
+}
+
+/// Fleet-level quarantine counters (mirrors `FaultStats` for crashes).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct HealthStats {
+    /// Healthy → Probation transitions.
+    pub probations: usize,
+    /// Probation → Quarantined transitions.
+    pub quarantines: usize,
+    /// Probation → Healthy recoveries (no respawn needed).
+    pub recoveries: usize,
+    /// Quarantined replicas harvested and respawned under a fresh id.
+    pub respawns: usize,
+}
+
+impl HealthStats {
+    pub fn any(&self) -> bool {
+        self.probations + self.quarantines + self.recoveries + self.respawns > 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("probations", self.probations as u64)
+            .set("quarantines", self.quarantines as u64)
+            .set("recoveries", self.recoveries as u64)
+            .set("respawns", self.respawns as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            window: 1.0,
+            min_samples: 4,
+            ..HealthConfig::default()
+        }
+    }
+
+    /// Feed `n` windows with the given per-window mean error; returns the
+    /// transitions observed.
+    fn feed(
+        h: &mut ReplicaHealth,
+        cfg: &HealthConfig,
+        t0: &mut f64,
+        cum: &mut (f64, u64),
+        mean: f64,
+        n: usize,
+    ) -> Vec<(HealthState, HealthState)> {
+        let mut moved = Vec::new();
+        for _ in 0..n {
+            *t0 += 1.0;
+            cum.0 += mean * 8.0;
+            cum.1 += 8;
+            if let Some(tr) = h.tick(*t0, cum.0, cum.1, cfg) {
+                moved.push(tr);
+            }
+        }
+        moved
+    }
+
+    #[test]
+    fn ladder_escalates_with_hysteresis_and_recovers() {
+        let cfg = cfg();
+        let mut h = ReplicaHealth::new(cfg.window);
+        let (mut t, mut cum) = (0.0, (0.0, 0u64));
+        // One bad window is noise: no transition.
+        assert!(feed(&mut h, &cfg, &mut t, &mut cum, -0.8, 1).is_empty());
+        // A clean window resets the streak.
+        assert!(feed(&mut h, &cfg, &mut t, &mut cum, 0.0, 1).is_empty());
+        // Two consecutive bad windows: Healthy → Probation.
+        let moved = feed(&mut h, &cfg, &mut t, &mut cum, -0.8, 2);
+        assert_eq!(moved, vec![(HealthState::Healthy, HealthState::Probation)]);
+        assert!(h.degraded());
+        // Three clean windows: Probation → Healthy.
+        let moved = feed(&mut h, &cfg, &mut t, &mut cum, 0.0, 3);
+        assert_eq!(moved, vec![(HealthState::Probation, HealthState::Healthy)]);
+        assert!(!h.degraded());
+    }
+
+    #[test]
+    fn sustained_drift_reaches_quarantine() {
+        let cfg = cfg();
+        let mut h = ReplicaHealth::new(cfg.window);
+        let (mut t, mut cum) = (0.0, (0.0, 0u64));
+        let moved = feed(&mut h, &cfg, &mut t, &mut cum, -0.75, 4);
+        assert_eq!(
+            moved,
+            vec![
+                (HealthState::Healthy, HealthState::Probation),
+                (HealthState::Probation, HealthState::Quarantined),
+            ]
+        );
+    }
+
+    #[test]
+    fn starved_probation_replica_recovers_via_sparse_windows() {
+        let cfg = cfg();
+        let mut h = ReplicaHealth::new(cfg.window);
+        let (mut t, mut cum) = (0.0, (0.0, 0u64));
+        feed(&mut h, &cfg, &mut t, &mut cum, -0.8, 2);
+        assert_eq!(h.state, HealthState::Probation);
+        // Probation starves the replica of samples; sparse windows must
+        // still walk it back to Healthy.
+        let mut moved = Vec::new();
+        for _ in 0..3 {
+            t += 1.0;
+            if let Some(tr) = h.tick(t, cum.0, cum.1, &cfg) {
+                moved.push(tr);
+            }
+        }
+        assert_eq!(moved, vec![(HealthState::Probation, HealthState::Healthy)]);
+        // Sparse windows never *advance* the ladder for a healthy replica.
+        for _ in 0..5 {
+            t += 1.0;
+            assert!(h.tick(t, cum.0, cum.1, &cfg).is_none());
+        }
+        assert_eq!(h.state, HealthState::Healthy);
+    }
+
+    #[test]
+    fn bias_threshold_matches_inflation_factor() {
+        let cfg = HealthConfig::default();
+        assert!((cfg.bias_threshold() + 0.5).abs() < 1e-9, "factor 2 → -0.5");
+        let strict = HealthConfig {
+            inflation_threshold: 4.0,
+            ..cfg
+        };
+        assert!((strict.bias_threshold() + 0.75).abs() < 1e-9);
+    }
+}

@@ -32,15 +32,22 @@
 //!     windows and drives the offline actuators (AIMD per-replica token
 //!     caps, admission pause, brownout preemption) from *measured*
 //!     attainment instead of a static reservation.
+//!   * When armed (`ClusterConfig::health`), the gray-failure monitor
+//!     ([`ReplicaHealth`]) folds per-replica estimator-drift windows in
+//!     the same coordinator phase and walks a Probation → Quarantine
+//!     hysteresis ladder: sick replicas are routed around, then drained,
+//!     harvested, and respawned under a fresh id (PR 10).
 //!
 //! Reporting: per-replica SLO attainment and cache hit rates, plus
 //! cluster-level rollups (`Metrics::aggregate`), offline throughput over
 //! the wall horizon, router decision stats, and the replica-count timeline.
 
+pub mod health;
 pub mod replica;
 pub mod router;
 pub mod sim;
 
+pub use health::{HealthConfig, HealthState, HealthStats, ReplicaHealth};
 pub use replica::{LoadDigest, Replica};
 pub use router::{affinity_keys, ClusterRadixIndex, PrefixSummary, Router, RouterStats};
 pub use sim::{

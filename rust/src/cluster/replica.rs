@@ -6,6 +6,7 @@ use crate::core::{ReqState, TaskClass};
 use crate::engine::{sim::SimBackend, Engine};
 use crate::estimator::TimeModel;
 
+use super::health::ReplicaHealth;
 use super::router::PrefixSummary;
 
 /// Per-replica backend seed: replica 0 keeps the base seed unchanged, so a
@@ -37,6 +38,10 @@ pub struct LoadDigest {
     pub block_size: usize,
     /// Draining replicas take no new online work.
     pub draining: bool,
+    /// Gray-failure ladder says route around this replica (PR 10):
+    /// Probation and Quarantined replicas take no new online work and are
+    /// skipped by work-stealing. Always `false` when health is disarmed.
+    pub degraded: bool,
     /// Prefix summary: resident content keys, full or as churn since the
     /// previous publication (see [`PrefixSummary`]).
     pub summary: PrefixSummary,
@@ -49,6 +54,10 @@ pub struct Replica {
     pub draining: bool,
     /// Sim-time this replica joined the fleet (autoscaling timeline).
     pub spawned_at: f64,
+    /// Gray-failure ladder slot (PR 10); `None` when health is disarmed.
+    /// A respawned replica gets a fresh slot — quarantine never sticks to
+    /// the successor.
+    pub health: Option<ReplicaHealth>,
     /// Whether the router holds an untruncated full summary from us — the
     /// precondition for publishing deltas.
     published_full: bool,
@@ -66,6 +75,7 @@ impl Replica {
             engine,
             draining: false,
             spawned_at,
+            health: None,
             published_full: false,
         }
     }
@@ -112,6 +122,7 @@ impl Replica {
             free_blocks: avail.for_online(),
             block_size: e.cfg.cache.block_size,
             draining: self.draining,
+            degraded: self.health.as_ref().is_some_and(|h| h.degraded()),
             summary: PrefixSummary::Full(Vec::new()),
         };
         let truncating = self.engine.kv.cached_key_count() > summary_cap;

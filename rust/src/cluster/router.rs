@@ -15,6 +15,11 @@
 //!      (Eq. 6-8 over the digest's queue state), then on replica id;
 //!   3. if no replica has headroom, the least-predicted-latency replica
 //!      takes the overflow (its scheduler will preempt offline work).
+//!
+//! Replicas flagged `degraded` by the gray-failure monitor (PR 10) are
+//! excluded from dispatch and work-stealing like draining ones; in the
+//! nobody-else-left fallback their predicted latency is inflated by
+//! [`DEGRADED_PENALTY`] so a healthy draining replica still wins.
 
 use std::collections::BTreeMap;
 
@@ -23,6 +28,11 @@ use crate::estimator::{PrefillItem, TimeModel};
 use crate::utils::hash::{FxHashMap, FxHashSet};
 
 use super::replica::LoadDigest;
+
+/// Predicted-latency multiplier for degraded replicas in the last-resort
+/// dispatch path (every non-degraded, non-draining replica is preferred
+/// outright; this only orders the fallback among the walking wounded).
+pub const DEGRADED_PENALTY: f64 = 4.0;
 
 /// Leading content keys of `prompt` that are owner-independent (shared
 /// across requests of the same prefix group), probed with owner 0. Keys of
@@ -274,7 +284,7 @@ impl Router {
         let mut best_any: Option<(f64, usize, usize)> = None; // (predicted, replica, fresh)
         let mut deepest_vetoed = 0usize;
         let mut candidates = 0usize;
-        for d in self.digests.values().filter(|d| !d.draining) {
+        for d in self.digests.values().filter(|d| !d.draining && !d.degraded) {
             candidates += 1;
             let (depth, hit_tokens, fresh, predicted) =
                 self.score(d, &keys, total_blocks, prompt.total_len);
@@ -296,13 +306,18 @@ impl Router {
             }
         }
         if candidates == 0 {
-            // Only draining replicas remain (a scale-down transient, not a
-            // capacity problem): dispatch to the least-predicted-latency
-            // one without charging overflow/veto stats.
+            // Only draining/degraded replicas remain (a scale-down or
+            // quarantine transient, not a capacity problem): dispatch to
+            // the least-predicted-latency one without charging
+            // overflow/veto stats. Degraded replicas pay a latency
+            // penalty so a healthy draining replica still wins.
             let mut fallback: Option<(f64, usize, usize, usize)> = None;
             for d in self.digests.values() {
-                let (_, hit, fresh, predicted) =
+                let (_, hit, fresh, mut predicted) =
                     self.score(d, &keys, total_blocks, prompt.total_len);
+                if d.degraded {
+                    predicted *= DEGRADED_PENALTY;
+                }
                 if fallback.map_or(true, |(bp, _, _, _)| predicted < bp) {
                     fallback = Some((predicted, d.replica, hit, fresh));
                 }
@@ -336,13 +351,15 @@ impl Router {
         Some((replica, hit_tokens))
     }
 
-    /// Live (non-draining) replicas ordered for offline work-stealing:
-    /// emptiest pool first, then fewest running/queued, then id.
+    /// Live (non-draining, non-degraded) replicas ordered for offline
+    /// work-stealing: emptiest pool first, then fewest running/queued,
+    /// then id. Degraded replicas are skipped — feeding a sick replica
+    /// stolen work would just strand it there again.
     pub fn steal_order(&self) -> Vec<usize> {
         let mut ids: Vec<usize> = self
             .digests
             .values()
-            .filter(|d| !d.draining)
+            .filter(|d| !d.draining && !d.degraded)
             .map(|d| d.replica)
             .collect();
         ids.sort_by_key(|r| {
@@ -374,6 +391,7 @@ mod tests {
             free_blocks,
             block_size: 16,
             draining: false,
+            degraded: false,
             summary: PrefixSummary::Full(Vec::new()),
         }
     }
@@ -478,6 +496,28 @@ mod tests {
         // Only draining replicas left: still dispatches (exactly once).
         r.forget(1);
         assert_eq!(r.route_online(&p).unwrap().0, 0);
+    }
+
+    #[test]
+    fn degraded_routed_around_and_penalized_last_resort() {
+        let mut r = router();
+        let mut d0 = digest(0, 10_000);
+        d0.degraded = true;
+        r.sync(d0);
+        r.sync(digest(1, 10_000));
+        let p = PromptSpec::sim(100, None);
+        // Healthy replica wins even though the degraded one looks idle.
+        assert_eq!(r.route_online(&p).unwrap().0, 1);
+        assert_eq!(r.steal_order(), vec![1], "stealing skips degraded");
+        // Only a degraded replica and a loaded *draining* one remain: the
+        // penalty keeps the healthy draining replica preferred.
+        r.forget(1);
+        let mut d2 = digest(2, 10_000);
+        d2.draining = true;
+        d2.running_online = 2;
+        r.sync(d2);
+        assert_eq!(r.route_online(&p).unwrap().0, 2);
+        assert!(r.steal_order().is_empty());
     }
 
     #[test]

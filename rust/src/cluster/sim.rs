@@ -27,6 +27,7 @@ use crate::utils::json::Json;
 use crate::utils::rng::Rng;
 use crate::workload::DatasetSpec;
 
+use super::health::{HealthConfig, HealthState, HealthStats, ReplicaHealth};
 use super::replica::Replica;
 use super::router::{Router, RouterStats};
 
@@ -164,6 +165,10 @@ pub struct ClusterConfig {
     /// (default) disarms the guard entirely — no windows, no actuators —
     /// and the quantum loop stays byte-identical to a guard-free build.
     pub guard: Option<SloGuardConfig>,
+    /// Gray-failure monitor + quarantine (PR 10). `None` (default)
+    /// disarms it — no drift windows, no ladders, `degraded` never set —
+    /// and the quantum loop is byte-identical to a health-free build.
+    pub health: Option<HealthConfig>,
 }
 
 impl ClusterConfig {
@@ -188,6 +193,7 @@ impl ClusterConfig {
             shed: ShedPolicy::default(),
             offline_cap: usize::MAX,
             guard: None,
+            health: None,
         }
     }
 }
@@ -236,6 +242,8 @@ pub struct ClusterReport {
     pub faults: FaultStats,
     /// SLO-guard controller accounting (all zero while disarmed).
     pub guard: GuardStats,
+    /// Gray-failure ladder accounting (all zero while disarmed).
+    pub health: HealthStats,
 }
 
 impl ClusterReport {
@@ -280,6 +288,7 @@ impl ClusterReport {
             .set("backlog_remaining", self.backlog_remaining)
             .set("faults", self.faults.to_json())
             .set("guard", self.guard.to_json())
+            .set("health", self.health.to_json())
             .set("timeline", Json::Arr(timeline))
     }
 }
@@ -317,6 +326,11 @@ pub struct ClusterSim {
     pending_failures: Vec<ReplicaFailure>,
     /// Crash/recovery/shedding accounting (see [`FaultStats`]).
     pub fault_stats: FaultStats,
+    /// Gray-failure ladder accounting (see [`HealthStats`]).
+    pub health_stats: HealthStats,
+    /// Replica ids marked for quarantine this tick. Reused across quanta
+    /// so the armed-but-healthy steady state allocates nothing.
+    quarantine_scratch: Vec<usize>,
     /// Armed SLO-guard controller (`None` while disarmed). Ticked once per
     /// sync quantum in the single-threaded coordinator phase, so every
     /// decision is bit-exact for any `cfg.threads`.
@@ -420,6 +434,8 @@ impl ClusterSim {
             retired_traces: Vec::new(),
             pending_failures: Vec::new(),
             fault_stats: FaultStats::default(),
+            health_stats: HealthStats::default(),
+            quarantine_scratch: Vec::new(),
             guard,
             last_guard: GuardDecision::default(),
             cfg,
@@ -489,6 +505,9 @@ impl ClusterSim {
         // execute errors); `install_faults` drops empty slices, so the
         // fault-free path stays a single None branch in the step loop.
         rep.engine.install_faults(self.cfg.faults.for_replica(id));
+        // Fresh ladder slot when the monitor is armed: a respawned replica
+        // starts Healthy — quarantine never sticks to the successor.
+        rep.health = self.cfg.health.map(|h| ReplicaHealth::new(h.window));
         // Join under the guard's current decision (a mid-run spawn must not
         // spend its first quantum admitting offline work the rest of the
         // fleet is draining). Disarmed, `replica_cap` passes `usize::MAX`
@@ -982,6 +1001,128 @@ impl ClusterSim {
         }
     }
 
+    /// Tick the gray-failure monitor (PR 10), single-threaded coordinator
+    /// phase — bit-exact for any `cfg.threads`. Folds each replica's
+    /// cumulative estimator drift (est-vs-actual signed error, the signal
+    /// a `Slowdown` fault inflates) into its hysteresis ladder; replicas
+    /// whose ladder reaches `Quarantined` are handed to
+    /// `quarantine_marked`. Disarmed (`cfg.health = None`) this is a
+    /// single `None` branch.
+    // lint: hot-path
+    fn health_tick(&mut self, now: f64) {
+        let Some(hcfg) = self.cfg.health else {
+            return;
+        };
+        for i in 0..self.replicas.len() {
+            let rep = &mut self.replicas[i];
+            let cum_sum = rep.engine.metrics.est_signed_err_sum;
+            let cum_n = rep.engine.metrics.est_rel_err_hist.count();
+            let Some(h) = rep.health.as_mut() else {
+                continue;
+            };
+            let Some((from, to)) = h.tick(now, cum_sum, cum_n, &hcfg) else {
+                continue;
+            };
+            rep.engine.trace_push(TraceEvent::Health {
+                t: now,
+                replica: rep.id as u32,
+                from: from.as_u8(),
+                to: to.as_u8(),
+            });
+            log::info!("replica {} health: {} -> {}", rep.id, from.name(), to.name());
+            let id = rep.id;
+            match to {
+                HealthState::Healthy => self.health_stats.recoveries += 1,
+                HealthState::Probation => self.health_stats.probations += 1,
+                HealthState::Quarantined => {
+                    self.health_stats.quarantines += 1;
+                    self.quarantine_scratch.push(id);
+                }
+            }
+        }
+        if !self.quarantine_scratch.is_empty() {
+            self.quarantine_marked(now);
+        }
+    }
+
+    /// Quarantine every replica marked by `health_tick` (cold path):
+    /// harvest its work (same salvage machinery as crash recovery),
+    /// verify the KV manager released everything, retire it with a
+    /// report, and respawn a cold replacement under a **fresh id** — which
+    /// heals id-keyed `Slowdown` faults the way a host swap heals a sick
+    /// machine. Salvaged offline jobs go to the FRONT of the backlog;
+    /// salvaged online jobs are re-routed with their original arrival, so
+    /// quarantine latency shows up in their TTFT instead of vanishing.
+    /// Opens a guard churn-exclusion window so the brownout ladder does
+    /// not escalate on the recompute spike quarantine itself causes.
+    fn quarantine_marked(&mut self, now: f64) {
+        let slo = self.cfg.base.slo;
+        let mut ids = std::mem::take(&mut self.quarantine_scratch);
+        let mut offline: Vec<JobSpec> = Vec::new();
+        let mut online: Vec<(OnlineJob, Option<TicketId>)> = Vec::new();
+        for &id in &ids {
+            log::warn!(
+                "replica {id} quarantined at t={now:.3}: draining, retiring, respawning fresh"
+            );
+            let harvest = self.harvest_replica(id);
+            offline.extend(harvest.offline);
+            online.extend(harvest.online);
+            let Some(pos) = self.replicas.iter().position(|r| r.id == id) else {
+                log::error!("quarantined replica {id} not in fleet; skipping");
+                continue;
+            };
+            let mut rep = self.replicas.remove(pos);
+            // Same contract as crash harvesting: every live request was
+            // cancelled, so the KV manager must be steady.
+            let live: Vec<RequestId> = rep.engine.live_requests().map(|r| r.id).collect();
+            let orphaned = rep.engine.kv.reclaim_orphans(&live);
+            if orphaned > 0 {
+                debug_assert!(false, "quarantine left {orphaned} orphaned KV owners");
+                log::error!("replica {id}: reclaimed {orphaned} orphaned KV owners");
+            }
+            if let Err(msg) = rep.engine.kv.check_invariants() {
+                debug_assert!(false, "KV invariants broken after quarantine: {msg}");
+                log::error!("replica {id}: KV invariants after quarantine: {msg}");
+            }
+            self.router.forget(id);
+            if let Some(ring) = rep.engine.take_trace() {
+                self.retired_traces.push((id, ring));
+            }
+            self.retired.push(replica_report(&rep, Some(now), &slo));
+            self.health_stats.respawns += 1;
+            self.spawn_replica(now);
+        }
+        ids.clear();
+        self.quarantine_scratch = ids;
+        self.fault_stats.offline_requeued += offline.len();
+        for job in offline.into_iter().rev() {
+            self.backlog.push_front(job);
+        }
+        for (job, ticket) in online {
+            match self.dispatch_online(&job) {
+                Some((rid, req)) => {
+                    self.fault_stats.online_redispatched += 1;
+                    if let Some(t) = ticket {
+                        self.record_ticket(t, rid, req);
+                    }
+                }
+                None => log::error!(
+                    "online job lost in quarantine: empty fleet (arrival t={:.3})",
+                    job.at
+                ),
+            }
+        }
+        if let Some(g) = self.guard.as_mut() {
+            let grace = g.config().window;
+            g.exclude_churn_until(now + grace);
+        }
+    }
+
+    /// Gray-failure ladder counters (all zero while disarmed).
+    pub fn health_report(&self) -> HealthStats {
+        self.health_stats
+    }
+
     /// Tick the SLO-guard feedback controller (single-threaded coordinator
     /// phase — bit-exact for any `cfg.threads`): fold the fleet-wide
     /// online-latency histograms (retired corpses first, then live
@@ -1053,6 +1194,9 @@ impl ClusterSim {
     /// evaluate scaling, record the timeline point.
     pub fn finish_quantum(&mut self, t_end: f64) {
         self.recover_failures(t_end);
+        // Health before router sync: transitions this tick must reach the
+        // digests (`degraded`) the router dispatches with next quantum.
+        self.health_tick(t_end);
         self.sync_router();
         self.guard_tick(t_end);
         self.retire_drained(t_end);
@@ -1165,6 +1309,7 @@ impl ClusterSim {
             backlog_remaining: self.backlog.len(),
             faults: self.fault_stats,
             guard: self.guard_stats(),
+            health: self.health_stats,
             aggregate,
             replicas: reps,
         }
@@ -1660,6 +1805,70 @@ mod tests {
         assert_eq!(disarmed, armed, "an idle guard must not perturb the run");
         assert_eq!(stats.transitions, 0);
         assert_eq!(stats.cap, usize::MAX);
+    }
+
+    #[test]
+    fn quarantine_heals_seeded_slowdown() {
+        use crate::faults::FaultEvent;
+        let mut cfg = small_cfg();
+        cfg.health = Some(HealthConfig::default());
+        // A gray failure: replica 0 silently runs 8x slow for the whole
+        // run (well past the horizon) — only a quarantine respawn under a
+        // fresh id can heal it.
+        cfg.faults = FaultPlan {
+            events: vec![FaultEvent::Slowdown {
+                at: 0.0,
+                until: 300.0,
+                replica: 0,
+                factor: 8.0,
+            }],
+            seed: 2,
+        };
+        let mut sim = ClusterSim::new(cfg);
+        let jobs = offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 24, 7);
+        let n_jobs = jobs.len();
+        sim.submit_offline_backlog(jobs);
+        let online = tiny_online(30, 1.0);
+        let report = sim.run(&online, 180.0).unwrap();
+        assert!(report.health.probations >= 1, "{:?}", report.health);
+        assert!(report.health.quarantines >= 1, "{:?}", report.health);
+        assert_eq!(report.health.respawns, report.health.quarantines);
+        // The respawn got a fresh id the id-keyed Slowdown does not
+        // target: every job still completes exactly once.
+        assert_eq!(report.aggregate.online_completed, 30);
+        assert_eq!(report.aggregate.offline_completed, n_jobs);
+        assert_eq!(report.backlog_remaining, 0);
+        for rep in &sim.replicas {
+            rep.engine.kv.check_invariants().unwrap();
+            assert!(
+                rep.health.as_ref().is_some_and(|h| !h.degraded()),
+                "survivors and respawns end Healthy"
+            );
+        }
+    }
+
+    #[test]
+    fn idle_health_monitor_is_byte_identical_to_disarmed() {
+        // Fault-free fleet: the armed monitor folds drift windows but
+        // never transitions, so the run must be byte-equal to disarmed.
+        let run = |health: Option<HealthConfig>| {
+            let mut cfg = small_cfg();
+            cfg.health = health;
+            let mut sim = ClusterSim::new(cfg);
+            sim.submit_offline_backlog(offline_jobs(
+                &DatasetSpec::toolbench().scaled(0.1),
+                30,
+                11,
+            ));
+            let online = tiny_online(40, 0.7);
+            let r = sim.run(&online, 90.0).unwrap();
+            (format!("{:?}", r.aggregate), r.health)
+        };
+        let (disarmed, zero) = run(None);
+        assert_eq!(zero, HealthStats::default());
+        let (armed, stats) = run(Some(HealthConfig::default()));
+        assert_eq!(disarmed, armed, "an idle monitor must not perturb the run");
+        assert_eq!(stats, HealthStats::default());
     }
 
     #[test]

@@ -1,0 +1,105 @@
+//! Windowed estimator-drift tracking (PR 10): the gray-failure signal.
+//!
+//! Engine metrics accumulate est-vs-actual execute-time error
+//! *cumulatively* ([`crate::metrics::Metrics::record_estimate`] feeds
+//! `est_signed_err_sum` and the error histogram). Gray-failure detection
+//! needs the *recent* mean — a replica inside a `Slowdown` window shows a
+//! strongly negative signed error (the estimator keeps predicting the
+//! healthy time while actuals inflate), but the cumulative bias dilutes it
+//! with the whole healthy past. [`DriftWindow`] diffs the cumulative sums
+//! against a per-window baseline on the virtual clock: no per-sample
+//! storage, no allocation, O(1) per fold.
+
+/// Outcome of folding one tick into a [`DriftWindow`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DriftSample {
+    /// The window has not elapsed yet.
+    Open,
+    /// The window closed with too few samples to judge.
+    Sparse,
+    /// The window closed: mean signed relative error over just this
+    /// window (negative = actuals exceeded estimates).
+    Closed { mean: f64 },
+}
+
+/// Cumulative-baseline drift window on the virtual clock.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftWindow {
+    window: f64,
+    started: f64,
+    base_sum: f64,
+    base_count: u64,
+}
+
+impl DriftWindow {
+    pub fn new(window: f64) -> Self {
+        DriftWindow {
+            window: window.max(1e-9),
+            started: 0.0,
+            base_sum: 0.0,
+            base_count: 0,
+        }
+    }
+
+    /// Fold the estimator's cumulative (signed-error sum, sample count) at
+    /// virtual time `now`. Once per `window` seconds the baseline rolls
+    /// forward and the windowed mean is returned (or `Sparse` when fewer
+    /// than `min_samples` landed in the window).
+    // lint: hot-path
+    pub fn fold(
+        &mut self,
+        now: f64,
+        cum_sum: f64,
+        cum_count: u64,
+        min_samples: u64,
+    ) -> DriftSample {
+        if now - self.started < self.window {
+            return DriftSample::Open;
+        }
+        let dn = cum_count.saturating_sub(self.base_count);
+        let dsum = cum_sum - self.base_sum;
+        self.started = now;
+        self.base_sum = cum_sum;
+        self.base_count = cum_count;
+        if dn < min_samples.max(1) {
+            return DriftSample::Sparse;
+        }
+        DriftSample::Closed {
+            mean: dsum / dn as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn windows_roll_and_isolate_recent_drift() {
+        let mut w = DriftWindow::new(2.0);
+        // Window still open: nothing to judge.
+        assert_eq!(w.fold(1.0, -0.5, 4, 2), DriftSample::Open);
+        // Closes at 2.0 with 10 samples summing to -1.0 → mean -0.1.
+        match w.fold(2.0, -1.0, 10, 2) {
+            DriftSample::Closed { mean } => assert!((mean + 0.1).abs() < 1e-12),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        // Next window sees only the *delta*: 5 new samples summing to
+        // -4.0 → mean -0.8, undiluted by the healthy past.
+        match w.fold(4.0, -5.0, 15, 2) {
+            DriftSample::Closed { mean } => assert!((mean + 0.8).abs() < 1e-12),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparse_windows_are_not_judged() {
+        let mut w = DriftWindow::new(1.0);
+        assert_eq!(w.fold(1.0, -9.0, 3, 8), DriftSample::Sparse);
+        // The baseline still rolled: the next window diffs from here.
+        match w.fold(2.0, -9.0, 11, 8) {
+            DriftSample::Closed { mean } => assert_eq!(mean, 0.0),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+    }
+}

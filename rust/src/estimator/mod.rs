@@ -3,8 +3,10 @@
 //! predictor (§5.3). The resource/throughput deployer simulator (§5.4)
 //! composes these with the engine and lives in [`crate::sim`].
 
+pub mod drift;
 pub mod memory;
 pub mod time_model;
 
+pub use drift::{DriftSample, DriftWindow};
 pub use memory::MemoryPredictor;
 pub use time_model::{BatchShape, PrefillItem, TimeModel, TimeSample, TrialShape, TrialUndo};

@@ -200,6 +200,22 @@ impl FaultPlan {
         }
     }
 
+    /// A seeded plan of `conns` connection drops (PR 10 disconnect
+    /// storms): each drop severs a wire connection after a small random
+    /// number of served frames, exercising idempotent-resubmit and
+    /// `stream {from_seq}` resume paths deterministically. Thresholds are
+    /// in the plan's event order — chaos harnesses consume them one
+    /// connection at a time.
+    pub fn disconnect_storm(seed: u64, conns: usize) -> Self {
+        let mut rng = Rng::new(seed ^ 0xD15C_0117_EC75);
+        let events = (0..conns)
+            .map(|_| FaultEvent::ConnDrop {
+                after_frames: rng.range_u64(1, 6),
+            })
+            .collect();
+        FaultPlan { events, seed }
+    }
+
     /// First scheduled connection drop (frames-served threshold), if any.
     pub fn conn_drop(&self) -> Option<u64> {
         self.events
@@ -331,6 +347,10 @@ pub enum ServeError {
     UnknownReplica { replica: usize },
     /// A wire frame exceeded the per-line size cap.
     FrameTooLarge { len: usize, max: usize },
+    /// A wire connection died mid-line: `buffered` bytes of a partial
+    /// frame were accepted before the transport failed (PR 10 — the loss
+    /// is surfaced and accounted instead of silently discarded).
+    FrameInterrupted { buffered: usize },
     /// The threaded server's coordinator is gone.
     ServerGone,
 }
@@ -354,6 +374,13 @@ impl std::fmt::Display for ServeError {
             }
             ServeError::FrameTooLarge { len, max } => {
                 write!(f, "frame too large: {len} bytes (cap {max})")
+            }
+            ServeError::FrameInterrupted { buffered } => {
+                write!(
+                    f,
+                    "connection died mid-frame: {buffered} bytes of a \
+                     partial frame discarded"
+                )
             }
             ServeError::ServerGone => write!(f, "server coordinator is gone"),
         }
@@ -578,6 +605,27 @@ mod tests {
         };
         assert_eq!(plan.conn_drop(), Some(3));
         assert_eq!(FaultPlan::none().conn_drop(), None);
+    }
+
+    #[test]
+    fn disconnect_storms_are_seeded_and_bounded() {
+        let a = FaultPlan::disconnect_storm(11, 8);
+        let b = FaultPlan::disconnect_storm(11, 8);
+        assert_eq!(a, b, "same seed, same storm");
+        assert_eq!(a.events.len(), 8);
+        for e in &a.events {
+            match *e {
+                FaultEvent::ConnDrop { after_frames } => {
+                    assert!((1..=6).contains(&after_frames));
+                }
+                other => panic!("storms are pure ConnDrop plans: {other:?}"),
+            }
+        }
+        assert_ne!(
+            FaultPlan::disconnect_storm(12, 8),
+            a,
+            "different seed, different thresholds"
+        );
     }
 
     #[test]

@@ -81,6 +81,11 @@ pub enum TraceEvent {
     /// replica's ring at the coordinator tick so Perfetto shows the
     /// brownout span on each replica track.
     Brownout { t: f64, from: u8, to: u8 },
+    /// Gray-failure ladder transition (PR 10): `from`/`to` are
+    /// [`crate::cluster::HealthState`] ranks (0 healthy, 1 probation,
+    /// 2 quarantined). Emitted into the affected replica's own ring at the
+    /// coordinator tick that moved it.
+    Health { t: f64, replica: u32, from: u8, to: u8 },
 }
 
 impl TraceEvent {
@@ -94,7 +99,8 @@ impl TraceEvent {
             | TraceEvent::Finish { t, .. }
             | TraceEvent::Cancel { t, .. }
             | TraceEvent::Kv { t, .. }
-            | TraceEvent::Brownout { t, .. } => t,
+            | TraceEvent::Brownout { t, .. }
+            | TraceEvent::Health { t, .. } => t,
             TraceEvent::Iteration { start, .. } => start,
         }
     }
@@ -267,6 +273,20 @@ fn event_json(pid: usize, ev: &TraceEvent, out: &mut Vec<Json>) {
                 .set("from_level", from as u64)
                 .set("to_level", to as u64);
             out.push(base("brownout", "i", 0, t).set("s", "p").set("args", args));
+        }
+        TraceEvent::Health { t, replica, from, to } => {
+            let state_name = |v: u8| match v {
+                0 => "healthy",
+                1 => "probation",
+                _ => "quarantined",
+            };
+            let args = Json::obj()
+                .set("replica", replica as u64)
+                .set("from", state_name(from))
+                .set("to", state_name(to))
+                .set("from_state", from as u64)
+                .set("to_state", to as u64);
+            out.push(base("health", "i", 0, t).set("s", "p").set("args", args));
         }
     }
 }

@@ -12,8 +12,8 @@ use crate::faults::{CancelReason, ServeError};
 use crate::metrics::Metrics;
 
 use super::{
-    AdmissionVerdict, Cursor, EventSink, MetricsView, Serve, SubmitSpec, Ticket, TicketId,
-    TokenEvent,
+    AdmissionVerdict, Cursor, EventSink, JournalConfig, MetricsView, Serve, SessionJournal,
+    SubmitSpec, Ticket, TicketId, TokenEvent,
 };
 
 pub struct ClusterServe {
@@ -38,6 +38,8 @@ pub struct ClusterServe {
     /// Verdict of the most recent `submit` (SLO-guard backpressure): the
     /// wire layer reads this to put `verdict`/`retry_after` on the ack.
     last_verdict: AdmissionVerdict,
+    /// Durable-session journal (PR 10); `None` = disarmed (zero cost).
+    journal: Option<SessionJournal>,
 }
 
 impl ClusterServe {
@@ -53,6 +55,7 @@ impl ClusterServe {
             pending_events: Vec::new(),
             cancelled: 0,
             last_verdict: AdmissionVerdict::Accept,
+            journal: None,
         }
     }
 
@@ -147,8 +150,13 @@ impl ClusterServe {
         // 3. deliver events (before post-quantum bookkeeping: a drained
         // replica may retire there, dropping its store)
         let wants = sink.wants_events();
+        // Live durable tickets force event materialization even under a
+        // NullSink: their replay buffers must see every event. The armed
+        // journal with no durable tickets costs exactly this one check.
+        let journal_live = self.journal.as_ref().is_some_and(|j| !j.is_empty());
+        let materialize = wants || journal_live;
         let mut evs = std::mem::take(&mut self.pending_events);
-        if !wants {
+        if !materialize {
             evs.clear();
         }
         let mut done: Vec<TicketId> = Vec::new();
@@ -171,7 +179,7 @@ impl ClusterServe {
                 Some(&p) if p == place => {}
                 Some(_) => {
                     *cur = Cursor::default();
-                    if wants {
+                    if materialize {
                         evs.push(TokenEvent::Preempted { ticket, at: t_end });
                     }
                     self.last_place.insert(ticket, place);
@@ -180,7 +188,7 @@ impl ClusterServe {
                     self.last_place.insert(ticket, place);
                 }
             }
-            let terminal = if wants {
+            let terminal = if materialize {
                 cur.drain(ticket, r, t_end, &mut evs)
             } else {
                 cur.fast_forward(r)
@@ -194,12 +202,25 @@ impl ClusterServe {
             self.last_place.remove(&ticket);
             self.sim.forget_ticket(ticket);
         }
+        // 3b. journal capture: durable tickets' events enter their replay
+        // rings here, in the single-threaded coordinator path, so
+        // journal-armed runs stay bit-exact across --threads.
+        if let Some(j) = self.journal.as_mut() {
+            if journal_live {
+                for ev in &evs {
+                    j.append(ev, t_end);
+                }
+            }
+            j.expire(t_end);
+        }
         // 4. post-quantum bookkeeping (digests, retirement, stealing,
         // scaling)
         self.sim.finish_quantum(t_end);
         self.clock = t_end;
-        for ev in &evs {
-            sink.on_event(ev);
+        if wants {
+            for ev in &evs {
+                sink.on_event(ev);
+            }
         }
         Ok(self.busy())
     }
@@ -354,6 +375,17 @@ impl ClusterServe {
 
 impl Serve for ClusterServe {
     fn submit(&mut self, spec: SubmitSpec) -> anyhow::Result<Ticket> {
+        // Idempotent replay (PR 10): a previously seen key returns the
+        // ticket it minted instead of admitting a second copy. Only
+        // *accepted* submits register (below), so retrying a backpressured
+        // submit with the same key gets a fresh admission decision.
+        if let (Some(key), Some(j)) = (spec.idem_key, self.journal.as_mut()) {
+            if let Some(t) = j.lookup(key) {
+                j.stats.replayed_submits += 1;
+                self.last_verdict = AdmissionVerdict::Accept;
+                return Ok(t);
+            }
+        }
         let ticket = self.next_ticket;
         self.next_ticket += 1;
         let class = spec.slo.task_class();
@@ -406,11 +438,15 @@ impl Serve for ClusterServe {
             }
         }
         self.cursors.insert(ticket, Cursor::default());
-        Ok(Ticket {
+        let issued = Ticket {
             id: ticket,
             class,
             submitted_at: arrival,
-        })
+        };
+        if let (Some(key), Some(j)) = (spec.idem_key, self.journal.as_mut()) {
+            j.register(issued, key);
+        }
+        Ok(issued)
     }
 
     fn last_verdict(&self) -> AdmissionVerdict {
@@ -561,7 +597,31 @@ impl Serve for ClusterServe {
             },
             replicas: self.sim.active_replicas(),
             latency: m.latency_view(),
+            journal: self
+                .journal
+                .as_ref()
+                .map(|j| j.stats.clone())
+                .unwrap_or_default(),
         }
+    }
+
+    fn arm_journal(&mut self, cfg: JournalConfig) -> bool {
+        if self.journal.is_none() {
+            self.journal = Some(SessionJournal::new(cfg));
+        }
+        true
+    }
+
+    fn journal(&self) -> Option<&SessionJournal> {
+        self.journal.as_ref()
+    }
+
+    fn journal_mut(&mut self) -> Option<&mut SessionJournal> {
+        self.journal.as_mut()
+    }
+
+    fn ack(&mut self, ticket: TicketId) -> bool {
+        self.journal.as_mut().is_some_and(|j| j.ack(ticket))
     }
 
     fn obs(&self) -> crate::utils::json::Json {

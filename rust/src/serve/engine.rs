@@ -11,8 +11,8 @@ use crate::core::{Request, RequestId, TaskClass};
 use crate::engine::{Engine, ExecutionBackend};
 
 use super::{
-    collect_store_events, Cursor, EventSink, MetricsView, Serve, SubmitSpec, Ticket, TicketId,
-    TokenEvent,
+    collect_store_events, Cursor, EventSink, JournalConfig, MetricsView, Serve, SessionJournal,
+    SubmitSpec, Ticket, TicketId, TokenEvent,
 };
 
 pub struct EngineServe<B: ExecutionBackend> {
@@ -20,6 +20,8 @@ pub struct EngineServe<B: ExecutionBackend> {
     cursors: BTreeMap<RequestId, Cursor>,
     /// Cancellation events queued for the next pump (cancel has no sink).
     pending: Vec<TokenEvent>,
+    /// Durable-session journal (PR 10); `None` = disarmed (zero cost).
+    journal: Option<SessionJournal>,
 }
 
 impl<B: ExecutionBackend> EngineServe<B> {
@@ -28,6 +30,7 @@ impl<B: ExecutionBackend> EngineServe<B> {
             engine,
             cursors: BTreeMap::new(),
             pending: Vec::new(),
+            journal: None,
         }
     }
 
@@ -37,23 +40,47 @@ impl<B: ExecutionBackend> EngineServe<B> {
     }
 
     fn flush(&mut self, sink: &mut dyn EventSink) {
-        if !sink.wants_events() {
+        // Live durable tickets force event materialization even on the
+        // batch path: their replay buffers must see every event.
+        let journal_live = self.journal.as_ref().is_some_and(|j| !j.is_empty());
+        if !sink.wants_events() && !journal_live {
             // Batch path (NullSink): advance/prune the cursors without
             // materializing one event per generated token.
             self.pending.clear();
             super::skip_store_events(&self.engine.store, &mut self.cursors);
+            if let Some(j) = self.journal.as_mut() {
+                j.expire(self.engine.clock);
+            }
             return;
         }
         let mut evs = std::mem::take(&mut self.pending);
         collect_store_events(&self.engine.store, &mut self.cursors, self.engine.clock, &mut evs);
-        for ev in &evs {
-            sink.on_event(ev);
+        if let Some(j) = self.journal.as_mut() {
+            if journal_live {
+                for ev in &evs {
+                    j.append(ev, self.engine.clock);
+                }
+            }
+            j.expire(self.engine.clock);
+        }
+        if sink.wants_events() {
+            for ev in &evs {
+                sink.on_event(ev);
+            }
         }
     }
 }
 
 impl<B: ExecutionBackend> Serve for EngineServe<B> {
     fn submit(&mut self, spec: SubmitSpec) -> anyhow::Result<Ticket> {
+        // Idempotent replay: a previously seen key returns its ticket
+        // instead of admitting a second copy of the request.
+        if let (Some(key), Some(j)) = (spec.idem_key, self.journal.as_mut()) {
+            if let Some(t) = j.lookup(key) {
+                j.stats.replayed_submits += 1;
+                return Ok(t);
+            }
+        }
         let id = self.engine.store.fresh_id();
         let class = spec.slo.task_class();
         let arrival = spec.arrival.unwrap_or(self.engine.clock);
@@ -63,11 +90,15 @@ impl<B: ExecutionBackend> Serve for EngineServe<B> {
             TaskClass::Offline => self.engine.submit_offline(req),
         }
         self.cursors.insert(id, Cursor::default());
-        Ok(Ticket {
+        let ticket = Ticket {
             id,
             class,
             submitted_at: arrival,
-        })
+        };
+        if let (Some(key), Some(j)) = (spec.idem_key, self.journal.as_mut()) {
+            j.register(ticket, key);
+        }
+        Ok(ticket)
     }
 
     fn cancel(&mut self, ticket: TicketId) -> bool {
@@ -102,7 +133,30 @@ impl<B: ExecutionBackend> Serve for EngineServe<B> {
     }
 
     fn snapshot(&self) -> MetricsView {
-        MetricsView::of_engine(&self.engine, "engine")
+        let mut view = MetricsView::of_engine(&self.engine, "engine");
+        if let Some(j) = self.journal.as_ref() {
+            view.journal = j.stats.clone();
+        }
+        view
+    }
+
+    fn arm_journal(&mut self, cfg: JournalConfig) -> bool {
+        if self.journal.is_none() {
+            self.journal = Some(SessionJournal::new(cfg));
+        }
+        true
+    }
+
+    fn journal(&self) -> Option<&SessionJournal> {
+        self.journal.as_ref()
+    }
+
+    fn journal_mut(&mut self) -> Option<&mut SessionJournal> {
+        self.journal.as_mut()
+    }
+
+    fn ack(&mut self, ticket: TicketId) -> bool {
+        self.journal.as_mut().is_some_and(|j| j.ack(ticket))
     }
 
     fn obs(&self) -> crate::utils::json::Json {
@@ -141,6 +195,30 @@ mod tests {
         // Event times are the engine's recorded token times, ascending.
         assert!(mine.windows(2).all(|w| w[0].at() <= w[1].at()));
         assert_eq!(s.snapshot().online_completed, 1);
+    }
+
+    #[test]
+    fn durable_submit_is_replay_safe_and_resumable() {
+        use crate::serve::NullSink;
+        let mut s = front();
+        assert!(s.arm_journal(crate::serve::JournalConfig::default()));
+        let spec = SubmitSpec::online(PromptSpec::sim(200, None), 4).at(0.0);
+        let t = s.submit(spec.clone().with_key(42)).unwrap();
+        let dup = s.submit(spec.with_key(42)).unwrap();
+        assert_eq!(t.id, dup.id, "resubmit with the same key must not double-execute");
+        // Drain through a NullSink: the journal must still capture the
+        // durable ticket's full stream.
+        s.drain(&mut NullSink).unwrap();
+        let mut out = Vec::new();
+        let (gap, terminal) = s.journal().unwrap().replay(t.id, 0, &mut out).unwrap();
+        assert!(!gap && terminal, "full stream retained through terminal");
+        let seqs: Vec<u64> = out.iter().map(|(q, _)| *q).collect();
+        assert_eq!(seqs, (0..out.len() as u64).collect::<Vec<u64>>(), "contiguous seqs");
+        assert!(matches!(out.last(), Some((_, TokenEvent::Finished { .. }))));
+        assert_eq!(s.snapshot().journal.replayed_submits, 1);
+        assert_eq!(s.snapshot().online_completed, 1, "executed exactly once");
+        assert!(s.ack(t.id), "ack releases the entry");
+        assert!(s.journal().unwrap().is_empty());
     }
 
     #[test]

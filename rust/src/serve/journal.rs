@@ -1,0 +1,355 @@
+//! Durable-session journal (PR 10): replay-safe submits and resumable
+//! streams on the deployment's virtual clock.
+//!
+//! A wire connection is the *weakest* link in the serving path — PR 7's
+//! `ConnDrop` faults sever it mid-stream, and a naive client that retries
+//! its submit double-executes the request. The journal closes both holes
+//! without touching scheduling:
+//!
+//!   * **Idempotency keys**: a submit that carries a client-supplied key is
+//!     *durable*. The key maps to the ticket it first produced; a resubmit
+//!     with the same key returns that existing ticket instead of admitting
+//!     a second copy (`stats.replayed_submits` counts the saves).
+//!   * **Replay buffer**: every [`TokenEvent`] of a durable ticket is
+//!     assigned a monotone per-ticket sequence number and retained in a
+//!     bounded ring. A reconnecting client issues `stream {from_seq}` and
+//!     receives exactly the events it has not seen — no loss (unless the
+//!     ring overflowed, which is surfaced as a `gap`), no duplicates.
+//!   * **Terminal retention**: entries survive their terminal event until
+//!     the client acks the ticket or `terminal_ttl` virtual seconds pass,
+//!     so a client that disconnects *after* the final token can still
+//!     observe it. `drain` semantics are unchanged — retention is pure
+//!     bookkeeping, the underlying request is gone.
+//!
+//! Everything here runs in the deployment's single-threaded pump path on
+//! the virtual clock, so journal-armed runs stay bit-exact across
+//! `--threads`. Tickets submitted *without* a key are untouched: the armed
+//! journal costs them one `is_empty` check per pump.
+
+use std::collections::VecDeque;
+
+use crate::serve::{Ticket, TicketId, TokenEvent};
+use crate::utils::hash::FxHashMap;
+use crate::utils::json::Json;
+
+/// Journal tuning. Defaults suit test-sized runs; production would size the
+/// ring by client bandwidth-delay product.
+#[derive(Clone, Copy, Debug)]
+pub struct JournalConfig {
+    /// Max buffered events per durable ticket; older events are evicted
+    /// (a resume from before the ring start reports a gap).
+    pub replay_cap: usize,
+    /// Virtual seconds a terminal entry is retained awaiting its ack.
+    pub terminal_ttl: f64,
+}
+
+impl Default for JournalConfig {
+    fn default() -> Self {
+        JournalConfig {
+            replay_cap: 256,
+            terminal_ttl: 60.0,
+        }
+    }
+}
+
+/// Journal outcome counters (surfaced through `MetricsView::journal`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct JournalStats {
+    /// Durable tickets registered (submits that carried a key).
+    pub registered: u64,
+    /// Resubmits deduplicated onto an existing ticket (double-executions
+    /// prevented).
+    pub replayed_submits: u64,
+    /// `stream {from_seq}` resumes served from the replay buffer.
+    pub resumed_streams: u64,
+    /// Events appended to replay buffers.
+    pub buffered_events: u64,
+    /// Events evicted from full rings (visible to resumers as a gap).
+    pub dropped_events: u64,
+    /// Terminal entries reaped by TTL instead of an ack.
+    pub expired_terminals: u64,
+    /// Entries released by an explicit client ack.
+    pub acked: u64,
+}
+
+impl JournalStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("registered", self.registered)
+            .set("replayed_submits", self.replayed_submits)
+            .set("resumed_streams", self.resumed_streams)
+            .set("buffered_events", self.buffered_events)
+            .set("dropped_events", self.dropped_events)
+            .set("expired_terminals", self.expired_terminals)
+            .set("acked", self.acked)
+    }
+}
+
+/// Per-durable-ticket state: the bounded event ring and its sequencing.
+#[derive(Clone, Debug)]
+struct JournalEntry {
+    ticket: Ticket,
+    /// (seq, event) pairs; front is the oldest retained event.
+    buf: VecDeque<(u64, TokenEvent)>,
+    /// Next sequence number to assign (== 1 + last assigned).
+    next_seq: u64,
+    /// Virtual time the terminal event landed, if it has.
+    terminal_at: Option<f64>,
+}
+
+impl JournalEntry {
+    /// Sequence number of the oldest retained event (`next_seq` when the
+    /// ring is empty — nothing retained, nothing lost iff `next_seq == 0`).
+    fn first_seq(&self) -> u64 {
+        self.buf.front().map_or(self.next_seq, |(s, _)| *s)
+    }
+}
+
+/// The session journal: idempotency-key dedup plus per-ticket replay rings.
+/// Owned by a deployment (`EngineServe` / `ClusterServe`) and ticked from
+/// its pump path.
+#[derive(Clone, Debug, Default)]
+pub struct SessionJournal {
+    cfg: JournalConfig,
+    /// Client idempotency key → the durable ticket it minted.
+    keys: FxHashMap<u64, TicketId>,
+    entries: FxHashMap<TicketId, JournalEntry>,
+    /// Terminal-retention deadlines in arrival order (virtual time is
+    /// monotone in the pump path, so this stays sorted).
+    expiry: VecDeque<(f64, TicketId)>,
+    pub stats: JournalStats,
+}
+
+impl SessionJournal {
+    pub fn new(cfg: JournalConfig) -> Self {
+        SessionJournal {
+            cfg: JournalConfig {
+                replay_cap: cfg.replay_cap.max(1),
+                ..cfg
+            },
+            ..SessionJournal::default()
+        }
+    }
+
+    /// True when no durable ticket is live — the armed-idle fast path: the
+    /// pump skips event materialization exactly as if disarmed.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// The ticket a previously seen idempotency key minted, if any.
+    pub fn lookup(&self, key: u64) -> Option<Ticket> {
+        let id = *self.keys.get(&key)?;
+        self.entries.get(&id).map(|e| e.ticket)
+    }
+
+    /// Register a freshly minted durable ticket under its idempotency key.
+    /// First writer wins: a key already bound to a live entry is left
+    /// untouched (the caller should have used [`SessionJournal::lookup`]).
+    pub fn register(&mut self, ticket: Ticket, key: u64) {
+        if let Some(existing) = self.keys.get(&key) {
+            if self.entries.contains_key(existing) {
+                return;
+            }
+        }
+        self.keys.insert(key, ticket.id);
+        self.entries.insert(
+            ticket.id,
+            JournalEntry {
+                ticket,
+                buf: VecDeque::new(),
+                next_seq: 0,
+                terminal_at: None,
+            },
+        );
+        self.stats.registered += 1;
+    }
+
+    /// True when `ticket` is a live durable entry (its events are owned by
+    /// the journal, not per-connection buffers).
+    pub fn is_durable(&self, ticket: TicketId) -> bool {
+        self.entries.contains_key(&ticket)
+    }
+
+    /// Append one event to its ticket's replay ring (no-op for non-durable
+    /// tickets). Called from the deployment pump for every materialized
+    /// event while the journal has live entries.
+    // lint: hot-path
+    pub fn append(&mut self, ev: &TokenEvent, now: f64) {
+        let Some(entry) = self.entries.get_mut(&ev.ticket()) else {
+            return;
+        };
+        let seq = entry.next_seq;
+        entry.next_seq += 1;
+        if entry.buf.len() >= self.cfg.replay_cap {
+            entry.buf.pop_front();
+            self.stats.dropped_events += 1;
+        }
+        // lint: allow-alloc(durable tickets buffer owned events; ring bounded by replay_cap)
+        entry.buf.push_back((seq, ev.clone()));
+        self.stats.buffered_events += 1;
+        if ev.is_terminal() {
+            entry.terminal_at = Some(now);
+            self.expiry.push_back((now + self.cfg.terminal_ttl, ev.ticket()));
+        }
+    }
+
+    /// Copy the retained events at or after `from_seq` into `out`. Returns
+    /// `Some((gap, terminal_seen))` for durable tickets (`gap` = events
+    /// before `from_seq`'s successor were already evicted), `None` for
+    /// unknown tickets.
+    pub fn replay(
+        &self,
+        ticket: TicketId,
+        from_seq: u64,
+        out: &mut Vec<(u64, TokenEvent)>,
+    ) -> Option<(bool, bool)> {
+        let entry = self.entries.get(&ticket)?;
+        let gap = from_seq < entry.first_seq() && entry.first_seq() > 0;
+        let mut terminal = false;
+        for (seq, ev) in &entry.buf {
+            if *seq < from_seq {
+                continue;
+            }
+            terminal |= ev.is_terminal();
+            out.push((*seq, ev.clone()));
+        }
+        Some((gap, terminal))
+    }
+
+    /// Count a successful `stream {from_seq}` resume.
+    pub fn note_resume(&mut self) {
+        self.stats.resumed_streams += 1;
+    }
+
+    /// Client acknowledges a ticket: its entry (and key binding) is
+    /// released. Returns false for unknown/already-released tickets.
+    pub fn ack(&mut self, ticket: TicketId) -> bool {
+        let Some(entry) = self.entries.remove(&ticket) else {
+            return false;
+        };
+        self.keys.retain(|_, id| *id != ticket);
+        let _ = entry;
+        self.stats.acked += 1;
+        true
+    }
+
+    /// Reap terminal entries whose retention TTL has passed. Deadlines are
+    /// pushed in monotone virtual time, so this is a front-of-queue check —
+    /// O(1) when nothing is due.
+    pub fn expire(&mut self, now: f64) {
+        while let Some(&(deadline, ticket)) = self.expiry.front() {
+            if deadline > now {
+                break;
+            }
+            self.expiry.pop_front();
+            // The entry may have been acked (or re-terminated never —
+            // ticket ids are not reused) since the deadline was queued.
+            let due = self
+                .entries
+                .get(&ticket)
+                .and_then(|e| e.terminal_at)
+                .is_some_and(|t| t + self.cfg.terminal_ttl <= now);
+            if due {
+                self.entries.remove(&ticket);
+                self.keys.retain(|_, id| *id != ticket);
+                self.stats.expired_terminals += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::TaskClass;
+
+    fn ticket(id: TicketId) -> Ticket {
+        Ticket {
+            id,
+            class: TaskClass::Online,
+            submitted_at: 0.0,
+        }
+    }
+
+    fn tok(ticket: TicketId, at: f64, index: usize) -> TokenEvent {
+        TokenEvent::Token {
+            ticket,
+            at,
+            token: None,
+            index,
+        }
+    }
+
+    fn fin(t: TicketId, at: f64) -> TokenEvent {
+        TokenEvent::Finished {
+            ticket: t,
+            at,
+            tokens: Vec::new(),
+            ttft: None,
+            mean_tpot: None,
+        }
+    }
+
+    #[test]
+    fn idempotency_key_dedups_onto_first_ticket() {
+        let mut j = SessionJournal::new(JournalConfig::default());
+        assert!(j.lookup(7).is_none());
+        j.register(ticket(1), 7);
+        j.register(ticket(2), 9);
+        assert_eq!(j.lookup(7).unwrap().id, 1);
+        assert_eq!(j.lookup(9).unwrap().id, 2);
+        // First writer wins: re-registering key 7 is a no-op.
+        j.register(ticket(3), 7);
+        assert_eq!(j.lookup(7).unwrap().id, 1);
+        assert_eq!(j.stats.registered, 2);
+    }
+
+    #[test]
+    fn replay_is_sequenced_and_bounded() {
+        let mut j = SessionJournal::new(JournalConfig {
+            replay_cap: 4,
+            terminal_ttl: 10.0,
+        });
+        j.register(ticket(1), 1);
+        for i in 0..6 {
+            j.append(&tok(1, i as f64, i), i as f64);
+        }
+        // Non-durable ticket events are ignored.
+        j.append(&tok(99, 0.0, 0), 0.0);
+        let mut out = Vec::new();
+        let (gap, term) = j.replay(1, 0, &mut out).unwrap();
+        assert!(gap, "seqs 0..2 were evicted");
+        assert!(!term);
+        assert_eq!(out.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![2, 3, 4, 5]);
+        out.clear();
+        let (gap, _) = j.replay(1, 4, &mut out).unwrap();
+        assert!(!gap);
+        assert_eq!(out.len(), 2);
+        assert_eq!(j.stats.dropped_events, 2);
+        assert!(j.replay(99, 0, &mut out).is_none());
+    }
+
+    #[test]
+    fn terminal_entries_survive_until_ack_or_ttl() {
+        let mut j = SessionJournal::new(JournalConfig {
+            replay_cap: 8,
+            terminal_ttl: 5.0,
+        });
+        j.register(ticket(1), 1);
+        j.register(ticket(2), 2);
+        j.append(&fin(1, 1.0), 1.0);
+        j.append(&fin(2, 2.0), 2.0);
+        j.expire(3.0);
+        assert!(j.is_durable(1) && j.is_durable(2), "TTL not reached yet");
+        assert!(j.ack(1), "ack releases the entry");
+        assert!(!j.ack(1), "double-ack is a no-op");
+        j.expire(7.5);
+        assert!(!j.is_durable(2), "TTL reaps the unacked terminal");
+        assert!(j.lookup(2).is_none(), "key binding dies with the entry");
+        assert_eq!(j.stats.acked, 1);
+        assert_eq!(j.stats.expired_terminals, 1);
+        assert!(j.is_empty());
+    }
+}

@@ -27,10 +27,12 @@
 
 pub mod cluster;
 pub mod engine;
+pub mod journal;
 pub mod wire;
 
 pub use cluster::ClusterServe;
 pub use engine::EngineServe;
+pub use journal::{JournalConfig, JournalStats, SessionJournal};
 
 use std::collections::BTreeMap;
 
@@ -84,6 +86,12 @@ pub struct SubmitSpec {
     /// Arrival on the deployment clock; `None` = "now" (the deployment's
     /// current virtual or wall clock).
     pub arrival: Option<f64>,
+    /// Client-supplied idempotency key (PR 10 durable tickets). On a
+    /// journal-armed deployment, a resubmit carrying a previously seen key
+    /// returns the existing ticket instead of double-executing, and the
+    /// ticket's events are retained for `stream {from_seq}` resume. `None`
+    /// (the default) opts out of durability entirely.
+    pub idem_key: Option<u64>,
 }
 
 impl SubmitSpec {
@@ -93,6 +101,7 @@ impl SubmitSpec {
             max_new_tokens,
             slo: SloClass::Online(None),
             arrival: None,
+            idem_key: None,
         }
     }
 
@@ -102,6 +111,7 @@ impl SubmitSpec {
             max_new_tokens,
             slo: SloClass::Offline,
             arrival: None,
+            idem_key: None,
         }
     }
 
@@ -116,6 +126,13 @@ impl SubmitSpec {
         if let SloClass::Online(_) = self.slo {
             self.slo = SloClass::Online(Some(slo));
         }
+        self
+    }
+
+    /// Attach an idempotency key, making the ticket durable on
+    /// journal-armed deployments (replay-safe submit + resumable stream).
+    pub fn with_key(mut self, key: u64) -> Self {
+        self.idem_key = Some(key);
         self
     }
 }
@@ -318,6 +335,9 @@ pub struct MetricsView {
     /// the cluster deployment: histograms merge, so these are true fleet
     /// percentiles, not averages of per-replica percentiles).
     pub latency: crate::metrics::LatencyView,
+    /// Durable-session journal counters (PR 10); all-zero when the
+    /// deployment's journal is disarmed.
+    pub journal: JournalStats,
 }
 
 impl Default for MetricsView {
@@ -338,6 +358,7 @@ impl Default for MetricsView {
             hit_ratio: 0.0,
             replicas: 0,
             latency: crate::metrics::LatencyView::default(),
+            journal: JournalStats::default(),
         }
     }
 }
@@ -370,6 +391,7 @@ impl MetricsView {
             hit_ratio: e.kv.stats.hit_ratio(),
             replicas: 1,
             latency: m.latency_view(),
+            journal: JournalStats::default(),
         }
     }
 
@@ -390,6 +412,7 @@ impl MetricsView {
             .set("hit_ratio", self.hit_ratio)
             .set("replicas", self.replicas)
             .set("latency", self.latency.to_json())
+            .set("journal", self.journal.to_json())
     }
 }
 
@@ -430,6 +453,33 @@ pub trait Serve {
 
     /// Deployment-shape-independent load/outcome snapshot.
     fn snapshot(&self) -> MetricsView;
+
+    /// Arm the durable-session journal (PR 10). Returns false for
+    /// deployments without journal support (the threaded server — its
+    /// event fan-out crosses threads, so durability is only offered on the
+    /// virtual-clock deployments for now).
+    fn arm_journal(&mut self, cfg: JournalConfig) -> bool {
+        let _ = cfg;
+        false
+    }
+
+    /// The armed journal, if any.
+    fn journal(&self) -> Option<&SessionJournal> {
+        None
+    }
+
+    /// Mutable access to the armed journal (wire resume bookkeeping).
+    fn journal_mut(&mut self) -> Option<&mut SessionJournal> {
+        None
+    }
+
+    /// Acknowledge a durable ticket: its journal entry (replay buffer +
+    /// idempotency-key binding) is released. Returns false when the ticket
+    /// is unknown to the journal or the journal is disarmed.
+    fn ack(&mut self, ticket: TicketId) -> bool {
+        let _ = ticket;
+        false
+    }
 
     /// Observability report: latency/estimator histogram summaries plus
     /// whatever trace data the deployment holds. The default builds it from

@@ -32,6 +32,11 @@
 //!          lifecycle `counters`, and `trace` — per-replica ring stats
 //!          plus the top recompute-cost requests — when the deployment
 //!          holds trace rings)
+//!   {"verb":"ack","ticket":0}
+//!       -> {"ok":true,"verb":"ack","ticket":0,"acked":true}
+//!          (releases a durable ticket's journal entry — replay buffer and
+//!          idempotency-key binding; `acked:false` when the ticket is
+//!          unknown to the journal or the journal is disarmed)
 //!   {"verb":"shutdown"}
 //!       -> {"ok":true,"verb":"shutdown"}   (and the server exits)
 //!
@@ -39,6 +44,15 @@
 //! group, `tokens` carries real token ids instead of `prompt_len`,
 //! `arrival` pins the deployment-clock arrival, and `ttft`/`tpot` attach
 //! per-ticket online targets. `stream` without a ticket drains everything.
+//!
+//! Durable sessions (PR 10): `"key":<u64>` on a submit makes the ticket
+//! durable on a journal-armed deployment — a resubmit with the same key
+//! returns the existing ticket (the ack adds `"replayed":true`) instead of
+//! double-executing. A durable ticket's stream is served from its journal
+//! ring: every event line adds `"seq":<n>`, `stream` accepts
+//! `"from_seq":<n>` to resume after a disconnect, and the stream summary
+//! adds `"next_seq"` (plus `"gap":true` if events before `from_seq` were
+//! already evicted from the bounded ring).
 //!
 //! Malformed lines and unknown verbs get `{"ok":false,"error":...}` replies
 //! and never kill the connection.
@@ -65,8 +79,19 @@ pub const MAX_FRAME_BYTES: usize = 64 * 1024;
 #[derive(Clone, Debug)]
 pub enum WireRequest {
     Submit(SubmitSpec),
-    Cancel { ticket: TicketId },
-    Stream { ticket: Option<TicketId> },
+    Cancel {
+        ticket: TicketId,
+    },
+    Stream {
+        ticket: Option<TicketId>,
+        /// Resume point for a durable ticket's seq-numbered stream
+        /// (PR 10); ignored when no ticket is given.
+        from_seq: Option<u64>,
+    },
+    /// Release a durable ticket's journal entry (PR 10).
+    Ack {
+        ticket: TicketId,
+    },
     Metrics,
     Obs,
     Shutdown,
@@ -129,6 +154,7 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
                 max_new_tokens,
                 slo,
                 arrival: j.get("arrival").and_then(|v| v.as_f64()),
+                idem_key: j.get("key").and_then(|v| v.as_u64()),
             }))
         }
         "cancel" => {
@@ -140,7 +166,15 @@ pub fn parse_request(line: &str) -> Result<WireRequest, String> {
         }
         "stream" => Ok(WireRequest::Stream {
             ticket: j.get("ticket").and_then(|v| v.as_u64()),
+            from_seq: j.get("from_seq").and_then(|v| v.as_u64()),
         }),
+        "ack" => {
+            let ticket = j
+                .get("ticket")
+                .and_then(|v| v.as_u64())
+                .ok_or_else(|| "ack: missing \"ticket\"".to_string())?;
+            Ok(WireRequest::Ack { ticket })
+        }
         "metrics" => Ok(WireRequest::Metrics),
         "obs" => Ok(WireRequest::Obs),
         "shutdown" => Ok(WireRequest::Shutdown),
@@ -179,18 +213,25 @@ pub fn encode_request(req: &WireRequest) -> Json {
             if let Some(slo) = spec.slo.targets() {
                 j = j.set("ttft", slo.ttft).set("tpot", slo.tpot);
             }
+            if let Some(key) = spec.idem_key {
+                j = j.set("key", key);
+            }
             j
         }
         WireRequest::Cancel { ticket } => {
             Json::obj().set("verb", "cancel").set("ticket", *ticket)
         }
-        WireRequest::Stream { ticket } => {
-            let j = Json::obj().set("verb", "stream");
-            match ticket {
-                Some(t) => j.set("ticket", *t),
-                None => j,
+        WireRequest::Stream { ticket, from_seq } => {
+            let mut j = Json::obj().set("verb", "stream");
+            if let Some(t) = ticket {
+                j = j.set("ticket", *t);
             }
+            if let Some(s) = from_seq {
+                j = j.set("from_seq", *s);
+            }
+            j
         }
+        WireRequest::Ack { ticket } => Json::obj().set("verb", "ack").set("ticket", *ticket),
         WireRequest::Metrics => Json::obj().set("verb", "metrics"),
         WireRequest::Obs => Json::obj().set("verb", "obs"),
         WireRequest::Shutdown => Json::obj().set("verb", "shutdown"),
@@ -296,6 +337,14 @@ impl<'a> WireSession<'a> {
         match req {
             WireRequest::Submit(spec) => {
                 let targets = spec.slo.targets();
+                // Durable replay detection (PR 10): a key the journal has
+                // already seen means `submit` will return the existing
+                // ticket — flag it on the ack so clients can tell a replay
+                // from a fresh admission.
+                let replayed = spec
+                    .idem_key
+                    .and_then(|k| self.serve.journal().and_then(|j| j.lookup(k)))
+                    .is_some();
                 match self.serve.submit(spec) {
                     Ok(t) => {
                         let mut ack = Json::obj()
@@ -325,6 +374,9 @@ impl<'a> WireSession<'a> {
                         if let Some(slo) = targets {
                             ack = ack.set("ttft", slo.ttft).set("tpot", slo.tpot);
                         }
+                        if replayed {
+                            ack = ack.set("replayed", true);
+                        }
                         (vec![ack.to_string()], false)
                     }
                     Err(e) => (vec![err_line(&format!("submit: {e:#}"))], false),
@@ -342,7 +394,19 @@ impl<'a> WireSession<'a> {
                     false,
                 )
             }
-            WireRequest::Stream { ticket } => (self.stream(ticket), false),
+            WireRequest::Stream { ticket, from_seq } => (self.stream(ticket, from_seq), false),
+            WireRequest::Ack { ticket } => {
+                let acked = self.serve.ack(ticket);
+                (
+                    vec![Json::obj()
+                        .set("ok", true)
+                        .set("verb", "ack")
+                        .set("ticket", ticket)
+                        .set("acked", acked)
+                        .to_string()],
+                    false,
+                )
+            }
             WireRequest::Metrics => (
                 vec![Json::obj()
                     .set("ok", true)
@@ -369,10 +433,30 @@ impl<'a> WireSession<'a> {
         }
     }
 
+    /// Is `t` a live durable ticket (its events are owned by the armed
+    /// journal, not this session's buffer)?
+    fn is_durable(&self, t: TicketId) -> bool {
+        self.serve.journal().is_some_and(|j| j.is_durable(t))
+    }
+
     /// Stream events. With a ticket: pump until that ticket's terminal
     /// event (events for other tickets are buffered for their own stream
-    /// verbs). Without: drain the whole deployment, emitting everything.
-    fn stream(&mut self, ticket: Option<TicketId>) -> Vec<String> {
+    /// verbs); durable tickets are served from the journal with sequence
+    /// numbers instead. Without a ticket: drain the whole deployment,
+    /// emitting everything.
+    fn stream(&mut self, ticket: Option<TicketId>, from_seq: Option<u64>) -> Vec<String> {
+        if let Some(t) = ticket {
+            if self.is_durable(t) {
+                return self.stream_durable(t, from_seq.unwrap_or(0));
+            }
+            if from_seq.is_some() {
+                return vec![err_line(
+                    "stream: \"from_seq\" requires a durable ticket \
+                     (journal disarmed, or the ticket was submitted without \
+                     a key / already released)",
+                )];
+            }
+        }
         let mut lines = Vec::new();
         let mut emitted = 0usize;
         let mut done = false;
@@ -403,11 +487,15 @@ impl<'a> WireSession<'a> {
                     };
                     let got = !sink.is_empty();
                     for ev in sink {
+                        // Durable tickets' events live in the journal (they
+                        // replay with their seq on that ticket's stream);
+                        // buffering a second copy here would leak.
+                        let durable = self.is_durable(ev.ticket());
                         if ev.ticket() == t {
                             done |= ev.is_terminal();
                             lines.push(encode_event(&ev).to_string());
                             emitted += 1;
-                        } else {
+                        } else if !durable {
                             self.buffered.push_back(ev);
                         }
                     }
@@ -454,6 +542,93 @@ impl<'a> WireSession<'a> {
         );
         lines
     }
+
+    /// Stream a durable ticket from its journal ring (PR 10): every event
+    /// line carries `"seq"`, delivery starts at `from_seq`, and the final
+    /// summary advertises `"next_seq"` so a client that loses this
+    /// connection can resume exactly where it stopped. The entry is left
+    /// in place (terminal retention) until the client acks or TTL fires.
+    fn stream_durable(&mut self, t: TicketId, from_seq: u64) -> Vec<String> {
+        let mut lines = Vec::new();
+        let mut next = from_seq;
+        let mut emitted = 0usize;
+        let mut done = false;
+        let mut gap = false;
+        if from_seq > 0 {
+            if let Some(j) = self.serve.journal_mut() {
+                j.note_resume();
+            }
+        }
+        let mut pulled: Vec<(u64, TokenEvent)> = Vec::new();
+        let mut idle = 0usize;
+        let mut sleepy = 0usize;
+        loop {
+            pulled.clear();
+            let res = self
+                .serve
+                .journal()
+                .and_then(|j| j.replay(t, next, &mut pulled));
+            let Some((g, terminal)) = res else {
+                // Entry vanished mid-stream (acked elsewhere or TTL'd).
+                break;
+            };
+            gap |= g;
+            let got = !pulled.is_empty();
+            for (seq, ev) in &pulled {
+                lines.push(encode_event(ev).set("seq", *seq).to_string());
+                next = seq + 1;
+                emitted += 1;
+            }
+            if terminal {
+                done = true;
+                break;
+            }
+            // Not terminal yet: advance the deployment and pull again.
+            let mut sink: Vec<TokenEvent> = Vec::new();
+            let progressed = match self.serve.pump(&mut sink) {
+                Ok(p) => p,
+                Err(e) => {
+                    lines.push(err_line(&format!("pump: {e:#}")));
+                    break;
+                }
+            };
+            let pumped = !sink.is_empty();
+            for ev in sink {
+                // The journal owns durable events; buffer only the rest
+                // for their own (plain) stream verbs.
+                let durable = self.is_durable(ev.ticket());
+                if !durable {
+                    self.buffered.push_back(ev);
+                }
+            }
+            if !progressed && !pumped && !got {
+                break; // nothing left anywhere; ticket is stuck/gone
+            }
+            if got || pumped {
+                idle = 0;
+            } else {
+                idle += 1;
+                if idle >= IDLE_PUMPS_BEFORE_SLEEP {
+                    sleepy += 1;
+                    if sleepy > MAX_SLEEPY_PUMPS {
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+            }
+        }
+        let mut tail = Json::obj()
+            .set("ok", true)
+            .set("verb", "stream")
+            .set("done", done)
+            .set("events", emitted)
+            .set("next_seq", next);
+        if gap {
+            tail = tail.set("gap", true);
+        }
+        lines.push(tail.to_string());
+        lines
+    }
 }
 
 // ---- transports ----------------------------------------------------------
@@ -466,6 +641,13 @@ pub enum FrameRead {
     /// The line exceeded `max` bytes; the payload was discarded, not
     /// buffered. Carries the total line length consumed.
     TooLarge(usize),
+    /// The transport failed mid-line: `buffered` bytes of a partial frame
+    /// had been accepted when the I/O error hit. Surfaced as a typed frame
+    /// result — instead of silently dropping the partial bytes inside a
+    /// raw `Err` — so the connection loop can account the loss before
+    /// closing. A failure *between* frames (empty buffer) still returns
+    /// `Err`: nothing was lost.
+    Interrupted { buffered: usize, error: String },
     /// Clean end of stream.
     Eof,
 }
@@ -478,7 +660,18 @@ pub fn read_frame<R: BufRead>(reader: &mut R, max: usize) -> std::io::Result<Fra
     let mut buf: Vec<u8> = Vec::new();
     let mut dropped = 0usize;
     loop {
-        let chunk = reader.fill_buf()?;
+        let chunk = match reader.fill_buf() {
+            Ok(c) => c,
+            Err(e) => {
+                if buf.is_empty() && dropped == 0 {
+                    return Err(e); // between frames: nothing was lost
+                }
+                return Ok(FrameRead::Interrupted {
+                    buffered: buf.len() + dropped,
+                    error: e.to_string(),
+                });
+            }
+        };
         if chunk.is_empty() {
             // EOF: a non-empty trailing line (no newline) still counts.
             return Ok(if dropped > 0 {
@@ -564,6 +757,17 @@ pub fn serve_tcp_with<A: ToSocketAddrs>(
                         len,
                         max: MAX_FRAME_BYTES,
                     };
+                    let _ = writeln!(writer, "{}", err_line(&e.to_string()));
+                    let _ = writer.flush();
+                    break;
+                }
+                Ok(FrameRead::Interrupted { buffered, error }) => {
+                    // A frame died mid-line (PR 10 satellite): surface the
+                    // typed loss on the connection before closing — the
+                    // peer may already be gone, so the reply is best
+                    // effort, but the account is logged either way.
+                    let e = ServeError::FrameInterrupted { buffered };
+                    log::warn!("{e} ({error})");
                     let _ = writeln!(writer, "{}", err_line(&e.to_string()));
                     let _ = writer.flush();
                     break;

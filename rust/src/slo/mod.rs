@@ -223,6 +223,10 @@ pub struct GuardStats {
     pub retry_submits: u64,
     /// Offline submits shed outright.
     pub shed_submits: u64,
+    /// Ticks spent inside a churn-exclusion grace window (quarantine
+    /// respawns, PR 10): escalation and cap cuts are suspended so the
+    /// ladder judges steady-state traffic, not recovery recompute.
+    pub suspended_ticks: u64,
     /// Most recent windowed attainment (min of TTFT and TPOT windows).
     pub last_attainment: f64,
     /// Most recent AIMD cap.
@@ -239,6 +243,7 @@ impl GuardStats {
             .set("emergency_preempted", self.emergency_preempted)
             .set("retry_submits", self.retry_submits)
             .set("shed_submits", self.shed_submits)
+            .set("suspended_ticks", self.suspended_ticks)
             .set("last_attainment", self.last_attainment)
             .set("offline_cap", if self.cap == usize::MAX { 0 } else { self.cap as u64 })
     }
@@ -260,6 +265,11 @@ pub struct SloGuard {
     /// Fleet-summed cumulative bucket counts, recycled every tick.
     scratch_ttft: Vec<u64>,
     scratch_tpot: Vec<u64>,
+    /// Churn-exclusion deadline (PR 10): until this instant, misses do not
+    /// escalate the ladder or cut the AIMD cap. Recovery (de-escalation,
+    /// cap growth) is never suspended, so the grace window can only make
+    /// the guard *milder* — it cannot deadlock the ladder.
+    suspended_until: f64,
     pub stats: GuardStats,
     last: GuardDecision,
 }
@@ -282,6 +292,7 @@ impl SloGuard {
             tpot_win: WindowedHist::new(cfg.window, dt),
             scratch_ttft: vec![0u64; LogHistogram::BUCKETS],
             scratch_tpot: vec![0u64; LogHistogram::BUCKETS],
+            suspended_until: 0.0,
             stats: GuardStats {
                 cap,
                 last_attainment: 1.0,
@@ -306,6 +317,16 @@ impl SloGuard {
     /// The most recent decision (what `tick` last returned).
     pub fn decision(&self) -> GuardDecision {
         self.last
+    }
+
+    /// Open (or extend) a churn-exclusion grace window: until `until`,
+    /// windowed misses neither escalate the ladder nor cut the AIMD cap.
+    /// Called by the coordinator when quarantine respawns inject recompute
+    /// latency that says nothing about offline pressure (PR 10).
+    /// Max-accumulates, so overlapping quarantines extend rather than
+    /// truncate the window; de-escalation is unaffected (no deadlock).
+    pub fn exclude_churn_until(&mut self, until: f64) {
+        self.suspended_until = self.suspended_until.max(until);
     }
 
     /// Windowed attainment pair (TTFT, TPOT) as of the last tick.
@@ -354,10 +375,19 @@ impl SloGuard {
         let att_tpot = self.tpot_win.attainment(self.slo.tpot);
         let att = att_ttft.min(att_tpot);
         self.stats.last_attainment = att;
+        // Churn exclusion (PR 10): inside the grace window misses are
+        // attributed to quarantine respawn churn, so only the *mildening*
+        // halves of the control laws run.
+        let suspended = now < self.suspended_until;
+        if suspended {
+            self.stats.suspended_ticks += 1;
+        }
 
         // ---- 3. AIMD offline token budget ------------------------------
         if att < self.cfg.target {
-            self.cap = (self.cap / 2).max(self.cfg.cap_min);
+            if !suspended {
+                self.cap = (self.cap / 2).max(self.cfg.cap_min);
+            }
         } else if att >= self.cfg.recover {
             self.cap = self.cap.saturating_add(self.cfg.cap_increase).min(self.cfg.cap_max);
         }
@@ -367,6 +397,7 @@ impl SloGuard {
         let dwelled = now - self.entered_at;
         let prev = self.level;
         if att < self.cfg.target
+            && !suspended
             && self.level < BrownoutLevel::Emergency
             && (self.level == BrownoutLevel::Normal || dwelled >= self.cfg.escalate_hold)
         {
@@ -512,6 +543,41 @@ mod tests {
             g.tick(t, std::iter::once(&m));
         }
         assert_eq!(g.cap(), g.config().cap_max);
+    }
+
+    #[test]
+    fn churn_exclusion_suspends_escalation_but_not_recovery() {
+        let mut g = guard(4.0, 1.0);
+        let mut m = Metrics::default();
+        let mut t = 0.0;
+        // Escalate once so there is something to recover from.
+        feed(&mut m, 10, 5.0, 0.01);
+        t += 1.0;
+        g.tick(t, std::iter::once(&m));
+        assert_eq!(g.level(), BrownoutLevel::PauseOfflineAdmission);
+        let cap_after_cut = g.cap();
+        // Grace window: further misses neither climb the ladder nor cut
+        // the AIMD cap.
+        g.exclude_churn_until(t + 10.0);
+        for _ in 0..5 {
+            feed(&mut m, 10, 5.0, 0.01);
+            t += 1.0;
+            g.tick(t, std::iter::once(&m));
+        }
+        assert_eq!(g.level(), BrownoutLevel::PauseOfflineAdmission);
+        assert_eq!(g.cap(), cap_after_cut);
+        assert!(g.stats.suspended_ticks >= 5, "{:?}", g.stats);
+        // Clean traffic de-escalates *inside* the window (recovery is
+        // never suspended) once the dwell elapses.
+        loop {
+            feed(&mut m, 20, 0.1, 0.01);
+            t += 1.0;
+            g.exclude_churn_until(t + 5.0);
+            if g.tick(t, std::iter::once(&m)).level == BrownoutLevel::Normal {
+                break;
+            }
+            assert!(t < 60.0, "recovery must not deadlock under churn exclusion");
+        }
     }
 
     #[test]

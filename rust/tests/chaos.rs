@@ -261,6 +261,220 @@ fn overload_shedding_under_faults_still_terminates_every_ticket() {
     assert_eq!(front.sim.fault_stats.crashes, 1);
 }
 
+// ---- durable sessions under disconnect storms (PR 10) --------------------
+
+/// One request on a fresh wire session — exactly what a client that just
+/// reconnected gets: anything a previous connection had buffered is gone.
+fn one_shot(front: &mut echo::serve::ClusterServe, line: &str) -> Vec<String> {
+    echo::serve::wire::WireSession::new(front).handle_line(line).0
+}
+
+#[test]
+fn disconnect_storms_deliver_exactly_once() {
+    use echo::serve::JournalConfig;
+    use echo::utils::json::Json;
+    use echo::utils::rng::Rng;
+
+    for &storm_seed in &[2u64, 41] {
+        let mut transcripts: Vec<String> = Vec::new();
+        for &threads in &[1usize, 2, 4] {
+            let mut front = ClusterServe::new(fleet_cfg(13, 2, threads));
+            assert!(front.arm_journal(JournalConfig::default()));
+            let mut rng = Rng::new(storm_seed ^ 0xD15C);
+            let mut transcript: Vec<String> = Vec::new();
+
+            // Keyed submits; for a seeded subset the ack is "lost" to a
+            // connection drop and the client resubmits the same key on a
+            // fresh session. Exactly-once: same ticket, flagged replayed.
+            let n = 8usize;
+            let mut tickets: Vec<TicketId> = Vec::new();
+            for i in 0..n {
+                let line = format!(
+                    r#"{{"verb":"submit","class":"online","prompt_len":{},"max_new_tokens":{},"arrival":{:.2},"key":{}}}"#,
+                    160 + (i % 5) * 40,
+                    4 + (i % 3) * 2,
+                    0.25 * i as f64,
+                    100 + i
+                );
+                let replies = one_shot(&mut front, &line);
+                transcript.extend(replies.iter().cloned());
+                let ack = Json::parse(&replies[0]).unwrap();
+                let ticket = ack.get("ticket").and_then(|v| v.as_u64()).expect("ticket");
+                assert!(ack.get("replayed").is_none(), "first submit is fresh: {ack}");
+                if rng.bool(0.5) {
+                    let replies = one_shot(&mut front, &line);
+                    transcript.extend(replies.iter().cloned());
+                    let re = Json::parse(&replies[0]).unwrap();
+                    assert_eq!(
+                        re.get("ticket").and_then(|v| v.as_u64()),
+                        Some(ticket),
+                        "resubmit must land on the original ticket: {re}"
+                    );
+                    assert_eq!(re.get("replayed").and_then(|v| v.as_bool()), Some(true));
+                }
+                tickets.push(ticket);
+            }
+
+            // Stream every ticket with seeded mid-delivery drops: the
+            // client keeps a prefix of each delivery, reconnects, and
+            // resumes from the exact next sequence number.
+            for &t in &tickets {
+                let mut received: Vec<(u64, String)> = Vec::new();
+                loop {
+                    let from = received.last().map(|&(s, _)| s + 1).unwrap_or(0);
+                    let line = format!(r#"{{"verb":"stream","ticket":{t},"from_seq":{from}}}"#);
+                    let replies = one_shot(&mut front, &line);
+                    transcript.extend(replies.iter().cloned());
+                    let tail = Json::parse(replies.last().expect("stream tail")).unwrap();
+                    assert_eq!(tail.get("verb").and_then(|v| v.as_str()), Some("stream"), "{tail}");
+                    assert!(tail.get("gap").is_none(), "replay ring must never gap here: {tail}");
+                    let done = tail.get("done").and_then(|v| v.as_bool()) == Some(true);
+                    let evs_here: Vec<(u64, String)> = replies[..replies.len() - 1]
+                        .iter()
+                        .map(|l| {
+                            let j = Json::parse(l).unwrap();
+                            assert_eq!(j.get("ticket").and_then(|v| v.as_u64()), Some(t));
+                            (
+                                j.get("seq")
+                                    .and_then(|v| v.as_u64())
+                                    .expect("durable events carry seq"),
+                                j.get("event").and_then(|v| v.as_str()).expect("event").to_string(),
+                            )
+                        })
+                        .collect();
+                    let keep = if done && evs_here.len() > 1 && rng.bool(0.4) {
+                        rng.range_usize(1, evs_here.len() - 1) // connection dies mid-delivery
+                    } else {
+                        evs_here.len()
+                    };
+                    received.extend(evs_here[..keep].iter().cloned());
+                    if keep == evs_here.len() && done {
+                        break;
+                    }
+                }
+                // Exactly-once, in-order, gap-free token delivery.
+                let seqs: Vec<u64> = received.iter().map(|&(s, _)| s).collect();
+                let want: Vec<u64> = (0..seqs.len() as u64).collect();
+                assert_eq!(seqs, want, "ticket {t}: resumed stream must be contiguous, duplicate-free");
+                let terminals = received
+                    .iter()
+                    .filter(|(_, k)| k.as_str() == "finished" || k.as_str() == "cancelled")
+                    .count();
+                assert_eq!(terminals, 1, "ticket {t}: exactly one terminal event");
+                assert_eq!(received.last().map(|(_, k)| k.as_str()), Some("finished"));
+
+                // Ack releases the journal entry; a second ack is a no-op.
+                let replies = one_shot(&mut front, &format!(r#"{{"verb":"ack","ticket":{t}}}"#));
+                transcript.extend(replies.iter().cloned());
+                let acked = Json::parse(&replies[0]).unwrap();
+                assert_eq!(acked.get("acked").and_then(|v| v.as_bool()), Some(true));
+                let replies = one_shot(&mut front, &format!(r#"{{"verb":"ack","ticket":{t}}}"#));
+                transcript.extend(replies.iter().cloned());
+                let again = Json::parse(&replies[0]).unwrap();
+                assert_eq!(again.get("acked").and_then(|v| v.as_bool()), Some(false));
+            }
+
+            // Journal accounting reaches the metrics surface.
+            let j = front.snapshot().journal;
+            assert_eq!(j.registered, n as u64);
+            assert_eq!(j.acked, n as u64);
+            assert!(j.replayed_submits >= 1, "storm must exercise submit replay: {j:?}");
+            assert!(j.resumed_streams >= 1, "storm must exercise stream resume: {j:?}");
+            assert_eq!(j.dropped_events, 0, "nothing may fall out of the ring: {j:?}");
+
+            transcripts.push(transcript.join("\n"));
+        }
+        assert!(
+            transcripts.windows(2).all(|w| w[0] == w[1]),
+            "storm {storm_seed}: wire transcripts diverged across --threads 1/2/4"
+        );
+    }
+}
+
+// ---- gray-failure quarantine (PR 10) --------------------------------------
+
+/// Drain a fleet with a seeded whole-run `Slowdown` on replica 0 and
+/// return (online TTFT samples, event debug, quarantine count).
+fn slowdown_run(armed: bool, threads: usize) -> (Vec<f64>, String, usize) {
+    use echo::cluster::HealthConfig;
+    let mut cc = fleet_cfg(17, 2, threads);
+    if armed {
+        // Tight windows so the ladder walks within a test-sized horizon.
+        cc.health = Some(HealthConfig {
+            window: 1.0,
+            min_samples: 4,
+            probation_after: 1,
+            quarantine_after: 1,
+            recover_after: 2,
+            ..HealthConfig::default()
+        });
+    }
+    cc.faults = FaultPlan {
+        events: vec![FaultEvent::Slowdown {
+            at: 0.0,
+            until: 600.0,
+            replica: 0,
+            factor: 8.0,
+        }],
+        seed: 17,
+    };
+    let mut front = ClusterServe::new(cc);
+    let mut tickets: Vec<TicketId> = front
+        .submit_offline_jobs(offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 10, 17))
+        .unwrap()
+        .iter()
+        .map(|t| t.id)
+        .collect();
+    let online: Vec<TicketId> = online_mix(18)
+        .iter()
+        .map(|job| {
+            let spec = echo::serve::SubmitSpec::online(job.prompt.clone(), job.max_new_tokens);
+            front.submit(spec.at(job.at)).unwrap().id
+        })
+        .collect();
+    tickets.extend(&online);
+    let mut evs: Vec<TokenEvent> = Vec::new();
+    front.drain(&mut evs).unwrap();
+    assert_all_terminal(&tickets, &evs, "seeded slowdown");
+    let ttfts: Vec<f64> = evs
+        .iter()
+        .filter_map(|e| match e {
+            TokenEvent::Finished { ticket, ttft, .. } if online.contains(ticket) => *ttft,
+            _ => None,
+        })
+        .collect();
+    (ttfts, format!("{:?}", evs), front.sim.health_report().quarantines)
+}
+
+#[test]
+fn quarantine_never_hurts_online_latency_under_slowdown() {
+    let (sick_ttfts, _, no_monitor) = slowdown_run(false, 1);
+    let (healed_ttfts, _, quarantines) = slowdown_run(true, 1);
+    assert_eq!(no_monitor, 0);
+    assert!(quarantines >= 1, "the sick replica must be quarantined");
+    assert_eq!(sick_ttfts.len(), healed_ttfts.len(), "same workload completes");
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    // The monitor only removes a degraded replica from the online path; it
+    // has no actuator that can slow healthy traffic, so mean online TTFT
+    // with quarantine armed must be at least as good as without.
+    assert!(
+        mean(&healed_ttfts) <= mean(&sick_ttfts) + 1e-9,
+        "quarantine worsened online TTFT: {} > {}",
+        mean(&healed_ttfts),
+        mean(&sick_ttfts)
+    );
+}
+
+#[test]
+fn armed_quarantine_parallel_matches_serial() {
+    let serial = slowdown_run(true, 1);
+    for &threads in &[2usize, 4] {
+        let par = slowdown_run(true, threads);
+        assert_eq!(serial.1, par.1, "event streams diverged at {threads} threads");
+        assert_eq!(serial.2, par.2, "quarantine counts diverged at {threads} threads");
+    }
+}
+
 #[test]
 fn guard_paused_backlog_is_not_a_stall() {
     // Satellite regression (PR 9): an offline backlog that sits idle

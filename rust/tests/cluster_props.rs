@@ -103,6 +103,7 @@ fn digest(replica: usize, free_blocks: usize, pending: usize) -> LoadDigest {
         free_blocks,
         block_size: 16,
         draining: false,
+        degraded: false,
         summary: PrefixSummary::Full(Vec::new()),
     }
 }

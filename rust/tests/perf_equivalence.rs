@@ -233,6 +233,7 @@ fn stats_digest(replica: usize, summary: PrefixSummary) -> LoadDigest {
         free_blocks: 4_000,
         block_size: 16,
         draining: false,
+        degraded: false,
         summary,
     }
 }

@@ -185,6 +185,73 @@ fn armed_guard_parallel_matches_serial() {
 }
 
 #[test]
+fn quarantine_during_brownout_recovers_to_normal_and_healthy() {
+    // PR 10: a gray-failing replica gets quarantined while the impossible
+    // SLO holds the fleet browned out. The quarantine churn window
+    // suspends ladder *escalation* only — de-escalation always runs — so
+    // neither ladder can deadlock the other: the run must end with the
+    // guard back at Normal and every surviving replica Healthy.
+    use echo::cluster::{HealthConfig, HealthState};
+    let mut cc = fleet_cfg(23, 2, 1, Slo::new(1e-3, 1e-4));
+    cc.guard = Some(test_guard());
+    cc.health = Some(HealthConfig {
+        window: 1.0,
+        min_samples: 4,
+        probation_after: 1,
+        quarantine_after: 1,
+        recover_after: 2,
+        ..HealthConfig::default()
+    });
+    cc.faults = FaultPlan {
+        events: vec![FaultEvent::Slowdown {
+            at: 0.0,
+            until: 600.0,
+            replica: 0,
+            factor: 8.0,
+        }],
+        seed: 23,
+    };
+    let mut front = ClusterServe::new(cc);
+    let mut tickets: Vec<TicketId> = front
+        .submit_offline_jobs(offline_jobs(&DatasetSpec::loogle_qa_short().scaled(0.05), 10, 23))
+        .unwrap()
+        .iter()
+        .map(|t| t.id)
+        .collect();
+    for i in 0..14 {
+        let spec = SubmitSpec::online(PromptSpec::sim(200, None), 4);
+        tickets.push(front.submit(spec.at(0.2 + 0.4 * i as f64)).unwrap().id);
+    }
+    let mut evs: Vec<TokenEvent> = Vec::new();
+    front.drain(&mut evs).unwrap();
+    assert_all_terminal(&tickets, &evs, "quarantine during brownout");
+    let health = front.sim.health_report();
+    assert!(health.quarantines >= 1, "sick replica must be quarantined: {health:?}");
+    assert_eq!(health.respawns, health.quarantines, "{health:?}");
+    let stats = front.sim.guard_stats();
+    assert!(stats.escalations >= 1, "impossible SLO must brown out: {stats:?}");
+    assert!(stats.deescalations >= 1, "ladder must ratchet down: {stats:?}");
+    assert!(
+        stats.suspended_ticks > 0,
+        "quarantine churn must open an exclusion window: {stats:?}"
+    );
+    assert_eq!(
+        front.sim.guard_decision().level,
+        BrownoutLevel::Normal,
+        "a drained fleet must settle at Normal: {stats:?}"
+    );
+    for rep in &front.sim.replicas {
+        let h = rep.health.expect("armed fleet tracks health");
+        assert_eq!(
+            h.state,
+            HealthState::Healthy,
+            "replica {} must end Healthy (respawns start clean)",
+            rep.id
+        );
+    }
+}
+
+#[test]
 fn crash_during_brownout_recovers_to_normal() {
     let mut cc = fleet_cfg(7, 2, 1, Slo::new(1e-3, 1e-4));
     cc.guard = Some(test_guard());

@@ -41,9 +41,14 @@ fn every_verb_round_trips() {
     );
     roundtrip(r#"{"verb":"submit","class":"offline","prompt_len":5000,"max_new_tokens":64}"#);
     roundtrip(r#"{"verb":"submit","class":"offline","tokens":[1,2,3,4,5],"max_new_tokens":2}"#);
+    roundtrip(
+        r#"{"verb":"submit","class":"online","prompt_len":50,"max_new_tokens":4,"key":9001}"#,
+    );
     roundtrip(r#"{"verb":"cancel","ticket":3}"#);
     roundtrip(r#"{"verb":"stream"}"#);
     roundtrip(r#"{"verb":"stream","ticket":0}"#);
+    roundtrip(r#"{"verb":"stream","ticket":0,"from_seq":5}"#);
+    roundtrip(r#"{"verb":"ack","ticket":3}"#);
     roundtrip(r#"{"verb":"metrics"}"#);
     roundtrip(r#"{"verb":"obs"}"#);
     roundtrip(r#"{"verb":"shutdown"}"#);
@@ -100,6 +105,11 @@ fn malformed_and_unknown_get_error_replies() {
         "group without shared_len"
     );
     assert!(error_of(r#"{"verb":"cancel"}"#).contains("ticket"));
+    assert!(error_of(r#"{"verb":"ack"}"#).contains("ticket"));
+    assert!(
+        error_of(r#"{"verb":"stream","ticket":0,"from_seq":3}"#).contains("durable"),
+        "from_seq on a non-durable ticket names the contract"
+    );
     assert!(
         error_of(r#"{"verb":"submit","class":"online","prompt_len":10,"ttft":0.5}"#)
             .contains("tpot"),
@@ -146,6 +156,99 @@ fn oversized_frames_are_dropped_not_buffered() {
         FrameRead::Line(l) => assert_eq!(l, "{\"verb\":\"metrics\"}"),
         other => panic!("the connection must survive an oversized frame: {other:?}"),
     }
+}
+
+/// A transport that yields its chunks, then dies with an I/O error —
+/// simulating a connection reset partway through a line.
+struct DyingReader {
+    chunks: std::collections::VecDeque<Vec<u8>>,
+    current: Vec<u8>,
+    pos: usize,
+}
+
+impl DyingReader {
+    fn new(chunks: Vec<Vec<u8>>) -> DyingReader {
+        DyingReader {
+            chunks: chunks.into(),
+            current: Vec::new(),
+            pos: 0,
+        }
+    }
+}
+
+impl std::io::Read for DyingReader {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        let chunk = std::io::BufRead::fill_buf(self)?;
+        let n = chunk.len().min(out.len());
+        out[..n].copy_from_slice(&chunk[..n]);
+        std::io::BufRead::consume(self, n);
+        Ok(n)
+    }
+}
+
+impl std::io::BufRead for DyingReader {
+    fn fill_buf(&mut self) -> std::io::Result<&[u8]> {
+        if self.pos >= self.current.len() {
+            match self.chunks.pop_front() {
+                Some(c) => {
+                    self.current = c;
+                    self.pos = 0;
+                }
+                None => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::ConnectionReset,
+                        "peer reset",
+                    ))
+                }
+            }
+        }
+        Ok(&self.current[self.pos..])
+    }
+
+    fn consume(&mut self, n: usize) {
+        self.pos += n;
+    }
+}
+
+#[test]
+fn interrupted_frames_surface_partial_loss_not_silence() {
+    // PR 10 satellite: a connection dying mid-line used to vanish the
+    // partial frame inside a raw Err. Now: the complete line still parses,
+    // and the partial one comes back as a typed Interrupted result that
+    // accounts every buffered byte before the connection closes.
+    let mut r = DyingReader::new(vec![
+        b"{\"verb\":\"obs\"}\n".to_vec(),
+        b"{\"verb\":\"su".to_vec(), // 11 bytes of a frame, then death
+    ]);
+    match read_frame(&mut r, MAX_FRAME_BYTES).unwrap() {
+        FrameRead::Line(l) => assert_eq!(l, "{\"verb\":\"obs\"}"),
+        other => panic!("expected the complete line, got {other:?}"),
+    }
+    match read_frame(&mut r, MAX_FRAME_BYTES).unwrap() {
+        FrameRead::Interrupted { buffered, error } => {
+            assert_eq!(buffered, 11, "every partial byte is accounted");
+            assert!(error.contains("peer reset"), "carries the I/O cause: {error}");
+        }
+        other => panic!("expected Interrupted, got {other:?}"),
+    }
+
+    // A failure *between* frames lost nothing and stays a plain Err.
+    let mut clean = DyingReader::new(Vec::new());
+    assert!(read_frame(&mut clean, MAX_FRAME_BYTES).is_err());
+}
+
+#[test]
+fn ack_without_a_journal_is_a_polite_no() {
+    // `ack` releases a durable journal entry; on an undurable deployment
+    // (or an unknown ticket) it succeeds with acked:false rather than
+    // erroring, so clients can fire-and-forget it.
+    let mut f = front();
+    let mut session = WireSession::new(&mut f);
+    let (replies, shutdown) = session.handle_line(r#"{"verb":"ack","ticket":7}"#);
+    assert!(!shutdown);
+    let j = Json::parse(&replies[0]).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(j.get("acked").and_then(|v| v.as_bool()), Some(false));
 }
 
 #[test]
